@@ -1,0 +1,80 @@
+//! Fault tolerance via MPI storage windows (paper §4 / Fig. 5).
+//!
+//! Runs MR-1S Word-Count with transparent checkpointing (a window
+//! synchronization point after every Map task and after Reduce), then
+//! simulates a failure and shows the checkpointed state is really on
+//! disk and decodable — the recovery path the storage-windows concept
+//! [18] enables.  Also measures the checkpoint overhead (paper: ~4.8%).
+//!
+//! ```sh
+//! cargo run --release --example fault_tolerance
+//! ```
+
+use std::sync::Arc;
+
+use mr1s::mapreduce::{kv, BackendKind, Job, JobConfig};
+use mr1s::sim::CostModel;
+use mr1s::usecases::WordCount;
+use mr1s::workload::{generate_corpus, CorpusSpec};
+
+const RANKS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let input = std::env::temp_dir().join("mr1s-ft.txt");
+    generate_corpus(&input, &CorpusSpec { bytes: 8 << 20, seed: 7, ..Default::default() })?;
+    let ckpt_dir = std::env::temp_dir().join("mr1s-ft-ckpt");
+    std::fs::create_dir_all(&ckpt_dir)?;
+
+    // Baseline without checkpoints.
+    let base_cfg = JobConfig { input: input.clone(), ..Default::default() };
+    let base = Job::new(Arc::new(WordCount), base_cfg)?
+        .run(BackendKind::OneSided, RANKS, CostModel::default())?;
+    println!("[ft] baseline      {}", base.report.summary());
+
+    // Checkpointed run.
+    let ckpt_cfg = JobConfig {
+        input: input.clone(),
+        checkpoints: true,
+        checkpoint_dir: ckpt_dir.clone(),
+        ..Default::default()
+    };
+    let ckpt = Job::new(Arc::new(WordCount), ckpt_cfg)?
+        .run(BackendKind::OneSided, RANKS, CostModel::default())?;
+    println!("[ft] checkpointed  {}", ckpt.report.summary());
+
+    let overhead = (ckpt.report.elapsed_secs() - base.report.elapsed_secs())
+        / base.report.elapsed_secs()
+        * 100.0;
+    println!("[ft] checkpoint overhead: {overhead:+.1}% (paper: ~4.8% average)");
+
+    // --- Simulated failure: the job is gone; what's on storage? --------
+    println!("\n[ft] simulating failure: recovering from window backing files");
+    let mut recovered_records = 0usize;
+    let mut recovered_count = 0u64;
+    for rank in 0..RANKS {
+        let path = ckpt_dir.join(format!("mr1s-ckpt-{rank}.bin"));
+        let bytes = std::fs::read(&path)?;
+        // The checkpoint is a stream of kv records (bucket flushes, then
+        // the reduced run) — decode as far as the stream is valid.
+        let mut ok = 0usize;
+        for rec in kv::RecordIter::new(&bytes) {
+            match rec {
+                Ok(r) => {
+                    ok += 1;
+                    recovered_count += r.count;
+                }
+                Err(_) => break,
+            }
+        }
+        recovered_records += ok;
+        println!("[ft]   rank {rank}: {} bytes, {} records decodable", bytes.len(), ok);
+    }
+    println!("[ft] recovered {recovered_records} records, {recovered_count} occurrences");
+    assert!(recovered_records > 0, "checkpoints must contain state");
+
+    // Cleanup.
+    std::fs::remove_file(&input).ok();
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+    println!("[ft] OK");
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Quickstart: Word-Count over MapReduce-1S in ~20 lines of user code.
+//!
+//! Mirrors the paper's Listing 1: create the use-case, configure the job
+//! (`Init`), run it (`Run`), print the result (`Print`).
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use mr1s::mapreduce::{BackendKind, Job, JobConfig};
+use mr1s::sim::CostModel;
+use mr1s::usecases::WordCount;
+use mr1s::workload::{generate_corpus, CorpusSpec};
+
+fn main() -> anyhow::Result<()> {
+    // A small synthetic Wikipedia-like corpus (PUMA stand-in).
+    let input = std::env::temp_dir().join("mr1s-quickstart.txt");
+    let bytes = generate_corpus(&input, &CorpusSpec { bytes: 4 << 20, ..Default::default() })?;
+    println!("corpus: {} ({bytes} bytes)", input.display());
+
+    // Listing-1 style job setup: the WordCount use-case over MR-1S.
+    let config = JobConfig { input: input.clone(), ..Default::default() };
+    let job = Job::new(Arc::new(WordCount), config)?;
+    let out = job.run(BackendKind::OneSided, 8, CostModel::default())?;
+
+    // `Print`.
+    println!("{}", out.report.summary());
+    let mut top = out.result;
+    top.sort_by(|a, b| b.1.cmp(&a.1));
+    println!("\ntop 10 words:");
+    for (word, count) in top.into_iter().take(10) {
+        println!("{count:>10}  {}", String::from_utf8_lossy(&word));
+    }
+
+    std::fs::remove_file(&input).ok();
+    Ok(())
+}

@@ -1,0 +1,105 @@
+"""AOT-lower the L2 entry points to HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (what
+``make artifacts`` does).  Also writes ``manifest.txt`` recording the
+static shapes the Rust runtime must feed each executable.
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import BATCH, NBUCKETS, SORT_BATCH, WIDTH  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_map_shard() -> str:
+    tokens = jax.ShapeDtypeStruct((BATCH, WIDTH), jnp.uint8)
+    lengths = jax.ShapeDtypeStruct((BATCH,), jnp.int32)
+    return to_hlo_text(jax.jit(model.map_shard).lower(tokens, lengths))
+
+
+def lower_combine_sort() -> str:
+    keys = jax.ShapeDtypeStruct((SORT_BATCH,), jnp.uint64)
+    vals = jax.ShapeDtypeStruct((SORT_BATCH,), jnp.uint32)
+    return to_hlo_text(jax.jit(model.combine_sort).lower(keys, vals))
+
+
+def lower_sort_pairs() -> str:
+    from .kernels import sort_pairs
+
+    keys = jax.ShapeDtypeStruct((SORT_BATCH,), jnp.uint64)
+    vals = jax.ShapeDtypeStruct((SORT_BATCH,), jnp.uint32)
+    return to_hlo_text(jax.jit(sort_pairs).lower(keys, vals))
+
+
+ENTRY_POINTS = {
+    "sort_pairs": (
+        lower_sort_pairs,
+        f"in: keys u64[{SORT_BATCH}], payload u32[{SORT_BATCH}] | "
+        f"out: sorted_keys u64[{SORT_BATCH}], permuted_payload u32[{SORT_BATCH}]",
+    ),
+    "map_shard": (
+        lower_map_shard,
+        f"in: tokens u8[{BATCH},{WIDTH}], lengths s32[{BATCH}] | "
+        f"out: hashes u64[{BATCH}], bucket_counts s32[{NBUCKETS}]",
+    ),
+    "combine_sort": (
+        lower_combine_sort,
+        f"in: keys u64[{SORT_BATCH}], counts u32[{SORT_BATCH}] | "
+        f"out: unique_keys u64[{SORT_BATCH}], unique_counts u32[{SORT_BATCH}], "
+        f"n_unique s32[]",
+    ),
+}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", choices=sorted(ENTRY_POINTS), default=None)
+    args = parser.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for name, (lower, sig) in sorted(ENTRY_POINTS.items()):
+        if args.only and name != args.only:
+            continue
+        text = lower()
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name}\t{sig}")
+        print(f"wrote {len(text):>8} chars to {path}")
+
+    if not args.only:
+        geom = (
+            f"BATCH={BATCH}\nWIDTH={WIDTH}\nNBUCKETS={NBUCKETS}\n"
+            f"SORT_BATCH={SORT_BATCH}\n"
+        )
+        with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+            f.write(geom + "\n".join(manifest) + "\n")
+        print(f"wrote manifest ({len(manifest)} entry points)")
+
+
+if __name__ == "__main__":
+    main()

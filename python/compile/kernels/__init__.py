@@ -1,0 +1,14 @@
+"""L1 Pallas kernels for MapReduce-1S hot-spots (build-time only)."""
+
+from .hash_partition import BATCH, NBUCKETS, WIDTH, hash_partition
+from .sort_block import KEY_SENTINEL, SORT_BATCH, sort_pairs
+
+__all__ = [
+    "BATCH",
+    "NBUCKETS",
+    "WIDTH",
+    "KEY_SENTINEL",
+    "SORT_BATCH",
+    "hash_partition",
+    "sort_pairs",
+]

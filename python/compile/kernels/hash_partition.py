@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: FNV-1a-64 token hashing + owner-bucket histogram.
+
+This is the Map-phase compute hot-spot of MapReduce-1S (paper §2.1 phase I):
+every emitted key must be hashed with a 64-bit hash to determine the owning
+rank, and the emitter needs per-owner counts to size its bucket writes.
+
+Layout: a shard batch is a dense ``[B, W] uint8`` matrix — one row per
+token, zero-padded to ``W`` bytes — plus a ``[B] int32`` length vector
+(length 0 marks a padding row).  Outputs are the ``[B] uint64`` FNV-1a
+hashes and a ``[NBUCKETS] int32`` histogram over the low byte of the hash.
+The owner rank is derived in Rust as ``bucket % nranks`` so a single
+compiled artifact serves every rank count (HLO shapes are static).
+
+TPU mapping (see DESIGN.md §2): the grid walks ``B`` in ``block_b`` rows so
+one ``[block_b, W]`` u8 tile plus the one-hot ``[block_b, NBUCKETS]``
+matrix sit in VMEM; the histogram reduction is expressed as a sum over a
+one-hot matrix, which XLA lowers to a ``[1, block_b] x [block_b, NBUCKETS]``
+matmul on the MXU (TPU has no fast scatter).  ``interpret=True`` is
+mandatory on this image — the CPU PJRT client cannot execute Mosaic
+custom-calls.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch geometry shared with the Rust runtime (rust/src/runtime/shapes.rs).
+BATCH = 4096  # tokens per kernel invocation (B)
+WIDTH = 24  # bytes hashed per token (W); Rust truncates longer tokens
+NBUCKETS = 256  # ownership buckets; owner = bucket % nranks in Rust
+
+# Python ints (not jnp arrays): constants must be materialized *inside* the
+# kernel body or pallas_call rejects them as captured consts.
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+
+def _hash_partition_kernel(tok_ref, len_ref, hash_ref, cnt_ref):
+    """One grid step: hash ``block_b`` token rows, accumulate histogram."""
+    lengths = len_ref[...]
+    # FNV-1a over the row, column-at-a-time.  W is small and static, so the
+    # loop fully unrolls into W fused vector ops over the [block_b] lanes.
+    prime = jnp.uint64(FNV_PRIME)
+    h = jnp.full(lengths.shape, FNV_OFFSET, dtype=jnp.uint64)
+    for j in range(WIDTH):
+        byte = tok_ref[:, j].astype(jnp.uint64)
+        advanced = (h ^ byte) * prime
+        h = jnp.where(j < lengths, advanced, h)
+    valid = lengths > 0
+    h = jnp.where(valid, h, jnp.uint64(0))
+    hash_ref[...] = h
+
+    # Histogram over the low hash byte via a one-hot reduction.  On TPU this
+    # is the MXU-friendly formulation: dot(ones[1, bb], onehot[bb, NB]).
+    bucket = (h & jnp.uint64(NBUCKETS - 1)).astype(jnp.int32)
+    onehot = (bucket[:, None] == jnp.arange(NBUCKETS, dtype=jnp.int32)[None, :])
+    onehot = jnp.logical_and(onehot, valid[:, None]).astype(jnp.int32)
+    counts = jnp.sum(onehot, axis=0)
+
+    # All grid steps alias the same [NBUCKETS] output block: init then add.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    cnt_ref[...] += counts
+
+
+@partial(jax.jit, static_argnames=("block_b",))
+def hash_partition(tokens, lengths, *, block_b=512):
+    """Hash a ``[B, W] uint8`` token batch; returns (hashes, bucket_counts).
+
+    tokens:  [B, W] uint8, rows zero-padded.
+    lengths: [B] int32, 0 for padding rows.
+    returns: ([B] uint64 FNV-1a hashes, [NBUCKETS] int32 histogram).
+    """
+    b, w = tokens.shape
+    assert w == WIDTH, f"token width {w} != {WIDTH}"
+    assert b % block_b == 0, f"batch {b} not divisible by block {block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _hash_partition_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, WIDTH), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            # Every grid step maps onto the same histogram block so the
+            # kernel can accumulate across steps.
+            pl.BlockSpec((NBUCKETS,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.uint64),
+            jax.ShapeDtypeStruct((NBUCKETS,), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(tokens, lengths)

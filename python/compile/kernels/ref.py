@@ -1,0 +1,69 @@
+"""Pure-numpy correctness oracles for the L1 kernels.
+
+Everything here is written scalar-first (plain Python loops over numpy
+arrays) so it cannot share a vectorization bug with the Pallas kernels.
+pytest (python/tests) asserts kernel == oracle over hypothesis-generated
+shapes, dtypes, and contents.
+"""
+
+import numpy as np
+
+FNV_OFFSET = np.uint64(0xCBF29CE484222325)
+FNV_PRIME = np.uint64(0x100000001B3)
+MASK64 = (1 << 64) - 1
+
+
+def fnv1a64(data: bytes) -> int:
+    """Reference FNV-1a 64-bit hash of a byte string."""
+    h = 0xCBF29CE484222325
+    for byte in data:
+        h ^= byte
+        h = (h * 0x100000001B3) & MASK64
+    return h
+
+
+def hash_partition_ref(tokens: np.ndarray, lengths: np.ndarray, nbuckets: int = 256):
+    """Oracle for kernels.hash_partition: row-by-row scalar FNV + histogram."""
+    b, _w = tokens.shape
+    hashes = np.zeros(b, dtype=np.uint64)
+    counts = np.zeros(nbuckets, dtype=np.int32)
+    for i in range(b):
+        n = int(lengths[i])
+        if n <= 0:
+            continue
+        h = fnv1a64(bytes(tokens[i, :n].tolist()))
+        hashes[i] = np.uint64(h)
+        counts[h & (nbuckets - 1)] += 1
+    return hashes, counts
+
+
+def sort_pairs_ref(keys: np.ndarray, vals: np.ndarray):
+    """Oracle for kernels.sort_pairs: stable argsort on the keys."""
+    order = np.argsort(keys, kind="stable")
+    return keys[order], vals[order]
+
+
+def dedup_sum_ref(sorted_keys: np.ndarray, sorted_vals: np.ndarray):
+    """Oracle for model.dedup_sum over an already-sorted key block.
+
+    Returns (unique_keys padded with sentinel, per-key summed vals padded
+    with 0, n_unique).
+    """
+    b = sorted_keys.shape[0]
+    out_k = np.full(b, np.uint64(0xFFFFFFFFFFFFFFFF), dtype=np.uint64)
+    out_v = np.zeros(b, dtype=np.uint32)
+    n = 0
+    for i in range(b):
+        if i == 0 or sorted_keys[i] != sorted_keys[i - 1]:
+            out_k[n] = sorted_keys[i]
+            out_v[n] = sorted_vals[i]
+            n += 1
+        else:
+            out_v[n - 1] = np.uint32(int(out_v[n - 1]) + int(sorted_vals[i]))
+    return out_k, out_v, n
+
+
+def combine_sort_ref(keys: np.ndarray, vals: np.ndarray):
+    """Oracle for the full combine_sort entry point (sort + dedup-sum)."""
+    sk, sv = sort_pairs_ref(keys, vals)
+    return dedup_sum_ref(sk, sv)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: bitonic sort of (hash, count) pairs.
+
+The Combine phase of MapReduce-1S (paper §2.1 phase IV) builds a
+merge-sort tree over per-rank sorted runs.  The leaf step — producing the
+rank-local sorted run — is the dense hot-spot: sort a ``[B] uint64`` block
+of key hashes, carrying the ``[B] uint32`` aggregated counts as payload.
+Cross-run merging (the tree levels) stays in Rust where run lengths are
+dynamic.
+
+Bitonic is chosen deliberately for the TPU target: it is a fixed,
+data-independent compare-exchange network, so every stage is a pair of
+vectorized gathers + selects over the whole block in VMEM (VPU work, no
+divergence), unlike quicksort-style data-dependent control flow.  For
+``B = 4096`` the network has log2(B)·(log2(B)+1)/2 = 78 stages, fully
+unrolled at trace time.
+
+Padding: the Rust side pads short blocks with key ``u64::MAX`` / count 0;
+the sentinel sorts to the tail and is dropped after dedup.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SORT_BATCH = 4096  # keys per kernel invocation; power of two
+KEY_SENTINEL = 0xFFFFFFFFFFFFFFFF  # pads to the tail of the sorted block
+
+
+def _bitonic_kernel(key_ref, val_ref, out_key_ref, out_val_ref):
+    k = key_ref[...]
+    v = val_ref[...]
+    n = k.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    size = 2
+    while size <= n:
+        stride = size // 2
+        while stride >= 1:
+            partner = idx ^ stride
+            pk = k[partner]
+            pv = v[partner]
+            ascending = (idx & size) == 0
+            # The lower index of each pair keeps the small key in an
+            # ascending sub-block, the large key in a descending one.
+            want_small = (idx < partner) == ascending
+            take_partner = jnp.where(want_small, pk < k, pk > k)
+            k = jnp.where(take_partner, pk, k)
+            v = jnp.where(take_partner, pv, v)
+            stride //= 2
+        size *= 2
+
+    out_key_ref[...] = k
+    out_val_ref[...] = v
+
+
+@jax.jit
+def sort_pairs(keys, vals):
+    """Sort ``[B] uint64`` keys ascending, permuting ``[B] uint32`` payloads.
+
+    B must be a power of two (the Rust side pads with KEY_SENTINEL/0).
+    """
+    (b,) = keys.shape
+    assert b & (b - 1) == 0, f"bitonic sort needs power-of-two batch, got {b}"
+    return pl.pallas_call(
+        _bitonic_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.uint64),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(keys, vals)

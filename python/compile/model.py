@@ -1,0 +1,70 @@
+"""L2: the JAX compute graphs lowered into the Rust hot path.
+
+Two entry points, each AOT-compiled once by ``aot.py`` and executed from
+``rust/src/runtime`` on every Map / Combine hot-path call:
+
+* ``map_shard``    — Map phase: hash a token batch and histogram owners
+                     (wraps the L1 ``hash_partition`` Pallas kernel).
+* ``combine_sort`` — Combine phase leaf: sort a (hash, count) block and
+                     aggregate duplicate keys (L1 bitonic ``sort_pairs``
+                     kernel + the pure-jnp dedup-sum graph below).
+
+uint64 hashes require ``jax_enable_x64`` — enabled at import, before any
+tracing.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import hash_partition, sort_pairs  # noqa: E402
+from .kernels.sort_block import KEY_SENTINEL  # noqa: E402
+
+
+def map_shard(tokens, lengths):
+    """Map-phase batch: ``[B, W] u8`` tokens → (hashes ``[B] u64``,
+    owner-bucket histogram ``[NBUCKETS] i32``)."""
+    return hash_partition(tokens, lengths)
+
+
+def dedup_sum(sorted_keys, sorted_vals):
+    """Aggregate adjacent duplicate keys of a sorted block.
+
+    Pure-jnp graph (no kernel): run detection + two scatter-adds.  Returns
+    (unique keys padded with KEY_SENTINEL, summed counts padded with 0,
+    n_unique as i32).  Scatters use mode='drop' so non-run positions fall
+    out of bounds and vanish, keeping everything shape-static.
+    """
+    b = sorted_keys.shape[0]
+    first = jnp.concatenate(
+        [jnp.ones((1,), dtype=bool), sorted_keys[1:] != sorted_keys[:-1]]
+    )
+    run_id = jnp.cumsum(first.astype(jnp.int32)) - 1  # [B], which run am I in
+    n_unique = run_id[-1] + 1
+
+    # Per-run count totals land at positions 0..n_unique-1.
+    totals = jnp.zeros((b,), dtype=jnp.uint32).at[run_id].add(
+        sorted_vals, mode="drop"
+    )
+    # First element of each run publishes its key at the run's slot; all
+    # other elements scatter out of bounds (index b) and are dropped.
+    slot = jnp.where(first, run_id, b)
+    unique_keys = (
+        jnp.full((b,), jnp.uint64(KEY_SENTINEL), dtype=jnp.uint64)
+        .at[slot]
+        .set(sorted_keys, mode="drop")
+    )
+    # Zero the count padding beyond n_unique (scatter-add above already
+    # leaves it zero, but make the invariant explicit for the Rust decoder).
+    lane = jnp.arange(b, dtype=jnp.int32)
+    unique_vals = jnp.where(lane < n_unique, totals, jnp.uint32(0))
+    return unique_keys, unique_vals, n_unique.astype(jnp.int32)
+
+
+def combine_sort(keys, vals):
+    """Combine-phase leaf: sort ``[B] u64`` keys (payload ``[B] u32``
+    counts), then fold duplicates.  Padding: key=KEY_SENTINEL, count=0."""
+    sk, sv = sort_pairs(keys, vals)
+    return dedup_sum(sk, sv)

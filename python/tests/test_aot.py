@@ -1,0 +1,48 @@
+"""AOT path: entry points lower to parseable HLO text with stable shapes."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+from compile.kernels import BATCH, NBUCKETS, SORT_BATCH, WIDTH
+
+
+def test_map_shard_lowers_to_hlo_text():
+    text = aot.lower_map_shard()
+    assert "ENTRY" in text
+    assert f"u8[{BATCH},{WIDTH}]" in text
+    assert f"u64[{BATCH}]" in text
+    assert f"s32[{NBUCKETS}]" in text
+
+
+def test_combine_sort_lowers_to_hlo_text():
+    text = aot.lower_combine_sort()
+    assert "ENTRY" in text
+    assert f"u64[{SORT_BATCH}]" in text
+    assert f"u32[{SORT_BATCH}]" in text
+
+
+def test_no_custom_calls_in_artifacts():
+    # interpret=True must lower pallas to plain HLO: a Mosaic custom-call
+    # would make the artifact unloadable by the CPU PJRT client.
+    for text in (aot.lower_map_shard(), aot.lower_combine_sort()):
+        assert "custom-call" not in text.lower()
+
+
+def test_cli_writes_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    assert (out / "map_shard.hlo.txt").exists()
+    assert (out / "combine_sort.hlo.txt").exists()
+    manifest = (out / "manifest.txt").read_text()
+    assert f"BATCH={BATCH}" in manifest
+    assert "map_shard" in manifest and "combine_sort" in manifest

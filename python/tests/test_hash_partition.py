@@ -1,0 +1,101 @@
+"""L1 correctness: hash_partition kernel vs the scalar numpy oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import NBUCKETS, WIDTH, hash_partition
+from compile.kernels import ref
+
+
+def run(tokens, lengths, block_b):
+    h, c = hash_partition(tokens, lengths, block_b=block_b)
+    return np.asarray(h), np.asarray(c)
+
+
+def make_batch(rng, b, max_len=WIDTH):
+    tokens = rng.integers(0, 256, size=(b, WIDTH), dtype=np.uint8)
+    lengths = rng.integers(0, max_len + 1, size=(b,), dtype=np.int32)
+    # zero out padding bytes like the Rust packer does
+    for i in range(b):
+        tokens[i, lengths[i]:] = 0
+    return tokens, lengths
+
+
+@pytest.mark.parametrize("b,block_b", [(128, 64), (256, 128), (4096, 512)])
+def test_matches_oracle(b, block_b):
+    rng = np.random.default_rng(42 + b)
+    tokens, lengths = make_batch(rng, b)
+    h, c = run(tokens, lengths, block_b)
+    rh, rc = ref.hash_partition_ref(tokens, lengths)
+    np.testing.assert_array_equal(h, rh)
+    np.testing.assert_array_equal(c, rc)
+
+
+def test_known_vector():
+    # FNV-1a("hello") is a published test vector.
+    tokens = np.zeros((128, WIDTH), dtype=np.uint8)
+    word = b"hello"
+    tokens[0, : len(word)] = np.frombuffer(word, dtype=np.uint8)
+    lengths = np.zeros(128, dtype=np.int32)
+    lengths[0] = len(word)
+    h, c = run(tokens, lengths, 64)
+    assert h[0] == 0xA430D84680AABD0B
+    assert c.sum() == 1
+    assert c[0xA430D84680AABD0B & 0xFF] == 1
+
+
+def test_all_padding_rows():
+    tokens = np.zeros((128, WIDTH), dtype=np.uint8)
+    lengths = np.zeros(128, dtype=np.int32)
+    h, c = run(tokens, lengths, 64)
+    assert (h == 0).all()
+    assert (c == 0).all()
+
+
+def test_full_width_tokens():
+    rng = np.random.default_rng(7)
+    tokens = rng.integers(0, 256, size=(128, WIDTH), dtype=np.uint8)
+    lengths = np.full(128, WIDTH, dtype=np.int32)
+    h, c = run(tokens, lengths, 64)
+    rh, rc = ref.hash_partition_ref(tokens, lengths)
+    np.testing.assert_array_equal(h, rh)
+    np.testing.assert_array_equal(c, rc)
+
+
+def test_histogram_totals_valid_rows():
+    rng = np.random.default_rng(3)
+    tokens, lengths = make_batch(rng, 256)
+    _, c = run(tokens, lengths, 128)
+    assert c.sum() == (lengths > 0).sum()
+
+
+def test_hash_independent_of_padding_bytes():
+    # Garbage beyond `length` must not change the hash: the kernel masks
+    # by position, it does not rely on the packer zeroing.
+    rng = np.random.default_rng(11)
+    tokens, lengths = make_batch(rng, 128)
+    h1, _ = run(tokens, lengths, 64)
+    dirty = tokens.copy()
+    for i in range(128):
+        dirty[i, lengths[i]:] = rng.integers(0, 256, WIDTH - lengths[i])
+    h2, _ = run(dirty, lengths, 64)
+    np.testing.assert_array_equal(h1, h2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.data(),
+    b_exp=st.integers(min_value=6, max_value=9),
+)
+def test_hypothesis_sweep(data, b_exp):
+    b = 2 ** b_exp
+    block_b = 2 ** data.draw(st.integers(min_value=5, max_value=b_exp))
+    seed = data.draw(st.integers(min_value=0, max_value=2**32 - 1))
+    rng = np.random.default_rng(seed)
+    tokens, lengths = make_batch(rng, b)
+    h, c = run(tokens, lengths, block_b)
+    rh, rc = ref.hash_partition_ref(tokens, lengths)
+    np.testing.assert_array_equal(h, rh)
+    np.testing.assert_array_equal(c, rc)
+    assert c.shape == (NBUCKETS,)

@@ -1,0 +1,81 @@
+"""L2 correctness: dedup_sum graph + combine_sort end-to-end vs oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import KEY_SENTINEL
+from compile.kernels import ref
+
+
+def run_combine(keys, vals):
+    uk, uv, n = model.combine_sort(keys, vals)
+    return np.asarray(uk), np.asarray(uv), int(n)
+
+
+def test_combine_basic():
+    keys = np.array([3, 1, 3, 2, 1, 3] + [KEY_SENTINEL] * 2, dtype=np.uint64)
+    vals = np.array([1, 2, 3, 4, 5, 6, 0, 0], dtype=np.uint32)
+    uk, uv, n = run_combine(keys, vals)
+    # sentinel forms its own run -> n includes it; Rust drops key==SENTINEL
+    assert uk[0] == 1 and uv[0] == 7
+    assert uk[1] == 2 and uv[1] == 4
+    assert uk[2] == 3 and uv[2] == 10
+    assert uk[3] == np.uint64(KEY_SENTINEL)
+    assert n == 4
+
+
+def test_combine_all_unique():
+    keys = np.arange(64, dtype=np.uint64)
+    vals = np.ones(64, dtype=np.uint32)
+    uk, uv, n = run_combine(keys, vals)
+    assert n == 64
+    np.testing.assert_array_equal(uk, keys)
+    np.testing.assert_array_equal(uv, vals)
+
+
+def test_combine_all_duplicates():
+    keys = np.full(128, 9, dtype=np.uint64)
+    vals = np.full(128, 2, dtype=np.uint32)
+    uk, uv, n = run_combine(keys, vals)
+    assert n == 1
+    assert uk[0] == 9 and uv[0] == 256
+    assert (uk[1:] == np.uint64(KEY_SENTINEL)).all()
+    assert (uv[1:] == 0).all()
+
+
+def test_count_conservation():
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, 40, size=(1024,), dtype=np.uint64)
+    vals = rng.integers(0, 100, size=(1024,), dtype=np.uint32)
+    uk, uv, n = run_combine(keys, vals)
+    assert uv[:n].sum(dtype=np.uint64) == vals.sum(dtype=np.uint64)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b_exp=st.integers(min_value=1, max_value=10),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+    key_space=st.sampled_from([2, 37, 2**20]),
+)
+def test_hypothesis_matches_oracle(b_exp, seed, key_space):
+    b = 2 ** b_exp
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_space, size=(b,), dtype=np.uint64)
+    vals = rng.integers(0, 1000, size=(b,), dtype=np.uint32)
+    uk, uv, n = run_combine(keys, vals)
+    ruk, ruv, rn = ref.combine_sort_ref(keys, vals)
+    assert n == rn
+    np.testing.assert_array_equal(uk, ruk)
+    np.testing.assert_array_equal(uv, ruv)
+    # unique keys strictly increasing within n
+    assert (uk[1:n] > uk[: n - 1]).all()
+
+
+def test_dedup_sum_requires_sorted_input_documented():
+    # dedup_sum only folds *adjacent* duplicates by contract.
+    keys = np.array([2, 1, 2, 1], dtype=np.uint64)
+    vals = np.ones(4, dtype=np.uint32)
+    uk, uv, n = (np.asarray(x) for x in model.dedup_sum(keys, vals))
+    assert int(n) == 4  # nothing adjacent, nothing folded

@@ -1,0 +1,83 @@
+"""L1 correctness: bitonic sort_pairs kernel vs numpy argsort oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import KEY_SENTINEL, sort_pairs
+from compile.kernels import ref
+
+
+def run(keys, vals):
+    k, v = sort_pairs(keys, vals)
+    return np.asarray(k), np.asarray(v)
+
+
+@pytest.mark.parametrize("b", [2, 64, 256, 4096])
+def test_sorted_and_matches_oracle(b):
+    rng = np.random.default_rng(b)
+    keys = rng.integers(0, 2**63, size=(b,), dtype=np.uint64)
+    vals = rng.integers(0, 2**32, size=(b,), dtype=np.uint32)
+    sk, sv = run(keys, vals)
+    assert (sk[1:] >= sk[:-1]).all()
+    rk, _ = ref.sort_pairs_ref(keys, vals)
+    np.testing.assert_array_equal(sk, rk)
+    # payload must travel with its key: compare multiset of pairs
+    got = sorted(zip(sk.tolist(), sv.tolist()))
+    want = sorted(zip(keys.tolist(), vals.tolist()))
+    assert got == want
+
+
+def test_already_sorted_identity():
+    keys = np.arange(256, dtype=np.uint64)
+    vals = np.arange(256, dtype=np.uint32)
+    sk, sv = run(keys, vals)
+    np.testing.assert_array_equal(sk, keys)
+    np.testing.assert_array_equal(sv, vals)
+
+
+def test_reverse_sorted():
+    keys = np.arange(256, dtype=np.uint64)[::-1].copy()
+    vals = np.arange(256, dtype=np.uint32)
+    sk, sv = run(keys, vals)
+    np.testing.assert_array_equal(sk, np.arange(256, dtype=np.uint64))
+    np.testing.assert_array_equal(sv, vals[::-1])
+
+
+def test_all_equal_keys():
+    keys = np.full(128, 7, dtype=np.uint64)
+    vals = np.arange(128, dtype=np.uint32)
+    sk, sv = run(keys, vals)
+    assert (sk == 7).all()
+    # every payload survives exactly once
+    assert sorted(sv.tolist()) == list(range(128))
+
+
+def test_sentinel_padding_sorts_to_tail():
+    keys = np.full(64, KEY_SENTINEL, dtype=np.uint64)
+    keys[:10] = np.arange(10, dtype=np.uint64)[::-1]
+    vals = np.ones(64, dtype=np.uint32)
+    vals[10:] = 0
+    sk, sv = run(keys, vals)
+    np.testing.assert_array_equal(sk[:10], np.arange(10, dtype=np.uint64))
+    assert (sk[10:] == np.uint64(KEY_SENTINEL)).all()
+    assert (sv[10:] == 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b_exp=st.integers(min_value=1, max_value=10),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+    key_space=st.sampled_from([4, 1000, 2**63]),
+)
+def test_hypothesis_sweep(b_exp, seed, key_space):
+    b = 2 ** b_exp
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_space, size=(b,), dtype=np.uint64)
+    vals = rng.integers(0, 2**32, size=(b,), dtype=np.uint32)
+    sk, sv = run(keys, vals)
+    rk, _ = ref.sort_pairs_ref(keys, vals)
+    np.testing.assert_array_equal(sk, rk)
+    got = sorted(zip(sk.tolist(), sv.tolist()))
+    want = sorted(zip(keys.tolist(), vals.tolist()))
+    assert got == want

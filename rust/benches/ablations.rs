@@ -1,0 +1,91 @@
+//! Ablation benches for the design choices DESIGN.md §4 calls out:
+//!
+//! * Local Reduce on/off (§2.1 phase II: "decrease the overall memory
+//!   footprint and network overhead");
+//! * task size (paper default 64 MB, empirically chosen);
+//! * one-sided op limit / chunk size (paper default 1 MB);
+//! * bucket size (win_size);
+//! * skew intensity sweep (how the MR-1S advantage grows with imbalance).
+//!
+//! All numbers are virtual seconds of the same Word-Count workload.
+
+use std::sync::Arc;
+
+use mr1s::harness::Scenario;
+use mr1s::mapreduce::{BackendKind, Job, JobConfig};
+use mr1s::sim::CostModel;
+use mr1s::usecases::WordCount;
+use mr1s::workload::{skew_factors, SkewSpec};
+
+const RANKS: usize = 8;
+
+fn run(cfg: JobConfig, backend: BackendKind) -> (f64, u64) {
+    let out = Job::new(Arc::new(WordCount), cfg)
+        .unwrap()
+        .run(backend, RANKS, CostModel::default())
+        .unwrap();
+    (out.report.elapsed_secs(), out.report.peak_memory_bytes)
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scenario = if full { Scenario::default() } else { Scenario::smoke() };
+    let input = scenario.corpus(scenario.strong_bytes).expect("corpus");
+    let base = scenario.config(input.clone(), false);
+    let ntasks = (scenario.strong_bytes as usize).div_ceil(base.task_size);
+
+    println!("== ablation: local reduce (MR-1S, unbalanced) ==");
+    let skew = skew_factors(scenario.skew, ntasks, scenario.seed);
+    for (label, lr) in [("on", true), ("off", false)] {
+        let cfg = JobConfig { local_reduce: lr, skew: skew.clone(), ..base.clone() };
+        let (secs, mem) = run(cfg, BackendKind::OneSided);
+        println!("local_reduce={label:<4} {secs:>8.3}s  peak_mem={}MiB", mem >> 20);
+        println!("#csv,ablation_local_reduce,{label},{secs:.4},{mem}");
+    }
+
+    println!("\n== ablation: task size (MR-1S, balanced) ==");
+    for task_kib in [64usize, 128, 256, 512, 1024, 2048] {
+        let cfg = JobConfig { task_size: task_kib << 10, ..base.clone() };
+        let (secs, _) = run(cfg, BackendKind::OneSided);
+        println!("task_size={task_kib:>5}KiB {secs:>8.3}s");
+        println!("#csv,ablation_task_size,{task_kib},{secs:.4}");
+    }
+
+    println!("\n== ablation: one-sided op limit (MR-1S, balanced) ==");
+    for chunk_kib in [16usize, 64, 256, 1024] {
+        let cfg = JobConfig { chunk_size: chunk_kib << 10, ..base.clone() };
+        let (secs, _) = run(cfg, BackendKind::OneSided);
+        println!("chunk_size={chunk_kib:>5}KiB {secs:>8.3}s");
+        println!("#csv,ablation_op_limit,{chunk_kib},{secs:.4}");
+    }
+
+    println!("\n== ablation: bucket size (MR-1S, balanced) ==");
+    for win_kib in [64usize, 256, 1024, 4096] {
+        let cfg = JobConfig { win_size: win_kib << 10, ..base.clone() };
+        let (secs, mem) = run(cfg, BackendKind::OneSided);
+        println!("win_size={win_kib:>5}KiB {secs:>8.3}s  peak_mem={}MiB", mem >> 20);
+        println!("#csv,ablation_win_size,{win_kib},{secs:.4},{mem}");
+    }
+
+    println!("\n== extension: job stealing (paper §6 future work; MR-1S, unbalanced) ==");
+    for (label, stealing) in [("off", false), ("on", true)] {
+        let cfg = JobConfig { skew: skew.clone(), job_stealing: stealing, ..base.clone() };
+        let (secs, _) = run(cfg, BackendKind::OneSided);
+        println!("stealing={label:<4} {secs:>8.3}s");
+        println!("#csv,extension_stealing,{label},{secs:.4}");
+    }
+
+    println!("\n== ablation: skew intensity (MR-1S vs MR-2S) ==");
+    for factor in [1.0f64, 1.5, 2.0, 2.5, 3.0, 4.0] {
+        let skew = if factor > 1.0 {
+            skew_factors(SkewSpec::Hotspot { p_heavy: 0.25, factor }, ntasks, scenario.seed)
+        } else {
+            Vec::new()
+        };
+        let (s1, _) = run(JobConfig { skew: skew.clone(), ..base.clone() }, BackendKind::OneSided);
+        let (s2, _) = run(JobConfig { skew, ..base.clone() }, BackendKind::TwoSided);
+        let imp = (s2 - s1) / s2 * 100.0;
+        println!("factor={factor:<4} MR-1S {s1:>7.3}s  MR-2S {s2:>7.3}s  improvement {imp:+.1}%");
+        println!("#csv,ablation_skew,{factor},{s1:.4},{s2:.4},{imp:.2}");
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate Figs 4a–4d (strong/weak scaling, balanced and
+//! unbalanced, MR-2S vs MR-1S).
+//!
+//! `cargo bench --bench fig4_scaling` runs the smoke profile;
+//! `cargo bench --bench fig4_scaling -- --full` runs the paper-scaled
+//! scenario from DESIGN.md §4 (as `mr1s figures` does).
+
+use mr1s::harness::figures::{run_figure, FigureId};
+use mr1s::harness::Scenario;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scenario = if full { Scenario::default() } else { Scenario::smoke() };
+    println!(
+        "fig4 scaling bench ({} profile)",
+        if full { "full" } else { "smoke" }
+    );
+    for id in [FigureId::Fig4a, FigureId::Fig4b, FigureId::Fig4c, FigureId::Fig4d] {
+        let data = run_figure(id, &scenario).expect("figure runs");
+        println!("{}", data.render());
+        for (name, v) in &data.aggregates {
+            println!("#csv,fig{},{name},{v:.3}", data.id);
+        }
+    }
+}

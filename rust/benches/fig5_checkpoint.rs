@@ -1,0 +1,23 @@
+//! Bench: regenerate Figs 5a/5b (MR-1S with storage-window checkpoints).
+//!
+//! Paper's finding: checkpoint overhead ≈ 4.8% on average because the
+//! storage flush overlaps with computation.
+
+use mr1s::harness::figures::{run_figure, FigureId};
+use mr1s::harness::Scenario;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scenario = if full { Scenario::default() } else { Scenario::smoke() };
+    println!(
+        "fig5 checkpoint bench ({} profile)",
+        if full { "full" } else { "smoke" }
+    );
+    for id in [FigureId::Fig5a, FigureId::Fig5b] {
+        let data = run_figure(id, &scenario).expect("figure runs");
+        println!("{}", data.render());
+        for (name, v) in &data.aggregates {
+            println!("#csv,fig{},{name},{v:.3}", data.id);
+        }
+    }
+}

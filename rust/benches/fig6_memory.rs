@@ -1,0 +1,21 @@
+//! Bench: regenerate Figs 6a/6b (memory consumption per node).
+//!
+//! Paper's finding: MR-1S and MR-2S land in the same memory band
+//! (10.4–13.7 GB on 24 GB/node workloads), with the peak during Combine
+//! at the end of the execution.
+
+use mr1s::harness::figures::{run_figure, FigureId};
+use mr1s::harness::Scenario;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scenario = if full { Scenario::default() } else { Scenario::smoke() };
+    println!(
+        "fig6 memory bench ({} profile)",
+        if full { "full" } else { "smoke" }
+    );
+    for id in [FigureId::Fig6a, FigureId::Fig6b] {
+        let data = run_figure(id, &scenario).expect("figure runs");
+        println!("{}", data.render());
+    }
+}

@@ -1,0 +1,122 @@
+//! Micro-benches of the hot-path building blocks (wallclock, not virtual
+//! time): kv encode/decode, window RMA ops, sorted-run machinery, the
+//! kernel-vs-scalar hash path (the L1 ablation), and corpus generation.
+
+use mr1s::bench::{report, section, Bencher};
+use mr1s::mapreduce::bucket::{KeyTable, OwnedRecord, SortedRun};
+use mr1s::mapreduce::job::cached_engine;
+use mr1s::mapreduce::kv::{self, Record};
+use mr1s::mpi::{Universe, Window};
+use mr1s::runtime::Engine;
+use mr1s::sim::CostModel;
+use mr1s::workload::SplitMix64;
+
+fn words(n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = 3 + rng.below(12) as usize;
+            (0..len).map(|_| b'a' + rng.below(26) as u8).collect()
+        })
+        .collect()
+}
+
+fn main() {
+    let b = Bencher::default();
+
+    section("kv encode/decode (64k records)");
+    let ws = words(65_536, 1);
+    let mut buf = Vec::new();
+    report(&b.wall("kv_encode_64k", || {
+        buf.clear();
+        for w in &ws {
+            Record { hash: kv::hash_key(w), key: w, count: 1 }.encode_into(&mut buf);
+        }
+    }));
+    report(&b.wall("kv_decode_64k", || {
+        let mut n = 0usize;
+        for rec in kv::RecordIter::new(&buf) {
+            let _ = rec.unwrap();
+            n += 1;
+        }
+        assert_eq!(n, 65_536);
+    }));
+
+    section("scalar FNV hash (64k tokens)");
+    report(&b.wall("hash_scalar_64k", || {
+        let mut acc = 0u64;
+        for w in &ws {
+            acc = acc.wrapping_add(kv::hash_key(w));
+        }
+        std::hint::black_box(acc);
+    }));
+
+    section("kernel vs scalar hash batch (4096 tokens) [ablation_kernel]");
+    let refs: Vec<&[u8]> = ws[..4096].iter().map(Vec::as_slice).collect();
+    report(&b.wall("hash_batch_scalar_4096", || {
+        let _ = Engine::hash_batch_scalar(&refs, 256);
+    }));
+    if let Some(engine) = cached_engine() {
+        report(&b.wall("hash_batch_kernel_4096", || {
+            let _ = engine.hash_batch(&refs).unwrap();
+        }));
+        let keys: Vec<u64> = ws[..4096].iter().map(|w| kv::hash_key(w)).collect();
+        report(&b.wall("sort_perm_kernel_4096", || {
+            let _ = engine.sort_perm(&keys).unwrap();
+        }));
+    } else {
+        println!("(artifacts missing: kernel benches skipped — run `make artifacts`)");
+    }
+
+    section("sorted runs (local-reduce table -> run -> merge)");
+    let mut table = KeyTable::new();
+    for w in &ws {
+        table.merge(kv::hash_key(w), w, 1, u64::wrapping_add);
+    }
+    let records = table.drain_records();
+    report(&b.wall("run_build_scalar", || {
+        let _ = SortedRun::build_scalar(records.clone(), u64::wrapping_add);
+    }));
+    let run_a = SortedRun::build_scalar(records.clone(), u64::wrapping_add);
+    let run_b = {
+        let recs: Vec<OwnedRecord> = words(32_768, 2)
+            .iter()
+            .map(|w| OwnedRecord { hash: kv::hash_key(w), key: w.as_slice().into(), count: 1 })
+            .collect();
+        SortedRun::build_scalar(recs, u64::wrapping_add)
+    };
+    report(&b.wall("run_merge_2way", || {
+        let _ = run_a.clone().merge(run_b.clone(), u64::wrapping_add);
+    }));
+
+    section("window RMA ops (4 ranks, 1 MiB puts)");
+    report(&b.wall("window_put_get_1mib_x4ranks", || {
+        let outs = Universe::new(4, CostModel::default()).run(|ctx| {
+            let win = Window::create(ctx, 1 << 20);
+            ctx.barrier();
+            let data = vec![0u8; 1 << 20];
+            let peer = (ctx.rank() + 1) % 4;
+            win.put(&ctx.clock, peer, 0, &data).unwrap();
+            ctx.barrier();
+            let mut out = vec![0u8; 1 << 20];
+            win.get(&ctx.clock, ctx.rank(), 0, &mut out).unwrap();
+            out[0]
+        });
+        std::hint::black_box(outs);
+    }));
+
+    section("atomics (2 ranks, 10k CAS)");
+    report(&b.wall("atomic_cas_10k", || {
+        let outs = Universe::new(2, CostModel::default()).run(|ctx| {
+            let win = Window::create(ctx, 64);
+            ctx.barrier();
+            if ctx.rank() == 0 {
+                for i in 0..10_000u64 {
+                    win.compare_and_swap(&ctx.clock, 0, 0, i, i + 1).unwrap();
+                }
+            }
+            ctx.barrier();
+        });
+        std::hint::black_box(outs);
+    }));
+}

@@ -1,0 +1,123 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Two measurement modes:
+//! * [`Bencher::wall`] — wallclock statistics of a closure (micro
+//!   benches: kv encode, window ops, kernel execute);
+//! * virtual-seconds reporting for whole-job benches, where the number of
+//!   interest is the simulated makespan, repeated to expose the residual
+//!   scheduling nondeterminism (see DESIGN.md on virtual time).
+//!
+//! Output is a fixed-width table plus machine-readable CSV lines prefixed
+//! `#csv,` so bench logs can be grepped into plots.
+
+use std::time::Instant;
+
+/// One measured series.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Bench id.
+    pub name: String,
+    /// Mean of the measurements (ns for wall benches, virtual ns for job
+    /// benches).
+    pub mean: f64,
+    /// Standard deviation.
+    pub stddev: f64,
+    /// Number of measurements.
+    pub n: usize,
+}
+
+impl Sample {
+    /// Aggregate raw measurements.
+    pub fn from_measurements(name: impl Into<String>, xs: &[f64]) -> Sample {
+        let n = xs.len().max(1);
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Sample { name: name.into(), mean, stddev: var.sqrt(), n: xs.len() }
+    }
+
+    /// Render as a table row.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>14.3} ms ± {:>10.3} ms  (n={})",
+            self.name,
+            self.mean / 1e6,
+            self.stddev / 1e6,
+            self.n
+        )
+    }
+
+    /// Render as a CSV line (`#csv,name,mean_ns,stddev_ns,n`).
+    pub fn csv(&self) -> String {
+        format!("#csv,{},{:.1},{:.1},{}", self.name, self.mean, self.stddev, self.n)
+    }
+}
+
+/// Wallclock micro-bench runner.
+pub struct Bencher {
+    /// Warmup iterations (not measured).
+    pub warmup: usize,
+    /// Measured iterations.
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 3, iters: 10 }
+    }
+}
+
+impl Bencher {
+    /// Measure `f`'s wallclock over the configured iterations.
+    pub fn wall(&self, name: impl Into<String>, mut f: impl FnMut()) -> Sample {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut xs = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            f();
+            xs.push(t.elapsed().as_nanos() as f64);
+        }
+        Sample::from_measurements(name, &xs)
+    }
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n== {title} ==");
+}
+
+/// Print one sample (row + csv).
+pub fn report(sample: &Sample) {
+    println!("{}", sample.row());
+    println!("{}", sample.csv());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_statistics() {
+        let s = Sample::from_measurements("x", &[1.0, 3.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.stddev, 1.0);
+        assert_eq!(s.n, 2);
+    }
+
+    #[test]
+    fn wall_bench_runs_the_closure() {
+        let mut count = 0usize;
+        let b = Bencher { warmup: 1, iters: 4 };
+        let s = b.wall("noop", || count += 1);
+        assert_eq!(count, 5);
+        assert_eq!(s.n, 4);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn csv_is_greppable() {
+        let s = Sample::from_measurements("a,b", &[5.0]);
+        assert!(s.csv().starts_with("#csv,a,b,"));
+    }
+}

@@ -1,0 +1,281 @@
+//! Hand-rolled CLI (clap is unavailable offline).
+//!
+//! ```text
+//! mr1s gen --bytes 32M --out corpus.txt [--seed 42]
+//! mr1s run --input corpus.txt [--backend 1s|2s] [--ranks 8]
+//!          [--usecase word-count|inverted-index|length-histogram]
+//!          [--task-size 512K] [--win-size 1M] [--chunk-size 256K]
+//!          [--unbalanced] [--checkpoints] [--flush-epochs] [--no-kernel]
+//!          [--top 20]
+//! mr1s compare --input corpus.txt [--ranks 8] [--unbalanced]
+//! mr1s figures --fig 4a|4b|4c|4d|5a|5b|6a|6b|7a|7b|all [--smoke]
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::harness::figures::{run_figure, FigureId};
+use crate::harness::Scenario;
+use crate::mapreduce::{BackendKind, Job, JobConfig, UseCase};
+use crate::sim::CostModel;
+use crate::usecases::{InvertedIndex, LengthHistogram, WordCount};
+use crate::workload::{generate_corpus, skew_factors, CorpusSpec, SkewSpec};
+
+/// Parsed flag map: `--key value` and bare `--switch`.
+struct Flags {
+    values: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut values = HashMap::new();
+        let mut switches = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(Error::Config(format!("unexpected argument '{a}'")));
+            };
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                values.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                switches.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(Flags { values, switches })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    fn size(&self, key: &str, default: usize) -> Result<usize> {
+        self.get(key).map_or(Ok(default), parse_size)
+    }
+}
+
+/// Parse sizes like `64K`, `32M`, `1G`, `12345`.
+pub fn parse_size(s: &str) -> Result<usize> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last() {
+        Some('K' | 'k') => (&s[..s.len() - 1], 1usize << 10),
+        Some('M' | 'm') => (&s[..s.len() - 1], 1 << 20),
+        Some('G' | 'g') => (&s[..s.len() - 1], 1 << 30),
+        _ => (s, 1),
+    };
+    num.parse::<usize>()
+        .map(|n| n * mult)
+        .map_err(|_| Error::Config(format!("bad size '{s}'")))
+}
+
+const HELP: &str = "mr1s — decoupled MapReduce (MapReduce-1S reproduction)
+
+USAGE:
+  mr1s gen --bytes <SIZE> --out <PATH> [--seed N]
+  mr1s run --input <PATH> [--backend 1s|2s] [--ranks N] [--usecase NAME]
+           [--task-size S] [--win-size S] [--chunk-size S] [--unbalanced]
+           [--checkpoints] [--flush-epochs] [--stealing] [--no-kernel]
+           [--top N]
+  mr1s compare --input <PATH> [--ranks N] [--unbalanced]
+  mr1s figures --fig <ID|all> [--smoke]
+  mr1s help
+
+Figures: 4a 4b 4c 4d 5a 5b 6a 6b 7a 7b (DESIGN.md section 4).
+Sizes accept K/M/G suffixes.";
+
+/// CLI entrypoint; returns the process exit code.
+pub fn main(args: &[String]) -> Result<i32> {
+    let cmd = args.get(1).map(String::as_str).unwrap_or("help");
+    let flags = Flags::parse(&args[2..])?;
+    match cmd {
+        "gen" => cmd_gen(&flags),
+        "run" => cmd_run(&flags),
+        "compare" => cmd_compare(&flags),
+        "figures" => cmd_figures(&flags),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(0)
+        }
+        other => Err(Error::Config(format!("unknown command '{other}' (try `mr1s help`)"))),
+    }
+}
+
+fn cmd_gen(flags: &Flags) -> Result<i32> {
+    let bytes = flags.size("bytes", 32 << 20)? as u64;
+    let out = flags.get("out").ok_or_else(|| Error::Config("--out required".into()))?;
+    let seed = flags.get("seed").map_or(Ok(42), |s| {
+        s.parse().map_err(|_| Error::Config("bad --seed".into()))
+    })?;
+    let written = generate_corpus(out, &CorpusSpec { bytes, seed, ..Default::default() })?;
+    println!("wrote {written} bytes to {out} (seed {seed})");
+    Ok(0)
+}
+
+fn usecase_by_name(name: &str) -> Result<Arc<dyn UseCase>> {
+    Ok(match name {
+        "word-count" | "wordcount" | "wc" => Arc::new(WordCount),
+        "inverted-index" | "invidx" => Arc::new(InvertedIndex),
+        "length-histogram" | "hist" => Arc::new(LengthHistogram),
+        other => return Err(Error::Config(format!("unknown usecase '{other}'"))),
+    })
+}
+
+fn job_config(flags: &Flags) -> Result<JobConfig> {
+    let input = flags.get("input").ok_or_else(|| Error::Config("--input required".into()))?;
+    let mut cfg = JobConfig {
+        input: input.into(),
+        task_size: flags.size("task-size", 512 << 10)?,
+        win_size: flags.size("win-size", 1 << 20)?,
+        chunk_size: flags.size("chunk-size", 256 << 10)?,
+        checkpoints: flags.has("checkpoints"),
+        flush_epochs: flags.has("flush-epochs"),
+        use_kernel: !flags.has("no-kernel"),
+        job_stealing: flags.has("stealing"),
+        ..Default::default()
+    };
+    if flags.has("unbalanced") {
+        let ntasks = std::fs::metadata(input)
+            .map(|m| (m.len() as usize).div_ceil(cfg.task_size))
+            .unwrap_or(1);
+        cfg.skew = skew_factors(SkewSpec::paper_unbalanced(), ntasks, 42);
+    }
+    Ok(cfg)
+}
+
+fn ranks(flags: &Flags) -> Result<usize> {
+    flags
+        .get("ranks")
+        .map_or(Ok(8), |s| s.parse().map_err(|_| Error::Config("bad --ranks".into())))
+}
+
+fn cmd_run(flags: &Flags) -> Result<i32> {
+    let backend: BackendKind = flags.get("backend").unwrap_or("1s").parse()?;
+    let usecase = usecase_by_name(flags.get("usecase").unwrap_or("word-count"))?;
+    let cfg = job_config(flags)?;
+    let nranks = ranks(flags)?;
+    let top = flags.get("top").map_or(Ok(10), |s| {
+        s.parse::<usize>().map_err(|_| Error::Config("bad --top".into()))
+    })?;
+
+    let out = Job::new(usecase, cfg)?.run(backend, nranks, CostModel::default())?;
+    println!("{}", out.report.summary());
+    if std::env::var_os("MR1S_DEBUG_PHASES").is_some() {
+        for (r, b) in out.report.breakdowns.iter().enumerate() {
+            println!(
+                "rank {r:>2}: io={:.1} map={:.1} lred={:.1} red={:.1} comb={:.1} wait={:.1} total={:.1}",
+                b.io_ns as f64 / 1e6,
+                b.map_ns as f64 / 1e6,
+                b.local_reduce_ns as f64 / 1e6,
+                b.reduce_ns as f64 / 1e6,
+                b.combine_ns as f64 / 1e6,
+                b.wait_ns as f64 / 1e6,
+                out.report.rank_elapsed_ns[r] as f64 / 1e6,
+            );
+        }
+    }
+    if flags.has("phases") {
+        let mut agg = crate::metrics::PhaseBreakdown::default();
+        for b in &out.report.breakdowns {
+            agg.io_ns += b.io_ns;
+            agg.map_ns += b.map_ns;
+            agg.local_reduce_ns += b.local_reduce_ns;
+            agg.reduce_ns += b.reduce_ns;
+            agg.combine_ns += b.combine_ns;
+            agg.wait_ns += b.wait_ns;
+            agg.checkpoint_ns += b.checkpoint_ns;
+        }
+        let n = out.report.breakdowns.len() as f64;
+        println!(
+            "phases(mean ms/rank): io={:.1} map={:.1} lred={:.1} red={:.1} comb={:.1} wait={:.1} ckpt={:.1}",
+            agg.io_ns as f64 / n / 1e6,
+            agg.map_ns as f64 / n / 1e6,
+            agg.local_reduce_ns as f64 / n / 1e6,
+            agg.reduce_ns as f64 / n / 1e6,
+            agg.combine_ns as f64 / n / 1e6,
+            agg.wait_ns as f64 / n / 1e6,
+            agg.checkpoint_ns as f64 / n / 1e6,
+        );
+    }
+    let mut by_count = out.result;
+    by_count.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    for (key, count) in by_count.into_iter().take(top) {
+        println!("{:>12}  {}", count, String::from_utf8_lossy(&key));
+    }
+    Ok(0)
+}
+
+fn cmd_compare(flags: &Flags) -> Result<i32> {
+    let cfg = job_config(flags)?;
+    let nranks = ranks(flags)?;
+    let r2 = Job::new(Arc::new(WordCount), cfg.clone())?
+        .run(BackendKind::TwoSided, nranks, CostModel::default())?;
+    let r1 = Job::new(Arc::new(WordCount), cfg)?
+        .run(BackendKind::OneSided, nranks, CostModel::default())?;
+    println!("{}", r2.report.summary());
+    println!("{}", r1.report.summary());
+    let imp = (r2.report.elapsed_secs() - r1.report.elapsed_secs()) / r2.report.elapsed_secs()
+        * 100.0;
+    println!("MR-1S improvement over MR-2S: {imp:.1}%");
+    assert_eq!(r1.report.unique_keys, r2.report.unique_keys, "backends disagree");
+    Ok(0)
+}
+
+fn cmd_figures(flags: &Flags) -> Result<i32> {
+    let scenario = if flags.has("smoke") { Scenario::smoke() } else { Scenario::default() };
+    let which = flags.get("fig").unwrap_or("all");
+    let ids: Vec<FigureId> = if which == "all" {
+        FigureId::all().to_vec()
+    } else {
+        vec![which.parse()?]
+    };
+    for id in ids {
+        let data = run_figure(id, &scenario)?;
+        println!("{}", data.render());
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_size_suffixes() {
+        assert_eq!(parse_size("64K").unwrap(), 64 << 10);
+        assert_eq!(parse_size("32M").unwrap(), 32 << 20);
+        assert_eq!(parse_size("1G").unwrap(), 1 << 30);
+        assert_eq!(parse_size("123").unwrap(), 123);
+        assert!(parse_size("x").is_err());
+    }
+
+    #[test]
+    fn flags_parse_values_and_switches() {
+        let args: Vec<String> =
+            ["--ranks", "8", "--unbalanced", "--input", "f.txt"].iter().map(|s| s.to_string()).collect();
+        let f = Flags::parse(&args).unwrap();
+        assert_eq!(f.get("ranks"), Some("8"));
+        assert_eq!(f.get("input"), Some("f.txt"));
+        assert!(f.has("unbalanced"));
+        assert!(!f.has("checkpoints"));
+    }
+
+    #[test]
+    fn unknown_command_is_error() {
+        let args: Vec<String> = ["mr1s", "frobnicate"].iter().map(|s| s.to_string()).collect();
+        assert!(main(&args).is_err());
+    }
+
+    #[test]
+    fn help_succeeds() {
+        let args: Vec<String> = ["mr1s", "help"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(main(&args).unwrap(), 0);
+    }
+}

@@ -1,0 +1,60 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for the mr1s crate.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Window access outside any attached segment.
+    #[error("window access out of bounds: target rank {target}, disp {disp}, len {len}")]
+    WindowOutOfBounds {
+        /// Target rank of the RMA operation.
+        target: usize,
+        /// Window displacement requested.
+        disp: u64,
+        /// Length of the access in bytes.
+        len: usize,
+    },
+
+    /// Atomic window ops require 8-byte aligned displacements.
+    #[error("unaligned atomic access at disp {0}")]
+    UnalignedAtomic(u64),
+
+    /// Rank out of range for the communicator.
+    #[error("invalid rank {rank} (communicator size {size})")]
+    InvalidRank {
+        /// Offending rank.
+        rank: usize,
+        /// Communicator size.
+        size: usize,
+    },
+
+    /// Key-value record decoding failed (corrupt header / truncated data).
+    #[error("kv decode error: {0}")]
+    KvDecode(String),
+
+    /// Malformed configuration.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Storage substrate I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// PJRT runtime failure (artifact load / compile / execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// A rank thread panicked during a job.
+    #[error("rank {0} panicked")]
+    RankPanic(usize),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

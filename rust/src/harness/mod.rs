@@ -1,0 +1,12 @@
+//! Figure-regeneration harness: one driver per paper table/figure.
+//!
+//! Each `figN` function runs the scaled-down scenario from DESIGN.md §4
+//! and returns the data series the paper plots; [`render`] prints it as
+//! CSV (plus a human summary).  `mr1s figures --fig <id>` is the CLI
+//! front door; `cargo bench` wraps the same drivers.
+
+pub mod figures;
+pub mod scenario;
+
+pub use figures::{FigureData, FigureId};
+pub use scenario::Scenario;

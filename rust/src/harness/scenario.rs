@@ -1,0 +1,152 @@
+//! Shared scenario plumbing: corpora caching, job assembly, sweeps.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::mapreduce::{BackendKind, Job, JobConfig, JobOutput};
+use crate::sim::CostModel;
+use crate::usecases::WordCount;
+use crate::workload::{generate_corpus, skew_factors, CorpusSpec, SkewSpec};
+
+/// Scaled-down counterparts of the paper's workload parameters
+/// (DESIGN.md §1: 32 GB strong-scaling input → 32 MiB, 1 GB/rank weak →
+/// 4 MiB/rank, ranks 16–256 → 2–32).
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Corpus bytes for strong scaling (fixed total).
+    pub strong_bytes: u64,
+    /// Corpus bytes per rank for weak scaling.
+    pub weak_bytes_per_rank: u64,
+    /// Rank counts swept.
+    pub ranks: Vec<usize>,
+    /// Map task size.
+    pub task_size: usize,
+    /// Bucket size (win_size).
+    pub win_size: usize,
+    /// One-sided op limit (chunk_size).
+    pub chunk_size: usize,
+    /// Unbalanced profile (used by the 4c/4d/7 scenarios).
+    pub skew: SkewSpec,
+    /// Seed for corpus + skew.
+    pub seed: u64,
+    /// Route hot-spots through the PJRT kernels.
+    pub use_kernel: bool,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            strong_bytes: 32 << 20,
+            weak_bytes_per_rank: 4 << 20,
+            ranks: vec![2, 4, 8, 16, 32],
+            task_size: 512 << 10,
+            win_size: 1 << 20,
+            chunk_size: 256 << 10,
+            skew: SkewSpec::paper_unbalanced(),
+            seed: 42,
+            use_kernel: false, // scalar map path: figures sweep dozens of jobs
+        }
+    }
+}
+
+impl Scenario {
+    /// A fast profile for tests / smoke runs.
+    pub fn smoke() -> Self {
+        Scenario {
+            strong_bytes: 2 << 20,
+            weak_bytes_per_rank: 512 << 10,
+            ranks: vec![2, 4, 8],
+            task_size: 128 << 10,
+            win_size: 256 << 10,
+            chunk_size: 64 << 10,
+            ..Default::default()
+        }
+    }
+
+    /// Directory where generated corpora are cached between runs.
+    pub fn corpus_dir() -> PathBuf {
+        let dir = std::env::var_os("MR1S_CORPUS_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(std::env::temp_dir);
+        dir.join("mr1s-corpora")
+    }
+
+    /// Generate (or reuse) a corpus of `bytes`; cached by (bytes, seed).
+    pub fn corpus(&self, bytes: u64) -> Result<PathBuf> {
+        let dir = Self::corpus_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("wiki-{}-{}.txt", bytes, self.seed));
+        let valid = std::fs::metadata(&path).map(|m| m.len() >= bytes).unwrap_or(false);
+        if !valid {
+            generate_corpus(&path, &CorpusSpec { bytes, seed: self.seed, ..Default::default() })?;
+        }
+        Ok(path)
+    }
+
+    /// Job config for `input`, optionally skewed.
+    pub fn config(&self, input: PathBuf, unbalanced: bool) -> JobConfig {
+        let ntasks = std::fs::metadata(&input)
+            .map(|m| (m.len() as usize).div_ceil(self.task_size))
+            .unwrap_or(1);
+        JobConfig {
+            input,
+            task_size: self.task_size,
+            win_size: self.win_size,
+            chunk_size: self.chunk_size,
+            use_kernel: self.use_kernel,
+            skew: if unbalanced {
+                skew_factors(self.skew, ntasks, self.seed)
+            } else {
+                Vec::new()
+            },
+            ..Default::default()
+        }
+    }
+
+    /// Run Word-Count with `cfg` on `nranks`.
+    pub fn run(
+        &self,
+        cfg: JobConfig,
+        backend: BackendKind,
+        nranks: usize,
+    ) -> Result<JobOutput> {
+        Job::new(Arc::new(WordCount), cfg)?.run(backend, nranks, CostModel::default())
+    }
+
+    /// Convenience: run both backends on the same workload.
+    pub fn head_to_head(
+        &self,
+        input: PathBuf,
+        unbalanced: bool,
+        nranks: usize,
+    ) -> Result<(JobOutput, JobOutput)> {
+        let r2 = self.run(self.config(input.clone(), unbalanced), BackendKind::TwoSided, nranks)?;
+        let r1 = self.run(self.config(input, unbalanced), BackendKind::OneSided, nranks)?;
+        Ok((r2, r1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_cached() {
+        let s = Scenario { seed: 777, ..Scenario::smoke() };
+        let p1 = s.corpus(64 << 10).unwrap();
+        let t1 = std::fs::metadata(&p1).unwrap().modified().unwrap();
+        let p2 = s.corpus(64 << 10).unwrap();
+        let t2 = std::fs::metadata(&p2).unwrap().modified().unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(t1, t2, "second call must not regenerate");
+    }
+
+    #[test]
+    fn config_skew_only_when_unbalanced() {
+        let s = Scenario::smoke();
+        let p = s.corpus(64 << 10).unwrap();
+        assert!(s.config(p.clone(), false).skew.is_empty());
+        assert!(!s.config(p, true).skew.is_empty());
+    }
+}

@@ -1,0 +1,44 @@
+//! # mr1s — Decoupled (one-sided) MapReduce for imbalanced workloads
+//!
+//! A ground-up reproduction of *"Decoupled Strategy for Imbalanced
+//! Workloads in MapReduce Frameworks"* (Rivas-Gomez et al., 2018):
+//! **MapReduce-1S**, a MapReduce runtime in which processes communicate
+//! and synchronize using *only* one-sided (RMA) operations and
+//! non-blocking I/O, overlapping the Map, Reduce and Combine phases —
+//! plus **MapReduce-2S**, the collective-communication baseline it is
+//! evaluated against (Hoefler et al. style).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: the decoupled protocol over an
+//!   MPI-3-style RMA substrate ([`mpi`]), the storage substrate
+//!   ([`storage`]), workload generation ([`workload`]), metrics
+//!   ([`metrics`]) and the figure-regeneration harness ([`harness`]).
+//! * **L2 (python/compile/model.py, build-time)** — the Map-phase hash
+//!   graph and Combine-phase sort graph, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/, build-time)** — Pallas kernels for the
+//!   compute hot-spots, loaded and executed from [`runtime`] via PJRT.
+//!
+//! ## Virtual time
+//!
+//! This image exposes a single CPU core, so performance curves are
+//! produced under a conservative virtual-time scheme ([`sim`]): ranks are
+//! OS threads running the real protocol on real data, and their clocks
+//! advance through calibrated cost models, reconciled at every
+//! synchronization point. See DESIGN.md for the substitution table.
+
+pub mod bench;
+pub mod cli;
+pub mod error;
+pub mod harness;
+pub mod mapreduce;
+pub mod metrics;
+pub mod mpi;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod testing;
+pub mod usecases;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,18 @@
+//! `mr1s` — CLI entrypoint (leader binary).
+//!
+//! Subcommands (see `mr1s help`):
+//! * `run`      — execute a MapReduce job on a corpus;
+//! * `gen`      — generate a synthetic PUMA-like corpus;
+//! * `figures`  — regenerate a paper figure's data series;
+//! * `compare`  — MR-1S vs MR-2S head-to-head on one workload.
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    match mr1s::cli::main(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

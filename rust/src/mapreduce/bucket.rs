@@ -1,0 +1,449 @@
+//! In-memory key-value staging: local-reduce tables and sorted runs.
+//!
+//! The paper's "custom memory management" (§2.1): emitted tuples are
+//! aggregated locally (*Local Reduce*, phase II) before being placed in
+//! per-owner buckets, and the Reduce/Combine phases operate over sorted
+//! runs of unique keys.  Tables are hash-keyed with explicit collision
+//! chains — two distinct keys sharing a 64-bit hash stay distinct.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+use super::kv::{self, Record, HEADER_BYTES};
+
+/// Identity hasher for keys that are already 64-bit hashes: table keys
+/// are FNV-1a outputs, re-hashing them through SipHash costs ~15% of the
+/// whole Map phase for nothing (§Perf iteration 3).
+#[derive(Default)]
+pub struct IdentityHasher(u64);
+
+impl Hasher for IdentityHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, _bytes: &[u8]) {
+        unreachable!("IdentityHasher is only for u64 keys");
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.0 = v;
+    }
+}
+
+type HashKeyMap<V> = HashMap<u64, V, BuildHasherDefault<IdentityHasher>>;
+
+/// Collision chain: almost always a single key per 64-bit hash, so the
+/// one-entry case stays inline (no per-key Vec allocation).
+#[derive(Debug)]
+enum Chain {
+    One(Box<[u8]>, u64),
+    Many(Vec<(Box<[u8]>, u64)>),
+}
+
+/// An owned key-value record (table / run storage).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OwnedRecord {
+    /// 64-bit key hash (see [`kv::hash_key`]).
+    pub hash: u64,
+    /// Key bytes.
+    pub key: Box<[u8]>,
+    /// Reduced value.
+    pub count: u64,
+}
+
+impl OwnedRecord {
+    /// Encoded size of this record.
+    pub fn encoded_len(&self) -> usize {
+        HEADER_BYTES + self.key.len()
+    }
+
+    fn as_record(&self) -> Record<'_> {
+        Record { hash: self.hash, key: &self.key, count: self.count }
+    }
+}
+
+/// Hash-keyed aggregation table with collision chains.
+#[derive(Debug, Default)]
+pub struct KeyTable {
+    slots: HashKeyMap<Chain>,
+    entries: usize,
+    bytes: usize,
+}
+
+impl KeyTable {
+    /// Empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Merge `(key, count)` into the table under `reduce`.
+    pub fn merge(
+        &mut self,
+        hash: u64,
+        key: &[u8],
+        count: u64,
+        reduce: impl Fn(u64, u64) -> u64,
+    ) {
+        match self.slots.entry(hash) {
+            std::collections::hash_map::Entry::Vacant(slot) => {
+                self.entries += 1;
+                self.bytes += HEADER_BYTES + key.len();
+                slot.insert(Chain::One(key.into(), count));
+            }
+            std::collections::hash_map::Entry::Occupied(mut slot) => {
+                match slot.get_mut() {
+                    Chain::One(k, c) => {
+                        if k.as_ref() == key {
+                            *c = reduce(*c, count);
+                            return;
+                        }
+                        // True 64-bit hash collision: upgrade the chain.
+                        self.entries += 1;
+                        self.bytes += HEADER_BYTES + key.len();
+                        let prev = std::mem::replace(
+                            slot.get_mut(),
+                            Chain::Many(Vec::with_capacity(2)),
+                        );
+                        let Chain::One(pk, pc) = prev else { unreachable!() };
+                        let Chain::Many(v) = slot.get_mut() else { unreachable!() };
+                        v.push((pk, pc));
+                        v.push((key.into(), count));
+                    }
+                    Chain::Many(v) => {
+                        for (k, c) in v.iter_mut() {
+                            if k.as_ref() == key {
+                                *c = reduce(*c, count);
+                                return;
+                            }
+                        }
+                        self.entries += 1;
+                        self.bytes += HEADER_BYTES + key.len();
+                        v.push((key.into(), count));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Merge an already-decoded record.
+    pub fn merge_record(&mut self, rec: Record<'_>, reduce: impl Fn(u64, u64) -> u64) {
+        self.merge(rec.hash, rec.key, rec.count, reduce);
+    }
+
+    /// Append without local aggregation (the Local-Reduce-off ablation):
+    /// duplicates survive and are reduced downstream instead.
+    pub fn push_unmerged(&mut self, hash: u64, key: &[u8], count: u64) {
+        self.entries += 1;
+        self.bytes += HEADER_BYTES + key.len();
+        match self.slots.entry(hash) {
+            std::collections::hash_map::Entry::Vacant(slot) => {
+                slot.insert(Chain::One(key.into(), count));
+            }
+            std::collections::hash_map::Entry::Occupied(mut slot) => match slot.get_mut() {
+                Chain::One(..) => {
+                    let prev =
+                        std::mem::replace(slot.get_mut(), Chain::Many(Vec::with_capacity(2)));
+                    let Chain::One(pk, pc) = prev else { unreachable!() };
+                    let Chain::Many(v) = slot.get_mut() else { unreachable!() };
+                    v.push((pk, pc));
+                    v.push((key.into(), count));
+                }
+                Chain::Many(v) => v.push((key.into(), count)),
+            },
+        }
+    }
+
+    /// Number of unique keys.
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    /// True when no keys are stored.
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+
+    /// Approximate encoded footprint in bytes (memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Drain into per-owner encoded buffers (bucket partitioning):
+    /// `out[r]` holds the records owned by rank `r`.
+    pub fn drain_by_owner(&mut self, nranks: usize) -> Vec<Vec<u8>> {
+        let mut out = vec![Vec::new(); nranks];
+        for (hash, chain) in self.slots.drain() {
+            let owner = kv::owner_of(hash, nranks);
+            match chain {
+                Chain::One(key, count) => {
+                    Record { hash, key: &key, count }.encode_into(&mut out[owner]);
+                }
+                Chain::Many(v) => {
+                    for (key, count) in v {
+                        Record { hash, key: &key, count }.encode_into(&mut out[owner]);
+                    }
+                }
+            }
+        }
+        self.entries = 0;
+        self.bytes = 0;
+        out
+    }
+
+    /// Drain into a vector of owned records (unsorted).
+    pub fn drain_records(&mut self) -> Vec<OwnedRecord> {
+        let mut out = Vec::with_capacity(self.entries);
+        for (hash, chain) in self.slots.drain() {
+            match chain {
+                Chain::One(key, count) => out.push(OwnedRecord { hash, key, count }),
+                Chain::Many(v) => {
+                    for (key, count) in v {
+                        out.push(OwnedRecord { hash, key, count });
+                    }
+                }
+            }
+        }
+        self.entries = 0;
+        self.bytes = 0;
+        out
+    }
+}
+
+/// A run of records sorted by `(hash, key)` with unique keys.
+#[derive(Debug, Default, Clone)]
+pub struct SortedRun {
+    records: Vec<OwnedRecord>,
+}
+
+impl SortedRun {
+    /// Build a run from arbitrary records using the supplied sorter for
+    /// the `(hash)` ordering (identity hook for the L1 kernel path) and
+    /// reducing equal keys with `reduce`.
+    ///
+    /// `sort_hook` receives the records and must reorder them so hashes
+    /// are non-decreasing; ties and exact ordering by key are fixed up
+    /// here (hash collisions are rare, the fix-up is cheap).
+    pub fn build(
+        mut records: Vec<OwnedRecord>,
+        sort_hook: impl FnOnce(&mut Vec<OwnedRecord>),
+        reduce: impl Fn(u64, u64) -> u64,
+    ) -> Self {
+        sort_hook(&mut records);
+        debug_assert!(records.windows(2).all(|w| w[0].hash <= w[1].hash));
+        // Stabilize equal-hash neighborhoods by key.
+        let mut i = 0;
+        while i < records.len() {
+            let mut j = i + 1;
+            while j < records.len() && records[j].hash == records[i].hash {
+                j += 1;
+            }
+            if j - i > 1 {
+                records[i..j].sort_by(|a, b| a.key.cmp(&b.key));
+            }
+            i = j;
+        }
+        // Fold equal keys.
+        let mut out: Vec<OwnedRecord> = Vec::with_capacity(records.len());
+        for rec in records {
+            match out.last_mut() {
+                Some(last) if last.hash == rec.hash && last.key == rec.key => {
+                    last.count = reduce(last.count, rec.count);
+                }
+                _ => out.push(rec),
+            }
+        }
+        SortedRun { records: out }
+    }
+
+    /// Build using a plain comparison sort (the scalar path).
+    pub fn build_scalar(records: Vec<OwnedRecord>, reduce: impl Fn(u64, u64) -> u64) -> Self {
+        Self::build(
+            records,
+            // Unstable: no allocation, and `build` folds equal keys so
+            // stability is irrelevant (§Perf iteration 2).
+            |recs| recs.sort_unstable_by(|a, b| Record::run_cmp(&a.as_record(), &b.as_record())),
+            reduce,
+        )
+    }
+
+    /// Records in run order.
+    pub fn records(&self) -> &[OwnedRecord] {
+        &self.records
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Encoded footprint.
+    pub fn encoded_bytes(&self) -> usize {
+        self.records.iter().map(OwnedRecord::encoded_len).sum()
+    }
+
+    /// Encode the run for window publication.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_bytes());
+        for rec in &self.records {
+            rec.as_record().encode_into(&mut out);
+        }
+        out
+    }
+
+    /// Decode a run previously produced by [`SortedRun::encode`].
+    pub fn decode(buf: &[u8]) -> crate::error::Result<Self> {
+        let mut records = Vec::new();
+        for rec in kv::RecordIter::new(buf) {
+            let rec = rec?;
+            records.push(OwnedRecord { hash: rec.hash, key: rec.key.into(), count: rec.count });
+        }
+        Ok(SortedRun { records })
+    }
+
+    /// Two-way merge of sorted runs, reducing equal keys — one level of
+    /// the paper's merge-sort Combine tree (Fig. 3).
+    pub fn merge(self, other: SortedRun, reduce: impl Fn(u64, u64) -> u64) -> SortedRun {
+        let mut out = Vec::with_capacity(self.records.len() + other.records.len());
+        let mut a = self.records.into_iter().peekable();
+        let mut b = other.records.into_iter().peekable();
+        loop {
+            let take_a = match (a.peek(), b.peek()) {
+                (Some(ra), Some(rb)) => {
+                    Record::run_cmp(&ra.as_record(), &rb.as_record()).is_le()
+                }
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            let rec = if take_a { a.next().unwrap() } else { b.next().unwrap() };
+            match out.last_mut() {
+                Some(last) if {
+                    let l: &OwnedRecord = last;
+                    l.hash == rec.hash && l.key == rec.key
+                } => {
+                    let last: &mut OwnedRecord = last;
+                    last.count = reduce(last.count, rec.count);
+                }
+                _ => out.push(rec),
+            }
+        }
+        SortedRun { records: out }
+    }
+
+    /// Verify run invariants (tests / debug).
+    pub fn check_invariants(&self) -> bool {
+        self.records.windows(2).all(|w| {
+            Record::run_cmp(&w[0].as_record(), &w[1].as_record()).is_lt()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(key: &str, count: u64) -> OwnedRecord {
+        OwnedRecord { hash: kv::hash_key(key.as_bytes()), key: key.as_bytes().into(), count }
+    }
+
+    #[test]
+    fn table_local_reduce_merges_counts() {
+        let mut t = KeyTable::new();
+        let h = kv::hash_key(b"w");
+        t.merge(h, b"w", 1, u64::wrapping_add);
+        t.merge(h, b"w", 2, u64::wrapping_add);
+        assert_eq!(t.len(), 1);
+        let recs = t.drain_records();
+        assert_eq!(recs[0].count, 3);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn table_keeps_hash_collisions_distinct() {
+        let mut t = KeyTable::new();
+        // Force two different keys into the same artificial hash.
+        t.merge(42, b"alpha", 1, u64::wrapping_add);
+        t.merge(42, b"beta", 5, u64::wrapping_add);
+        assert_eq!(t.len(), 2);
+        let mut recs = t.drain_records();
+        recs.sort_by(|a, b| a.key.cmp(&b.key));
+        assert_eq!(recs[0].count, 1);
+        assert_eq!(recs[1].count, 5);
+    }
+
+    #[test]
+    fn drain_by_owner_routes_by_hash_bucket() {
+        let mut t = KeyTable::new();
+        for w in ["a", "b", "c", "d", "e"] {
+            t.merge(kv::hash_key(w.as_bytes()), w.as_bytes(), 1, u64::wrapping_add);
+        }
+        let parts = t.drain_by_owner(4);
+        assert_eq!(parts.len(), 4);
+        for (r, buf) in parts.iter().enumerate() {
+            for rec in kv::RecordIter::new(buf) {
+                assert_eq!(kv::owner_of(rec.unwrap().hash, 4), r);
+            }
+        }
+    }
+
+    #[test]
+    fn build_scalar_sorts_and_folds() {
+        let run = SortedRun::build_scalar(
+            vec![rec("b", 1), rec("a", 2), rec("b", 3)],
+            u64::wrapping_add,
+        );
+        assert_eq!(run.len(), 2);
+        assert!(run.check_invariants());
+        let total: u64 = run.records().iter().map(|r| r.count).sum();
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn encode_decode_run_roundtrip() {
+        let run = SortedRun::build_scalar(
+            vec![rec("x", 1), rec("y", 2), rec("z", 3)],
+            u64::wrapping_add,
+        );
+        let decoded = SortedRun::decode(&run.encode()).unwrap();
+        assert_eq!(decoded.records(), run.records());
+    }
+
+    #[test]
+    fn merge_reduces_shared_keys() {
+        let a = SortedRun::build_scalar(vec![rec("k1", 1), rec("k2", 2)], u64::wrapping_add);
+        let b = SortedRun::build_scalar(vec![rec("k2", 10), rec("k3", 3)], u64::wrapping_add);
+        let m = a.merge(b, u64::wrapping_add);
+        assert_eq!(m.len(), 3);
+        assert!(m.check_invariants());
+        let k2 = m.records().iter().find(|r| r.key.as_ref() == b"k2").unwrap();
+        assert_eq!(k2.count, 12);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let a = SortedRun::build_scalar(vec![rec("k", 4)], u64::wrapping_add);
+        let m = a.clone().merge(SortedRun::default(), u64::wrapping_add);
+        assert_eq!(m.records(), a.records());
+    }
+
+    #[test]
+    fn build_fixes_collision_ordering() {
+        // sort_hook only orders by hash; equal-hash keys must come out
+        // key-ordered and distinct.
+        let records = vec![
+            OwnedRecord { hash: 7, key: b"zz".as_slice().into(), count: 1 },
+            OwnedRecord { hash: 7, key: b"aa".as_slice().into(), count: 2 },
+        ];
+        let run = SortedRun::build(records, |r| r.sort_by_key(|x| x.hash), u64::wrapping_add);
+        assert_eq!(run.records()[0].key.as_ref(), b"aa");
+        assert!(run.check_invariants());
+    }
+}

@@ -1,0 +1,483 @@
+//! Job lifecycle (the paper's *Base class*) and the machinery shared by
+//! both backends: task splitting, record-boundary handling, the Map-task
+//! executor and the hash path selection.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::metrics::{JobReport, MemoryTracker, PhaseBreakdown, Timeline};
+use crate::mpi::{RankCtx, Universe};
+use crate::runtime::Engine;
+use crate::sim::CostModel;
+use crate::storage::StripedFile;
+
+use super::bucket::{KeyTable, SortedRun};
+use super::config::{BackendKind, JobConfig};
+use super::kv;
+
+/// A use-case plugged into the framework (the paper's *Use-case class*:
+/// `Map()` + `Reduce()`, with local reduce applied automatically).
+pub trait UseCase: Send + Sync {
+    /// Display name.
+    fn name(&self) -> &'static str;
+
+    /// Map one input record (a line; record integrity across task
+    /// boundaries is the framework's job) into key/value emissions.
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], u64));
+
+    /// Merge two values of the same key (associative + commutative).
+    fn reduce(&self, a: u64, b: u64) -> u64;
+}
+
+/// One Map task: a byte extent of the input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskSpec {
+    /// Task id (skew factors are indexed by this).
+    pub id: usize,
+    /// Byte offset of the extent.
+    pub offset: u64,
+    /// Extent length.
+    pub len: usize,
+}
+
+/// Bytes read past a task extent to finish its last line, and the bound
+/// on record length the corpus generator guarantees.
+pub const LINE_OVERLAP: usize = 8192;
+
+/// Everything immutable shared by all rank threads of one job.
+pub struct JobShared {
+    /// Job configuration.
+    pub config: JobConfig,
+    /// The use-case.
+    pub usecase: Arc<dyn UseCase>,
+    /// Input file.
+    pub file: StripedFile,
+    /// All Map tasks of the job.
+    pub tasks: Vec<TaskSpec>,
+    /// PJRT engine (None = scalar path).
+    pub engine: Option<Arc<Engine>>,
+    /// Node-wide memory tracker.
+    pub mem: Arc<MemoryTracker>,
+}
+
+/// What one rank thread hands back to the driver.
+pub struct RankOutcome {
+    /// Virtual completion time.
+    pub elapsed_ns: u64,
+    /// Recorded timeline.
+    pub events: Vec<crate::metrics::Event>,
+    /// Final merged run (root rank only).
+    pub result: Option<SortedRun>,
+    /// Input bytes this rank consumed.
+    pub input_bytes: u64,
+}
+
+/// A MapReduce backend (the paper's *Back-end class*).
+pub trait Backend: Send + Sync {
+    /// Execute the job on this rank.
+    fn execute(&self, ctx: &RankCtx, shared: &JobShared) -> Result<RankOutcome>;
+}
+
+/// Split `file_len` into `task_size` extents.
+pub fn split_tasks(file_len: u64, task_size: usize) -> Vec<TaskSpec> {
+    let mut tasks = Vec::new();
+    let mut offset = 0u64;
+    let mut id = 0usize;
+    while offset < file_len {
+        let len = task_size.min((file_len - offset) as usize);
+        tasks.push(TaskSpec { id, offset, len });
+        offset += len as u64;
+        id += 1;
+    }
+    tasks
+}
+
+/// Extract the records (lines) a task owns from its raw read.
+///
+/// Hadoop-style record boundaries: a task owns every line that *starts*
+/// inside its extent; the first partial line belongs to the previous
+/// task; the final line runs into the overlap.  `data` must have been
+/// read from `read_start(task)` and include up to [`LINE_OVERLAP`] bytes
+/// beyond the extent.
+pub fn task_records(task: &TaskSpec, data: &[u8]) -> std::ops::Range<usize> {
+    // `data` starts at task.offset for the first task, task.offset - 1
+    // otherwise (one byte of look-behind decides line ownership).
+    let (lead, extent_start) = if task.offset == 0 { (0usize, 0usize) } else { (1, 1) };
+    let extent_end = extent_start + task.len;
+
+    // Start: first line beginning at file pos >= task.offset.  With one
+    // look-behind byte, that is the byte after the first '\n' at or after
+    // position 0 of `data` ... unless offset == 0 (everything is ours).
+    let start = if task.offset == 0 {
+        0
+    } else {
+        match data[..extent_end.min(data.len())].iter().position(|&b| b == b'\n') {
+            Some(nl) => nl + 1,
+            None => return 0..0, // no line starts inside this extent
+        }
+    };
+    let _ = lead;
+
+    // End: the last owned line starts before extent_end; it extends to
+    // its newline in the overlap (or EOF).
+    let mut end = extent_end.min(data.len());
+    if end > start && end < data.len() {
+        // Only extend if the extent boundary cuts a line.
+        if data[end - 1] != b'\n' {
+            let extra = data[end..].iter().position(|&b| b == b'\n');
+            end += extra.map_or(data.len() - end, |e| e + 1);
+        }
+    }
+    start..end.max(start)
+}
+
+/// File position a task's raw read must start at (one look-behind byte).
+pub fn read_start(task: &TaskSpec) -> u64 {
+    task.offset.saturating_sub(1)
+}
+
+/// Raw read length for a task (look-behind + extent + overlap).
+pub fn read_len(task: &TaskSpec) -> usize {
+    (task.offset - read_start(task)) as usize + task.len + LINE_OVERLAP
+}
+
+/// Run the Map + Local-Reduce of one task's records into `staging`.
+///
+/// Tokenizes via the use-case, hashes emissions (kernel batches when an
+/// engine is present, scalar FNV otherwise — bit-identical results), and
+/// charges `map_cost(extent) * skew` to the clock.  Returns the number of
+/// emissions before local reduce.
+pub fn run_map_task(
+    ctx: &RankCtx,
+    shared: &JobShared,
+    task: &TaskSpec,
+    records: &[u8],
+    staging: &mut KeyTable,
+) -> Result<usize> {
+    let usecase = &*shared.usecase;
+    let reduce = |a, b| usecase.reduce(a, b);
+    let local_reduce = shared.config.local_reduce;
+    let stage = |staging: &mut KeyTable, hash: u64, key: &[u8], count: u64| {
+        if local_reduce {
+            staging.merge(hash, key, count, reduce);
+        } else {
+            staging.push_unmerged(hash, key, count);
+        }
+    };
+
+    let mut emitted = 0usize;
+    match &shared.engine {
+        Some(engine) => {
+            // Kernel path: collect emissions into a flat arena (one
+            // allocation pool, not one Vec per token) and hash in
+            // geometry-sized batches through the PJRT artifact.
+            let mut bytes: Vec<u8> = Vec::with_capacity(records.len());
+            let mut spans: Vec<(u32, u16, u64)> = Vec::with_capacity(records.len() / 6);
+            for line in records.split(|&b| b == b'\n') {
+                usecase.map_record(line, &mut |k, v| {
+                    let off = bytes.len() as u32;
+                    bytes.extend_from_slice(k);
+                    spans.push((off, k.len() as u16, v));
+                });
+            }
+            emitted = spans.len();
+            let batch = engine.geometry().batch;
+            for chunk in spans.chunks(batch) {
+                let refs: Vec<&[u8]> = chunk
+                    .iter()
+                    .map(|&(off, len, _)| &bytes[off as usize..off as usize + len as usize])
+                    .collect();
+                let (hashes, _buckets) = engine.hash_batch(&refs)?;
+                for (h, &(off, len, count)) in hashes.iter().zip(chunk) {
+                    let key = &bytes[off as usize..off as usize + len as usize];
+                    stage(staging, *h, key, count);
+                }
+            }
+        }
+        None => {
+            // Scalar path: stream emissions straight into the staging
+            // table — no intermediate buffering at all.
+            for line in records.split(|&b| b == b'\n') {
+                usecase.map_record(line, &mut |k, v| {
+                    emitted += 1;
+                    stage(staging, kv::hash_key(k), k, v);
+                });
+            }
+        }
+    }
+
+    // Virtual compute cost: scan+hash+local-reduce over the extent,
+    // multiplied by the task's imbalance factor (paper §3 footnote 5:
+    // same task computed multiple times, input read once).
+    let skew = shared.config.skew_for_task(task.id);
+    let cost = ctx.cost.compute.map_cost(task.len) as f64 * skew;
+    ctx.clock.advance(cost as u64 + ctx.cost.compute.task_overhead_ns);
+    Ok(emitted)
+}
+
+/// Leaf-sort hook honoring the configured hash path: kernel bitonic sort
+/// over `(hash, index)` blocks when the engine is present, comparison
+/// sort otherwise.  Produces the rank-local sorted run for Combine.
+pub fn build_local_run(
+    shared: &JobShared,
+    records: Vec<super::bucket::OwnedRecord>,
+    reduce: impl Fn(u64, u64) -> u64 + Copy,
+) -> SortedRun {
+    match &shared.engine {
+        Some(engine) => {
+            let engine = engine.clone();
+            SortedRun::build(
+                records,
+                move |recs| {
+                    let block = engine.geometry().sort_batch;
+                    // Kernel-sort each block by hash, then merge blocks.
+                    let mut blocks: Vec<Vec<super::bucket::OwnedRecord>> = Vec::new();
+                    let mut rest = std::mem::take(recs);
+                    while !rest.is_empty() {
+                        let tail = rest.split_off(rest.len().min(block));
+                        let mut blk = rest;
+                        rest = tail;
+                        let keys: Vec<u64> = blk.iter().map(|r| r.hash).collect();
+                        match engine.sort_perm(&keys) {
+                            Ok(perm) => {
+                                let mut sorted = Vec::with_capacity(blk.len());
+                                let mut taken: Vec<Option<super::bucket::OwnedRecord>> =
+                                    blk.into_iter().map(Some).collect();
+                                for p in perm {
+                                    sorted.push(taken[p as usize].take().expect("perm unique"));
+                                }
+                                blocks.push(sorted);
+                            }
+                            Err(_) => {
+                                blk.sort_by(|a, b| a.hash.cmp(&b.hash));
+                                blocks.push(blk);
+                            }
+                        }
+                    }
+                    // K-way merge of hash-sorted blocks (usually 1-2).
+                    let mut merged: Vec<super::bucket::OwnedRecord> = Vec::new();
+                    for blk in blocks {
+                        merged = merge_by_hash(merged, blk);
+                    }
+                    *recs = merged;
+                },
+                reduce,
+            )
+        }
+        None => SortedRun::build_scalar(records, reduce),
+    }
+}
+
+fn merge_by_hash(
+    a: Vec<super::bucket::OwnedRecord>,
+    b: Vec<super::bucket::OwnedRecord>,
+) -> Vec<super::bucket::OwnedRecord> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let mut ia = a.into_iter().peekable();
+    let mut ib = b.into_iter().peekable();
+    loop {
+        match (ia.peek(), ib.peek()) {
+            (Some(x), Some(y)) => {
+                if x.hash <= y.hash {
+                    out.push(ia.next().unwrap());
+                } else {
+                    out.push(ib.next().unwrap());
+                }
+            }
+            (Some(_), None) => out.push(ia.next().unwrap()),
+            (None, Some(_)) => out.push(ib.next().unwrap()),
+            (None, None) => break,
+        }
+    }
+    out
+}
+
+/// The user-facing job object (paper Listing 1: construct, `Init`, `Run`,
+/// `Print`, `Finalize` — in Rust: construct with config, [`Job::run`],
+/// inspect the returned [`JobOutput`]).
+pub struct Job {
+    usecase: Arc<dyn UseCase>,
+    config: JobConfig,
+}
+
+/// Result of a job execution.
+pub struct JobOutput {
+    /// Metrics and timings.
+    pub report: JobReport,
+    /// Final `(key, count)` pairs in run order (hash, then key).
+    pub result: Vec<(Vec<u8>, u64)>,
+}
+
+impl Job {
+    /// Create a job for `usecase` under `config`.
+    pub fn new(usecase: Arc<dyn UseCase>, config: JobConfig) -> Result<Job> {
+        config.validate()?;
+        Ok(Job { usecase, config })
+    }
+
+    /// Config accessor.
+    pub fn config(&self) -> &JobConfig {
+        &self.config
+    }
+
+    /// Execute on `nranks` simulated ranks with `backend`.
+    pub fn run(
+        &self,
+        backend: BackendKind,
+        nranks: usize,
+        mut cost: CostModel,
+    ) -> Result<JobOutput> {
+        // Fig. 7b variant: redundant flush epochs force RMA progress, so
+        // the lazy-progress delay disappears (the epochs' own cost is
+        // charged by the backend).
+        if self.config.flush_epochs {
+            cost.net.progress_delay_ns = 0;
+        }
+        let file = StripedFile::open(&self.config.input)?;
+        let tasks = split_tasks(file.len(), self.config.task_size);
+        if tasks.is_empty() {
+            return Err(Error::Config("empty input".into()));
+        }
+        let engine = if self.config.use_kernel { cached_engine() } else { None };
+        let shared = Arc::new(JobShared {
+            config: self.config.clone(),
+            usecase: self.usecase.clone(),
+            file,
+            tasks,
+            engine,
+            mem: Arc::new(MemoryTracker::new()),
+        });
+
+        let backend_impl: Arc<dyn Backend> = match backend {
+            BackendKind::OneSided => Arc::new(super::onesided::Mr1s),
+            BackendKind::TwoSided => Arc::new(super::twosided::Mr2s),
+        };
+
+        let shared2 = shared.clone();
+        let outcomes: Vec<Result<RankOutcome>> = Universe::new(nranks, cost)
+            .run(move |ctx| backend_impl.execute(ctx, &shared2));
+
+        let mut rank_elapsed = Vec::with_capacity(nranks);
+        let mut breakdowns = Vec::with_capacity(nranks);
+        let mut timelines = Vec::with_capacity(nranks);
+        let mut input_bytes = 0u64;
+        let mut result_run = None;
+        for outcome in outcomes {
+            let o = outcome?;
+            rank_elapsed.push(o.elapsed_ns);
+            breakdowns.push(PhaseBreakdown::from_events(&o.events));
+            timelines.push(o.events);
+            input_bytes += o.input_bytes;
+            if let Some(run) = o.result {
+                result_run = Some(run);
+            }
+        }
+        let run = result_run.ok_or_else(|| Error::Config("no rank produced a result".into()))?;
+        let unique_keys = run.len() as u64;
+        // Wrapping: values need not be additive counts (e.g. the
+        // inverted-index use-case reduces 64-bit shard masks with OR).
+        let total_count: u64 = run
+            .records()
+            .iter()
+            .fold(0u64, |acc, r| acc.wrapping_add(r.count));
+        let result: Vec<(Vec<u8>, u64)> =
+            run.records().iter().map(|r| (r.key.to_vec(), r.count)).collect();
+
+        let report = JobReport {
+            backend: backend.name(),
+            nranks,
+            input_bytes,
+            elapsed_ns: rank_elapsed.iter().copied().max().unwrap_or(0),
+            rank_elapsed_ns: rank_elapsed,
+            breakdowns,
+            timelines,
+            peak_memory_bytes: shared.mem.peak(),
+            memory_series: shared.mem.normalized_series(256),
+            unique_keys,
+            total_count,
+        };
+        Ok(JobOutput { report, result })
+    }
+}
+
+/// Process-wide engine cache: artifacts are compiled once per process
+/// (PJRT compilation of the three HLO modules costs seconds; jobs run
+/// back-to-back in the harness and tests).
+pub fn cached_engine() -> Option<Arc<Engine>> {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Option<Arc<Engine>>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| Engine::load(default_artifact_dir()).ok().map(Arc::new))
+        .clone()
+}
+
+/// Default artifact directory: `$MR1S_ARTIFACTS` or `<crate>/artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("MR1S_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Helper shared by backends: record a timeline interval around a closure.
+pub fn timed<T>(
+    ctx: &RankCtx,
+    timeline: &Timeline,
+    kind: crate::metrics::EventKind,
+    f: impl FnOnce() -> T,
+) -> T {
+    let t0 = ctx.clock.now();
+    let out = f();
+    timeline.record(t0, ctx.clock.now(), kind);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_tasks_covers_input_exactly() {
+        let tasks = split_tasks(1000, 300);
+        assert_eq!(tasks.len(), 4);
+        assert_eq!(tasks[3].len, 100);
+        let total: usize = tasks.iter().map(|t| t.len).sum();
+        assert_eq!(total, 1000);
+        assert!(tasks.windows(2).all(|w| w[0].offset + w[0].len as u64 == w[1].offset));
+    }
+
+    #[test]
+    fn task_records_partition_lines_exactly() {
+        // Every line must be owned by exactly one task, regardless of how
+        // extents cut lines.
+        let text = b"alpha beta\ngamma\nlong-line here to cut\nx\ny z w\nfinal tail\n";
+        for task_size in [5usize, 8, 13, 16, 64] {
+            let tasks = split_tasks(text.len() as u64, task_size);
+            let mut seen: Vec<u8> = Vec::new();
+            for t in &tasks {
+                let rs = read_start(&t) as usize;
+                let re = (rs + read_len(&t)).min(text.len());
+                let data = &text[rs..re];
+                let range = task_records(&t, data);
+                seen.extend_from_slice(&data[range]);
+            }
+            assert_eq!(seen, text.to_vec(), "task_size={task_size}");
+        }
+    }
+
+    #[test]
+    fn task_records_no_trailing_newline() {
+        let text = b"one two\nno-trailing-newline";
+        for task_size in [4usize, 10, 100] {
+            let tasks = split_tasks(text.len() as u64, task_size);
+            let mut seen: Vec<u8> = Vec::new();
+            for t in &tasks {
+                let rs = read_start(&t) as usize;
+                let re = (rs + read_len(&t)).min(text.len());
+                let range = task_records(&t, &text[rs..re]);
+                seen.extend_from_slice(&text[rs..re][range]);
+            }
+            assert_eq!(seen, text.to_vec(), "task_size={task_size}");
+        }
+    }
+}

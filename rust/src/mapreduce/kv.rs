@@ -1,0 +1,228 @@
+//! Variable-length key-value records with a fixed-size header.
+//!
+//! The wire/bucket format of §2.1: every tuple is encoded as a
+//! fixed-size header followed by the variable-length key — so remote
+//! processes can split a retrieved byte range by "interpreting the
+//! headers".  Unlike the paper's `| h | key | value |` with free-form
+//! value bytes, values in this framework are 64-bit reduce-able counts
+//! (all shipped use-cases reduce integers), and we additionally carry the
+//! 64-bit key hash so receivers never re-hash:
+//!
+//! ```text
+//! | hash: u64 | klen: u16 | count: u64 | key: klen bytes |
+//! ```
+//!
+//! Records sort by `(hash, key)`; equal keys reduce.
+
+use crate::error::{Error, Result};
+
+/// Header bytes preceding the key.
+pub const HEADER_BYTES: usize = 8 + 2 + 8;
+
+/// Longest key the framework accepts (u16 length field).
+pub const MAX_KEY_LEN: usize = u16::MAX as usize;
+
+/// One decoded key-value record (borrowing the key from its buffer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Record<'a> {
+    /// 64-bit hash of the key (FNV-1a over the first 24 bytes).
+    pub hash: u64,
+    /// Key bytes.
+    pub key: &'a [u8],
+    /// Reduce-able value.
+    pub count: u64,
+}
+
+impl<'a> Record<'a> {
+    /// Encoded size of this record.
+    pub fn encoded_len(&self) -> usize {
+        HEADER_BYTES + self.key.len()
+    }
+
+    /// Append the encoded record to `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        debug_assert!(self.key.len() <= MAX_KEY_LEN);
+        out.extend_from_slice(&self.hash.to_le_bytes());
+        out.extend_from_slice(&(self.key.len() as u16).to_le_bytes());
+        out.extend_from_slice(&self.count.to_le_bytes());
+        out.extend_from_slice(self.key);
+    }
+
+    /// Decode one record at `buf[off..]`; returns (record, next offset).
+    pub fn decode(buf: &'a [u8], off: usize) -> Result<(Record<'a>, usize)> {
+        let hdr_end = off + HEADER_BYTES;
+        if hdr_end > buf.len() {
+            return Err(Error::KvDecode(format!(
+                "truncated header at {off} (buf len {})",
+                buf.len()
+            )));
+        }
+        let hash = u64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
+        let klen = u16::from_le_bytes(buf[off + 8..off + 10].try_into().unwrap()) as usize;
+        let count = u64::from_le_bytes(buf[off + 10..off + 18].try_into().unwrap());
+        let end = hdr_end + klen;
+        if end > buf.len() {
+            return Err(Error::KvDecode(format!(
+                "truncated key at {off}: klen {klen}, buf len {}",
+                buf.len()
+            )));
+        }
+        Ok((Record { hash, key: &buf[hdr_end..end], count }, end))
+    }
+
+    /// Ordering used by sorted runs: by hash, ties broken by key bytes.
+    pub fn run_cmp(a: &Record<'_>, b: &Record<'_>) -> std::cmp::Ordering {
+        a.hash.cmp(&b.hash).then_with(|| a.key.cmp(b.key))
+    }
+}
+
+/// Iterator over the records of an encoded buffer.
+pub struct RecordIter<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> RecordIter<'a> {
+    /// Iterate records in `buf` (must start on a record boundary).
+    pub fn new(buf: &'a [u8]) -> Self {
+        RecordIter { buf, off: 0 }
+    }
+}
+
+impl<'a> Iterator for RecordIter<'a> {
+    type Item = Result<Record<'a>>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.off >= self.buf.len() {
+            return None;
+        }
+        match Record::decode(self.buf, self.off) {
+            Ok((rec, next)) => {
+                self.off = next;
+                Some(Ok(rec))
+            }
+            Err(e) => {
+                self.off = self.buf.len(); // poison: stop iterating
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+/// Decode a whole buffer, failing on any corruption.
+pub fn decode_all(buf: &[u8]) -> Result<Vec<Record<'_>>> {
+    RecordIter::new(buf).collect()
+}
+
+/// FNV-1a 64-bit hash over at most the first 24 bytes of `key` — the
+/// exact function the L1 Pallas kernel computes (WIDTH = 24), so the
+/// scalar fallback and the kernel path route keys identically.
+pub const HASH_WIDTH: usize = 24;
+
+/// Hash a key (scalar path; must stay bit-identical to the kernel).
+#[inline]
+pub fn hash_key(key: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for &b in key.iter().take(HASH_WIDTH) {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// Ownership bucket of a hash (matches the kernel's 256-way histogram).
+#[inline]
+pub fn bucket_of(hash: u64) -> usize {
+    (hash & 0xFF) as usize
+}
+
+/// Owning rank for a hash among `nranks` ranks (bucket % nranks, so one
+/// compiled kernel serves every rank count).
+#[inline]
+pub fn owner_of(hash: u64, nranks: usize) -> usize {
+    bucket_of(hash) % nranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut buf = Vec::new();
+        let rec = Record { hash: 0xDEADBEEF, key: b"the-key", count: 42 };
+        rec.encode_into(&mut buf);
+        let (dec, next) = Record::decode(&buf, 0).unwrap();
+        assert_eq!(dec, rec);
+        assert_eq!(next, buf.len());
+    }
+
+    #[test]
+    fn iterates_multiple_records() {
+        let mut buf = Vec::new();
+        for i in 0..10u64 {
+            Record { hash: i, key: format!("k{i}").as_bytes(), count: i * 2 }
+                .encode_into(&mut buf);
+        }
+        let recs = decode_all(&buf).unwrap();
+        assert_eq!(recs.len(), 10);
+        assert_eq!(recs[3].key, b"k3");
+        assert_eq!(recs[3].count, 6);
+    }
+
+    #[test]
+    fn empty_key_is_legal() {
+        let mut buf = Vec::new();
+        Record { hash: 1, key: b"", count: 7 }.encode_into(&mut buf);
+        let recs = decode_all(&buf).unwrap();
+        assert_eq!(recs[0].key, b"");
+    }
+
+    #[test]
+    fn truncated_header_is_error() {
+        let mut buf = Vec::new();
+        Record { hash: 1, key: b"abc", count: 7 }.encode_into(&mut buf);
+        buf.truncate(HEADER_BYTES - 1);
+        assert!(decode_all(&buf).is_err());
+    }
+
+    #[test]
+    fn truncated_key_is_error() {
+        let mut buf = Vec::new();
+        Record { hash: 1, key: b"abcdef", count: 7 }.encode_into(&mut buf);
+        buf.truncate(buf.len() - 2);
+        assert!(decode_all(&buf).is_err());
+    }
+
+    #[test]
+    fn fnv_matches_published_vector() {
+        // Same vector the python oracle asserts.
+        assert_eq!(hash_key(b"hello"), 0xA430D84680AABD0B);
+    }
+
+    #[test]
+    fn hash_truncates_at_width() {
+        let long_a: Vec<u8> = (0..40u8).collect();
+        let mut long_b = long_a.clone();
+        long_b[30] = 99; // differs only beyond HASH_WIDTH
+        assert_eq!(hash_key(&long_a), hash_key(&long_b));
+    }
+
+    #[test]
+    fn owner_is_stable_under_rank_count() {
+        let h = hash_key(b"word");
+        for n in 1..=16 {
+            assert_eq!(owner_of(h, n), bucket_of(h) % n);
+            assert!(owner_of(h, n) < n);
+        }
+    }
+
+    #[test]
+    fn run_cmp_orders_by_hash_then_key() {
+        let a = Record { hash: 1, key: b"b", count: 0 };
+        let b = Record { hash: 1, key: b"c", count: 0 };
+        let c = Record { hash: 2, key: b"a", count: 0 };
+        assert!(Record::run_cmp(&a, &b).is_lt());
+        assert!(Record::run_cmp(&b, &c).is_lt());
+    }
+}

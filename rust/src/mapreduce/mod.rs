@@ -1,0 +1,20 @@
+//! The MapReduce framework: API surface, key-value machinery, and the two
+//! backends the paper evaluates.
+//!
+//! Mirrors the paper's custom framework (§2.2) — a hierarchy of
+//! *Base* (job lifecycle, [`job::Job`]), *Back-end*
+//! ([`onesided::Mr1s`] / [`twosided::Mr2s`] behind [`job::Backend`]) and
+//! *Use-case* ([`job::UseCase`], implemented in [`crate::usecases`]) —
+//! so applications configure different back-ends over multiple use-cases
+//! exactly like Listing 1 of the paper.
+
+pub mod bucket;
+pub mod config;
+pub mod job;
+pub mod kv;
+pub mod onesided;
+pub mod twosided;
+
+pub use config::{BackendKind, JobConfig};
+pub use job::{Job, JobOutput, UseCase};
+pub use kv::Record;

@@ -1,0 +1,579 @@
+//! MapReduce-1S: the paper's decoupled, one-sided backend (§2.1).
+//!
+//! Four isolated phases — Map, Local Reduce (inside Map), Reduce,
+//! Combine — synchronized *only* through one-sided operations over four
+//! windows (Fig. 2):
+//!
+//! * **Status window** — one atomic cell per rank
+//!   (`MPI_Accumulate`+`MPI_REPLACE` publishes `STATUS_*` transitions);
+//! * **Key-Value window** — dynamic; each rank's region holds one bucket
+//!   *per target rank* with the key-values this rank found for that
+//!   target.  Buckets grow by locally attaching segments;
+//! * **Displacement window** — per-(rank,target) fill cells and segment
+//!   displacements (dynamic-window attach is not collective, so
+//!   displacements must be shared "by other means" — paper footnote 1);
+//! * **Combine window** — dynamic; each rank publishes its sorted run for
+//!   the merge tree under an exclusive lock held since initialization.
+//!
+//! Decoupling mechanics reproduced from the paper:
+//!
+//! * task pick-up is self-managed (rank-strided, no master);
+//! * the next task's input is always in flight via non-blocking I/O;
+//! * a rank that finishes Map *closes* each peer bucket destined to it
+//!   (CAS on the fill cell's closed bit) and reduces whatever was
+//!   published — stragglers keep their late key-values ("the ownership
+//!   of the key-value is transferred", footnote 2) and inject them into
+//!   their Combine run;
+//! * an emitter that observes a target already in `STATUS_REDUCE` skips
+//!   the bucket entirely and retains the tuples locally (§2.1);
+//! * the Combine tree (Fig. 3) pulls remote runs with `get` after the
+//!   child's exclusive lock is released.
+
+use crate::error::Result;
+use crate::metrics::{EventKind, Timeline};
+use crate::mpi::{LockKind, RankCtx, Window};
+use crate::storage::{Prefetcher, StorageWindow};
+
+use super::bucket::{KeyTable, SortedRun};
+use super::job::{
+    build_local_run, read_len, read_start, run_map_task, task_records, timed, Backend,
+    JobShared, RankOutcome,
+};
+use super::kv;
+
+/// Rank status values published through the Status window.
+pub const STATUS_MAP: u64 = 0;
+/// Rank is in (or past) the Reduce phase.
+pub const STATUS_REDUCE: u64 = 1;
+/// Rank completed Combine.
+pub const STATUS_DONE: u64 = 2;
+
+/// Max segments a (rank → target) bucket can grow to.
+pub const MAX_SEGS: usize = 64;
+
+/// Smallest bucket segment.  Segments are sized `win_size / nranks`
+/// (clamped here) so a node's aggregate bucket memory stays in the same
+/// band as MR-2S regardless of rank count — the paper reports both
+/// implementations within 10.4–13.7 GB on identical workloads (Fig. 6a).
+pub const MIN_SEG: usize = 64 << 10;
+
+/// Bucket segment size for a job ( derived identically by emitters and
+/// reducers; no extra displacement traffic needed).
+fn seg_size(win_size: usize, nranks: usize) -> usize {
+    (win_size / nranks.max(1)).max(MIN_SEG)
+}
+/// Closed bit a reducer CASes into a fill cell when it stops accepting.
+pub const CLOSED_BIT: u64 = 1 << 63;
+
+// Control-window cell displacements (all 8-byte atomic cells).
+const C_STATUS: u64 = 0;
+const C_COMBINE_DISP: u64 = 8;
+const C_COMBINE_LEN: u64 = 16;
+/// Head of the rank's task queue (fetch_add-claimed; §6 job stealing).
+const C_TASK_NEXT: u64 = 24;
+const C_BUCKET_BASE: u64 = 32;
+
+#[inline]
+fn c_fill(target: usize) -> u64 {
+    C_BUCKET_BASE + (target * (1 + MAX_SEGS)) as u64 * 8
+}
+
+#[inline]
+fn c_seg_disp(target: usize, seg: usize) -> u64 {
+    c_fill(target) + 8 + seg as u64 * 8
+}
+
+/// Control-window region size for `nranks`.
+fn ctrl_size(nranks: usize) -> usize {
+    (C_BUCKET_BASE as usize) + nranks * (1 + MAX_SEGS) * 8
+}
+
+/// Local bookkeeping for one outgoing bucket (me → target).
+#[derive(Default, Clone)]
+struct OutBucket {
+    seg_disps: Vec<u64>,
+    fill: u64,
+    closed: bool,
+}
+
+/// Atomic task claiming over the control window (the paper's §6
+/// job-stealing future work, built on `fetch_add`).
+///
+/// Each rank's queue head lives at `C_TASK_NEXT` in its own region.  A
+/// rank claims its next task by `fetch_add(own cell, 1)`; with stealing
+/// enabled, a rank whose queue ran dry picks the peer with the most
+/// remaining tasks and `fetch_add`s *that* cell — task `i` of queue `v`
+/// belongs to whoever drew index `i`, so every task is executed exactly
+/// once regardless of races (an over-claimed index ≥ len is simply
+/// vacuous).  The claimant retrieves the input itself, keeping I/O fully
+/// self-managed.
+struct TaskClaimer<'a> {
+    queues: &'a [Vec<super::job::TaskSpec>],
+    stealing: bool,
+}
+
+impl TaskClaimer<'_> {
+    /// Claim the next task and start its non-blocking read.
+    fn claim(
+        &self,
+        ctx: &RankCtx,
+        ctrl: &Window,
+        prefetcher: &Prefetcher,
+    ) -> Result<Option<(super::job::TaskSpec, crate::storage::PendingRead)>> {
+        let me = ctx.rank();
+        // Claim outcomes must reflect virtual-time ordering (a virtually
+        // slow straggler must not race ahead in real time and drain its
+        // queue before thieves arrive).
+        if self.stealing {
+            ctx.gate_to_virtual();
+        }
+        // Own queue first (local atomic: free).
+        let idx = ctrl.fetch_add(&ctx.clock, me, C_TASK_NEXT, 1)? as usize;
+        if let Some(task) = self.queues[me].get(idx) {
+            return Ok(Some((*task, prefetcher.issue(ctx, read_start(task), read_len(task)))));
+        }
+        if !self.stealing {
+            return Ok(None);
+        }
+        // Steal: victim with the most remaining work.  Counters only
+        // grow, so the loop terminates once every queue is drained.
+        loop {
+            let mut best: Option<(usize, usize)> = None;
+            for v in 0..ctx.nranks() {
+                if v == me {
+                    continue;
+                }
+                let next = ctrl.atomic_load(&ctx.clock, v, C_TASK_NEXT)? as usize;
+                let remaining = self.queues[v].len().saturating_sub(next);
+                // Require a real backlog (>= 2): stealing a victim's
+                // final task usually just moves it to a *later* finisher.
+                if remaining >= 2 && best.map_or(true, |(_, r)| remaining > r) {
+                    best = Some((v, remaining));
+                }
+            }
+            let Some((victim, _)) = best else {
+                if std::env::var_os("MR1S_DEBUG_STEAL").is_some() {
+                    eprintln!(
+                        "rank {me} vt={:.1}ms: nothing to steal",
+                        ctx.clock.now() as f64 / 1e6
+                    );
+                }
+                return Ok(None);
+            };
+            let idx = ctrl.fetch_add(&ctx.clock, victim, C_TASK_NEXT, 1)? as usize;
+            if std::env::var_os("MR1S_DEBUG_STEAL").is_some() {
+                eprintln!(
+                    "rank {me} vt={:.1}ms: stole {victim}/{idx} ({})",
+                    ctx.clock.now() as f64 / 1e6,
+                    idx < self.queues[victim].len()
+                );
+            }
+            if let Some(task) = self.queues[victim].get(idx) {
+                return Ok(Some((
+                    *task,
+                    prefetcher.issue(ctx, read_start(task), read_len(task)),
+                )));
+            }
+            // Raced with the victim's own claims; rescan.
+        }
+    }
+}
+
+/// The MapReduce-1S backend.
+pub struct Mr1s;
+
+impl Backend for Mr1s {
+    fn execute(&self, ctx: &RankCtx, shared: &JobShared) -> Result<RankOutcome> {
+        let tl = Timeline::new();
+        let me = ctx.rank();
+        let n = ctx.nranks();
+        let cfg = &shared.config;
+        let reduce = |a, b| shared.usecase.reduce(a, b);
+
+        // ---- Window setup (collective) + init fence ------------------
+        let ctrl = Window::create(ctx, ctrl_size(n));
+        let kv_win = Window::create(ctx, 0);
+        let comb_win = Window::create(ctx, 0);
+        // Paper: each process acquires the exclusive lock over its own
+        // Combine window during initialization.
+        comb_win.lock(&ctx.clock, LockKind::Exclusive, me);
+        let t0 = ctx.clock.now();
+        ctx.barrier();
+        tl.record(t0, ctx.clock.now(), EventKind::Wait);
+
+        let mut out_buckets = vec![OutBucket::default(); n];
+        let mut reduce_table = KeyTable::new();
+        let mut retained = KeyTable::new();
+        let mut checkpoint = if cfg.checkpoints {
+            Some(StorageWindow::create(
+                cfg.checkpoint_dir.join(format!("mr1s-ckpt-{me}.bin")),
+            )?)
+        } else {
+            None
+        };
+        let mut ckpt_off = 0u64;
+
+        // ---- Map + Local Reduce (self-managed, prefetched) -----------
+        // Rank-strided queues; heads are atomic cells so idle ranks can
+        // steal a straggler's tail (paper §6 future work) when enabled.
+        let queues: Vec<Vec<_>> = (0..n)
+            .map(|r| shared.tasks.iter().copied().filter(|t| t.id % n == r).collect())
+            .collect();
+        let claimer = TaskClaimer { queues: &queues, stealing: cfg.job_stealing };
+        let prefetcher = Prefetcher::new(shared.file.clone());
+        let mut input_bytes = 0u64;
+        let mut pending = claimer.claim(ctx, &ctrl, &prefetcher)?;
+
+        while let Some((task, read)) = pending {
+            let data = timed(ctx, &tl, EventKind::Io, || read.wait(ctx))?;
+            // Claim the next task (and start its input) before computing
+            // this one — the paper's overlap of Map with non-blocking I/O.
+            pending = claimer.claim(ctx, &ctrl, &prefetcher)?;
+            input_bytes += task.len as u64;
+            let task = &task;
+
+            let mut staging = KeyTable::new();
+            let range = task_records(task, &data);
+            timed(ctx, &tl, EventKind::Map, || {
+                run_map_task(ctx, shared, task, &data[range], &mut staging)
+            })?;
+            shared.mem.alloc(ctx.clock.now(), staging.bytes() as u64);
+            let staged_bytes = staging.bytes() as u64;
+
+            // Flush the task's locally-reduced tuples into buckets.
+            let flushed = timed(ctx, &tl, EventKind::LocalReduce, || {
+                self.flush_staging(
+                    ctx,
+                    shared,
+                    &ctrl,
+                    &kv_win,
+                    &mut out_buckets,
+                    &mut staging,
+                    &mut reduce_table,
+                    &mut retained,
+                )
+            })?;
+            shared.mem.free(ctx.clock.now(), staged_bytes);
+
+            // Window synchronization point after each Map task (Fig. 5).
+            // MPI_Win_sync guarantees window↔storage consistency: the
+            // caller pays a snapshot of the (dirty) window region, the
+            // flush itself overlaps with the next task's compute.
+            if let Some(ckpt) = checkpoint.as_mut() {
+                timed(ctx, &tl, EventKind::Checkpoint, || -> Result<()> {
+                    // Consistency point: write-through of the dirty delta
+                    // (~1 GB/s) plus a sweep of the attached region —
+                    // calibrated to the paper's ~4.8% average overhead.
+                    ctx.clock.advance(
+                        flushed.len() as u64 + kv_win.attached_bytes(me) as u64 / 4,
+                    );
+                    ckpt.sync(ctx, ckpt_off, &flushed)?;
+                    ckpt_off += flushed.len() as u64;
+                    Ok(())
+                })?;
+            }
+            // Fig. 7b variant: redundant lock/unlock to force progress.
+            if cfg.flush_epochs {
+                kv_win.lock(&ctx.clock, LockKind::Shared, me);
+                kv_win.unlock(&ctx.clock, LockKind::Shared, me);
+                kv_win.flush(&ctx.clock, me);
+            }
+        }
+
+        // ---- Status -> REDUCE (atomic put: Accumulate + REPLACE) -----
+        ctrl.atomic_store(&ctx.clock, me, C_STATUS, STATUS_REDUCE)?;
+
+        // ---- Reduce: close + pull every peer's bucket for me ---------
+        timed(ctx, &tl, EventKind::Reduce, || -> Result<()> {
+            for s in 0..n {
+                if s == me {
+                    continue;
+                }
+                // Close the bucket: CAS the closed bit into s's fill cell
+                // for target me; late emissions stay with the straggler.
+                let fill = loop {
+                    let cur = ctrl.atomic_load(&ctx.clock, s, c_fill(me))?;
+                    if cur & CLOSED_BIT != 0 {
+                        break cur & !CLOSED_BIT;
+                    }
+                    let old = ctrl.compare_and_swap(
+                        &ctx.clock,
+                        s,
+                        c_fill(me),
+                        cur,
+                        cur | CLOSED_BIT,
+                    )?;
+                    if old == cur {
+                        break cur;
+                    }
+                };
+                if fill == 0 {
+                    continue;
+                }
+                // Segment displacements from the Displacement window.
+                let seg = seg_size(cfg.win_size, n);
+                let nsegs = (fill as usize).div_ceil(seg);
+                let mut disps = Vec::with_capacity(nsegs);
+                for j in 0..nsegs {
+                    disps.push(ctrl.atomic_load(&ctx.clock, s, c_seg_disp(me, j))?);
+                }
+                // Pull the bucket, chunked by the one-sided op limit.
+                let mut buf = vec![0u8; fill as usize];
+                let mut off = 0usize;
+                while off < fill as usize {
+                    let seg_idx = off / seg;
+                    let within = off % seg;
+                    let take = cfg
+                        .chunk_size
+                        .min(seg - within)
+                        .min(fill as usize - off);
+                    kv_win.get(
+                        &ctx.clock,
+                        s,
+                        disps[seg_idx] + within as u64,
+                        &mut buf[off..off + take],
+                    )?;
+                    off += take;
+                }
+                // Decode headers, reduce locally.
+                for rec in kv::RecordIter::new(&buf) {
+                    reduce_table.merge_record(rec?, reduce);
+                }
+                ctx.clock.advance(ctx.cost.compute.reduce_cost(fill as usize));
+            }
+            Ok(())
+        })?;
+        shared.mem.alloc(ctx.clock.now(), reduce_table.bytes() as u64);
+        if cfg.flush_epochs {
+            ctrl.lock(&ctx.clock, LockKind::Shared, me);
+            ctrl.unlock(&ctx.clock, LockKind::Shared, me);
+            ctrl.flush(&ctx.clock, me);
+        }
+
+        // ---- Combine: merge-sort tree over one-sided gets (Fig. 3) ---
+        let reduce_bytes = reduce_table.bytes() as u64;
+        let retained_bytes = retained.bytes() as u64;
+        shared.mem.alloc(ctx.clock.now(), retained_bytes);
+        let mut result: Option<SortedRun> = None;
+        timed(ctx, &tl, EventKind::Combine, || -> Result<()> {
+            // Level 0: rank-local sorted run (owned keys + retained
+            // foreign keys whose ownership was transferred).
+            let mut records = reduce_table.drain_records();
+            records.extend(retained.drain_records());
+            let nbytes: usize = records.iter().map(|r| r.encoded_len()).sum();
+            let mut merged = build_local_run(shared, records, reduce);
+            ctx.clock.advance(ctx.cost.compute.combine_cost(nbytes));
+
+            // Checkpoint the reduced state (window sync after Reduce).
+            if let Some(ckpt) = checkpoint.as_mut() {
+                let enc = merged.encode();
+                let t0 = ctx.clock.now();
+                ckpt.sync(ctx, ckpt_off, &enc)?;
+                ckpt.drain(ctx)?;
+                tl.record(t0, ctx.clock.now(), EventKind::Checkpoint);
+            }
+
+            let mut level = 1usize;
+            loop {
+                let stride = 1usize << level;
+                let half = stride >> 1;
+                if me % stride == 0 {
+                    let peer = me + half;
+                    if half >= n {
+                        break; // tree exhausted; I hold the final result
+                    }
+                    if peer < n {
+                        // Blocked by the MPI implementation until the
+                        // peer's access epoch completes (paper §2.1).
+                        // The wait is part of the Combine interval, as in
+                        // the paper's Fig. 7 timelines.
+                        comb_win.lock(&ctx.clock, LockKind::Shared, peer);
+
+                        let disp = ctrl.atomic_load(&ctx.clock, peer, C_COMBINE_DISP)?;
+                        let len =
+                            ctrl.atomic_load(&ctx.clock, peer, C_COMBINE_LEN)? as usize;
+                        let mut buf = vec![0u8; len];
+                        let mut off = 0usize;
+                        while off < len {
+                            let take = cfg.chunk_size.min(len - off);
+                            comb_win.get(
+                                &ctx.clock,
+                                peer,
+                                disp + off as u64,
+                                &mut buf[off..off + take],
+                            )?;
+                            off += take;
+                        }
+                        comb_win.unlock(&ctx.clock, LockKind::Shared, peer);
+                        let peer_run = SortedRun::decode(&buf)?;
+                        shared.mem.alloc(ctx.clock.now(), len as u64);
+                        merged = merged.merge(peer_run, reduce);
+                        ctx.clock.advance(ctx.cost.compute.combine_cost(len));
+                        shared.mem.free(ctx.clock.now(), len as u64);
+                    }
+                    level += 1;
+                } else {
+                    // Child: publish the run and release the init lock.
+                    let enc = merged.encode();
+                    let disp = comb_win.attach(enc.len().max(1));
+                    shared.mem.alloc(ctx.clock.now(), enc.len() as u64);
+                    comb_win.put(&ctx.clock, me, disp, &enc)?;
+                    ctrl.atomic_store(&ctx.clock, me, C_COMBINE_DISP, disp)?;
+                    ctrl.atomic_store(&ctx.clock, me, C_COMBINE_LEN, enc.len() as u64)?;
+                    comb_win.unlock(&ctx.clock, LockKind::Exclusive, me);
+                    break;
+                }
+            }
+            if me == 0 {
+                comb_win.unlock(&ctx.clock, LockKind::Exclusive, me);
+                result = Some(merged);
+            }
+            Ok(())
+        })?;
+        shared.mem.free(ctx.clock.now(), reduce_bytes + retained_bytes);
+
+        ctrl.atomic_store(&ctx.clock, me, C_STATUS, STATUS_DONE)?;
+        if let Some(ckpt) = checkpoint.as_mut() {
+            ckpt.drain(ctx)?;
+        }
+
+        // Window memory is released at finalize.
+        let win_bytes = (kv_win.attached_bytes(me) + comb_win.attached_bytes(me)) as u64;
+        shared.mem.alloc(ctx.clock.now(), 0); // final sample point
+        shared.mem.free(ctx.clock.now(), 0);
+        let _ = win_bytes;
+
+        Ok(RankOutcome {
+            elapsed_ns: ctx.clock.now(),
+            events: tl.events(),
+            result,
+            input_bytes,
+        })
+    }
+}
+
+impl Mr1s {
+    /// Flush one task's locally-reduced staging into the outgoing
+    /// buckets.  Returns the concatenated encoded bytes that were
+    /// appended (checkpoint payload).
+    #[allow(clippy::too_many_arguments)]
+    fn flush_staging(
+        &self,
+        ctx: &RankCtx,
+        shared: &JobShared,
+        ctrl: &Window,
+        kv_win: &Window,
+        out_buckets: &mut [OutBucket],
+        staging: &mut KeyTable,
+        reduce_table: &mut KeyTable,
+        retained: &mut KeyTable,
+    ) -> Result<Vec<u8>> {
+        let me = ctx.rank();
+        let n = ctx.nranks();
+        let reduce = |a, b| shared.usecase.reduce(a, b);
+        let mut appended = Vec::new();
+
+        let parts = staging.drain_by_owner(n);
+        for (t, buf) in parts.into_iter().enumerate() {
+            if buf.is_empty() {
+                continue;
+            }
+            if t == me {
+                // Own keys reduce in place — no window traffic.
+                for rec in kv::RecordIter::new(&buf) {
+                    reduce_table.merge_record(rec?, reduce);
+                }
+                continue;
+            }
+            // §2.1: ensure the target is not already in Reduce.
+            let status = ctrl.atomic_load(&ctx.clock, t, C_STATUS)?;
+            if status >= STATUS_REDUCE || out_buckets[t].closed {
+                out_buckets[t].closed = true;
+                for rec in kv::RecordIter::new(&buf) {
+                    retained.merge_record(rec?, reduce);
+                }
+                continue;
+            }
+            match self.append_bucket(ctx, shared, ctrl, kv_win, &mut out_buckets[t], t, &buf)? {
+                true => appended.extend_from_slice(&buf),
+                false => {
+                    // Closed (or full) under us: ownership transfer.
+                    out_buckets[t].closed = true;
+                    for rec in kv::RecordIter::new(&buf) {
+                        retained.merge_record(rec?, reduce);
+                    }
+                }
+            }
+        }
+        Ok(appended)
+    }
+
+    /// Append `buf` to the local bucket for `target`; publishes the new
+    /// fill through the Displacement window.  Returns false if the
+    /// reducer closed the bucket (or it is out of segments).
+    fn append_bucket(
+        &self,
+        ctx: &RankCtx,
+        shared: &JobShared,
+        ctrl: &Window,
+        kv_win: &Window,
+        bucket: &mut OutBucket,
+        target: usize,
+        buf: &[u8],
+    ) -> Result<bool> {
+        let me = ctx.rank();
+        let cfg = &shared.config;
+        let seg = seg_size(cfg.win_size, ctx.nranks());
+        let need_end = bucket.fill as usize + buf.len();
+
+        // Grow the bucket with locally-attached segments, publishing each
+        // new displacement (dynamic windows, paper footnote 1).
+        while bucket.seg_disps.len() * seg < need_end {
+            let j = bucket.seg_disps.len();
+            if j >= MAX_SEGS {
+                return Ok(false);
+            }
+            let disp = kv_win.attach(seg);
+            shared.mem.alloc(ctx.clock.now(), seg as u64);
+            ctrl.atomic_store(&ctx.clock, me, c_seg_disp(target, j), disp)?;
+            bucket.seg_disps.push(disp);
+        }
+
+        // Write the bytes (local puts are free; data precedes publication).
+        let mut off = bucket.fill as usize;
+        let mut src = 0usize;
+        while src < buf.len() {
+            let seg_idx = off / seg;
+            let within = off % seg;
+            let take = (seg - within).min(buf.len() - src);
+            kv_win.put(
+                &ctx.clock,
+                me,
+                bucket.seg_disps[seg_idx] + within as u64,
+                &buf[src..src + take],
+            )?;
+            off += take;
+            src += take;
+        }
+
+        // Publish the new fill; a concurrent close wins and we retain.
+        loop {
+            let cur = ctrl.atomic_load(&ctx.clock, me, c_fill(target))?;
+            if cur & CLOSED_BIT != 0 {
+                return Ok(false);
+            }
+            debug_assert_eq!(cur, bucket.fill, "single-writer fill cell");
+            let old = ctrl.compare_and_swap(
+                &ctx.clock,
+                me,
+                c_fill(target),
+                cur,
+                cur + buf.len() as u64,
+            )?;
+            if old == cur {
+                bucket.fill += buf.len() as u64;
+                return Ok(true);
+            }
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! MapReduce-2S: the collective-communication reference backend (§2.2.1,
+//! after Hoefler et al.).
+//!
+//! * task distribution: master-slave via `MPI_Scatter` (rank 0 assigns
+//!   contiguous task ranges up front);
+//! * input: collective MPI-IO — every rank joins each read round, so the
+//!   whole world advances in lock-step (the coupling MR-1S removes);
+//! * shuffle: `MPI_Alltoallv` of the variable-length key-value buffers;
+//! * Combine: the same merge-sort tree as MR-1S but over point-to-point
+//!   messages.
+//!
+//! Mapping, local reduce, bucket memory management and the kv encoding
+//! are shared with MR-1S (the paper keeps them identical on purpose).
+
+use crate::error::Result;
+use crate::metrics::{EventKind, Timeline};
+use crate::mpi::RankCtx;
+
+use super::bucket::{KeyTable, SortedRun};
+use super::job::{
+    build_local_run, read_len, read_start, run_map_task, task_records, timed, Backend,
+    JobShared, RankOutcome, TaskSpec,
+};
+use super::kv;
+
+/// Message tag for Combine-tree run transfers.
+const TAG_COMBINE: u64 = 0xC0;
+
+/// The MapReduce-2S backend.
+pub struct Mr2s;
+
+impl Backend for Mr2s {
+    fn execute(&self, ctx: &RankCtx, shared: &JobShared) -> Result<RankOutcome> {
+        let tl = Timeline::new();
+        let me = ctx.rank();
+        let n = ctx.nranks();
+        let reduce = |a, b| shared.usecase.reduce(a, b);
+
+        // ---- Master-slave task distribution (MPI_Scatter) ------------
+        let assignment: Option<Vec<Vec<TaskSpec>>> = (me == 0).then(|| {
+            let mut parts: Vec<Vec<TaskSpec>> = vec![Vec::new(); n];
+            let per = shared.tasks.len().div_ceil(n);
+            for (i, chunk) in shared.tasks.chunks(per.max(1)).enumerate() {
+                parts[i.min(n - 1)].extend_from_slice(chunk);
+            }
+            parts
+        });
+        let my_tasks: Vec<TaskSpec> = timed(ctx, &tl, EventKind::Wait, || {
+            ctx.scatter(0, assignment)
+        });
+        let rounds = ctx.allreduce_u64(my_tasks.len() as u64, u64::max) as usize;
+
+        // ---- Map rounds under collective I/O --------------------------
+        let mut all_staging = KeyTable::new();
+        let mut input_bytes = 0u64;
+        for round in 0..rounds {
+            let task = my_tasks.get(round);
+            // Collective read: everyone participates every round, even
+            // with no task left (MPI collective I/O semantics).
+            let (offset, len) = task.map_or((0, 0), |t| (read_start(t), read_len(t)));
+            let data = timed(ctx, &tl, EventKind::Io, || {
+                shared.file.read_collective(ctx, offset, len)
+            })?;
+            let Some(task) = task else { continue };
+            input_bytes += task.len as u64;
+
+            let range = task_records(task, &data);
+            timed(ctx, &tl, EventKind::Map, || {
+                run_map_task(ctx, shared, task, &data[range], &mut all_staging)
+            })?;
+        }
+        shared.mem.alloc(ctx.clock.now(), all_staging.bytes() as u64);
+        let staging_bytes = all_staging.bytes() as u64;
+
+        // ---- Shuffle: Alltoallv of per-owner buffers ------------------
+        let mut parts = all_staging.drain_by_owner(n);
+        let own = std::mem::take(&mut parts[me]);
+        let sent_bytes: usize = parts.iter().map(Vec::len).sum();
+        let recv = timed(ctx, &tl, EventKind::Wait, || ctx.alltoallv(parts));
+        shared.mem.alloc(ctx.clock.now(), recv.iter().map(|b| b.len() as u64).sum());
+
+        // ---- Reduce: merge own + received -----------------------------
+        let mut reduce_table = KeyTable::new();
+        timed(ctx, &tl, EventKind::Reduce, || -> Result<()> {
+            for rec in kv::RecordIter::new(&own) {
+                reduce_table.merge_record(rec?, reduce);
+            }
+            for (s, buf) in recv.iter().enumerate() {
+                if s == me || buf.is_empty() {
+                    continue;
+                }
+                for rec in kv::RecordIter::new(buf) {
+                    reduce_table.merge_record(rec?, reduce);
+                }
+                ctx.clock.advance(ctx.cost.compute.reduce_cost(buf.len()));
+            }
+            ctx.clock.advance(ctx.cost.compute.reduce_cost(own.len()));
+            Ok(())
+        })?;
+        shared.mem.free(ctx.clock.now(), staging_bytes);
+        shared.mem.alloc(ctx.clock.now(), reduce_table.bytes() as u64);
+        let reduce_bytes = reduce_table.bytes() as u64;
+        let _ = sent_bytes;
+
+        // ---- Combine: same tree, point-to-point -----------------------
+        let mut result: Option<SortedRun> = None;
+        timed(ctx, &tl, EventKind::Combine, || -> Result<()> {
+            let records = reduce_table.drain_records();
+            let nbytes: usize = records.iter().map(|r| r.encoded_len()).sum();
+            let mut merged = build_local_run(shared, records, reduce);
+            ctx.clock.advance(ctx.cost.compute.combine_cost(nbytes));
+
+            let mut level = 1usize;
+            loop {
+                let stride = 1usize << level;
+                let half = stride >> 1;
+                if me % stride == 0 {
+                    if half >= n {
+                        break;
+                    }
+                    let peer = me + half;
+                    if peer < n {
+                        let (_, _, buf) =
+                            ctx.comm.recv(&ctx.clock, Some(peer), Some(TAG_COMBINE));
+                        let peer_run = SortedRun::decode(&buf)?;
+                        shared.mem.alloc(ctx.clock.now(), buf.len() as u64);
+                        merged = merged.merge(peer_run, reduce);
+                        ctx.clock.advance(ctx.cost.compute.combine_cost(buf.len()));
+                        shared.mem.free(ctx.clock.now(), buf.len() as u64);
+                    }
+                    level += 1;
+                } else {
+                    let parent = me - half;
+                    ctx.comm.send(&ctx.clock, parent, TAG_COMBINE, merged.encode());
+                    break;
+                }
+            }
+            if me == 0 {
+                result = Some(merged);
+            }
+            Ok(())
+        })?;
+        shared.mem.free(ctx.clock.now(), reduce_bytes);
+
+        Ok(RankOutcome {
+            elapsed_ns: ctx.clock.now(),
+            events: tl.events(),
+            result,
+            input_bytes,
+        })
+    }
+}

@@ -1,0 +1,121 @@
+//! Memory accounting (Fig. 6 substrate).
+//!
+//! Tracks the *algorithmic* memory of a job — window buckets, staging
+//! buffers, reduce tables, combine runs — via explicit alloc/free calls
+//! from the backends, with a sampled (virtual-time, bytes) series for the
+//! Fig. 6b timeline.  Real process RSS would mix in the host allocator
+//! and the PJRT runtime; the paper's comparison is about the algorithm's
+//! footprint, which this captures exactly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Thread-safe allocation tracker shared by all ranks of a job
+/// ("per node" in the paper's terms — ranks share a node's memory).
+#[derive(Debug, Default)]
+pub struct MemoryTracker {
+    current: AtomicU64,
+    peak: AtomicU64,
+    samples: Mutex<Vec<(u64, u64)>>, // (virtual ns, bytes)
+}
+
+impl MemoryTracker {
+    /// Fresh tracker.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an allocation of `bytes` at virtual time `vt`.
+    pub fn alloc(&self, vt: u64, bytes: u64) {
+        let now = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+        self.samples.lock().unwrap().push((vt, now));
+    }
+
+    /// Record a release of `bytes` at virtual time `vt`.
+    pub fn free(&self, vt: u64, bytes: u64) {
+        let prev = self.current.fetch_sub(bytes, Ordering::Relaxed);
+        debug_assert!(prev >= bytes, "memory tracker underflow");
+        self.samples.lock().unwrap().push((vt, prev - bytes));
+    }
+
+    /// Current tracked bytes.
+    pub fn current(&self) -> u64 {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    /// Peak tracked bytes.
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// (virtual ns, bytes) samples ordered by insertion.  Cross-rank
+    /// interleaving is unordered in virtual time; callers sort.
+    pub fn samples(&self) -> Vec<(u64, u64)> {
+        let mut s = self.samples.lock().unwrap().clone();
+        s.sort_by_key(|&(t, _)| t);
+        s
+    }
+
+    /// Downsample the series to at most `n` points of (normalized time in
+    /// [0,1], bytes) — the paper normalizes Fig. 6b's x-axis.
+    pub fn normalized_series(&self, n: usize) -> Vec<(f64, u64)> {
+        let samples = self.samples();
+        let Some(&(t_end, _)) = samples.last() else { return Vec::new() };
+        let t_end = t_end.max(1);
+        let mut out = Vec::with_capacity(n);
+        let mut cur = 0u64;
+        let mut idx = 0usize;
+        for step in 0..n {
+            let t = t_end * (step as u64 + 1) / n as u64;
+            while idx < samples.len() && samples[idx].0 <= t {
+                cur = samples[idx].1;
+                idx += 1;
+            }
+            out.push((t as f64 / t_end as f64, cur));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let m = MemoryTracker::new();
+        m.alloc(0, 100);
+        m.alloc(1, 200);
+        m.free(2, 250);
+        m.alloc(3, 10);
+        assert_eq!(m.current(), 60);
+        assert_eq!(m.peak(), 300);
+    }
+
+    #[test]
+    fn samples_sorted_by_time() {
+        let m = MemoryTracker::new();
+        m.alloc(5, 10);
+        m.alloc(1, 10);
+        let s = m.samples();
+        assert!(s.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn normalized_series_ends_at_one() {
+        let m = MemoryTracker::new();
+        m.alloc(0, 64);
+        m.alloc(100, 64);
+        let series = m.normalized_series(10);
+        assert_eq!(series.len(), 10);
+        let last = series.last().unwrap();
+        assert!((last.0 - 1.0).abs() < 1e-9);
+        assert_eq!(last.1, 128);
+    }
+
+    #[test]
+    fn empty_tracker_normalizes_to_empty() {
+        assert!(MemoryTracker::new().normalized_series(4).is_empty());
+    }
+}

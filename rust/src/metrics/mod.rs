@@ -1,0 +1,13 @@
+//! Metrics: per-rank phase timelines, memory accounting and run reports.
+//!
+//! Figures 6 (memory) and 7 (execution timelines) of the paper are pure
+//! observability artifacts; this module is the substrate that records
+//! them during a job and renders the series the harness prints.
+
+pub mod memory;
+pub mod report;
+pub mod timeline;
+
+pub use memory::MemoryTracker;
+pub use report::{JobReport, PhaseBreakdown};
+pub use timeline::{Event, EventKind, Timeline};

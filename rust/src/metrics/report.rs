@@ -1,0 +1,144 @@
+//! Job reports: the numbers every figure is derived from.
+
+use super::timeline::{Event, EventKind};
+
+/// Virtual-time breakdown of one rank's run.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseBreakdown {
+    /// Blocking I/O ns.
+    pub io_ns: u64,
+    /// Map compute ns.
+    pub map_ns: u64,
+    /// Local-reduce ns.
+    pub local_reduce_ns: u64,
+    /// Reduce ns.
+    pub reduce_ns: u64,
+    /// Combine ns.
+    pub combine_ns: u64,
+    /// Blocked/waiting ns.
+    pub wait_ns: u64,
+    /// Checkpoint ns.
+    pub checkpoint_ns: u64,
+}
+
+impl PhaseBreakdown {
+    /// Derive a breakdown from a rank's timeline events.
+    pub fn from_events(events: &[Event]) -> Self {
+        let mut b = PhaseBreakdown::default();
+        for e in events {
+            let d = e.t1 - e.t0;
+            match e.kind {
+                EventKind::Io => b.io_ns += d,
+                EventKind::Map => b.map_ns += d,
+                EventKind::LocalReduce => b.local_reduce_ns += d,
+                EventKind::Reduce => b.reduce_ns += d,
+                EventKind::Combine => b.combine_ns += d,
+                EventKind::Wait => b.wait_ns += d,
+                EventKind::Checkpoint => b.checkpoint_ns += d,
+            }
+        }
+        b
+    }
+}
+
+/// Outcome of one MapReduce job execution.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    /// Backend name ("MR-1S" / "MR-2S").
+    pub backend: &'static str,
+    /// Rank count.
+    pub nranks: usize,
+    /// Input bytes consumed.
+    pub input_bytes: u64,
+    /// Job makespan in virtual ns (max across ranks).
+    pub elapsed_ns: u64,
+    /// Per-rank completion times (virtual ns).
+    pub rank_elapsed_ns: Vec<u64>,
+    /// Per-rank phase breakdowns.
+    pub breakdowns: Vec<PhaseBreakdown>,
+    /// Per-rank timelines.
+    pub timelines: Vec<Vec<Event>>,
+    /// Peak tracked memory over the node (bytes).
+    pub peak_memory_bytes: u64,
+    /// Normalized (t, bytes) memory series.
+    pub memory_series: Vec<(f64, u64)>,
+    /// Number of unique output keys.
+    pub unique_keys: u64,
+    /// Sum of all output values (e.g. total word occurrences).
+    pub total_count: u64,
+}
+
+impl JobReport {
+    /// Makespan in (virtual) seconds.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed_ns as f64 / 1e9
+    }
+
+    /// Mean of per-rank wait fractions (load-imbalance indicator).
+    pub fn mean_wait_fraction(&self) -> f64 {
+        if self.rank_elapsed_ns.is_empty() {
+            return 0.0;
+        }
+        let fr: f64 = self
+            .breakdowns
+            .iter()
+            .zip(&self.rank_elapsed_ns)
+            .map(|(b, &e)| if e > 0 { b.wait_ns as f64 / e as f64 } else { 0.0 })
+            .sum();
+        fr / self.rank_elapsed_ns.len() as f64
+    }
+
+    /// One-line summary used by the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: ranks={} input={}MiB elapsed={:.3}s keys={} count={} peak_mem={}MiB wait={:.1}%",
+            self.backend,
+            self.nranks,
+            self.input_bytes >> 20,
+            self.elapsed_secs(),
+            self.unique_keys,
+            self.total_count,
+            self.peak_memory_bytes >> 20,
+            self.mean_wait_fraction() * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_from_events_sums_by_kind() {
+        let events = vec![
+            Event { t0: 0, t1: 5, kind: EventKind::Map },
+            Event { t0: 5, t1: 6, kind: EventKind::Wait },
+            Event { t0: 6, t1: 16, kind: EventKind::Map },
+        ];
+        let b = PhaseBreakdown::from_events(&events);
+        assert_eq!(b.map_ns, 15);
+        assert_eq!(b.wait_ns, 1);
+        assert_eq!(b.reduce_ns, 0);
+    }
+
+    #[test]
+    fn wait_fraction_is_mean_over_ranks() {
+        let r = JobReport {
+            backend: "MR-1S",
+            nranks: 2,
+            input_bytes: 0,
+            elapsed_ns: 100,
+            rank_elapsed_ns: vec![100, 100],
+            breakdowns: vec![
+                PhaseBreakdown { wait_ns: 50, ..Default::default() },
+                PhaseBreakdown { wait_ns: 0, ..Default::default() },
+            ],
+            timelines: vec![vec![], vec![]],
+            peak_memory_bytes: 0,
+            memory_series: vec![],
+            unique_keys: 0,
+            total_count: 0,
+        };
+        assert!((r.mean_wait_fraction() - 0.25).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,185 @@
+//! Per-rank event timelines (Fig. 7 substrate).
+
+use std::cell::RefCell;
+
+/// What a rank was doing over an interval of virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Reading task input (blocking part only; overlapped I/O is free).
+    Io,
+    /// Map phase compute (tokenize + hash + emit).
+    Map,
+    /// Local reduce within Map.
+    LocalReduce,
+    /// Reduce phase (remote key-value retrieval + merge).
+    Reduce,
+    /// Combine phase (tree merge).
+    Combine,
+    /// Blocked: barrier / collective / lock / status wait.
+    Wait,
+    /// Checkpoint sync (storage windows).
+    Checkpoint,
+}
+
+impl EventKind {
+    /// Short label used by the CSV/ASCII renderers.
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::Io => "io",
+            EventKind::Map => "map",
+            EventKind::LocalReduce => "lreduce",
+            EventKind::Reduce => "reduce",
+            EventKind::Combine => "combine",
+            EventKind::Wait => "wait",
+            EventKind::Checkpoint => "ckpt",
+        }
+    }
+}
+
+/// One recorded interval.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Interval start, virtual ns.
+    pub t0: u64,
+    /// Interval end, virtual ns.
+    pub t1: u64,
+    /// Activity.
+    pub kind: EventKind,
+}
+
+/// A rank-local event recorder.
+///
+/// Interior-mutable so backends can record around `&self` protocol calls.
+#[derive(Debug, Default)]
+pub struct Timeline {
+    events: RefCell<Vec<Event>>,
+}
+
+impl Timeline {
+    /// Empty timeline.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an interval (ignored if empty).
+    pub fn record(&self, t0: u64, t1: u64, kind: EventKind) {
+        if t1 > t0 {
+            self.events.borrow_mut().push(Event { t0, t1, kind });
+        }
+    }
+
+    /// Snapshot of recorded events (ordered as recorded; t0-monotonic per
+    /// rank because virtual clocks never go backwards).
+    pub fn events(&self) -> Vec<Event> {
+        self.events.borrow().clone()
+    }
+
+    /// Total virtual ns spent in `kind`.
+    pub fn total(&self, kind: EventKind) -> u64 {
+        self.events
+            .borrow()
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.t1 - e.t0)
+            .sum()
+    }
+
+    /// End of the last event (0 when empty).
+    pub fn span_end(&self) -> u64 {
+        self.events.borrow().iter().map(|e| e.t1).max().unwrap_or(0)
+    }
+}
+
+/// Render per-rank timelines as an ASCII chart, `width` chars wide
+/// (Fig. 7's visual).  Each row is one rank; each column a time slice
+/// labelled by the activity that dominated it.
+pub fn render_ascii(timelines: &[Vec<Event>], width: usize) -> String {
+    let t_end = timelines
+        .iter()
+        .flat_map(|tl| tl.iter().map(|e| e.t1))
+        .max()
+        .unwrap_or(0)
+        .max(1);
+    let mut out = String::new();
+    for (rank, tl) in timelines.iter().enumerate() {
+        let mut row = vec![' '; width];
+        for slot in 0..width {
+            let s0 = t_end * slot as u64 / width as u64;
+            let s1 = t_end * (slot as u64 + 1) / width as u64;
+            // Dominant activity in [s0, s1).
+            let mut best: Option<(u64, EventKind)> = None;
+            for e in tl {
+                let ov = e.t1.min(s1).saturating_sub(e.t0.max(s0));
+                if ov > 0 && best.map_or(true, |(b, _)| ov > b) {
+                    best = Some((ov, e.kind));
+                }
+            }
+            row[slot] = match best.map(|(_, k)| k) {
+                Some(EventKind::Io) => 'i',
+                Some(EventKind::Map) => 'M',
+                Some(EventKind::LocalReduce) => 'l',
+                Some(EventKind::Reduce) => 'R',
+                Some(EventKind::Combine) => 'C',
+                Some(EventKind::Wait) => '.',
+                Some(EventKind::Checkpoint) => 'k',
+                None => ' ',
+            };
+        }
+        out.push_str(&format!("rank {rank:>3} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str("legend: M=map R=reduce C=combine i=io l=local-reduce k=ckpt .=wait\n");
+    out
+}
+
+/// Render timelines as CSV rows: `rank,t0_ns,t1_ns,kind`.
+pub fn render_csv(timelines: &[Vec<Event>]) -> String {
+    let mut out = String::from("rank,t0_ns,t1_ns,kind\n");
+    for (rank, tl) in timelines.iter().enumerate() {
+        for e in tl {
+            out.push_str(&format!("{rank},{},{},{}\n", e.t0, e.t1, e.kind.label()));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_totals() {
+        let tl = Timeline::new();
+        tl.record(0, 10, EventKind::Map);
+        tl.record(10, 15, EventKind::Wait);
+        tl.record(15, 30, EventKind::Map);
+        assert_eq!(tl.total(EventKind::Map), 25);
+        assert_eq!(tl.total(EventKind::Wait), 5);
+        assert_eq!(tl.span_end(), 30);
+    }
+
+    #[test]
+    fn empty_intervals_dropped() {
+        let tl = Timeline::new();
+        tl.record(5, 5, EventKind::Io);
+        assert!(tl.events().is_empty());
+    }
+
+    #[test]
+    fn ascii_render_shows_dominant_activity() {
+        let tls = vec![
+            vec![Event { t0: 0, t1: 50, kind: EventKind::Map }],
+            vec![Event { t0: 0, t1: 50, kind: EventKind::Wait }],
+        ];
+        let s = render_ascii(&tls, 10);
+        assert!(s.contains("rank   0 |MMMMMMMMMM|"));
+        assert!(s.contains("rank   1 |..........|"));
+    }
+
+    #[test]
+    fn csv_render_has_header_and_rows() {
+        let tls = vec![vec![Event { t0: 1, t1: 2, kind: EventKind::Reduce }]];
+        let s = render_csv(&tls);
+        assert!(s.starts_with("rank,t0_ns,t1_ns,kind\n"));
+        assert!(s.contains("0,1,2,reduce"));
+    }
+}

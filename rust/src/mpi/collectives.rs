@@ -1,0 +1,192 @@
+//! Collective operations over the rendezvous primitive.
+//!
+//! These are what MapReduce-2S (the baseline, §2.2.1) is built from:
+//! `scatter` for master-slave task distribution, collective read via
+//! `barrier`-synchronized I/O, `alltoallv` for the variable-length
+//! key-value shuffle, plus `bcast`/`gather`/`allreduce` utilities.
+//!
+//! Virtual-time semantics: a collective is a synchronization point — all
+//! participants leave at `max(entry clocks) + collective_cost(P, bytes)`.
+//! That max is exactly the coupling the decoupled strategy removes: under
+//! imbalance, everyone waits for the slowest rank here.
+
+use std::sync::Arc;
+
+use super::universe::RankCtx;
+
+impl RankCtx {
+    /// Barrier: everyone leaves at the max clock plus the stage cost.
+    pub fn barrier(&self) {
+        let (_, max_vt) =
+            self.comm.shared.rendezvous.run(self.rank(), self.clock.now(), (), |_| ());
+        self.clock.sync_to(max_vt);
+        self.clock.advance(self.cost.net.collective_cost(self.nranks(), 0));
+    }
+
+    /// Broadcast `data` from `root`; every rank returns a copy.
+    pub fn bcast(&self, root: usize, data: Option<Vec<u8>>) -> Vec<u8> {
+        assert!(root < self.nranks());
+        let (out, max_vt): (Arc<Vec<u8>>, u64) = self.comm.shared.rendezvous.run(
+            self.rank(),
+            self.clock.now(),
+            (self.rank() == root).then_some(data.unwrap_or_default()),
+            move |mut inputs| inputs[root].take().expect("root contributed data"),
+        );
+        self.clock.sync_to(max_vt);
+        self.clock.advance(self.cost.net.collective_cost(self.nranks(), out.len()));
+        (*out).clone()
+    }
+
+    /// Scatter one element per rank from `root` (MPI_Scatter; the
+    /// master-slave task distribution of MapReduce-2S).
+    pub fn scatter<T: Clone + Send + Sync + 'static>(
+        &self,
+        root: usize,
+        items: Option<Vec<T>>,
+    ) -> T {
+        assert!(root < self.nranks());
+        let n = self.nranks();
+        let (all, max_vt): (Arc<Vec<T>>, u64) = self.comm.shared.rendezvous.run(
+            self.rank(),
+            self.clock.now(),
+            (self.rank() == root).then_some(items),
+            move |mut inputs| {
+                let items = inputs[root].take().flatten().expect("root provided items");
+                assert_eq!(items.len(), n, "scatter needs one item per rank");
+                items
+            },
+        );
+        self.clock.sync_to(max_vt);
+        self.clock
+            .advance(self.cost.net.collective_cost(n, std::mem::size_of::<T>()));
+        all[self.rank()].clone()
+    }
+
+    /// Gather each rank's bytes at `root` (others get `None`).
+    pub fn gather(&self, root: usize, data: Vec<u8>) -> Option<Vec<Vec<u8>>> {
+        let bytes = data.len();
+        let (all, max_vt): (Arc<Vec<Vec<u8>>>, u64) =
+            self.comm
+                .shared
+                .rendezvous
+                .run(self.rank(), self.clock.now(), data, |inputs| inputs);
+        self.clock.sync_to(max_vt);
+        self.clock.advance(self.cost.net.collective_cost(self.nranks(), bytes));
+        (self.rank() == root).then(|| (*all).clone())
+    }
+
+    /// All-to-all exchange of variable-length buffers (MPI_Alltoallv; the
+    /// MapReduce-2S shuffle).  `send[d]` goes to rank `d`; returns the
+    /// buffers received from every source, indexed by source.
+    pub fn alltoallv(&self, send: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        assert_eq!(send.len(), self.nranks(), "one send buffer per destination");
+        let me = self.rank();
+        let sent: usize = send.iter().map(Vec::len).sum();
+        let (matrix, max_vt): (Arc<Vec<Vec<Vec<u8>>>>, u64) =
+            self.comm
+                .shared
+                .rendezvous
+                .run(me, self.clock.now(), send, |inputs| inputs);
+        self.clock.sync_to(max_vt);
+        let recv: Vec<Vec<u8>> = matrix.iter().map(|row| row[me].clone()).collect();
+        let recvd: usize = recv.iter().map(Vec::len).sum();
+        self.clock
+            .advance(self.cost.net.collective_cost(self.nranks(), sent.max(recvd)));
+        recv
+    }
+
+    /// All-reduce of a u64 with `op` (associative + commutative).
+    pub fn allreduce_u64(&self, value: u64, op: impl Fn(u64, u64) -> u64 + Send + 'static) -> u64 {
+        let (out, max_vt): (Arc<u64>, u64) = self.comm.shared.rendezvous.run(
+            self.rank(),
+            self.clock.now(),
+            value,
+            move |inputs| inputs.into_iter().reduce(&op).unwrap(),
+        );
+        self.clock.sync_to(max_vt);
+        self.clock.advance(self.cost.net.collective_cost(self.nranks(), 8));
+        *out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::mpi::Universe;
+    use crate::sim::CostModel;
+
+    #[test]
+    fn barrier_syncs_clocks_to_max() {
+        let outs = Universe::new(4, CostModel::default()).run(|ctx| {
+            ctx.clock.advance(ctx.rank() as u64 * 1_000);
+            ctx.barrier();
+            ctx.clock.now()
+        });
+        // All equal and at least the slowest entrant's 3000 ns.
+        assert!(outs.iter().all(|&t| t == outs[0]));
+        assert!(outs[0] >= 3_000);
+    }
+
+    #[test]
+    fn bcast_delivers_root_payload() {
+        let outs = Universe::new(3, CostModel::default()).run(|ctx| {
+            let data = (ctx.rank() == 1).then(|| b"payload".to_vec());
+            ctx.bcast(1, data)
+        });
+        assert!(outs.iter().all(|o| o == b"payload"));
+    }
+
+    #[test]
+    fn scatter_delivers_per_rank_item() {
+        let outs = Universe::new(4, CostModel::default()).run(|ctx| {
+            let items = (ctx.rank() == 0).then(|| vec![10usize, 11, 12, 13]);
+            ctx.scatter(0, items)
+        });
+        assert_eq!(outs, vec![10, 11, 12, 13]);
+    }
+
+    #[test]
+    fn gather_collects_at_root_only() {
+        let outs = Universe::new(3, CostModel::default()).run(|ctx| {
+            ctx.gather(2, vec![ctx.rank() as u8])
+        });
+        assert!(outs[0].is_none() && outs[1].is_none());
+        assert_eq!(outs[2].as_ref().unwrap()[1], vec![1u8]);
+    }
+
+    #[test]
+    fn alltoallv_transposes() {
+        let outs = Universe::new(3, CostModel::default()).run(|ctx| {
+            let send: Vec<Vec<u8>> = (0..3)
+                .map(|d| vec![ctx.rank() as u8 * 10 + d as u8])
+                .collect();
+            ctx.alltoallv(send)
+        });
+        // outs[r][s] must be the buffer rank s sent to rank r: s*10 + r.
+        for (r, recv) in outs.iter().enumerate() {
+            for (s, buf) in recv.iter().enumerate() {
+                assert_eq!(buf, &vec![s as u8 * 10 + r as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn alltoallv_handles_empty_buffers() {
+        let outs = Universe::new(2, CostModel::default()).run(|ctx| {
+            let send = vec![vec![], vec![1, 2, 3]];
+            ctx.alltoallv(send)
+        });
+        assert_eq!(outs[0][0], Vec::<u8>::new());
+        assert_eq!(outs[1][0], vec![1, 2, 3]);
+        assert_eq!(outs[1][1], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn allreduce_max_and_sum() {
+        let outs = Universe::new(4, CostModel::default()).run(|ctx| {
+            let mx = ctx.allreduce_u64(ctx.rank() as u64, u64::max);
+            let sm = ctx.allreduce_u64(ctx.rank() as u64, |a, b| a + b);
+            (mx, sm)
+        });
+        assert!(outs.iter().all(|&(mx, sm)| mx == 3 && sm == 6));
+    }
+}

@@ -1,0 +1,223 @@
+//! Communicator: rank identity, point-to-point messaging, and the shared
+//! rendezvous that implements the collectives.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::sim::{Clock, NetModel};
+
+use super::rendezvous::Rendezvous;
+
+/// A message in flight between two ranks.
+#[derive(Debug)]
+pub(crate) struct Msg {
+    pub src: usize,
+    pub tag: u64,
+    /// Virtual time at which the message is fully available at the
+    /// receiver (sender clock at send + wire time).
+    pub arrive_vt: u64,
+    pub payload: Vec<u8>,
+}
+
+pub(crate) struct Mailbox {
+    queue: Mutex<VecDeque<Msg>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn new() -> Self {
+        Mailbox { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+}
+
+pub(crate) struct CommShared {
+    pub nranks: usize,
+    pub rendezvous: Rendezvous,
+    pub mailboxes: Vec<Mailbox>,
+    pub net: NetModel,
+}
+
+/// Handle to the communicator from one rank.
+///
+/// Clone-able; each rank thread holds its own with its own identity.
+#[derive(Clone)]
+pub struct Communicator {
+    pub(crate) shared: Arc<CommShared>,
+    rank: usize,
+}
+
+impl Communicator {
+    /// Build the world communicator for `nranks` ranks; returns one handle
+    /// per rank, in rank order.
+    pub fn world(nranks: usize, net: NetModel) -> Vec<Communicator> {
+        assert!(nranks > 0, "communicator needs at least one rank");
+        let shared = Arc::new(CommShared {
+            nranks,
+            rendezvous: Rendezvous::new(nranks),
+            mailboxes: (0..nranks).map(|_| Mailbox::new()).collect(),
+            net,
+        });
+        (0..nranks)
+            .map(|rank| Communicator { shared: shared.clone(), rank })
+            .collect()
+    }
+
+    /// This rank's id.
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Number of ranks in the communicator.
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.shared.nranks
+    }
+
+    /// Network model in effect (shared with windows created from here).
+    #[inline]
+    pub fn net(&self) -> &NetModel {
+        &self.shared.net
+    }
+
+    /// Blocking send of `payload` to `dst` under `tag`.
+    ///
+    /// Eager-protocol model: the sender is charged the p2p latency, the
+    /// wire time is paid by the message itself (the receiver cannot
+    /// complete a matching `recv` before `send_vt + wire`).
+    pub fn send(&self, clock: &Clock, dst: usize, tag: u64, payload: Vec<u8>) {
+        assert!(dst < self.size(), "send to invalid rank {dst}");
+        let net = &self.shared.net;
+        clock.advance(net.p2p_latency_ns);
+        let arrive_vt = clock.now() + net.xfer(payload.len());
+        let mb = &self.shared.mailboxes[dst];
+        let mut q = mb.queue.lock().unwrap();
+        q.push_back(Msg { src: self.rank, tag, arrive_vt, payload });
+        mb.cv.notify_all();
+    }
+
+    /// Blocking receive matching `src` (None = any) and `tag` (None = any).
+    /// Returns (src, tag, payload); the clock is synced to the message's
+    /// arrival time — waiting for a straggler costs virtual time.
+    pub fn recv(
+        &self,
+        clock: &Clock,
+        src: Option<usize>,
+        tag: Option<u64>,
+    ) -> (usize, u64, Vec<u8>) {
+        let mb = &self.shared.mailboxes[self.rank];
+        let mut q = mb.queue.lock().unwrap();
+        loop {
+            let pos = q.iter().position(|m| {
+                src.map_or(true, |s| m.src == s) && tag.map_or(true, |t| m.tag == t)
+            });
+            if let Some(i) = pos {
+                let m = q.remove(i).unwrap();
+                clock.sync_to(m.arrive_vt);
+                clock.advance(self.shared.net.p2p_latency_ns);
+                return (m.src, m.tag, m.payload);
+            }
+            q = mb.cv.wait(q).unwrap();
+        }
+    }
+
+    /// True if a matching message is already queued (non-blocking probe).
+    pub fn iprobe(&self, src: Option<usize>, tag: Option<u64>) -> bool {
+        let q = self.shared.mailboxes[self.rank].queue.lock().unwrap();
+        q.iter().any(|m| {
+            src.map_or(true, |s| m.src == s) && tag.map_or(true, |t| m.tag == t)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn spawn_world<T: Send + 'static>(
+        n: usize,
+        f: impl Fn(Communicator, Clock) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let comms = Communicator::world(n, NetModel::default());
+        let f = Arc::new(f);
+        comms
+            .into_iter()
+            .map(|c| {
+                let f = f.clone();
+                thread::spawn(move || f(c, Clock::new()))
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn ranks_are_assigned_in_order() {
+        let comms = Communicator::world(4, NetModel::default());
+        let ranks: Vec<_> = comms.iter().map(|c| c.rank()).collect();
+        assert_eq!(ranks, vec![0, 1, 2, 3]);
+        assert!(comms.iter().all(|c| c.size() == 4));
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let outs = spawn_world(2, |comm, clock| {
+            if comm.rank() == 0 {
+                comm.send(&clock, 1, 7, b"hello".to_vec());
+                String::new()
+            } else {
+                let (src, tag, data) = comm.recv(&clock, Some(0), Some(7));
+                assert_eq!((src, tag), (0, 7));
+                String::from_utf8(data).unwrap()
+            }
+        });
+        assert_eq!(outs[1], "hello");
+    }
+
+    #[test]
+    fn recv_charges_wire_time() {
+        let outs = spawn_world(2, |comm, clock| {
+            if comm.rank() == 0 {
+                comm.send(&clock, 1, 0, vec![0u8; 6_000_000]); // ~1ms wire
+                0
+            } else {
+                let _ = comm.recv(&clock, Some(0), None);
+                clock.now()
+            }
+        });
+        assert!(outs[1] >= 1_000_000, "receiver vt {} too small", outs[1]);
+    }
+
+    #[test]
+    fn tag_matching_reorders() {
+        let outs = spawn_world(2, |comm, clock| {
+            if comm.rank() == 0 {
+                comm.send(&clock, 1, 1, vec![1]);
+                comm.send(&clock, 1, 2, vec![2]);
+                vec![]
+            } else {
+                // Receive tag 2 first even though tag 1 arrived first.
+                let (_, _, d2) = comm.recv(&clock, None, Some(2));
+                let (_, _, d1) = comm.recv(&clock, None, Some(1));
+                vec![d2[0], d1[0]]
+            }
+        });
+        assert_eq!(outs[1], vec![2, 1]);
+    }
+
+    #[test]
+    fn iprobe_sees_queued_message() {
+        let outs = spawn_world(2, |comm, clock| {
+            if comm.rank() == 0 {
+                comm.send(&clock, 1, 9, vec![]);
+                true
+            } else {
+                let (_, _, _) = comm.recv(&clock, None, Some(9)); // ensure arrival
+                comm.iprobe(Some(0), Some(9)) == false
+            }
+        });
+        assert!(outs[1]);
+    }
+}

@@ -1,0 +1,25 @@
+//! MPI-3-style substrate: ranks, point-to-point, collectives and RMA
+//! windows, executed by OS threads under virtual time.
+//!
+//! The paper's system assumes an MPI-3 implementation (Intel MPI /
+//! OpenMPI on Tegner).  None is available here, so this module *is* that
+//! substrate: it implements the semantics MapReduce-1S relies on —
+//! passive-target one-sided communication (`put` / `get` /
+//! `accumulate(REPLACE)` / compare-and-swap), exclusive/shared window
+//! locks, dynamic windows with explicit displacement exchange, and the
+//! collectives the MapReduce-2S baseline uses (scatter, alltoallv,
+//! gather, bcast, barrier).
+//!
+//! Every operation charges the calling rank's [`crate::sim::Clock`]
+//! through the [`crate::sim::NetModel`], and synchronization points
+//! reconcile clocks (see [`crate::sim`]).
+
+pub mod collectives;
+pub mod comm;
+pub mod rendezvous;
+pub mod universe;
+pub mod window;
+
+pub use comm::Communicator;
+pub use universe::{RankCtx, Universe};
+pub use window::{LockKind, Window};

@@ -1,0 +1,184 @@
+//! Generic collective rendezvous: the primitive under every collective.
+//!
+//! All ranks of a communicator call [`Rendezvous::run`] with an input; the
+//! last arrival applies a combiner over the inputs (in rank order) and the
+//! result is handed to every participant together with the maximum
+//! virtual time across arrivals.  Ranks must issue collectives in the same
+//! order — the standard MPI requirement — because rounds are matched by
+//! sequence, not by tag.
+
+use std::any::Any;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Round phase: collecting inputs, or distributing the combined output.
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+enum Phase {
+    Collect,
+    Distribute,
+}
+
+struct State {
+    phase: Phase,
+    round: u64,
+    arrived: usize,
+    left: usize,
+    inputs: Vec<Option<Box<dyn Any + Send>>>,
+    output: Option<Arc<dyn Any + Send + Sync>>,
+    max_vt: u64,
+}
+
+/// Reusable all-ranks rendezvous point (one per communicator).
+pub struct Rendezvous {
+    nranks: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Rendezvous {
+    /// A rendezvous for `nranks` participants.
+    pub fn new(nranks: usize) -> Self {
+        Rendezvous {
+            nranks,
+            state: Mutex::new(State {
+                phase: Phase::Collect,
+                round: 0,
+                arrived: 0,
+                left: 0,
+                inputs: (0..nranks).map(|_| None).collect(),
+                output: None,
+                max_vt: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enter the rendezvous as `rank` at virtual time `vt` with `input`;
+    /// the last arrival runs `combine` over all inputs (rank order).
+    /// Returns the shared output and the max `vt` over all participants.
+    ///
+    /// Panics if `combine` output type differs across ranks of one round.
+    pub fn run<I, O, F>(&self, rank: usize, vt: u64, input: I, combine: F) -> (Arc<O>, u64)
+    where
+        I: Send + 'static,
+        O: Send + Sync + 'static,
+        F: FnOnce(Vec<I>) -> O,
+    {
+        let mut st = self.state.lock().unwrap();
+        // Wait for the previous round to fully drain before depositing.
+        while st.phase == Phase::Distribute {
+            st = self.cv.wait(st).unwrap();
+        }
+        let my_round = st.round;
+        assert!(st.inputs[rank].is_none(), "rank {rank} double-entered rendezvous");
+        st.inputs[rank] = Some(Box::new(input));
+        st.arrived += 1;
+        st.max_vt = st.max_vt.max(vt);
+
+        if st.arrived == self.nranks {
+            // Last arrival: combine in rank order and open distribution.
+            let inputs: Vec<I> = st
+                .inputs
+                .iter_mut()
+                .map(|slot| *slot.take().unwrap().downcast::<I>().expect("input type"))
+                .collect();
+            let out: Arc<dyn Any + Send + Sync> = Arc::new(combine(inputs));
+            st.output = Some(out);
+            st.phase = Phase::Distribute;
+            self.cv.notify_all();
+        } else {
+            while !(st.phase == Phase::Distribute && st.round == my_round) {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+
+        let out = st
+            .output
+            .as_ref()
+            .expect("output present in distribute phase")
+            .clone()
+            .downcast::<O>()
+            .expect("output type");
+        let max_vt = st.max_vt;
+
+        st.left += 1;
+        if st.left == self.nranks {
+            // Last to leave resets the round.
+            st.phase = Phase::Collect;
+            st.round += 1;
+            st.arrived = 0;
+            st.left = 0;
+            st.output = None;
+            st.max_vt = 0;
+            self.cv.notify_all();
+        }
+        (out, max_vt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn run_ranks<T: Send + 'static>(
+        n: usize,
+        f: impl Fn(usize, Arc<Rendezvous>) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let rv = Arc::new(Rendezvous::new(n));
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let rv = rv.clone();
+                let f = f.clone();
+                thread::spawn(move || f(r, rv))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn gathers_inputs_in_rank_order() {
+        let outs = run_ranks(4, |rank, rv| {
+            let (sum, _) = rv.run(rank, 0, rank as u64, |xs| xs.clone());
+            sum.as_ref().clone()
+        });
+        for o in outs {
+            assert_eq!(o, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn vt_is_max_over_participants() {
+        let outs = run_ranks(3, |rank, rv| {
+            let vt = (rank as u64 + 1) * 100;
+            let (_, max_vt) = rv.run(rank, vt, (), |_| ());
+            max_vt
+        });
+        assert!(outs.iter().all(|&v| v == 300));
+    }
+
+    #[test]
+    fn many_sequential_rounds() {
+        let outs = run_ranks(4, |rank, rv| {
+            let mut acc = 0u64;
+            for round in 0..50u64 {
+                let (sum, _) = rv.run(rank, 0, round + rank as u64, |xs| {
+                    xs.iter().sum::<u64>()
+                });
+                acc += *sum;
+            }
+            acc
+        });
+        let expect: u64 = (0..50u64).map(|r| 4 * r + 6).sum();
+        assert!(outs.iter().all(|&v| v == expect));
+    }
+
+    #[test]
+    fn single_rank_is_trivial() {
+        let outs = run_ranks(1, |rank, rv| {
+            let (v, vt) = rv.run(rank, 42, 7u32, |xs| xs[0] * 2);
+            (*v, vt)
+        });
+        assert_eq!(outs[0], (14, 42));
+    }
+}

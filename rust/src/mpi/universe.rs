@@ -1,0 +1,133 @@
+//! Universe: spawn rank threads and hand each a [`RankCtx`].
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::sim::{Clock, CostModel};
+
+use super::comm::Communicator;
+
+/// Real-time pacing for virtual-time races: real = virtual >> SHIFT.
+/// 0 = 1:1 — on a single oversubscribed core, thief threads arrive at
+/// steal points with real-time delays up to nranks × their virtual lag,
+/// so any faster pacing lets victims drain their queues first.
+const GATE_SHIFT: u32 = 0;
+
+/// Everything a rank thread needs: identity, communicator, virtual clock
+/// and the cost model of the simulated testbed.
+pub struct RankCtx {
+    /// Communicator handle (rank identity lives here).
+    pub comm: Communicator,
+    /// This rank's virtual clock.
+    pub clock: Clock,
+    /// Testbed cost model.
+    pub cost: CostModel,
+    /// Job start in real time (shared by all ranks; see `gate_to_virtual`).
+    pub epoch: Instant,
+}
+
+impl RankCtx {
+    /// This rank's id.
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    /// World size.
+    #[inline]
+    pub fn nranks(&self) -> usize {
+        self.comm.size()
+    }
+
+    /// Align real time with this rank's virtual clock (1:1).
+    ///
+    /// Most of the protocol tolerates real/virtual divergence (races only
+    /// shift which path a tuple takes, never counts), but operations
+    /// whose *outcome* should reflect virtual-time ordering — atomic task
+    /// claiming for job stealing — call this first, so a virtually-slow
+    /// straggler is also paced slower in real time and thieves really do
+    /// find unclaimed work.  Cost: bounded by makespan/8 of real sleep
+    /// per rank, paid only by gated call sites.
+    pub fn gate_to_virtual(&self) {
+        let target = Duration::from_nanos(self.clock.now() >> GATE_SHIFT);
+        let elapsed = self.epoch.elapsed();
+        if target > elapsed {
+            thread::sleep(target - elapsed);
+        }
+    }
+}
+
+/// Factory for simulated MPI worlds: `P` ranks as OS threads.
+pub struct Universe {
+    nranks: usize,
+    cost: CostModel,
+}
+
+impl Universe {
+    /// A universe of `nranks` ranks under `cost`.
+    pub fn new(nranks: usize, cost: CostModel) -> Self {
+        assert!(nranks > 0, "need at least one rank");
+        Universe { nranks, cost }
+    }
+
+    /// Run `f` on every rank concurrently; returns outputs in rank order.
+    ///
+    /// Panics (with the offending rank) if any rank thread panics — a
+    /// MapReduce job has no partial completion.
+    pub fn run<T: Send + 'static>(
+        &self,
+        f: impl Fn(&RankCtx) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let comms = Communicator::world(self.nranks, self.cost.net);
+        let f = Arc::new(f);
+        let cost = self.cost;
+        let epoch = Instant::now();
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                let f = f.clone();
+                thread::Builder::new()
+                    .name(format!("rank-{}", comm.rank()))
+                    .stack_size(8 << 20)
+                    .spawn(move || {
+                        let ctx = RankCtx { comm, clock: Clock::new(), cost, epoch };
+                        f(&ctx)
+                    })
+                    .expect("spawn rank thread")
+            })
+            .collect();
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(rank, h)| h.join().unwrap_or_else(|_| panic!("rank {rank} panicked")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outputs_in_rank_order() {
+        let outs = Universe::new(4, CostModel::default()).run(|ctx| ctx.rank() * 10);
+        assert_eq!(outs, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn clocks_start_at_zero() {
+        let outs = Universe::new(2, CostModel::default()).run(|ctx| ctx.clock.now());
+        assert_eq!(outs, vec![0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "rank 1 panicked")]
+    fn rank_panic_propagates() {
+        Universe::new(2, CostModel::default()).run(|ctx| {
+            if ctx.rank() == 1 {
+                panic!("boom");
+            }
+        });
+    }
+}

@@ -1,0 +1,630 @@
+//! MPI-3 RMA windows: put/get, atomics, passive-target locks, dynamic
+//! attach with explicit displacement exchange.
+//!
+//! Semantics follow the subset of MPI-3 the paper's protocol uses:
+//!
+//! * **put/get** — bulk one-sided transfers into a target rank's region.
+//!   Charged to the *origin* rank's clock (`NetModel::rma_cost`).
+//! * **atomics** — `accumulate(MPI_REPLACE)` (atomic store),
+//!   `fetch(MPI_NO_OP)` (atomic load), compare-and-swap, fetch-and-add.
+//!   Atomic cells carry a *publish timestamp*: a reader's clock is synced
+//!   to the writer's publish time, which is how causality propagates
+//!   through the Status window (paper §2.1).  This mirrors MPI's separate
+//!   "accumulate" memory model: atomics and bulk transfers must not be
+//!   mixed on the same location.
+//! * **passive-target locks** — `lock(EXCLUSIVE|SHARED, target)` /
+//!   `unlock(target)`; an acquirer inherits the previous releaser's
+//!   clock, modeling the blocking the paper leans on for Combine.
+//! * **dynamic windows** — `attach` adds a local segment and returns its
+//!   displacement; the MPI standard requires displacements be shared "by
+//!   other means" (paper footnote 1), which MapReduce-1S does through its
+//!   Displacement window.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+use crate::error::{Error, Result};
+use crate::sim::{Clock, NetModel};
+
+use super::universe::RankCtx;
+
+/// Passive-target lock kind (MPI_LOCK_EXCLUSIVE / MPI_LOCK_SHARED).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockKind {
+    /// Mutually exclusive access epoch to the target region.
+    Exclusive,
+    /// Shared access epoch (concurrent with other shared holders).
+    Shared,
+}
+
+/// Raw shared byte buffer for one window segment.
+///
+/// RMA data races are protocol bugs in MPI and they are protocol bugs
+/// here: concurrent access to *overlapping* byte ranges without an
+/// ordering sync (status publish, lock) is undefined.  The MapReduce-1S
+/// protocol partitions every window into per-source buckets precisely so
+/// that concurrent puts never overlap.
+struct SharedBuf {
+    ptr: *mut u8,
+    len: usize,
+    _own: Box<[u8]>,
+}
+
+unsafe impl Send for SharedBuf {}
+unsafe impl Sync for SharedBuf {}
+
+impl SharedBuf {
+    fn new(len: usize) -> Self {
+        let mut own = vec![0u8; len].into_boxed_slice();
+        SharedBuf { ptr: own.as_mut_ptr(), len, _own: own }
+    }
+
+    #[inline]
+    fn write(&self, off: usize, src: &[u8]) {
+        debug_assert!(off + src.len() <= self.len);
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(off), src.len());
+        }
+    }
+
+    #[inline]
+    fn read(&self, off: usize, dst: &mut [u8]) {
+        debug_assert!(off + dst.len() <= self.len);
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.ptr.add(off), dst.as_mut_ptr(), dst.len());
+        }
+    }
+}
+
+/// One attached segment of a (possibly dynamic) window region.
+struct Segment {
+    disp: u64,
+    buf: SharedBuf,
+}
+
+/// Atomic cell: value + publish virtual time.
+#[derive(Clone, Copy, Default)]
+struct AtomicCell {
+    value: u64,
+    publish_vt: u64,
+}
+
+/// Per-rank region of a window.
+struct Region {
+    segs: RwLock<Vec<Segment>>,
+    /// Next displacement handed out by `attach` (segment-aligned).
+    next_disp: Mutex<u64>,
+    /// Atomic cells, keyed by displacement (separate accumulate model).
+    atomics: Mutex<HashMap<u64, AtomicCell>>,
+    atomics_cv: Condvar,
+}
+
+impl Region {
+    fn new() -> Self {
+        Region {
+            segs: RwLock::new(Vec::new()),
+            next_disp: Mutex::new(0),
+            atomics: Mutex::new(HashMap::new()),
+            atomics_cv: Condvar::new(),
+        }
+    }
+}
+
+/// Per-target passive lock state.
+struct TargetLock {
+    st: Mutex<LockSt>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct LockSt {
+    exclusive: bool,
+    shared: usize,
+    release_vt: u64,
+}
+
+pub(crate) struct WinShared {
+    regions: Vec<Region>,
+    locks: Vec<TargetLock>,
+    net: NetModel,
+}
+
+/// One rank's handle to a window (collectively created).
+pub struct Window {
+    shared: Arc<WinShared>,
+    my_rank: usize,
+}
+
+impl Window {
+    /// Collectively create a window with `local_size` bytes attached at
+    /// displacement 0 on every rank (pass 0 for a dynamic window and use
+    /// [`Window::attach`]).
+    pub fn create(ctx: &RankCtx, local_size: usize) -> Window {
+        let nranks = ctx.comm.size();
+        let net = *ctx.comm.net();
+        let (shared, max_vt) = ctx.comm.shared.rendezvous.run(
+            ctx.comm.rank(),
+            ctx.clock.now(),
+            (),
+            move |_| {
+                Arc::new(WinShared {
+                    regions: (0..nranks).map(|_| Region::new()).collect(),
+                    locks: (0..nranks)
+                        .map(|_| TargetLock { st: Mutex::new(LockSt::default()), cv: Condvar::new() })
+                        .collect(),
+                    net,
+                })
+            },
+        );
+        ctx.clock.sync_to(max_vt);
+        let win = Window { shared: (*shared).clone(), my_rank: ctx.comm.rank() };
+        if local_size > 0 {
+            win.attach(local_size);
+        }
+        win
+    }
+
+    /// Attach a fresh `len`-byte segment to the *local* region; returns
+    /// its displacement.  Not collective (MPI_Win_attach): remote ranks
+    /// learn displacements through the protocol's Displacement window.
+    pub fn attach(&self, len: usize) -> u64 {
+        let region = &self.shared.regions[self.my_rank];
+        let mut next = region.next_disp.lock().unwrap();
+        let disp = *next;
+        // Keep 8-byte alignment so atomics on fresh segments stay aligned.
+        *next += ((len as u64) + 7) & !7;
+        region.segs.write().unwrap().push(Segment { disp, buf: SharedBuf::new(len) });
+        disp
+    }
+
+    /// Number of ranks spanned by the window.
+    pub fn nranks(&self) -> usize {
+        self.shared.regions.len()
+    }
+
+    fn with_segment<T>(
+        &self,
+        target: usize,
+        disp: u64,
+        len: usize,
+        f: impl FnOnce(&SharedBuf, usize) -> T,
+    ) -> Result<T> {
+        let region = self
+            .shared
+            .regions
+            .get(target)
+            .ok_or(Error::InvalidRank { rank: target, size: self.shared.regions.len() })?;
+        let segs = region.segs.read().unwrap();
+        for seg in segs.iter() {
+            let off = disp.wrapping_sub(seg.disp);
+            if disp >= seg.disp && (off as usize) + len <= seg.buf.len {
+                return Ok(f(&seg.buf, off as usize));
+            }
+        }
+        Err(Error::WindowOutOfBounds { target, disp, len })
+    }
+
+    /// One-sided put: write `data` into `target`'s region at `disp`.
+    ///
+    /// Remote transfers pay the lazy-progress delay on top of the wire
+    /// cost: with passive-target sync, the target only progresses RMA at
+    /// its own MPI calls (paper §4).  Jobs running with flush epochs
+    /// (Fig. 7b) zero the delay but pay explicit lock/unlock cycles.
+    pub fn put(&self, clock: &Clock, target: usize, disp: u64, data: &[u8]) -> Result<()> {
+        if target != self.my_rank {
+            clock.advance(
+                self.shared.net.rma_cost(data.len()) + self.shared.net.progress_delay_ns,
+            );
+        }
+        self.with_segment(target, disp, data.len(), |buf, off| buf.write(off, data))
+    }
+
+    /// One-sided get: read `out.len()` bytes from `target` at `disp`.
+    /// Remote gets pay the lazy-progress delay (see [`Window::put`]).
+    pub fn get(&self, clock: &Clock, target: usize, disp: u64, out: &mut [u8]) -> Result<()> {
+        if target != self.my_rank {
+            clock.advance(
+                self.shared.net.rma_cost(out.len()) + self.shared.net.progress_delay_ns,
+            );
+        }
+        self.with_segment(target, disp, out.len(), |buf, off| buf.read(off, out))
+    }
+
+    fn check_aligned(disp: u64) -> Result<()> {
+        if disp % 8 != 0 {
+            return Err(Error::UnalignedAtomic(disp));
+        }
+        Ok(())
+    }
+
+    /// Atomic store (MPI_Accumulate + MPI_REPLACE, paper §2.1): publishes
+    /// `value` at `disp` on `target`, stamped with the writer's clock.
+    pub fn atomic_store(&self, clock: &Clock, target: usize, disp: u64, value: u64) -> Result<()> {
+        Self::check_aligned(disp)?;
+        if target != self.my_rank {
+            clock.advance(self.shared.net.atomic_latency_ns);
+        }
+        let region = &self.shared.regions[target];
+        let mut cells = region.atomics.lock().unwrap();
+        let publish_vt = clock.now() + self.shared.net.progress_delay_ns;
+        cells.insert(disp, AtomicCell { value, publish_vt });
+        region.atomics_cv.notify_all();
+        Ok(())
+    }
+
+    /// Atomic load (MPI_Fetch_and_op + MPI_NO_OP).
+    ///
+    /// Does NOT sync the reader to the writer's clock: a rank polling a
+    /// peer's status simply observes whatever is visible, it is not
+    /// dragged into the peer's virtual future.  Cells linearize in real
+    /// time, so a reader can occasionally observe a value published at a
+    /// later virtual time — the same window of nondeterminism a real
+    /// passive-target MPI run has between progress points (the paper's
+    /// error bars).  Ordering that the protocol *relies on* must use
+    /// [`Window::wait_atomic`] (which does wait) or locks.
+    pub fn atomic_load(&self, clock: &Clock, target: usize, disp: u64) -> Result<u64> {
+        Self::check_aligned(disp)?;
+        if target != self.my_rank {
+            clock.advance(self.shared.net.atomic_latency_ns);
+        }
+        let region = &self.shared.regions[target];
+        let cells = region.atomics.lock().unwrap();
+        let cell = cells.get(&disp).copied().unwrap_or_default();
+        Ok(cell.value)
+    }
+
+    /// Atomic compare-and-swap; returns the previous value.
+    pub fn compare_and_swap(
+        &self,
+        clock: &Clock,
+        target: usize,
+        disp: u64,
+        expected: u64,
+        desired: u64,
+    ) -> Result<u64> {
+        Self::check_aligned(disp)?;
+        if target != self.my_rank {
+            clock.advance(self.shared.net.atomic_latency_ns);
+        }
+        let region = &self.shared.regions[target];
+        let mut cells = region.atomics.lock().unwrap();
+        let cell = cells.entry(disp).or_default();
+        let old = cell.value;
+        if old == expected {
+            // A successful swap is causally after the version it replaces.
+            clock.sync_to(cell.publish_vt.saturating_sub(self.shared.net.progress_delay_ns));
+            let publish_vt = clock.now() + self.shared.net.progress_delay_ns;
+            *cell = AtomicCell { value: desired, publish_vt };
+            region.atomics_cv.notify_all();
+        }
+        Ok(old)
+    }
+
+    /// Atomic fetch-and-add; returns the previous value.  (The primitive
+    /// the paper's future-work job-stealing mechanism needs.)
+    pub fn fetch_add(&self, clock: &Clock, target: usize, disp: u64, delta: u64) -> Result<u64> {
+        Self::check_aligned(disp)?;
+        if target != self.my_rank {
+            clock.advance(self.shared.net.atomic_latency_ns);
+        }
+        let region = &self.shared.regions[target];
+        let mut cells = region.atomics.lock().unwrap();
+        let cell = cells.entry(disp).or_default();
+        let old = cell.value;
+        clock.sync_to(cell.publish_vt.saturating_sub(self.shared.net.progress_delay_ns));
+        let publish_vt = clock.now() + self.shared.net.progress_delay_ns;
+        *cell = AtomicCell { value: old.wrapping_add(delta), publish_vt };
+        region.atomics_cv.notify_all();
+        Ok(old)
+    }
+
+    /// Block (really, not just virtually) until the atomic cell at
+    /// (`target`, `disp`) satisfies `pred`, then return its value with the
+    /// clock synced past its publish time.  This is the decoupled wait
+    /// loop of the protocol: repeated `atomic_load` polling without
+    /// busy-burning the host's single core.
+    pub fn wait_atomic(
+        &self,
+        clock: &Clock,
+        target: usize,
+        disp: u64,
+        pred: impl Fn(u64) -> bool,
+    ) -> Result<u64> {
+        Self::check_aligned(disp)?;
+        if target != self.my_rank {
+            clock.advance(self.shared.net.atomic_latency_ns);
+        }
+        let region = &self.shared.regions[target];
+        let mut cells = region.atomics.lock().unwrap();
+        loop {
+            let cell = cells.get(&disp).copied().unwrap_or_default();
+            if pred(cell.value) {
+                clock.sync_to(cell.publish_vt);
+                return Ok(cell.value);
+            }
+            cells = region.atomics_cv.wait(cells).unwrap();
+        }
+    }
+
+    /// Acquire a passive-target lock on `target`'s region.
+    pub fn lock(&self, clock: &Clock, kind: LockKind, target: usize) {
+        let l = &self.shared.locks[target];
+        let mut st = l.st.lock().unwrap();
+        match kind {
+            LockKind::Exclusive => {
+                while st.exclusive || st.shared > 0 {
+                    st = l.cv.wait(st).unwrap();
+                }
+                st.exclusive = true;
+            }
+            LockKind::Shared => {
+                while st.exclusive {
+                    st = l.cv.wait(st).unwrap();
+                }
+                st.shared += 1;
+            }
+        }
+        // The acquirer is causally after the previous release.
+        clock.sync_to(st.release_vt);
+        clock.advance(self.shared.net.lock_latency_ns);
+    }
+
+    /// Try to acquire without blocking; true on success.
+    pub fn try_lock(&self, clock: &Clock, kind: LockKind, target: usize) -> bool {
+        let l = &self.shared.locks[target];
+        let mut st = l.st.lock().unwrap();
+        let ok = match kind {
+            LockKind::Exclusive if !st.exclusive && st.shared == 0 => {
+                st.exclusive = true;
+                true
+            }
+            LockKind::Shared if !st.exclusive => {
+                st.shared += 1;
+                true
+            }
+            _ => false,
+        };
+        if ok {
+            clock.sync_to(st.release_vt);
+            clock.advance(self.shared.net.lock_latency_ns);
+        }
+        ok
+    }
+
+    /// Release a passive-target lock; publishes the releaser's clock.
+    pub fn unlock(&self, clock: &Clock, kind: LockKind, target: usize) {
+        clock.advance(self.shared.net.lock_latency_ns);
+        let l = &self.shared.locks[target];
+        let mut st = l.st.lock().unwrap();
+        match kind {
+            LockKind::Exclusive => {
+                debug_assert!(st.exclusive);
+                st.exclusive = false;
+            }
+            LockKind::Shared => {
+                debug_assert!(st.shared > 0);
+                st.shared -= 1;
+            }
+        }
+        st.release_vt = st.release_vt.max(clock.now());
+        l.cv.notify_all();
+    }
+
+    /// Flush outstanding RMA to `target` (MPI_Win_flush).  Transfers are
+    /// synchronous in this substrate, so this only charges the op cost —
+    /// kept because the Fig. 7 "improved" variant issues redundant
+    /// flush/lock cycles and we reproduce its cost profile.
+    pub fn flush(&self, clock: &Clock, target: usize) {
+        if target != self.my_rank {
+            clock.advance(self.shared.net.rma_latency_ns);
+        }
+    }
+
+    /// Total bytes attached to `rank`'s region (for memory accounting).
+    pub fn attached_bytes(&self, rank: usize) -> usize {
+        self.shared.regions[rank].segs.read().unwrap().iter().map(|s| s.buf.len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::Universe;
+    use crate::sim::CostModel;
+
+    fn world<T: Send + 'static>(
+        n: usize,
+        f: impl Fn(&RankCtx) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        Universe::new(n, CostModel::default()).run(f)
+    }
+
+    #[test]
+    fn put_get_roundtrip_across_ranks() {
+        let outs = world(2, |ctx| {
+            let win = Window::create(ctx, 64);
+            ctx.barrier();
+            if ctx.rank() == 0 {
+                win.put(&ctx.clock, 1, 0, b"abcd").unwrap();
+            }
+            ctx.barrier();
+            if ctx.rank() == 1 {
+                let mut buf = [0u8; 4];
+                win.get(&ctx.clock, 1, 0, &mut buf).unwrap();
+                buf.to_vec()
+            } else {
+                vec![]
+            }
+        });
+        assert_eq!(outs[1], b"abcd");
+    }
+
+    #[test]
+    fn out_of_bounds_put_is_error() {
+        let outs = world(1, |ctx| {
+            let win = Window::create(ctx, 8);
+            win.put(&ctx.clock, 0, 4, &[0u8; 8]).is_err()
+        });
+        assert!(outs[0]);
+    }
+
+    #[test]
+    fn dynamic_attach_returns_disjoint_disps() {
+        let outs = world(1, |ctx| {
+            let win = Window::create(ctx, 0);
+            let d1 = win.attach(100);
+            let d2 = win.attach(100);
+            (d1, d2, win.attached_bytes(0))
+        });
+        let (d1, d2, total) = outs[0];
+        assert_eq!(d1, 0);
+        assert!(d2 >= 100 && d2 % 8 == 0);
+        assert_eq!(total, 200);
+    }
+
+    #[test]
+    fn wait_atomic_carries_publish_virtual_time() {
+        let outs = world(2, |ctx| {
+            let win = Window::create(ctx, 64);
+            ctx.barrier();
+            if ctx.rank() == 0 {
+                ctx.clock.advance(1_000_000); // writer is far in the future
+                win.atomic_store(&ctx.clock, 1, 0, 42).unwrap();
+                0
+            } else {
+                // A *blocking* wait inherits the publish time...
+                let v = win.wait_atomic(&ctx.clock, 1, 0, |v| v == 42).unwrap();
+                assert_eq!(v, 42);
+                ctx.clock.now()
+            }
+        });
+        assert!(outs[1] >= 1_000_000, "waiter vt {} must be past publish", outs[1]);
+    }
+
+    #[test]
+    fn atomic_load_does_not_time_travel_forward() {
+        let outs = world(2, |ctx| {
+            let win = Window::create(ctx, 64);
+            ctx.barrier();
+            if ctx.rank() == 0 {
+                ctx.clock.advance(50_000_000); // far-future writer
+                win.atomic_store(&ctx.clock, 0, 0, 7).unwrap();
+                ctx.barrier();
+                0
+            } else {
+                ctx.barrier(); // the store is visible now (real time)
+                let before = ctx.clock.now();
+                let _ = win.atomic_load(&ctx.clock, 0, 0).unwrap();
+                // ...but a plain poll must NOT drag the reader to the
+                // writer's future clock.
+                ctx.clock.now() - before
+            }
+        });
+        assert!(outs[1] < 1_000_000, "load dragged reader by {} ns", outs[1]);
+    }
+
+    #[test]
+    fn cas_swaps_only_on_match() {
+        let outs = world(1, |ctx| {
+            let win = Window::create(ctx, 64);
+            win.atomic_store(&ctx.clock, 0, 8, 5).unwrap();
+            let old1 = win.compare_and_swap(&ctx.clock, 0, 8, 5, 9).unwrap();
+            let old2 = win.compare_and_swap(&ctx.clock, 0, 8, 5, 11).unwrap();
+            let fin = win.atomic_load(&ctx.clock, 0, 8).unwrap();
+            (old1, old2, fin)
+        });
+        assert_eq!(outs[0], (5, 9, 9));
+    }
+
+    #[test]
+    fn fetch_add_accumulates() {
+        let outs = world(4, |ctx| {
+            let win = Window::create(ctx, 64);
+            ctx.barrier();
+            win.fetch_add(&ctx.clock, 0, 0, 1).unwrap();
+            ctx.barrier();
+            win.atomic_load(&ctx.clock, 0, 0).unwrap()
+        });
+        assert!(outs.iter().all(|&v| v == 4));
+    }
+
+    #[test]
+    fn unaligned_atomic_rejected() {
+        let outs = world(1, |ctx| {
+            let win = Window::create(ctx, 64);
+            win.atomic_store(&ctx.clock, 0, 3, 1).is_err()
+        });
+        assert!(outs[0]);
+    }
+
+    #[test]
+    fn exclusive_lock_serializes_and_hands_off_clock() {
+        let outs = world(2, |ctx| {
+            let win = Window::create(ctx, 64);
+            ctx.barrier();
+            if ctx.rank() == 0 {
+                win.lock(&ctx.clock, LockKind::Exclusive, 0);
+                ctx.clock.advance(500_000);
+                win.unlock(&ctx.clock, LockKind::Exclusive, 0);
+                ctx.barrier();
+                ctx.clock.now()
+            } else {
+                ctx.barrier(); // rank 0 held + released first
+                win.lock(&ctx.clock, LockKind::Exclusive, 0);
+                let t = ctx.clock.now();
+                win.unlock(&ctx.clock, LockKind::Exclusive, 0);
+                t
+            }
+        });
+        assert!(outs[1] >= 500_000, "acquirer vt {} must inherit release", outs[1]);
+    }
+
+    #[test]
+    fn shared_locks_coexist() {
+        let outs = world(3, |ctx| {
+            let win = Window::create(ctx, 8);
+            ctx.barrier();
+            win.lock(&ctx.clock, LockKind::Shared, 0);
+            ctx.barrier(); // all three hold it simultaneously
+            win.unlock(&ctx.clock, LockKind::Shared, 0);
+            true
+        });
+        assert!(outs.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn wait_atomic_blocks_until_predicate() {
+        let outs = world(2, |ctx| {
+            let win = Window::create(ctx, 64);
+            ctx.barrier();
+            if ctx.rank() == 0 {
+                ctx.clock.advance(10_000);
+                win.atomic_store(&ctx.clock, 0, 0, 7).unwrap();
+                0
+            } else {
+                win.wait_atomic(&ctx.clock, 0, 0, |v| v == 7).unwrap()
+            }
+        });
+        assert_eq!(outs[1], 7);
+    }
+
+    #[test]
+    fn local_put_is_free_remote_put_is_charged() {
+        let outs = world(2, |ctx| {
+            let win = Window::create(ctx, 1 << 20);
+            ctx.barrier();
+            let before = ctx.clock.now();
+            let data = vec![0u8; 1 << 16];
+            win.put(&ctx.clock, ctx.rank(), 0, &data).unwrap();
+            let local_cost = ctx.clock.now() - before;
+            let before = ctx.clock.now();
+            win.put(&ctx.clock, (ctx.rank() + 1) % 2, 0, &data).unwrap();
+            let remote_cost = ctx.clock.now() - before;
+            (local_cost, remote_cost)
+        });
+        for (local, remote) in outs {
+            assert_eq!(local, 0);
+            assert!(remote > 0);
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! The PJRT execution engine: compiled artifacts + typed entry points.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::mapreduce::kv;
+
+use super::shapes::{Geometry, KEY_SENTINEL};
+
+/// How the Map phase hashes its token batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HashPath {
+    /// Through the AOT `map_shard` artifact (L1 Pallas kernel).
+    Kernel,
+    /// Pure-Rust scalar FNV-1a (fallback / ablation baseline).
+    Scalar,
+}
+
+struct Inner {
+    /// Owns the PJRT CPU runtime the executables below were compiled on;
+    /// kept alive for their whole lifetime.
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    map_shard: xla::PjRtLoadedExecutable,
+    combine_sort: xla::PjRtLoadedExecutable,
+    sort_pairs: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the PJRT CPU client is internally synchronized; the raw
+// pointers inside the xla wrappers are only reached through `Mutex<Inner>`
+// below, so cross-thread access is serialized.
+unsafe impl Send for Inner {}
+
+/// Loaded PJRT engine, shareable across rank threads.
+///
+/// Executions are serialized by a mutex: the host has one CPU and PJRT's
+/// CPU client is itself a shared resource, so per-rank engines would only
+/// add memory pressure without concurrency.
+pub struct Engine {
+    inner: Mutex<Inner>,
+    geometry: Geometry,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Load and compile all artifacts from `dir` (fails if `make
+    /// artifacts` has not produced them or geometry drifted).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let geometry = Geometry::from_manifest(&dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let map_shard = Self::compile(&client, &dir.join("map_shard.hlo.txt"))?;
+        let combine_sort = Self::compile(&client, &dir.join("combine_sort.hlo.txt"))?;
+        let sort_pairs = Self::compile(&client, &dir.join("sort_pairs.hlo.txt"))?;
+        Ok(Engine {
+            inner: Mutex::new(Inner { client, map_shard, combine_sort, sort_pairs }),
+            geometry,
+            dir,
+        })
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Runtime(format!("non-utf8 artifact path {path:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(client.compile(&comp)?)
+    }
+
+    /// Artifact directory this engine was loaded from.
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Batch geometry in effect.
+    pub fn geometry(&self) -> Geometry {
+        self.geometry
+    }
+
+    /// Hash up to `geometry.batch` tokens through the `map_shard`
+    /// artifact.  Returns one FNV-1a-64 hash per token plus the 256-way
+    /// owner-bucket histogram (padding rows excluded).
+    pub fn hash_batch(&self, tokens: &[&[u8]]) -> Result<(Vec<u64>, Vec<i32>)> {
+        let g = self.geometry;
+        if tokens.len() > g.batch {
+            return Err(Error::Runtime(format!(
+                "hash_batch of {} tokens exceeds batch {}",
+                tokens.len(),
+                g.batch
+            )));
+        }
+        // Pack [B, W] u8 + [B] i32 with zero padding.
+        let mut toks = vec![0u8; g.batch * g.width];
+        let mut lens = vec![0i32; g.batch];
+        for (i, t) in tokens.iter().enumerate() {
+            let n = t.len().min(g.width);
+            toks[i * g.width..i * g.width + n].copy_from_slice(&t[..n]);
+            lens[i] = n as i32;
+        }
+        let toks_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[g.batch, g.width],
+            &toks,
+        )?;
+        let lens_lit = xla::Literal::vec1(lens.as_slice()).reshape(&[g.batch as i64])?;
+
+        let inner = self.inner.lock().unwrap();
+        let result = inner.map_shard.execute::<xla::Literal>(&[toks_lit, lens_lit])?[0][0]
+            .to_literal_sync()?;
+        drop(inner);
+
+        let outs = result.to_tuple()?;
+        if outs.len() != 2 {
+            return Err(Error::Runtime(format!("map_shard returned {} outputs", outs.len())));
+        }
+        let hashes: Vec<u64> = outs[0].to_vec()?;
+        let counts: Vec<i32> = outs[1].to_vec()?;
+        Ok((hashes[..tokens.len()].to_vec(), counts))
+    }
+
+    /// Sort + fold a block of `(hash, count)` pairs through the
+    /// `combine_sort` artifact (L1 bitonic kernel + L2 dedup graph).
+    /// Input longer than one block is rejected; counts must fit u32.
+    /// Returns `(unique_hashes, summed_counts)` with padding dropped.
+    pub fn combine_sort_block(&self, keys: &[u64], counts: &[u32]) -> Result<(Vec<u64>, Vec<u32>)> {
+        let g = self.geometry;
+        if keys.len() != counts.len() {
+            return Err(Error::Runtime("keys/counts length mismatch".into()));
+        }
+        if keys.len() > g.sort_batch {
+            return Err(Error::Runtime(format!(
+                "combine_sort block of {} exceeds {}",
+                keys.len(),
+                g.sort_batch
+            )));
+        }
+        let mut k = vec![KEY_SENTINEL; g.sort_batch];
+        let mut v = vec![0u32; g.sort_batch];
+        k[..keys.len()].copy_from_slice(keys);
+        v[..counts.len()].copy_from_slice(counts);
+
+        let k_bytes: Vec<u8> = k.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let v_bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let k_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U64,
+            &[g.sort_batch],
+            &k_bytes,
+        )?;
+        let v_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U32,
+            &[g.sort_batch],
+            &v_bytes,
+        )?;
+
+        let inner = self.inner.lock().unwrap();
+        let result = inner.combine_sort.execute::<xla::Literal>(&[k_lit, v_lit])?[0][0]
+            .to_literal_sync()?;
+        drop(inner);
+
+        let outs = result.to_tuple()?;
+        if outs.len() != 3 {
+            return Err(Error::Runtime(format!("combine_sort returned {} outputs", outs.len())));
+        }
+        let uk: Vec<u64> = outs[0].to_vec()?;
+        let uv: Vec<u32> = outs[1].to_vec()?;
+        let n: Vec<i32> = outs[2].to_vec()?;
+        let mut n = *n.first().ok_or_else(|| Error::Runtime("missing n_unique".into()))? as usize;
+        // Sentinel padding forms a trailing run; drop it.
+        while n > 0 && uk[n - 1] == KEY_SENTINEL {
+            n -= 1;
+        }
+        Ok((uk[..n].to_vec(), uv[..n].to_vec()))
+    }
+
+    /// Sort one block of hashes through the raw `sort_pairs` artifact
+    /// (L1 bitonic kernel, no dedup) and return the permutation: output
+    /// position `i` holds the original index of the i-th smallest hash.
+    /// Blocks longer than `geometry.sort_batch` are rejected.
+    pub fn sort_perm(&self, keys: &[u64]) -> Result<Vec<u32>> {
+        let g = self.geometry;
+        if keys.len() > g.sort_batch {
+            return Err(Error::Runtime(format!(
+                "sort_perm block of {} exceeds {}",
+                keys.len(),
+                g.sort_batch
+            )));
+        }
+        // Padding rows: key = SENTINEL (sorts to tail), payload = u32::MAX
+        // (dropped below even if real keys equal the sentinel).
+        let mut k = vec![KEY_SENTINEL; g.sort_batch];
+        let mut v = vec![u32::MAX; g.sort_batch];
+        k[..keys.len()].copy_from_slice(keys);
+        for (i, slot) in v[..keys.len()].iter_mut().enumerate() {
+            *slot = i as u32;
+        }
+        let k_bytes: Vec<u8> = k.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let v_bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let k_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U64,
+            &[g.sort_batch],
+            &k_bytes,
+        )?;
+        let v_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U32,
+            &[g.sort_batch],
+            &v_bytes,
+        )?;
+
+        let inner = self.inner.lock().unwrap();
+        let result = inner.sort_pairs.execute::<xla::Literal>(&[k_lit, v_lit])?[0][0]
+            .to_literal_sync()?;
+        drop(inner);
+
+        let outs = result.to_tuple()?;
+        if outs.len() != 2 {
+            return Err(Error::Runtime(format!("sort_pairs returned {} outputs", outs.len())));
+        }
+        let perm_padded: Vec<u32> = outs[1].to_vec()?;
+        let perm: Vec<u32> = perm_padded.into_iter().filter(|&p| p != u32::MAX).collect();
+        if perm.len() != keys.len() {
+            return Err(Error::Runtime("sort_perm permutation length mismatch".into()));
+        }
+        Ok(perm)
+    }
+
+    /// Scalar reference for [`Engine::hash_batch`] — used by the fallback
+    /// path and by tests asserting kernel/scalar equivalence.
+    pub fn hash_batch_scalar(tokens: &[&[u8]], nbuckets: usize) -> (Vec<u64>, Vec<i32>) {
+        let mut hashes = Vec::with_capacity(tokens.len());
+        let mut counts = vec![0i32; nbuckets];
+        for t in tokens {
+            let h = kv::hash_key(t);
+            if !t.is_empty() {
+                counts[(h as usize) & (nbuckets - 1)] += 1;
+                hashes.push(h);
+            } else {
+                hashes.push(0);
+            }
+        }
+        (hashes, counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Option<Engine> {
+        let dir = artifacts_dir();
+        dir.join("manifest.txt").exists().then(|| Engine::load(&dir).expect("engine loads"))
+    }
+
+    #[test]
+    fn scalar_hash_matches_kv_hash() {
+        let toks: Vec<&[u8]> = vec![b"alpha", b"beta"];
+        let (h, c) = Engine::hash_batch_scalar(&toks, 256);
+        assert_eq!(h[0], kv::hash_key(b"alpha"));
+        assert_eq!(c.iter().sum::<i32>(), 2);
+    }
+
+    #[test]
+    fn kernel_hash_matches_scalar() {
+        let Some(eng) = engine() else { return };
+        let words: Vec<Vec<u8>> = (0..1000)
+            .map(|i| format!("token-{i}-{}", "x".repeat(i % 30)).into_bytes())
+            .collect();
+        let toks: Vec<&[u8]> = words.iter().map(Vec::as_slice).collect();
+        let (kh, kc) = eng.hash_batch(&toks).unwrap();
+        let (sh, sc) = Engine::hash_batch_scalar(&toks, 256);
+        assert_eq!(kh, sh);
+        assert_eq!(kc, sc);
+    }
+
+    #[test]
+    fn kernel_combine_sort_folds_duplicates() {
+        let Some(eng) = engine() else { return };
+        let keys = vec![9u64, 3, 9, 1, 3, 9];
+        let counts = vec![1u32, 2, 3, 4, 5, 6];
+        let (uk, uv) = eng.combine_sort_block(&keys, &counts).unwrap();
+        assert_eq!(uk, vec![1, 3, 9]);
+        assert_eq!(uv, vec![4, 7, 10]);
+    }
+
+    #[test]
+    fn kernel_sort_perm_matches_argsort() {
+        let Some(eng) = engine() else { return };
+        let keys = vec![50u64, 10, 40, 10, 30];
+        let perm = eng.sort_perm(&keys).unwrap();
+        let sorted: Vec<u64> = perm.iter().map(|&p| keys[p as usize]).collect();
+        assert_eq!(sorted, vec![10, 10, 30, 40, 50]);
+        let mut seen = perm.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]); // a real permutation
+    }
+
+    #[test]
+    fn oversized_batch_rejected() {
+        let Some(eng) = engine() else { return };
+        let big: Vec<&[u8]> = vec![b"x"; eng.geometry().batch + 1];
+        assert!(eng.hash_batch(&big).is_err());
+    }
+}

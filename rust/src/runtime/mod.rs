@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT artifacts and execute them on the hot path.
+//!
+//! This is the L3↔L2/L1 boundary of the three-layer architecture: Python
+//! lowered `map_shard` (L1 `hash_partition` Pallas kernel) and
+//! `combine_sort` / the leaf sorter to HLO text at build time
+//! (`make artifacts`); this module loads those files through the `xla`
+//! crate (`PjRtClient::cpu` → `HloModuleProto::from_text_file` →
+//! `compile` → `execute`) and exposes typed batch entry points to the
+//! backends.  Python never runs at job time.
+
+pub mod engine;
+pub mod shapes;
+
+pub use engine::{Engine, HashPath};
+pub use shapes::Geometry;

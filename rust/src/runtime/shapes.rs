@@ -1,0 +1,104 @@
+//! Static batch geometry shared with the AOT artifacts.
+//!
+//! Must match `python/compile/kernels/__init__.py`; `make artifacts`
+//! writes the values into `artifacts/manifest.txt` and
+//! [`Geometry::from_manifest`] cross-checks them at load time, so a
+//! drifted artifact fails fast instead of mis-executing.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Tokens per `map_shard` invocation.
+pub const BATCH: usize = 4096;
+/// Bytes hashed per token (longer keys are truncated, matching
+/// [`crate::mapreduce::kv::HASH_WIDTH`]).
+pub const WIDTH: usize = 24;
+/// Ownership buckets in the histogram output.
+pub const NBUCKETS: usize = 256;
+/// Keys per `combine_sort` invocation (power of two).
+pub const SORT_BATCH: usize = 4096;
+/// Padding key: sorts to the tail, dropped by consumers.
+pub const KEY_SENTINEL: u64 = u64::MAX;
+
+/// Runtime-checked geometry of the loaded artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    /// Tokens per map batch.
+    pub batch: usize,
+    /// Token width in bytes.
+    pub width: usize,
+    /// Histogram buckets.
+    pub nbuckets: usize,
+    /// Sort block length.
+    pub sort_batch: usize,
+}
+
+impl Default for Geometry {
+    fn default() -> Self {
+        Geometry { batch: BATCH, width: WIDTH, nbuckets: NBUCKETS, sort_batch: SORT_BATCH }
+    }
+}
+
+impl Geometry {
+    /// Parse `artifacts/manifest.txt` and verify it matches the values
+    /// this binary was compiled against.
+    pub fn from_manifest(path: &Path) -> Result<Geometry> {
+        let text = std::fs::read_to_string(path)?;
+        let mut geom = Geometry::default();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                let v: usize = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad manifest line '{line}'")))?;
+                match k {
+                    "BATCH" => geom.batch = v,
+                    "WIDTH" => geom.width = v,
+                    "NBUCKETS" => geom.nbuckets = v,
+                    "SORT_BATCH" => geom.sort_batch = v,
+                    _ => {}
+                }
+            }
+        }
+        let expect = Geometry::default();
+        if geom != expect {
+            return Err(Error::Config(format!(
+                "artifact geometry {geom:?} != compiled geometry {expect:?}; \
+                 re-run `make artifacts`"
+            )));
+        }
+        Ok(geom)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_python_constants() {
+        let g = Geometry::default();
+        assert_eq!(g.batch, 4096);
+        assert_eq!(g.width, 24);
+        assert_eq!(g.nbuckets, 256);
+        assert_eq!(g.sort_batch, 4096);
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let p = std::env::temp_dir().join(format!("mr1s-manifest-{}", std::process::id()));
+        std::fs::write(&p, "BATCH=4096\nWIDTH=24\nNBUCKETS=256\nSORT_BATCH=4096\nextra\tline\n")
+            .unwrap();
+        assert!(Geometry::from_manifest(&p).is_ok());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn manifest_mismatch_rejected() {
+        let p = std::env::temp_dir().join(format!("mr1s-manifest-bad-{}", std::process::id()));
+        std::fs::write(&p, "BATCH=512\nWIDTH=24\nNBUCKETS=256\nSORT_BATCH=4096\n").unwrap();
+        assert!(Geometry::from_manifest(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,100 @@
+//! Per-rank virtual clock.
+
+use std::cell::Cell;
+
+/// A rank-local virtual clock, in nanoseconds since job start.
+///
+/// Not `Sync` on purpose: each rank thread owns its clock.  Cross-rank
+/// clock values travel through the synchronization primitives in
+/// [`crate::mpi`] (barrier max, lock hand-off, publish timestamps), never
+/// by sharing the clock itself.
+#[derive(Debug)]
+pub struct Clock {
+    now_ns: Cell<u64>,
+}
+
+impl Clock {
+    /// A clock at t = 0.
+    pub fn new() -> Self {
+        Clock { now_ns: Cell::new(0) }
+    }
+
+    /// Current virtual time in nanoseconds.
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.now_ns.get()
+    }
+
+    /// Advance by `ns` nanoseconds (compute, transfer or wait cost).
+    #[inline]
+    pub fn advance(&self, ns: u64) {
+        self.now_ns.set(self.now_ns.get() + ns);
+    }
+
+    /// Move the clock forward to `t` if `t` is in the future (used when a
+    /// synchronization point hands us another rank's later clock).
+    /// Returns the wait time absorbed, in ns.
+    #[inline]
+    pub fn sync_to(&self, t: u64) -> u64 {
+        let now = self.now_ns.get();
+        if t > now {
+            self.now_ns.set(t);
+            t - now
+        } else {
+            0
+        }
+    }
+
+    /// Reset to t = 0 (a new job on the same rank context).
+    pub fn reset(&self) {
+        self.now_ns.set(0);
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero() {
+        assert_eq!(Clock::new().now(), 0);
+    }
+
+    #[test]
+    fn advance_accumulates() {
+        let c = Clock::new();
+        c.advance(5);
+        c.advance(7);
+        assert_eq!(c.now(), 12);
+    }
+
+    #[test]
+    fn sync_to_future_moves_and_reports_wait() {
+        let c = Clock::new();
+        c.advance(10);
+        assert_eq!(c.sync_to(25), 15);
+        assert_eq!(c.now(), 25);
+    }
+
+    #[test]
+    fn sync_to_past_is_noop() {
+        let c = Clock::new();
+        c.advance(10);
+        assert_eq!(c.sync_to(5), 0);
+        assert_eq!(c.now(), 10);
+    }
+
+    #[test]
+    fn reset_returns_to_zero() {
+        let c = Clock::new();
+        c.advance(100);
+        c.reset();
+        assert_eq!(c.now(), 0);
+    }
+}

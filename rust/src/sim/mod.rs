@@ -1,0 +1,26 @@
+//! Virtual-time simulation substrate.
+//!
+//! The evaluation testbed of the paper (Tegner: 46 dual-12-core nodes,
+//! Lustre, Intel MPI) is unavailable — and this image has one CPU core, so
+//! wallclock measurements of thread-per-rank runs would measure scheduler
+//! serialization rather than algorithm behaviour.  Instead every rank
+//! carries a [`Clock`] whose time advances through the calibrated
+//! [`CostModel`], and the `mpi` substrate reconciles clocks at every
+//! synchronization point (conservative PDES):
+//!
+//! * barrier / collective — participants leave with the max clock;
+//! * passive-target lock — the acquirer inherits the releaser's clock;
+//! * atomic publish (status window) — readers inherit the writer's clock;
+//! * non-blocking read — completes at `issue_time + io_cost`, so a
+//!   `wait()` that happens later in virtual time costs nothing: exactly
+//!   how Map/I-O overlap manifests in MapReduce-1S.
+//!
+//! The protocol, the data, and the synchronization structure are all
+//! real; only the *duration* of compute, network and storage operations
+//! is modeled.
+
+pub mod clock;
+pub mod cost;
+
+pub use clock::Clock;
+pub use cost::{ComputeModel, CostModel, NetModel, StorageModel};

@@ -1,0 +1,18 @@
+//! Storage substrate: striped input files, non-blocking read-ahead, and
+//! MPI-storage-windows-style checkpointing.
+//!
+//! Substitutes the paper's Lustre deployment (165 OSTs, 1 MB stripes,
+//! MPI-IO): inputs live as real files on local disk with a recorded
+//! stripe layout, reads are real `pread`s, and the *cost* of each access
+//! follows [`crate::sim::StorageModel`] — independent reads pay full
+//! request latency, collective reads amortize it, and non-blocking reads
+//! complete at `issue_vt + cost` so prefetching overlaps with Map compute
+//! exactly as MPI non-blocking I/O does in the paper.
+
+pub mod layout;
+pub mod prefetch;
+pub mod storage_window;
+
+pub use layout::StripedFile;
+pub use prefetch::{PendingRead, Prefetcher};
+pub use storage_window::StorageWindow;

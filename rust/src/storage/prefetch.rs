@@ -1,0 +1,158 @@
+//! Non-blocking read-ahead: the MPI non-blocking I/O half of the paper.
+//!
+//! MapReduce-1S schedules the *next* task's input while the current task
+//! computes (§2.1): "while a certain task is being computed, the
+//! subsequent input is already scheduled for asynchronous retrieval."
+//! [`Prefetcher::issue`] starts a real background read and stamps its
+//! virtual completion time as `issue_vt + read_cost`; a later
+//! [`PendingRead::wait`] only costs virtual time if the rank's clock has
+//! not yet advanced past the completion — i.e. overlap is free, stalls
+//! are charged.
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::error::Result;
+use crate::mpi::RankCtx;
+
+use super::layout::StripedFile;
+
+/// An in-flight non-blocking read (cf. a pending MPI_Request).
+pub struct PendingRead {
+    rx: mpsc::Receiver<Result<Vec<u8>>>,
+    /// Virtual time at which the data is available.
+    completion_vt: u64,
+    issued_bytes: usize,
+}
+
+impl PendingRead {
+    /// Block for the data (MPI_Wait).  The clock syncs to the read's
+    /// virtual completion time: zero cost if compute already covered it.
+    pub fn wait(self, ctx: &RankCtx) -> Result<Vec<u8>> {
+        let data = self.rx.recv().expect("prefetch worker alive")?;
+        ctx.clock.sync_to(self.completion_vt);
+        Ok(data)
+    }
+
+    /// Virtual completion timestamp (for timeline instrumentation).
+    pub fn completion_vt(&self) -> u64 {
+        self.completion_vt
+    }
+
+    /// Bytes requested at issue time.
+    pub fn issued_bytes(&self) -> usize {
+        self.issued_bytes
+    }
+}
+
+/// Issues background reads against a [`StripedFile`].
+pub struct Prefetcher {
+    file: StripedFile,
+}
+
+impl Prefetcher {
+    /// A prefetcher over `file`.
+    pub fn new(file: StripedFile) -> Self {
+        Prefetcher { file }
+    }
+
+    /// The underlying file.
+    pub fn file(&self) -> &StripedFile {
+        &self.file
+    }
+
+    /// Start a non-blocking read of `[offset, offset+len)` (MPI_File_iread
+    /// equivalent).  A small issue overhead is charged now; the transfer
+    /// itself lands at `now + read_cost` in virtual time while a real
+    /// thread fetches the bytes.
+    pub fn issue(&self, ctx: &RankCtx, offset: u64, len: usize) -> PendingRead {
+        // Nonblocking-call software overhead (request setup).
+        ctx.clock.advance(2_000);
+        let completion_vt = ctx.clock.now() + ctx.cost.storage.read_cost(len);
+        let (tx, rx) = mpsc::channel();
+        let file = self.file.clone();
+        thread::spawn(move || {
+            let _ = tx.send(file.read_at_raw(offset, len));
+        });
+        PendingRead { rx, completion_vt, issued_bytes: len }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::Universe;
+    use crate::sim::CostModel;
+
+    fn tmpfile(name: &str, data: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("mr1s-pf-{name}-{}", std::process::id()));
+        std::fs::write(&p, data).unwrap();
+        p
+    }
+
+    #[test]
+    fn wait_returns_correct_bytes() {
+        let p = tmpfile("bytes", b"abcdefgh");
+        let f = StripedFile::open(&p).unwrap();
+        let outs = Universe::new(1, CostModel::default()).run(move |ctx| {
+            let pf = Prefetcher::new(f.clone());
+            let pending = pf.issue(ctx, 2, 4);
+            pending.wait(ctx).unwrap()
+        });
+        assert_eq!(outs[0], b"cdef");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn overlapped_compute_hides_io_cost() {
+        let p = tmpfile("overlap", &vec![0u8; 1 << 20]);
+        let f = StripedFile::open(&p).unwrap();
+        let outs = Universe::new(1, CostModel::default()).run(move |ctx| {
+            let pf = Prefetcher::new(f.clone());
+            let io_cost = ctx.cost.storage.read_cost(1 << 20);
+
+            // Stalled wait: no compute between issue and wait.
+            let t0 = ctx.clock.now();
+            pf.issue(ctx, 0, 1 << 20).wait(ctx).unwrap();
+            let stalled = ctx.clock.now() - t0;
+
+            // Overlapped wait: compute longer than the I/O cost first.
+            let t0 = ctx.clock.now();
+            let pending = pf.issue(ctx, 0, 1 << 20);
+            ctx.clock.advance(io_cost * 2); // "Map compute"
+            pending.wait(ctx).unwrap();
+            let overlapped = ctx.clock.now() - t0;
+
+            (stalled, overlapped, io_cost)
+        });
+        let (stalled, overlapped, io_cost) = outs[0];
+        assert!(stalled >= io_cost, "stalled {stalled} must pay I/O {io_cost}");
+        // Overlapped run pays only the compute (2*io) + issue overhead,
+        // not compute + I/O.
+        assert!(overlapped < io_cost * 2 + 10_000);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn multiple_outstanding_reads() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        let p = tmpfile("multi", &data);
+        let f = StripedFile::open(&p).unwrap();
+        let outs = Universe::new(1, CostModel::default()).run(move |ctx| {
+            let pf = Prefetcher::new(f.clone());
+            let a = pf.issue(ctx, 0, 16);
+            let b = pf.issue(ctx, 1024, 16);
+            let c = pf.issue(ctx, 4090, 100); // clamped at EOF
+            (
+                a.wait(ctx).unwrap(),
+                b.wait(ctx).unwrap(),
+                c.wait(ctx).unwrap().len(),
+            )
+        });
+        let (a, b, clen) = &outs[0];
+        assert_eq!(a.as_slice(), &data[0..16]);
+        assert_eq!(b.as_slice(), &data[1024..1040]);
+        assert_eq!(*clen, 6);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,66 @@
+//! Word-length histogram: tiny key space, max-contention reduce.
+//!
+//! Every emission lands on one of ~24 keys, so nearly all tuples collapse
+//! in Local Reduce — the opposite regime from Word-Count's long-tail
+//! vocabulary.  Exercises the framework where the Shuffle is negligible
+//! and Local Reduce dominates (the paper's §4 "benefits directly depend
+//! on the particular use-case").
+
+use crate::mapreduce::UseCase;
+
+/// The word-length-histogram use-case.
+#[derive(Debug, Default)]
+pub struct LengthHistogram;
+
+impl LengthHistogram {
+    /// Histogram key for a token length (clamped to 99, two digits).
+    pub fn key_for(len: usize) -> Vec<u8> {
+        format!("len:{:02}", len.min(99)).into_bytes()
+    }
+}
+
+impl UseCase for LengthHistogram {
+    fn name(&self) -> &'static str {
+        "length-histogram"
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], u64)) {
+        // Only the token length matters: no lowercase, no allocation.
+        let mut key = *b"len:00";
+        for tok in record.split(|b| !b.is_ascii_alphanumeric()) {
+            if tok.is_empty() {
+                continue;
+            }
+            let len = tok.len().min(99);
+            key[4] = b'0' + (len / 10) as u8;
+            key[5] = b'0' + (len % 10) as u8;
+            emit(&key, 1);
+        }
+    }
+
+    fn reduce(&self, a: u64, b: u64) -> u64 {
+        a + b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_by_length() {
+        let mut out = Vec::new();
+        LengthHistogram.map_record(b"a bb ccc bb", &mut |k, v| out.push((k.to_vec(), v)));
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].0, b"len:01");
+        assert_eq!(out[1].0, b"len:02");
+        assert_eq!(out[2].0, b"len:03");
+        assert_eq!(out[3].0, b"len:02");
+    }
+
+    #[test]
+    fn key_is_zero_padded_for_ordering() {
+        assert_eq!(LengthHistogram::key_for(5), b"len:05".to_vec());
+        assert_eq!(LengthHistogram::key_for(12), b"len:12".to_vec());
+    }
+}

@@ -1,0 +1,70 @@
+//! Inverted index (sharded): which of 64 document shards contain a word.
+//!
+//! Demonstrates a non-additive reduce (bitwise OR) over the same
+//! framework — the paper's future work asks for "additional use-cases"
+//! beyond Word-Count.  A record's shard is derived from its content hash
+//! (the corpus has no explicit document ids), giving a stable 64-way
+//! partition of lines into pseudo-documents.
+
+use crate::mapreduce::kv;
+use crate::mapreduce::UseCase;
+
+use super::wordcount::WordCount;
+
+/// The sharded inverted-index use-case.
+#[derive(Debug, Default)]
+pub struct InvertedIndex;
+
+impl InvertedIndex {
+    /// Shard id of a record (0..64).
+    pub fn shard(record: &[u8]) -> u32 {
+        (kv::hash_key(record) % 64) as u32
+    }
+}
+
+impl UseCase for InvertedIndex {
+    fn name(&self) -> &'static str {
+        "inverted-index"
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], u64)) {
+        if record.is_empty() {
+            return;
+        }
+        let bit = 1u64 << Self::shard(record);
+        let mut scratch = Vec::with_capacity(32);
+        WordCount::tokens_into(record, &mut scratch, &mut |tok, _| emit(tok, bit));
+    }
+
+    fn reduce(&self, a: u64, b: u64) -> u64 {
+        a | b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_shard_bit_per_token() {
+        let mut out = Vec::new();
+        InvertedIndex.map_record(b"alpha beta", &mut |k, v| out.push((k.to_vec(), v)));
+        assert_eq!(out.len(), 2);
+        let bit = out[0].1;
+        assert_eq!(bit.count_ones(), 1);
+        assert!(out.iter().all(|&(_, v)| v == bit), "same record, same shard");
+    }
+
+    #[test]
+    fn different_records_can_hit_different_shards() {
+        let shards: std::collections::HashSet<u32> =
+            (0..100).map(|i| InvertedIndex::shard(format!("line {i}").as_bytes())).collect();
+        assert!(shards.len() > 10);
+    }
+
+    #[test]
+    fn reduce_is_or() {
+        assert_eq!(InvertedIndex.reduce(0b01, 0b10), 0b11);
+        assert_eq!(InvertedIndex.reduce(0b11, 0b10), 0b11);
+    }
+}

@@ -1,0 +1,13 @@
+//! Shipped use-cases (the paper's *Use-case class* implementations).
+//!
+//! Word-Count is the paper's evaluation workload (§3.1); the others are
+//! the "additional use-cases" its future work calls for, exercising
+//! different reduce semantics over the same framework.
+
+pub mod histogram;
+pub mod inverted_index;
+pub mod wordcount;
+
+pub use histogram::LengthHistogram;
+pub use inverted_index::InvertedIndex;
+pub use wordcount::WordCount;

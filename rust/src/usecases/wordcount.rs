@@ -1,0 +1,91 @@
+//! Word-Count: the paper's evaluation use-case (§3.1).
+//!
+//! Map emits `<word, 1>` per token; Reduce sums occurrences.  Tokens are
+//! maximal runs of ASCII alphanumerics, lowercased — a fixed, easily
+//! reproducible tokenizer so counts can be cross-checked by independent
+//! implementations (see `verify_count` in the tests and the harness).
+
+use crate::mapreduce::UseCase;
+
+/// The Word-Count use-case.
+#[derive(Debug, Default)]
+pub struct WordCount;
+
+impl WordCount {
+    /// Tokenize a record the way Map does (shared with tests/oracles).
+    pub fn tokens(record: &[u8]) -> impl Iterator<Item = Vec<u8>> + '_ {
+        record
+            .split(|b| !b.is_ascii_alphanumeric())
+            .filter(|t| !t.is_empty())
+            .map(|t| t.to_ascii_lowercase())
+    }
+
+    /// Allocation-free tokenization: lowercases each token into a caller
+    /// scratch buffer and yields it to `emit`.  Must stay semantically
+    /// identical to [`WordCount::tokens`] (asserted in tests).
+    #[inline]
+    pub fn tokens_into(record: &[u8], scratch: &mut Vec<u8>, emit: &mut dyn FnMut(&[u8], u64)) {
+        for tok in record.split(|b| !b.is_ascii_alphanumeric()) {
+            if tok.is_empty() {
+                continue;
+            }
+            scratch.clear();
+            scratch.extend(tok.iter().map(u8::to_ascii_lowercase));
+            emit(scratch, 1);
+        }
+    }
+}
+
+impl UseCase for WordCount {
+    fn name(&self) -> &'static str {
+        "word-count"
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], u64)) {
+        // Hot path: one reused scratch buffer instead of a heap
+        // allocation per token (EXPERIMENTS.md §Perf).
+        let mut scratch = Vec::with_capacity(32);
+        Self::tokens_into(record, &mut scratch, emit);
+    }
+
+    fn reduce(&self, a: u64, b: u64) -> u64 {
+        a + b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(record: &[u8]) -> Vec<(Vec<u8>, u64)> {
+        let mut out: Vec<(Vec<u8>, u64)> = Vec::new();
+        WordCount.map_record(record, &mut |k, v| out.push((k.to_vec(), v)));
+        out
+    }
+
+    #[test]
+    fn splits_on_non_alphanumerics() {
+        let c = counts(b"Hello, world! hello-world 42");
+        let words: Vec<&[u8]> = c.iter().map(|(k, _)| k.as_slice()).collect();
+        assert_eq!(words, vec![b"hello".as_slice(), b"world", b"hello", b"world", b"42"]);
+        assert!(c.iter().all(|&(_, v)| v == 1));
+    }
+
+    #[test]
+    fn empty_record_emits_nothing() {
+        assert!(counts(b"").is_empty());
+        assert!(counts(b"  \t ...").is_empty());
+    }
+
+    #[test]
+    fn reduce_is_sum() {
+        assert_eq!(WordCount.reduce(3, 4), 7);
+    }
+
+    #[test]
+    fn lowercases_tokens() {
+        let c = counts(b"WiKi WIKI wiki");
+        assert!(c.iter().all(|(k, _)| k == b"wiki"));
+        assert_eq!(c.len(), 3);
+    }
+}

@@ -1,0 +1,192 @@
+//! Synthetic Wikipedia-like corpus (PUMA Dataset3 stand-in).
+//!
+//! The paper's 300 GB PUMA-Wikipedia dataset is articles, user
+//! discussions and metadata.  What Word-Count's cost structure actually
+//! depends on is (a) total bytes, (b) token-frequency skew — natural
+//! language is Zipfian — and (c) line-structured text.  This generator
+//! produces exactly that, deterministically from a seed: a Zipf(s)
+//! vocabulary over synthetic words, mixed into article/discussion/
+//! metadata-flavored lines.
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::error::Result;
+
+use super::rng::SplitMix64;
+
+/// Corpus parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    /// Target size in bytes (output is within one line of this).
+    pub bytes: u64,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Zipf exponent (1.0 ≈ natural language).
+    pub zipf_s: f64,
+    /// PRNG seed.
+    pub seed: u64,
+    /// Maximum words per line.
+    pub max_line_words: usize,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec { bytes: 1 << 20, vocab: 20_000, zipf_s: 1.05, seed: 42, max_line_words: 12 }
+    }
+}
+
+/// Deterministic synthetic word for vocabulary index `i` (rank 0 = most
+/// frequent).  Frequent words come out short, like natural language.
+pub fn vocab_word(i: usize) -> String {
+    const SYLLABLES: [&str; 16] = [
+        "ka", "ri", "to", "ven", "sol", "mar", "del", "qu", "an", "er", "is", "on", "ta",
+        "wiki", "ped", "ia",
+    ];
+    let mut w = String::new();
+    let mut x = i + 1;
+    while x > 0 {
+        w.push_str(SYLLABLES[x % SYLLABLES.len()]);
+        x /= SYLLABLES.len();
+    }
+    w
+}
+
+/// Zipf sampler over `[0, vocab)` via inverse-CDF binary search.
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    /// Build the cumulative distribution for `vocab` items, exponent `s`.
+    pub fn new(vocab: usize, s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(vocab);
+        let mut acc = 0.0f64;
+        for i in 0..vocab {
+            acc += 1.0 / ((i + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        ZipfSampler { cdf }
+    }
+
+    /// Sample a vocabulary index.
+    pub fn sample(&self, rng: &mut SplitMix64) -> usize {
+        let u = rng.unit();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+/// Generate the corpus into `path`; returns bytes written.
+pub fn generate_corpus(path: impl AsRef<Path>, spec: &CorpusSpec) -> Result<u64> {
+    let mut rng = SplitMix64::new(spec.seed);
+    let zipf = ZipfSampler::new(spec.vocab, spec.zipf_s);
+    let file = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::with_capacity(1 << 20, file);
+
+    let mut written = 0u64;
+    let mut line = String::with_capacity(256);
+    while written < spec.bytes {
+        line.clear();
+        // Mix of "article" prose, "discussion" chatter and "metadata".
+        let kind = rng.below(10);
+        let words = 2 + rng.below(spec.max_line_words as u64 - 1) as usize;
+        match kind {
+            0 => {
+                // Metadata-ish line.
+                line.push_str("meta revision ");
+                line.push_str(&rng.below(1_000_000).to_string());
+            }
+            1 | 2 => {
+                // Discussion: short, informal, repeated heads.
+                line.push_str("talk ");
+                for _ in 0..words.min(6) {
+                    line.push_str(&vocab_word(zipf.sample(&mut rng)));
+                    line.push(' ');
+                }
+            }
+            _ => {
+                // Article prose.
+                for _ in 0..words {
+                    line.push_str(&vocab_word(zipf.sample(&mut rng)));
+                    line.push(' ');
+                }
+            }
+        }
+        let trimmed = line.trim_end();
+        w.write_all(trimmed.as_bytes())?;
+        w.write_all(b"\n")?;
+        written += trimmed.len() as u64 + 1;
+    }
+    w.flush()?;
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmppath(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mr1s-corpus-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn generates_requested_size() {
+        let p = tmppath("size");
+        let n = generate_corpus(&p, &CorpusSpec { bytes: 100_000, ..Default::default() })
+            .unwrap();
+        assert!(n >= 100_000);
+        assert!(n < 100_000 + 4096);
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), n);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let p1 = tmppath("det1");
+        let p2 = tmppath("det2");
+        let spec = CorpusSpec { bytes: 50_000, ..Default::default() };
+        generate_corpus(&p1, &spec).unwrap();
+        generate_corpus(&p2, &spec).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn lines_are_bounded() {
+        let p = tmppath("lines");
+        generate_corpus(&p, &CorpusSpec { bytes: 50_000, ..Default::default() }).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        let max_line = data.split(|&b| b == b'\n').map(<[u8]>::len).max().unwrap();
+        assert!(max_line < 1024, "line of {max_line} bytes");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn zipf_skews_toward_low_ranks() {
+        let zipf = ZipfSampler::new(1000, 1.1);
+        let mut rng = SplitMix64::new(9);
+        let mut head = 0usize;
+        const N: usize = 20_000;
+        for _ in 0..N {
+            if zipf.sample(&mut rng) < 10 {
+                head += 1;
+            }
+        }
+        // Top-10 of 1000 must dominate well beyond uniform (1%).
+        assert!(head > N / 5, "head draws {head}/{N}");
+    }
+
+    #[test]
+    fn vocab_words_unique_for_small_indices() {
+        let words: Vec<String> = (0..500).map(vocab_word).collect();
+        let mut dedup = words.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), words.len());
+    }
+}

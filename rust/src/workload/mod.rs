@@ -1,0 +1,10 @@
+//! Workload generation: the PUMA-Wikipedia stand-in corpus and the
+//! paper's imbalance-injection mechanism.
+
+pub mod corpus;
+pub mod imbalance;
+pub mod rng;
+
+pub use corpus::{generate_corpus, CorpusSpec};
+pub use imbalance::{skew_factors, SkewSpec};
+pub use rng::SplitMix64;

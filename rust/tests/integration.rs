@@ -1,0 +1,275 @@
+//! End-to-end integration: both backends, real corpora, exact-count
+//! verification against an independent single-threaded oracle.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mr1s::mapreduce::{BackendKind, Job, JobConfig};
+use mr1s::sim::CostModel;
+use mr1s::usecases::{InvertedIndex, LengthHistogram, WordCount};
+use mr1s::workload::{generate_corpus, skew_factors, CorpusSpec, SkewSpec};
+
+fn tmppath(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mr1s-it-{name}-{}", std::process::id()))
+}
+
+/// Independent oracle: single pass over the whole file, no framework
+/// code except the shared tokenizer.
+fn oracle_wordcount(path: &PathBuf) -> HashMap<Vec<u8>, u64> {
+    let data = std::fs::read(path).unwrap();
+    let mut counts: HashMap<Vec<u8>, u64> = HashMap::new();
+    for line in data.split(|&b| b == b'\n') {
+        for tok in WordCount::tokens(line) {
+            *counts.entry(tok).or_insert(0) += 1;
+        }
+    }
+    counts
+}
+
+fn small_config(input: PathBuf) -> JobConfig {
+    JobConfig {
+        input,
+        task_size: 16 << 10,
+        win_size: 16 << 10,
+        chunk_size: 4 << 10,
+        ..Default::default()
+    }
+}
+
+fn run_and_check(backend: BackendKind, nranks: usize, cfg: JobConfig) {
+    let oracle = oracle_wordcount(&cfg.input);
+    let job = Job::new(Arc::new(WordCount), cfg).unwrap();
+    let out = job.run(backend, nranks, CostModel::default()).unwrap();
+
+    assert_eq!(out.report.unique_keys as usize, oracle.len(), "unique key count");
+    let total: u64 = oracle.values().sum();
+    assert_eq!(out.report.total_count, total, "total occurrences");
+    let got: HashMap<Vec<u8>, u64> = out.result.into_iter().collect();
+    assert_eq!(got.len(), oracle.len());
+    for (word, count) in &oracle {
+        assert_eq!(got.get(word), Some(count), "word {:?}", String::from_utf8_lossy(word));
+    }
+    assert!(out.report.elapsed_ns > 0);
+}
+
+fn corpus(name: &str, bytes: u64, seed: u64) -> PathBuf {
+    let p = tmppath(name);
+    generate_corpus(&p, &CorpusSpec { bytes, seed, ..Default::default() }).unwrap();
+    p
+}
+
+#[test]
+fn mr1s_exact_counts_various_rank_counts() {
+    let p = corpus("1s-ranks", 200_000, 1);
+    for nranks in [1, 2, 3, 4, 8] {
+        run_and_check(BackendKind::OneSided, nranks, small_config(p.clone()));
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn mr2s_exact_counts_various_rank_counts() {
+    let p = corpus("2s-ranks", 200_000, 2);
+    for nranks in [1, 2, 3, 4, 8] {
+        run_and_check(BackendKind::TwoSided, nranks, small_config(p.clone()));
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn both_backends_agree_with_each_other() {
+    let p = corpus("agree", 150_000, 3);
+    let job1 = Job::new(Arc::new(WordCount), small_config(p.clone())).unwrap();
+    let job2 = Job::new(Arc::new(WordCount), small_config(p.clone())).unwrap();
+    let r1 = job1.run(BackendKind::OneSided, 4, CostModel::default()).unwrap();
+    let r2 = job2.run(BackendKind::TwoSided, 4, CostModel::default()).unwrap();
+    let m1: HashMap<Vec<u8>, u64> = r1.result.into_iter().collect();
+    let m2: HashMap<Vec<u8>, u64> = r2.result.into_iter().collect();
+    assert_eq!(m1, m2);
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn unbalanced_runs_produce_identical_counts() {
+    // The paper's imbalance is temporal (same task computed repeatedly,
+    // input read once): outputs must match the balanced run exactly.
+    let p = corpus("skew", 150_000, 4);
+    let balanced = small_config(p.clone());
+    let ntasks = (std::fs::metadata(&p).unwrap().len() as usize).div_ceil(balanced.task_size);
+    let skewed = JobConfig {
+        skew: skew_factors(SkewSpec::paper_unbalanced(), ntasks, 7),
+        ..balanced.clone()
+    };
+    let out_b = Job::new(Arc::new(WordCount), balanced)
+        .unwrap()
+        .run(BackendKind::OneSided, 4, CostModel::default())
+        .unwrap();
+    let out_s = Job::new(Arc::new(WordCount), skewed)
+        .unwrap()
+        .run(BackendKind::OneSided, 4, CostModel::default())
+        .unwrap();
+    let mb: HashMap<Vec<u8>, u64> = out_b.result.into_iter().collect();
+    let ms: HashMap<Vec<u8>, u64> = out_s.result.into_iter().collect();
+    assert_eq!(mb, ms);
+    // ... but the skewed run must be slower.
+    assert!(out_s.report.elapsed_ns > out_b.report.elapsed_ns);
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn scalar_and_kernel_paths_agree() {
+    let p = corpus("paths", 120_000, 5);
+    let kernel_cfg = JobConfig { use_kernel: true, ..small_config(p.clone()) };
+    let scalar_cfg = JobConfig { use_kernel: false, ..small_config(p.clone()) };
+    let rk = Job::new(Arc::new(WordCount), kernel_cfg)
+        .unwrap()
+        .run(BackendKind::OneSided, 3, CostModel::default())
+        .unwrap();
+    let rs = Job::new(Arc::new(WordCount), scalar_cfg)
+        .unwrap()
+        .run(BackendKind::OneSided, 3, CostModel::default())
+        .unwrap();
+    let mk: HashMap<Vec<u8>, u64> = rk.result.into_iter().collect();
+    let ms: HashMap<Vec<u8>, u64> = rs.result.into_iter().collect();
+    assert_eq!(mk, ms);
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn checkpointed_run_matches_and_writes_files() {
+    let p = corpus("ckpt", 100_000, 6);
+    let dir = tmppath("ckpt-dir");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = JobConfig {
+        checkpoints: true,
+        checkpoint_dir: dir.clone(),
+        ..small_config(p.clone())
+    };
+    let oracle = oracle_wordcount(&p);
+    let out = Job::new(Arc::new(WordCount), cfg)
+        .unwrap()
+        .run(BackendKind::OneSided, 4, CostModel::default())
+        .unwrap();
+    assert_eq!(out.report.unique_keys as usize, oracle.len());
+    // Every rank must have produced a checkpoint file with content.
+    for r in 0..4 {
+        let f = dir.join(format!("mr1s-ckpt-{r}.bin"));
+        assert!(f.exists(), "missing checkpoint {f:?}");
+    }
+    std::fs::remove_file(&p).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn inverted_index_reduces_with_or() {
+    let p = corpus("invidx", 80_000, 8);
+    let job = Job::new(Arc::new(InvertedIndex), small_config(p.clone())).unwrap();
+    let out = job.run(BackendKind::OneSided, 4, CostModel::default()).unwrap();
+    // Oracle.
+    let data = std::fs::read(&p).unwrap();
+    let mut oracle: HashMap<Vec<u8>, u64> = HashMap::new();
+    for line in data.split(|&b| b == b'\n') {
+        if line.is_empty() {
+            continue;
+        }
+        let bit = 1u64 << InvertedIndex::shard(line);
+        for tok in WordCount::tokens(line) {
+            *oracle.entry(tok).or_insert(0) |= bit;
+        }
+    }
+    let got: HashMap<Vec<u8>, u64> = out.result.into_iter().collect();
+    assert_eq!(got, oracle);
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn length_histogram_matches_oracle() {
+    let p = corpus("hist", 80_000, 9);
+    let job = Job::new(Arc::new(LengthHistogram), small_config(p.clone())).unwrap();
+    let out = job.run(BackendKind::TwoSided, 3, CostModel::default()).unwrap();
+    let data = std::fs::read(&p).unwrap();
+    let mut oracle: HashMap<Vec<u8>, u64> = HashMap::new();
+    for line in data.split(|&b| b == b'\n') {
+        for tok in WordCount::tokens(line) {
+            *oracle.entry(LengthHistogram::key_for(tok.len())).or_insert(0) += 1;
+        }
+    }
+    let got: HashMap<Vec<u8>, u64> = out.result.into_iter().collect();
+    assert_eq!(got, oracle);
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn job_stealing_exact_counts_and_speedup_under_skew() {
+    // §6 future work: stealing must preserve exactness (every task runs
+    // exactly once, whoever claims it) and shed straggler tails.
+    let p = corpus("steal", 300_000, 12);
+    let base = small_config(p.clone());
+    let ntasks = (std::fs::metadata(&p).unwrap().len() as usize).div_ceil(base.task_size);
+    // One rank owns all the heavy tasks: worst-case static imbalance.
+    let skew: Vec<f64> =
+        (0..ntasks).map(|t| if t % 4 == 0 { 6.0 } else { 1.0 }).collect();
+    let mk = |stealing: bool| JobConfig { skew: skew.clone(), job_stealing: stealing, ..base.clone() };
+
+    let oracle = oracle_wordcount(&p);
+    let plain = Job::new(Arc::new(WordCount), mk(false))
+        .unwrap()
+        .run(BackendKind::OneSided, 4, CostModel::default())
+        .unwrap();
+    let stolen = Job::new(Arc::new(WordCount), mk(true))
+        .unwrap()
+        .run(BackendKind::OneSided, 4, CostModel::default())
+        .unwrap();
+
+    let mp: HashMap<Vec<u8>, u64> = plain.result.into_iter().collect();
+    let ms: HashMap<Vec<u8>, u64> = stolen.result.into_iter().collect();
+    assert_eq!(mp.len(), oracle.len());
+    assert_eq!(ms, mp, "stealing changed the results");
+    assert!(
+        stolen.report.elapsed_ns < plain.report.elapsed_ns,
+        "stealing must shed the straggler: {} !< {}",
+        stolen.report.elapsed_ns,
+        plain.report.elapsed_ns
+    );
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn tiny_input_single_task() {
+    let p = tmppath("tiny");
+    std::fs::write(&p, b"one two two three three three\n").unwrap();
+    let cfg = small_config(p.clone());
+    let job = Job::new(Arc::new(WordCount), cfg).unwrap();
+    let out = job.run(BackendKind::OneSided, 4, CostModel::default()).unwrap();
+    let got: HashMap<Vec<u8>, u64> = out.result.into_iter().collect();
+    assert_eq!(got.get(b"one".as_slice()), Some(&1));
+    assert_eq!(got.get(b"two".as_slice()), Some(&2));
+    assert_eq!(got.get(b"three".as_slice()), Some(&3));
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn report_phases_cover_elapsed_time() {
+    let p = corpus("phases", 100_000, 10);
+    let job = Job::new(Arc::new(WordCount), small_config(p.clone())).unwrap();
+    let out = job.run(BackendKind::OneSided, 4, CostModel::default()).unwrap();
+    for (b, &elapsed) in out.report.breakdowns.iter().zip(&out.report.rank_elapsed_ns) {
+        let sum = b.io_ns + b.map_ns + b.local_reduce_ns + b.reduce_ns + b.combine_ns
+            + b.wait_ns
+            + b.checkpoint_ns;
+        assert!(sum <= elapsed, "phases {sum} exceed elapsed {elapsed}");
+        assert!(sum * 10 >= elapsed * 5, "phases {sum} cover <50% of {elapsed}");
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn memory_is_tracked() {
+    let p = corpus("mem", 150_000, 11);
+    let job = Job::new(Arc::new(WordCount), small_config(p.clone())).unwrap();
+    let out = job.run(BackendKind::OneSided, 2, CostModel::default()).unwrap();
+    assert!(out.report.peak_memory_bytes > 0);
+    assert!(!out.report.memory_series.is_empty());
+    std::fs::remove_file(&p).ok();
+}

@@ -1,0 +1,311 @@
+//! Property-based tests over the coordinator's core invariants (routing,
+//! batching, encoding, run algebra, record-boundary handling, and whole
+//! mini-jobs), via the in-tree PropRunner (proptest is unavailable
+//! offline).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use mr1s::mapreduce::bucket::{KeyTable, OwnedRecord, SortedRun};
+use mr1s::mapreduce::job::{read_len, read_start, split_tasks, task_records};
+use mr1s::mapreduce::kv::{self, Record};
+use mr1s::mapreduce::{BackendKind, Job, JobConfig};
+use mr1s::sim::CostModel;
+use mr1s::testing::PropRunner;
+use mr1s::usecases::WordCount;
+use mr1s::workload::SplitMix64;
+
+fn rand_key(rng: &mut SplitMix64) -> Vec<u8> {
+    let len = rng.below(40) as usize; // includes empty and > HASH_WIDTH
+    (0..len).map(|_| rng.below(256) as u8).collect()
+}
+
+#[test]
+fn prop_kv_roundtrip_any_records() {
+    PropRunner::new(200).check(
+        "kv roundtrip",
+        |rng| {
+            let n = 1 + rng.below(64) as usize;
+            (0..n)
+                .map(|_| (rand_key(rng), rng.next_u64(), rng.next_u64()))
+                .collect::<Vec<_>>()
+        },
+        |recs| {
+            let mut buf = Vec::new();
+            for (key, hash, count) in recs {
+                Record { hash: *hash, key, count: *count }.encode_into(&mut buf);
+            }
+            let decoded = kv::decode_all(&buf).map_err(|e| e.to_string())?;
+            if decoded.len() != recs.len() {
+                return Err(format!("{} != {}", decoded.len(), recs.len()));
+            }
+            for (d, (key, hash, count)) in decoded.iter().zip(recs) {
+                if d.key != key.as_slice() || d.hash != *hash || d.count != *count {
+                    return Err("record mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_owner_routing_is_total_and_stable() {
+    PropRunner::new(300).check(
+        "owner routing",
+        |rng| (rand_key(rng), 1 + rng.below(64) as usize),
+        |(key, nranks)| {
+            let h = kv::hash_key(key);
+            let owner = kv::owner_of(h, *nranks);
+            if owner >= *nranks {
+                return Err(format!("owner {owner} out of range {nranks}"));
+            }
+            if owner != kv::owner_of(h, *nranks) {
+                return Err("owner not deterministic".into());
+            }
+            // Consistent with the kernel's bucket contract.
+            if owner != kv::bucket_of(h) % *nranks {
+                return Err("owner != bucket % nranks".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_keytable_preserves_total_count() {
+    PropRunner::new(100).check(
+        "keytable count conservation",
+        |rng| {
+            let n = 1 + rng.below(500) as usize;
+            // Small key space to force merging.
+            (0..n)
+                .map(|_| (rng.below(20), rng.below(100) + 1))
+                .collect::<Vec<(u64, u64)>>()
+        },
+        |pairs| {
+            let mut table = KeyTable::new();
+            for (k, c) in pairs {
+                let key = k.to_le_bytes();
+                table.merge(kv::hash_key(&key), &key, *c, u64::wrapping_add);
+            }
+            let want: u64 = pairs.iter().map(|(_, c)| *c).sum();
+            let got: u64 = table.drain_records().iter().map(|r| r.count).sum();
+            (got == want).then_some(()).ok_or(format!("{got} != {want}"))
+        },
+    );
+}
+
+#[test]
+fn prop_keytable_partition_is_exact() {
+    PropRunner::new(100).check(
+        "drain_by_owner partitions",
+        |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let nranks = 1 + rng.below(16) as usize;
+            ((0..n).map(|_| rand_key(rng)).collect::<Vec<_>>(), nranks)
+        },
+        |(keys, nranks)| {
+            let mut table = KeyTable::new();
+            for k in keys {
+                table.merge(kv::hash_key(k), k, 1, u64::wrapping_add);
+            }
+            let unique = table.len();
+            let parts = table.drain_by_owner(*nranks);
+            let mut total = 0usize;
+            for (r, buf) in parts.iter().enumerate() {
+                for rec in kv::RecordIter::new(buf) {
+                    let rec = rec.map_err(|e| e.to_string())?;
+                    if kv::owner_of(rec.hash, *nranks) != r {
+                        return Err(format!("record routed to wrong rank {r}"));
+                    }
+                    total += 1;
+                }
+            }
+            (total == unique).then_some(()).ok_or(format!("{total} != {unique}"))
+        },
+    );
+}
+
+#[test]
+fn prop_sorted_run_invariants_and_merge_algebra() {
+    PropRunner::new(150).check(
+        "sorted-run build+merge",
+        |rng| {
+            let n = rng.below(300) as usize;
+            let m = rng.below(300) as usize;
+            let mk = |rng: &mut SplitMix64, n: usize| {
+                (0..n)
+                    .map(|_| {
+                        let k = rng.below(50).to_le_bytes().to_vec(); // collisions likely
+                        (k, rng.below(100))
+                    })
+                    .collect::<Vec<_>>()
+            };
+            (mk(rng, n), mk(rng, m))
+        },
+        |(a, b)| {
+            let to_records = |xs: &[(Vec<u8>, u64)]| {
+                xs.iter()
+                    .map(|(k, c)| OwnedRecord {
+                        hash: kv::hash_key(k),
+                        key: k.as_slice().into(),
+                        count: *c,
+                    })
+                    .collect::<Vec<_>>()
+            };
+            let ra = SortedRun::build_scalar(to_records(a), u64::wrapping_add);
+            let rb = SortedRun::build_scalar(to_records(b), u64::wrapping_add);
+            if !ra.check_invariants() || !rb.check_invariants() {
+                return Err("build violated run invariants".into());
+            }
+            let merged = ra.merge(rb, u64::wrapping_add);
+            if !merged.check_invariants() {
+                return Err("merge violated run invariants".into());
+            }
+            // Count conservation through build + merge.
+            let want: u64 = a.iter().chain(b).map(|(_, c)| *c).sum();
+            let got: u64 = merged.records().iter().map(|r| r.count).sum();
+            (got == want).then_some(()).ok_or(format!("{got} != {want}"))
+        },
+    );
+}
+
+#[test]
+fn prop_run_encode_decode_roundtrip() {
+    PropRunner::new(100).check(
+        "run codec",
+        |rng| {
+            (0..rng.below(200) as usize)
+                .map(|_| (rand_key(rng), rng.below(1000)))
+                .collect::<Vec<_>>()
+        },
+        |xs| {
+            let records = xs
+                .iter()
+                .map(|(k, c)| OwnedRecord {
+                    hash: kv::hash_key(k),
+                    key: k.as_slice().into(),
+                    count: *c,
+                })
+                .collect();
+            let run = SortedRun::build_scalar(records, u64::wrapping_add);
+            let rt = SortedRun::decode(&run.encode()).map_err(|e| e.to_string())?;
+            (rt.records() == run.records()).then_some(()).ok_or("roundtrip mismatch".into())
+        },
+    );
+}
+
+#[test]
+fn prop_task_records_partition_any_text() {
+    PropRunner::new(60).check(
+        "record boundaries",
+        |rng| {
+            let len = rng.below(4000) as usize;
+            let mut text = Vec::with_capacity(len);
+            for _ in 0..len {
+                // Bias toward printable with ~8% newlines.
+                let b = if rng.below(12) == 0 { b'\n' } else { b'a' + rng.below(26) as u8 };
+                text.push(b);
+            }
+            let task_size = 1 + rng.below(500) as usize;
+            (text, task_size)
+        },
+        |(text, task_size)| {
+            let tasks = split_tasks(text.len() as u64, *task_size);
+            let mut seen = Vec::new();
+            for t in &tasks {
+                let rs = read_start(t) as usize;
+                let re = (rs + read_len(t)).min(text.len());
+                let data = &text[rs..re];
+                let range = task_records(t, data);
+                seen.extend_from_slice(&data[range]);
+            }
+            (seen == *text)
+                .then_some(())
+                .ok_or(format!("partition lost bytes: {} != {}", seen.len(), text.len()))
+        },
+    );
+}
+
+#[test]
+fn prop_mini_jobs_match_oracle_both_backends() {
+    // Whole-job property: random tiny corpora, random task sizes, random
+    // rank counts — exact counts from both backends.
+    let tmp = std::env::temp_dir().join(format!("mr1s-prop-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let mut case_no = 0usize;
+    PropRunner::new(8).check(
+        "mini job e2e",
+        |rng| {
+            let words = ["wiki", "data", "map", "reduce", "one", "sided"];
+            let lines = 20 + rng.below(200) as usize;
+            let mut text = String::new();
+            for _ in 0..lines {
+                let n = 1 + rng.below(8) as usize;
+                for _ in 0..n {
+                    text.push_str(words[rng.below(words.len() as u64) as usize]);
+                    text.push(' ');
+                }
+                text.push('\n');
+            }
+            let task_size = 64 + rng.below(2000) as usize;
+            let nranks = 1 + rng.below(6) as usize;
+            (text, task_size, nranks)
+        },
+        |(text, task_size, nranks)| {
+            case_no += 1;
+            let path = tmp.join(format!("case-{case_no}.txt"));
+            std::fs::write(&path, text).map_err(|e| e.to_string())?;
+            let mut oracle: HashMap<Vec<u8>, u64> = HashMap::new();
+            for line in text.as_bytes().split(|&b| b == b'\n') {
+                for tok in WordCount::tokens(line) {
+                    *oracle.entry(tok).or_insert(0) += 1;
+                }
+            }
+            for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+                let cfg = JobConfig {
+                    input: path.clone(),
+                    task_size: *task_size,
+                    win_size: 8 << 10,
+                    chunk_size: 2 << 10,
+                    use_kernel: false,
+                    ..Default::default()
+                };
+                let out = Job::new(Arc::new(WordCount), cfg)
+                    .map_err(|e| e.to_string())?
+                    .run(backend, *nranks, CostModel::default())
+                    .map_err(|e| e.to_string())?;
+                let got: HashMap<Vec<u8>, u64> = out.result.into_iter().collect();
+                if got != oracle {
+                    return Err(format!(
+                        "{} disagrees with oracle ({} vs {} keys)",
+                        backend.name(),
+                        got.len(),
+                        oracle.len()
+                    ));
+                }
+            }
+            std::fs::remove_file(&path).ok();
+            Ok(())
+        },
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn prop_win_size_must_exceed_floor() {
+    PropRunner::new(50).check(
+        "config validation",
+        |rng| rng.below(10_000) as usize,
+        |&win_size| {
+            let cfg = JobConfig { win_size, ..Default::default() };
+            let ok = cfg.validate().is_ok();
+            if (win_size >= 4096) == ok {
+                Ok(())
+            } else {
+                Err(format!("win_size {win_size}: validate() == {ok}"))
+            }
+        },
+    );
+}

@@ -1,0 +1,164 @@
+//! Runtime ↔ artifact integration: the L3 boundary with the AOT kernels.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (not failed) when the artifacts are absent so `cargo test` stays
+//! usable on a fresh checkout.
+
+use mr1s::mapreduce::job::cached_engine;
+use mr1s::mapreduce::kv;
+use mr1s::runtime::Engine;
+use mr1s::testing::PropRunner;
+use mr1s::workload::SplitMix64;
+
+fn engine() -> Option<std::sync::Arc<Engine>> {
+    let e = cached_engine();
+    if e.is_none() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    e
+}
+
+#[test]
+fn kernel_hash_equals_scalar_on_random_tokens() {
+    let Some(eng) = engine() else { return };
+    PropRunner::new(20).check(
+        "kernel==scalar hash",
+        |rng| {
+            let n = 1 + rng.below(4096) as usize;
+            (0..n)
+                .map(|_| {
+                    let len = rng.below(40) as usize; // > WIDTH gets truncated
+                    (0..len).map(|_| rng.below(256) as u8).collect::<Vec<u8>>()
+                })
+                .collect::<Vec<_>>()
+        },
+        |tokens| {
+            let refs: Vec<&[u8]> = tokens.iter().map(Vec::as_slice).collect();
+            let (kh, kc) = eng.hash_batch(&refs).map_err(|e| e.to_string())?;
+            let (sh, sc) = Engine::hash_batch_scalar(&refs, 256);
+            if kh != sh {
+                return Err("hash vectors differ".into());
+            }
+            if kc != sc {
+                return Err("histograms differ".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kernel_sort_perm_is_a_sorting_permutation() {
+    let Some(eng) = engine() else { return };
+    PropRunner::new(20).check(
+        "sort_perm validity",
+        |rng| {
+            let n = 1 + rng.below(4096) as usize;
+            (0..n).map(|_| rng.next_u64()).collect::<Vec<u64>>()
+        },
+        |keys| {
+            let perm = eng.sort_perm(keys).map_err(|e| e.to_string())?;
+            if perm.len() != keys.len() {
+                return Err("length mismatch".into());
+            }
+            let mut seen = vec![false; keys.len()];
+            for &p in &perm {
+                if seen[p as usize] {
+                    return Err("duplicate index".into());
+                }
+                seen[p as usize] = true;
+            }
+            let sorted: Vec<u64> = perm.iter().map(|&p| keys[p as usize]).collect();
+            if !sorted.windows(2).all(|w| w[0] <= w[1]) {
+                return Err("not sorted".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kernel_combine_sort_matches_scalar_fold() {
+    let Some(eng) = engine() else { return };
+    PropRunner::new(20).check(
+        "combine_sort==scalar",
+        |rng| {
+            let n = 1 + rng.below(4096) as usize;
+            let keyspace = 1 + rng.below(200);
+            (0..n)
+                .map(|_| (rng.below(keyspace), rng.below(1000) as u32))
+                .collect::<Vec<(u64, u32)>>()
+        },
+        |pairs| {
+            let keys: Vec<u64> = pairs.iter().map(|(k, _)| *k).collect();
+            let vals: Vec<u32> = pairs.iter().map(|(_, v)| *v).collect();
+            let (uk, uv) = eng.combine_sort_block(&keys, &vals).map_err(|e| e.to_string())?;
+            // Scalar fold.
+            let mut map = std::collections::BTreeMap::new();
+            for (k, v) in pairs {
+                *map.entry(*k).or_insert(0u64) += u64::from(*v);
+            }
+            let want_k: Vec<u64> = map.keys().copied().collect();
+            let want_v: Vec<u32> = map.values().map(|&v| v as u32).collect();
+            if uk != want_k || uv != want_v {
+                return Err(format!("fold mismatch: {} vs {} uniques", uk.len(), want_k.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kernel_hash_agrees_with_rust_fnv_reference() {
+    let Some(eng) = engine() else { return };
+    // Golden vectors through all three representations: rust scalar,
+    // kernel, and the published FNV test vector.
+    let tokens: Vec<&[u8]> = vec![b"hello", b"wikipedia", b"a", b""];
+    let (kh, _) = eng.hash_batch(&tokens).unwrap();
+    assert_eq!(kh[0], 0xA430D84680AABD0B);
+    assert_eq!(kh[0], kv::hash_key(b"hello"));
+    assert_eq!(kh[1], kv::hash_key(b"wikipedia"));
+    assert_eq!(kh[2], kv::hash_key(b"a"));
+    assert_eq!(kh[3], 0, "padding/empty rows hash to 0 by contract");
+}
+
+#[test]
+fn engine_rejects_oversized_inputs() {
+    let Some(eng) = engine() else { return };
+    let g = eng.geometry();
+    let too_many: Vec<&[u8]> = vec![b"x"; g.batch + 1];
+    assert!(eng.hash_batch(&too_many).is_err());
+    let keys = vec![0u64; g.sort_batch + 1];
+    assert!(eng.sort_perm(&keys).is_err());
+}
+
+#[test]
+fn full_job_through_kernels_is_deterministic() {
+    let Some(_) = engine() else { return };
+    use mr1s::mapreduce::{BackendKind, Job, JobConfig};
+    use mr1s::sim::CostModel;
+    use mr1s::usecases::WordCount;
+    use mr1s::workload::{generate_corpus, CorpusSpec};
+    use std::sync::Arc;
+
+    let p = std::env::temp_dir().join(format!("mr1s-rt-{}", std::process::id()));
+    generate_corpus(&p, &CorpusSpec { bytes: 100_000, seed: 99, ..Default::default() }).unwrap();
+    let cfg = JobConfig {
+        input: p.clone(),
+        task_size: 16 << 10,
+        use_kernel: true,
+        ..Default::default()
+    };
+    let run = |cfg: JobConfig| {
+        Job::new(Arc::new(WordCount), cfg)
+            .unwrap()
+            .run(BackendKind::OneSided, 4, CostModel::default())
+            .unwrap()
+    };
+    let a = run(cfg.clone());
+    let b = run(cfg);
+    assert_eq!(a.result, b.result, "kernel-path results must be deterministic");
+    assert_eq!(a.report.unique_keys, b.report.unique_keys);
+    let _ = SplitMix64::new(0); // keep the import used on skip paths
+    std::fs::remove_file(&p).ok();
+}
