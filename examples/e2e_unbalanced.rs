@@ -13,7 +13,7 @@
 //! ```sh
 //! make artifacts && cargo run --release --example e2e_unbalanced
 //! ```
-//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//! The methodology is described in DESIGN.md §1 (virtual time).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -28,7 +28,7 @@ const CORPUS_BYTES: u64 = 48 << 20;
 const TASK_SIZE: usize = 1 << 20;
 const RANKS: usize = 16;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mr1s::Result<()> {
     let t_wall = Instant::now();
     let input = std::env::temp_dir().join("mr1s-e2e.txt");
     let bytes = generate_corpus(
@@ -76,7 +76,11 @@ fn main() -> anyhow::Result<()> {
                 .run(backend, RANKS, CostModel::default())?;
             // Exact-count verification on every run.
             assert_eq!(out.report.unique_keys as usize, oracle.len(), "{label}: keys");
-            let got: HashMap<Vec<u8>, u64> = out.result.into_iter().collect();
+            let got: HashMap<Vec<u8>, u64> = out
+                .result
+                .into_iter()
+                .map(|(k, v)| (k, v.as_u64().expect("inline-u64 value")))
+                .collect();
             for (w, c) in &oracle {
                 assert_eq!(got.get(w), Some(c), "{label}: count of {:?}", w);
             }

@@ -19,7 +19,7 @@ use mr1s::workload::{generate_corpus, CorpusSpec};
 
 const RANKS: usize = 8;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mr1s::Result<()> {
     let input = std::env::temp_dir().join("mr1s-ft.txt");
     generate_corpus(&input, &CorpusSpec { bytes: 8 << 20, seed: 7, ..Default::default() })?;
     let ckpt_dir = std::env::temp_dir().join("mr1s-ft-ckpt");
@@ -61,7 +61,8 @@ fn main() -> anyhow::Result<()> {
             match rec {
                 Ok(r) => {
                     ok += 1;
-                    recovered_count += r.count;
+                    // Word-Count values are inline u64 counts on the wire.
+                    recovered_count += kv::u64_from_value(r.value);
                 }
                 Err(_) => break,
             }

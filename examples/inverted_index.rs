@@ -1,10 +1,12 @@
-//! Multi-use-case demo: the same framework, three Use-case classes.
+//! Multi-use-case demo: the same framework, four Use-case classes.
 //!
 //! The paper's framework separates Base / Back-end / Use-case so that
 //! "applications easily configure different back-ends over multiple
-//! use-cases" (§2.2).  This example runs Word-Count, the sharded
-//! inverted index, and the word-length histogram over both backends on
-//! one corpus and cross-checks the backends against each other.
+//! use-cases" (§2.2).  This example runs Word-Count, the posting-list
+//! inverted index, the word-length histogram and the mean-record-length
+//! aggregate over both backends on one corpus and cross-checks the
+//! backends against each other — inline-u64 and variable-width value
+//! tiers through identical machinery.
 //!
 //! ```sh
 //! cargo run --release --example inverted_index
@@ -13,17 +15,22 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use mr1s::mapreduce::kv::Value;
 use mr1s::mapreduce::{BackendKind, Job, JobConfig, UseCase};
 use mr1s::sim::CostModel;
-use mr1s::usecases::{InvertedIndex, LengthHistogram, WordCount};
+use mr1s::usecases::{InvertedIndex, LengthHistogram, MeanLength, WordCount};
 use mr1s::workload::{generate_corpus, CorpusSpec};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mr1s::Result<()> {
     let input = std::env::temp_dir().join("mr1s-multi.txt");
     generate_corpus(&input, &CorpusSpec { bytes: 6 << 20, seed: 11, ..Default::default() })?;
 
-    let usecases: Vec<Arc<dyn UseCase>> =
-        vec![Arc::new(WordCount), Arc::new(InvertedIndex), Arc::new(LengthHistogram)];
+    let usecases: Vec<Arc<dyn UseCase>> = vec![
+        Arc::new(WordCount),
+        Arc::new(InvertedIndex),
+        Arc::new(LengthHistogram),
+        Arc::new(MeanLength),
+    ];
 
     for usecase in usecases {
         let cfg = JobConfig { input: input.clone(), ..Default::default() };
@@ -32,8 +39,8 @@ fn main() -> anyhow::Result<()> {
         let r2 = Job::new(usecase.clone(), cfg)?
             .run(BackendKind::TwoSided, 8, CostModel::default())?;
 
-        let m1: HashMap<Vec<u8>, u64> = r1.result.into_iter().collect();
-        let m2: HashMap<Vec<u8>, u64> = r2.result.into_iter().collect();
+        let m1: HashMap<Vec<u8>, Value> = r1.result.into_iter().collect();
+        let m2: HashMap<Vec<u8>, Value> = r2.result.into_iter().collect();
         assert_eq!(m1, m2, "{}: backends disagree", usecase.name());
 
         println!(
@@ -44,14 +51,51 @@ fn main() -> anyhow::Result<()> {
             r2.report.elapsed_secs(),
         );
 
+        if usecase.name() == "inverted-index" {
+            // Show that values really are posting lists over >64 shards.
+            let mut widest: Option<(&Vec<u8>, usize)> = None;
+            let mut shards = std::collections::HashSet::new();
+            for (word, value) in &m1 {
+                let ids = InvertedIndex::decode_postings(value.as_bytes().unwrap());
+                shards.extend(ids.iter().copied());
+                if widest.map_or(true, |(_, n)| ids.len() > n) {
+                    widest = Some((word, ids.len()));
+                }
+            }
+            assert!(shards.len() > 64, "posting lists span only {} shards", shards.len());
+            if let Some((word, n)) = widest {
+                println!(
+                    "  posting lists span {} distinct shards (of {}); widest word {:?} \
+                     appears in {} shards",
+                    shards.len(),
+                    InvertedIndex::NSHARDS,
+                    String::from_utf8_lossy(word),
+                    n
+                );
+            }
+        }
+
+        if usecase.name() == "mean-length" {
+            let mut sample: Vec<(&Vec<u8>, &Value)> = m1.iter().collect();
+            sample.sort_by_key(|(k, _)| (*k).clone());
+            println!("  mean containing-line length (first 5 words):");
+            for (word, value) in sample.into_iter().take(5) {
+                println!(
+                    "    {:<14} {}",
+                    String::from_utf8_lossy(word),
+                    usecase.render_value(value)
+                );
+            }
+        }
+
         if usecase.name() == "length-histogram" {
-            let mut hist: Vec<(Vec<u8>, u64)> = m1.into_iter().collect();
+            let mut hist: Vec<(Vec<u8>, u64)> =
+                m1.into_iter().map(|(k, v)| (k, v.as_u64().unwrap())).collect();
             hist.sort();
             println!("  word-length histogram:");
+            let max = hist.iter().map(|(_, c)| *c).max().unwrap_or(1);
             for (k, v) in hist.iter().take(12) {
-                let bar = "#".repeat((64.0 * *v as f64
-                    / hist.iter().map(|(_, c)| *c).max().unwrap_or(1) as f64)
-                    as usize);
+                let bar = "#".repeat((64.0 * *v as f64 / max as f64) as usize);
                 println!("  {} {:>9} {}", String::from_utf8_lossy(k), v, bar);
             }
         }

@@ -14,7 +14,7 @@ use mr1s::sim::CostModel;
 use mr1s::usecases::WordCount;
 use mr1s::workload::{generate_corpus, CorpusSpec};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mr1s::Result<()> {
     // A small synthetic Wikipedia-like corpus (PUMA stand-in).
     let input = std::env::temp_dir().join("mr1s-quickstart.txt");
     let bytes = generate_corpus(&input, &CorpusSpec { bytes: 4 << 20, ..Default::default() })?;
@@ -28,9 +28,10 @@ fn main() -> anyhow::Result<()> {
     // `Print`.
     println!("{}", out.report.summary());
     let mut top = out.result;
-    top.sort_by(|a, b| b.1.cmp(&a.1));
+    top.sort_by(|a, b| b.1.weight().cmp(&a.1.weight()).then_with(|| a.0.cmp(&b.0)));
     println!("\ntop 10 words:");
-    for (word, count) in top.into_iter().take(10) {
+    for (word, value) in top.into_iter().take(10) {
+        let count = value.as_u64().unwrap_or(0);
         println!("{count:>10}  {}", String::from_utf8_lossy(&word));
     }
 

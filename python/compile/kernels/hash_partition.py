@@ -57,7 +57,9 @@ def _hash_partition_kernel(tok_ref, len_ref, hash_ref, cnt_ref):
     bucket = (h & jnp.uint64(NBUCKETS - 1)).astype(jnp.int32)
     onehot = (bucket[:, None] == jnp.arange(NBUCKETS, dtype=jnp.int32)[None, :])
     onehot = jnp.logical_and(onehot, valid[:, None]).astype(jnp.int32)
-    counts = jnp.sum(onehot, axis=0)
+    # Pin the accumulator dtype: with x64 enabled jnp.sum would promote to
+    # int64 and the store into the int32 histogram ref would be rejected.
+    counts = jnp.sum(onehot, axis=0, dtype=jnp.int32)
 
     # All grid steps alias the same [NBUCKETS] output block: init then add.
     @pl.when(pl.program_id(0) == 0)

@@ -1,0 +1,11 @@
+"""Test bootstrap: make ``compile`` importable from a fresh checkout.
+
+The L1/L2 build lives under ``python/`` without packaging metadata (it is
+a build-time tool, not an installable library), so tests add that
+directory to ``sys.path`` themselves.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

@@ -5,14 +5,17 @@
 //! * task size (paper default 64 MB, empirically chosen);
 //! * one-sided op limit / chunk size (paper default 1 MB);
 //! * bucket size (win_size);
-//! * skew intensity sweep (how the MR-1S advantage grows with imbalance).
+//! * skew intensity sweep (how the MR-1S advantage grows with imbalance);
+//! * value tier: the inline-u64 fast path vs. the same workload forced
+//!   through the variable-width byte path (the two-tier record pipeline).
 //!
 //! All numbers are virtual seconds of the same Word-Count workload.
 
 use std::sync::Arc;
 
 use mr1s::harness::Scenario;
-use mr1s::mapreduce::{BackendKind, Job, JobConfig};
+use mr1s::mapreduce::kv;
+use mr1s::mapreduce::{BackendKind, Job, JobConfig, UseCase, ValueKind};
 use mr1s::sim::CostModel;
 use mr1s::usecases::WordCount;
 use mr1s::workload::{skew_factors, SkewSpec};
@@ -25,6 +28,32 @@ fn run(cfg: JobConfig, backend: BackendKind) -> (f64, u64) {
         .run(backend, RANKS, CostModel::default())
         .unwrap();
     (out.report.elapsed_secs(), out.report.peak_memory_bytes)
+}
+
+/// Word-Count forced through the variable-width byte tier: identical
+/// semantics, but every value is an owned 8-byte buffer reduced through
+/// byte slices.  The gap between this and the regular (inline-u64)
+/// Word-Count is the cost the two-tier representation avoids.
+struct WordCountByteTier;
+
+impl UseCase for WordCountByteTier {
+    fn name(&self) -> &'static str {
+        "word-count-byte-tier"
+    }
+
+    fn value_kind(&self) -> ValueKind {
+        ValueKind::Variable
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        WordCount.map_record(record, emit);
+    }
+
+    fn reduce(&self, acc: &mut Vec<u8>, incoming: &[u8]) {
+        let sum = kv::u64_from_value(acc) + kv::u64_from_value(incoming);
+        acc.clear();
+        acc.extend_from_slice(&sum.to_le_bytes());
+    }
 }
 
 fn main() {
@@ -65,6 +94,24 @@ fn main() {
         let (secs, mem) = run(cfg, BackendKind::OneSided);
         println!("win_size={win_kib:>5}KiB {secs:>8.3}s  peak_mem={}MiB", mem >> 20);
         println!("#csv,ablation_win_size,{win_kib},{secs:.4},{mem}");
+    }
+
+    println!("\n== ablation: value tier (inline-u64 fast path vs byte path; MR-1S, balanced) ==");
+    let tiers: Vec<(&str, Arc<dyn UseCase>)> =
+        vec![("inline", Arc::new(WordCount)), ("bytes", Arc::new(WordCountByteTier))];
+    for (label, tier) in tiers {
+        let t = std::time::Instant::now();
+        let out = Job::new(tier, base.clone())
+            .unwrap()
+            .run(BackendKind::OneSided, RANKS, CostModel::default())
+            .unwrap();
+        let wall = t.elapsed().as_secs_f64();
+        println!(
+            "value_tier={label:<7} {:>8.3}s virtual  wall={wall:.3}s  peak_mem={}MiB",
+            out.report.elapsed_secs(),
+            out.report.peak_memory_bytes >> 20
+        );
+        println!("#csv,ablation_value_tier,{label},{:.4},{wall:.4}", out.report.elapsed_secs());
     }
 
     println!("\n== extension: job stealing (paper §6 future work; MR-1S, unbalanced) ==");

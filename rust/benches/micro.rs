@@ -5,11 +5,13 @@
 use mr1s::bench::{report, section, Bencher};
 use mr1s::mapreduce::bucket::{KeyTable, OwnedRecord, SortedRun};
 use mr1s::mapreduce::job::cached_engine;
-use mr1s::mapreduce::kv::{self, Record};
+use mr1s::mapreduce::kv::{self, Record, SumOps, Value};
 use mr1s::mpi::{Universe, Window};
 use mr1s::runtime::Engine;
 use mr1s::sim::CostModel;
 use mr1s::workload::SplitMix64;
+
+const ONE: [u8; 8] = 1u64.to_le_bytes();
 
 fn words(n: usize, seed: u64) -> Vec<Vec<u8>> {
     let mut rng = SplitMix64::new(seed);
@@ -30,7 +32,7 @@ fn main() {
     report(&b.wall("kv_encode_64k", || {
         buf.clear();
         for w in &ws {
-            Record { hash: kv::hash_key(w), key: w, count: 1 }.encode_into(&mut buf);
+            Record { hash: kv::hash_key(w), key: w, value: &ONE }.encode_into(&mut buf);
         }
     }));
     report(&b.wall("kv_decode_64k", || {
@@ -71,22 +73,26 @@ fn main() {
     section("sorted runs (local-reduce table -> run -> merge)");
     let mut table = KeyTable::new();
     for w in &ws {
-        table.merge(kv::hash_key(w), w, 1, u64::wrapping_add);
+        table.merge(kv::hash_key(w), w, &ONE, &SumOps);
     }
     let records = table.drain_records();
     report(&b.wall("run_build_scalar", || {
-        let _ = SortedRun::build_scalar(records.clone(), u64::wrapping_add);
+        let _ = SortedRun::build_scalar(records.clone(), &SumOps);
     }));
-    let run_a = SortedRun::build_scalar(records.clone(), u64::wrapping_add);
+    let run_a = SortedRun::build_scalar(records.clone(), &SumOps);
     let run_b = {
         let recs: Vec<OwnedRecord> = words(32_768, 2)
             .iter()
-            .map(|w| OwnedRecord { hash: kv::hash_key(w), key: w.as_slice().into(), count: 1 })
+            .map(|w| OwnedRecord {
+                hash: kv::hash_key(w),
+                key: w.as_slice().into(),
+                value: Value::U64(1),
+            })
             .collect();
-        SortedRun::build_scalar(recs, u64::wrapping_add)
+        SortedRun::build_scalar(recs, &SumOps)
     };
     report(&b.wall("run_merge_2way", || {
-        let _ = run_a.clone().merge(run_b.clone(), u64::wrapping_add);
+        let _ = run_a.clone().merge(run_b.clone(), &SumOps);
     }));
 
     section("window RMA ops (4 ranks, 1 MiB puts)");

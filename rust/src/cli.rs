@@ -3,7 +3,7 @@
 //! ```text
 //! mr1s gen --bytes 32M --out corpus.txt [--seed 42]
 //! mr1s run --input corpus.txt [--backend 1s|2s] [--ranks 8]
-//!          [--usecase word-count|inverted-index|length-histogram]
+//!          [--usecase NAME]   (see `mr1s help` for the registry)
 //!          [--task-size 512K] [--win-size 1M] [--chunk-size 256K]
 //!          [--unbalanced] [--checkpoints] [--flush-epochs] [--no-kernel]
 //!          [--top 20]
@@ -19,7 +19,7 @@ use crate::harness::figures::{run_figure, FigureId};
 use crate::harness::Scenario;
 use crate::mapreduce::{BackendKind, Job, JobConfig, UseCase};
 use crate::sim::CostModel;
-use crate::usecases::{InvertedIndex, LengthHistogram, WordCount};
+use crate::usecases::{self, WordCount};
 use crate::workload::{generate_corpus, skew_factors, CorpusSpec, SkewSpec};
 
 /// Parsed flag map: `--key value` and bare `--switch`.
@@ -91,6 +91,21 @@ USAGE:
 Figures: 4a 4b 4c 4d 5a 5b 6a 6b 7a 7b (DESIGN.md section 4).
 Sizes accept K/M/G suffixes.";
 
+/// Render the use-case registry (shared by `--help` and lookup errors).
+fn usecase_listing() -> String {
+    let mut out = String::from("Use-cases:\n");
+    for entry in usecases::REGISTRY {
+        let aliases = if entry.aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" (aliases: {})", entry.aliases.join(", "))
+        };
+        out.push_str(&format!("  {:<18} {}{}\n", entry.name, entry.summary, aliases));
+    }
+    out.pop(); // trailing newline
+    out
+}
+
 /// CLI entrypoint; returns the process exit code.
 pub fn main(args: &[String]) -> Result<i32> {
     let cmd = args.get(1).map(String::as_str).unwrap_or("help");
@@ -101,7 +116,7 @@ pub fn main(args: &[String]) -> Result<i32> {
         "compare" => cmd_compare(&flags),
         "figures" => cmd_figures(&flags),
         "help" | "--help" | "-h" => {
-            println!("{HELP}");
+            println!("{HELP}\n\n{}", usecase_listing());
             Ok(0)
         }
         other => Err(Error::Config(format!("unknown command '{other}' (try `mr1s help`)"))),
@@ -120,11 +135,8 @@ fn cmd_gen(flags: &Flags) -> Result<i32> {
 }
 
 fn usecase_by_name(name: &str) -> Result<Arc<dyn UseCase>> {
-    Ok(match name {
-        "word-count" | "wordcount" | "wc" => Arc::new(WordCount),
-        "inverted-index" | "invidx" => Arc::new(InvertedIndex),
-        "length-histogram" | "hist" => Arc::new(LengthHistogram),
-        other => return Err(Error::Config(format!("unknown usecase '{other}'"))),
+    usecases::by_name(name).ok_or_else(|| {
+        Error::Config(format!("unknown usecase '{name}'\n{}", usecase_listing()))
     })
 }
 
@@ -165,7 +177,7 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
         s.parse::<usize>().map_err(|_| Error::Config("bad --top".into()))
     })?;
 
-    let out = Job::new(usecase, cfg)?.run(backend, nranks, CostModel::default())?;
+    let out = Job::new(usecase.clone(), cfg)?.run(backend, nranks, CostModel::default())?;
     println!("{}", out.report.summary());
     if std::env::var_os("MR1S_DEBUG_PHASES").is_some() {
         for (r, b) in out.report.breakdowns.iter().enumerate() {
@@ -204,10 +216,12 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
             agg.checkpoint_ns as f64 / n / 1e6,
         );
     }
-    let mut by_count = out.result;
-    by_count.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
-    for (key, count) in by_count.into_iter().take(top) {
-        println!("{:>12}  {}", count, String::from_utf8_lossy(&key));
+    // Order by value weight (count for inline use-cases, payload size
+    // for variable-width ones), then key; render via the use-case.
+    let mut by_weight = out.result;
+    by_weight.sort_by(|a, b| b.1.weight().cmp(&a.1.weight()).then_with(|| a.0.cmp(&b.0)));
+    for (key, value) in by_weight.into_iter().take(top) {
+        println!("{:>40}  {}", usecase.render_value(&value), String::from_utf8_lossy(&key));
     }
     Ok(0)
 }
@@ -277,5 +291,24 @@ mod tests {
     fn help_succeeds() {
         let args: Vec<String> = ["mr1s", "help"].iter().map(|s| s.to_string()).collect();
         assert_eq!(main(&args).unwrap(), 0);
+    }
+
+    #[test]
+    fn usecase_errors_list_the_registry() {
+        let err = usecase_by_name("bogus").unwrap_err();
+        let msg = err.to_string();
+        for name in usecases::names() {
+            assert!(msg.contains(name), "error message must list '{name}'");
+        }
+    }
+
+    #[test]
+    fn every_registered_usecase_resolves() {
+        for entry in usecases::REGISTRY {
+            assert!(usecase_by_name(entry.name).is_ok());
+            for alias in entry.aliases {
+                assert!(usecase_by_name(alias).is_ok(), "alias {alias}");
+            }
+        }
     }
 }

@@ -1,12 +1,12 @@
 //! Crate-wide error type.
-
-use thiserror::Error;
+//!
+//! Hand-implemented `Display`/`Error` (no proc-macro dependencies, so the
+//! crate builds fully offline).
 
 /// Unified error for the mr1s crate.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Window access outside any attached segment.
-    #[error("window access out of bounds: target rank {target}, disp {disp}, len {len}")]
     WindowOutOfBounds {
         /// Target rank of the RMA operation.
         target: usize,
@@ -17,11 +17,9 @@ pub enum Error {
     },
 
     /// Atomic window ops require 8-byte aligned displacements.
-    #[error("unaligned atomic access at disp {0}")]
     UnalignedAtomic(u64),
 
     /// Rank out of range for the communicator.
-    #[error("invalid rank {rank} (communicator size {size})")]
     InvalidRank {
         /// Offending rank.
         rank: usize,
@@ -30,31 +28,63 @@ pub enum Error {
     },
 
     /// Key-value record decoding failed (corrupt header / truncated data).
-    #[error("kv decode error: {0}")]
     KvDecode(String),
 
     /// Malformed configuration.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Storage substrate I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// PJRT runtime failure (artifact load / compile / execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// A rank thread panicked during a job.
-    #[error("rank {0} panicked")]
     RankPanic(usize),
 }
 
-/// Crate-wide result alias.
-pub type Result<T> = std::result::Result<T, Error>;
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::WindowOutOfBounds { target, disp, len } => write!(
+                f,
+                "window access out of bounds: target rank {target}, disp {disp}, len {len}"
+            ),
+            Error::UnalignedAtomic(disp) => {
+                write!(f, "unaligned atomic access at disp {disp}")
+            }
+            Error::InvalidRank { rank, size } => {
+                write!(f, "invalid rank {rank} (communicator size {size})")
+            }
+            Error::KvDecode(msg) => write!(f, "kv decode error: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::RankPanic(rank) => write!(f, "rank {rank} panicked"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
 
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
     }
 }
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

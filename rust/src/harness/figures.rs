@@ -113,7 +113,7 @@ pub struct FigureData {
 }
 
 impl FigureData {
-    /// Render as CSV + summary, the format EXPERIMENTS.md records.
+    /// Render as CSV + summary (the greppable `#csv,` format).
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!("# Figure {} — {}\n", self.id, self.caption));

@@ -5,11 +5,15 @@
 //! per-owner buckets, and the Reduce/Combine phases operate over sorted
 //! runs of unique keys.  Tables are hash-keyed with explicit collision
 //! chains — two distinct keys sharing a 64-bit hash stay distinct.
+//!
+//! All reduction goes through [`kv::ValueOps`], so the same machinery
+//! serves inline-u64 use-cases (word-count) and variable-width ones
+//! (posting lists) without branching in the container code.
 
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
 
-use super::kv::{self, Record, HEADER_BYTES};
+use super::kv::{self, Record, Value, ValueKind, ValueOps, HEADER_BYTES};
 
 /// Identity hasher for keys that are already 64-bit hashes: table keys
 /// are FNV-1a outputs, re-hashing them through SipHash costs ~15% of the
@@ -39,8 +43,8 @@ type HashKeyMap<V> = HashMap<u64, V, BuildHasherDefault<IdentityHasher>>;
 /// one-entry case stays inline (no per-key Vec allocation).
 #[derive(Debug)]
 enum Chain {
-    One(Box<[u8]>, u64),
-    Many(Vec<(Box<[u8]>, u64)>),
+    One(Box<[u8]>, Value),
+    Many(Vec<(Box<[u8]>, Value)>),
 }
 
 /// An owned key-value record (table / run storage).
@@ -50,18 +54,27 @@ pub struct OwnedRecord {
     pub hash: u64,
     /// Key bytes.
     pub key: Box<[u8]>,
-    /// Reduced value.
-    pub count: u64,
+    /// Reduced value (two-tier).
+    pub value: Value,
 }
 
 impl OwnedRecord {
     /// Encoded size of this record.
     pub fn encoded_len(&self) -> usize {
-        HEADER_BYTES + self.key.len()
+        HEADER_BYTES + self.key.len() + self.value.wire_len()
     }
 
-    fn as_record(&self) -> Record<'_> {
-        Record { hash: self.hash, key: &self.key, count: self.count }
+    /// Append the wire encoding to `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match &self.value {
+            Value::U64(v) => kv::encode_parts(self.hash, &self.key, &v.to_le_bytes(), out),
+            Value::Bytes(b) => kv::encode_parts(self.hash, &self.key, b, out),
+        }
+    }
+
+    /// Run ordering: by hash, ties broken by key bytes.
+    pub fn run_cmp(a: &OwnedRecord, b: &OwnedRecord) -> std::cmp::Ordering {
+        a.hash.cmp(&b.hash).then_with(|| a.key.cmp(&b.key))
     }
 }
 
@@ -79,49 +92,47 @@ impl KeyTable {
         Self::default()
     }
 
-    /// Merge `(key, count)` into the table under `reduce`.
-    pub fn merge(
-        &mut self,
-        hash: u64,
-        key: &[u8],
-        count: u64,
-        reduce: impl Fn(u64, u64) -> u64,
-    ) {
+    /// Merge `(key, wire value)` into the table under `ops`.
+    pub fn merge(&mut self, hash: u64, key: &[u8], value: &[u8], ops: &dyn ValueOps) {
         match self.slots.entry(hash) {
             std::collections::hash_map::Entry::Vacant(slot) => {
                 self.entries += 1;
-                self.bytes += HEADER_BYTES + key.len();
-                slot.insert(Chain::One(key.into(), count));
+                self.bytes += HEADER_BYTES + key.len() + value.len();
+                slot.insert(Chain::One(key.into(), ops.make_value(value)));
             }
             std::collections::hash_map::Entry::Occupied(mut slot) => {
                 match slot.get_mut() {
-                    Chain::One(k, c) => {
+                    Chain::One(k, v) => {
                         if k.as_ref() == key {
-                            *c = reduce(*c, count);
+                            let before = v.wire_len();
+                            ops.reduce_into(v, value);
+                            self.bytes = self.bytes - before + v.wire_len();
                             return;
                         }
                         // True 64-bit hash collision: upgrade the chain.
                         self.entries += 1;
-                        self.bytes += HEADER_BYTES + key.len();
+                        self.bytes += HEADER_BYTES + key.len() + value.len();
                         let prev = std::mem::replace(
                             slot.get_mut(),
                             Chain::Many(Vec::with_capacity(2)),
                         );
-                        let Chain::One(pk, pc) = prev else { unreachable!() };
-                        let Chain::Many(v) = slot.get_mut() else { unreachable!() };
-                        v.push((pk, pc));
-                        v.push((key.into(), count));
+                        let Chain::One(pk, pv) = prev else { unreachable!() };
+                        let Chain::Many(chain) = slot.get_mut() else { unreachable!() };
+                        chain.push((pk, pv));
+                        chain.push((key.into(), ops.make_value(value)));
                     }
-                    Chain::Many(v) => {
-                        for (k, c) in v.iter_mut() {
+                    Chain::Many(chain) => {
+                        for (k, v) in chain.iter_mut() {
                             if k.as_ref() == key {
-                                *c = reduce(*c, count);
+                                let before = v.wire_len();
+                                ops.reduce_into(v, value);
+                                self.bytes = self.bytes - before + v.wire_len();
                                 return;
                             }
                         }
                         self.entries += 1;
-                        self.bytes += HEADER_BYTES + key.len();
-                        v.push((key.into(), count));
+                        self.bytes += HEADER_BYTES + key.len() + value.len();
+                        chain.push((key.into(), ops.make_value(value)));
                     }
                 }
             }
@@ -129,29 +140,29 @@ impl KeyTable {
     }
 
     /// Merge an already-decoded record.
-    pub fn merge_record(&mut self, rec: Record<'_>, reduce: impl Fn(u64, u64) -> u64) {
-        self.merge(rec.hash, rec.key, rec.count, reduce);
+    pub fn merge_record(&mut self, rec: Record<'_>, ops: &dyn ValueOps) {
+        self.merge(rec.hash, rec.key, rec.value, ops);
     }
 
     /// Append without local aggregation (the Local-Reduce-off ablation):
     /// duplicates survive and are reduced downstream instead.
-    pub fn push_unmerged(&mut self, hash: u64, key: &[u8], count: u64) {
+    pub fn push_unmerged(&mut self, hash: u64, key: &[u8], value: &[u8], ops: &dyn ValueOps) {
         self.entries += 1;
-        self.bytes += HEADER_BYTES + key.len();
+        self.bytes += HEADER_BYTES + key.len() + value.len();
         match self.slots.entry(hash) {
             std::collections::hash_map::Entry::Vacant(slot) => {
-                slot.insert(Chain::One(key.into(), count));
+                slot.insert(Chain::One(key.into(), ops.make_value(value)));
             }
             std::collections::hash_map::Entry::Occupied(mut slot) => match slot.get_mut() {
                 Chain::One(..) => {
                     let prev =
                         std::mem::replace(slot.get_mut(), Chain::Many(Vec::with_capacity(2)));
-                    let Chain::One(pk, pc) = prev else { unreachable!() };
-                    let Chain::Many(v) = slot.get_mut() else { unreachable!() };
-                    v.push((pk, pc));
-                    v.push((key.into(), count));
+                    let Chain::One(pk, pv) = prev else { unreachable!() };
+                    let Chain::Many(chain) = slot.get_mut() else { unreachable!() };
+                    chain.push((pk, pv));
+                    chain.push((key.into(), ops.make_value(value)));
                 }
-                Chain::Many(v) => v.push((key.into(), count)),
+                Chain::Many(chain) => chain.push((key.into(), ops.make_value(value))),
             },
         }
     }
@@ -178,12 +189,12 @@ impl KeyTable {
         for (hash, chain) in self.slots.drain() {
             let owner = kv::owner_of(hash, nranks);
             match chain {
-                Chain::One(key, count) => {
-                    Record { hash, key: &key, count }.encode_into(&mut out[owner]);
+                Chain::One(key, value) => {
+                    OwnedRecord { hash, key, value }.encode_into(&mut out[owner]);
                 }
-                Chain::Many(v) => {
-                    for (key, count) in v {
-                        Record { hash, key: &key, count }.encode_into(&mut out[owner]);
+                Chain::Many(chain) => {
+                    for (key, value) in chain {
+                        OwnedRecord { hash, key, value }.encode_into(&mut out[owner]);
                     }
                 }
             }
@@ -198,10 +209,10 @@ impl KeyTable {
         let mut out = Vec::with_capacity(self.entries);
         for (hash, chain) in self.slots.drain() {
             match chain {
-                Chain::One(key, count) => out.push(OwnedRecord { hash, key, count }),
-                Chain::Many(v) => {
-                    for (key, count) in v {
-                        out.push(OwnedRecord { hash, key, count });
+                Chain::One(key, value) => out.push(OwnedRecord { hash, key, value }),
+                Chain::Many(chain) => {
+                    for (key, value) in chain {
+                        out.push(OwnedRecord { hash, key, value });
                     }
                 }
             }
@@ -221,7 +232,7 @@ pub struct SortedRun {
 impl SortedRun {
     /// Build a run from arbitrary records using the supplied sorter for
     /// the `(hash)` ordering (identity hook for the L1 kernel path) and
-    /// reducing equal keys with `reduce`.
+    /// reducing equal keys with `ops`.
     ///
     /// `sort_hook` receives the records and must reorder them so hashes
     /// are non-decreasing; ties and exact ordering by key are fixed up
@@ -229,7 +240,7 @@ impl SortedRun {
     pub fn build(
         mut records: Vec<OwnedRecord>,
         sort_hook: impl FnOnce(&mut Vec<OwnedRecord>),
-        reduce: impl Fn(u64, u64) -> u64,
+        ops: &dyn ValueOps,
     ) -> Self {
         sort_hook(&mut records);
         debug_assert!(records.windows(2).all(|w| w[0].hash <= w[1].hash));
@@ -250,7 +261,7 @@ impl SortedRun {
         for rec in records {
             match out.last_mut() {
                 Some(last) if last.hash == rec.hash && last.key == rec.key => {
-                    last.count = reduce(last.count, rec.count);
+                    ops.reduce_owned(&mut last.value, &rec.value);
                 }
                 _ => out.push(rec),
             }
@@ -259,13 +270,13 @@ impl SortedRun {
     }
 
     /// Build using a plain comparison sort (the scalar path).
-    pub fn build_scalar(records: Vec<OwnedRecord>, reduce: impl Fn(u64, u64) -> u64) -> Self {
+    pub fn build_scalar(records: Vec<OwnedRecord>, ops: &dyn ValueOps) -> Self {
         Self::build(
             records,
             // Unstable: no allocation, and `build` folds equal keys so
             // stability is irrelevant (§Perf iteration 2).
-            |recs| recs.sort_unstable_by(|a, b| Record::run_cmp(&a.as_record(), &b.as_record())),
-            reduce,
+            |recs| recs.sort_unstable_by(OwnedRecord::run_cmp),
+            ops,
         )
     }
 
@@ -293,44 +304,44 @@ impl SortedRun {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.encoded_bytes());
         for rec in &self.records {
-            rec.as_record().encode_into(&mut out);
+            rec.encode_into(&mut out);
         }
         out
     }
 
-    /// Decode a run previously produced by [`SortedRun::encode`].
-    pub fn decode(buf: &[u8]) -> crate::error::Result<Self> {
+    /// Decode a run previously produced by [`SortedRun::encode`],
+    /// materializing values into the tier `kind` prescribes.
+    pub fn decode(buf: &[u8], kind: ValueKind) -> crate::error::Result<Self> {
         let mut records = Vec::new();
         for rec in kv::RecordIter::new(buf) {
             let rec = rec?;
-            records.push(OwnedRecord { hash: rec.hash, key: rec.key.into(), count: rec.count });
+            records.push(OwnedRecord {
+                hash: rec.hash,
+                key: rec.key.into(),
+                value: Value::from_wire(kind, rec.value),
+            });
         }
         Ok(SortedRun { records })
     }
 
     /// Two-way merge of sorted runs, reducing equal keys — one level of
     /// the paper's merge-sort Combine tree (Fig. 3).
-    pub fn merge(self, other: SortedRun, reduce: impl Fn(u64, u64) -> u64) -> SortedRun {
-        let mut out = Vec::with_capacity(self.records.len() + other.records.len());
+    pub fn merge(self, other: SortedRun, ops: &dyn ValueOps) -> SortedRun {
+        let mut out: Vec<OwnedRecord> =
+            Vec::with_capacity(self.records.len() + other.records.len());
         let mut a = self.records.into_iter().peekable();
         let mut b = other.records.into_iter().peekable();
         loop {
             let take_a = match (a.peek(), b.peek()) {
-                (Some(ra), Some(rb)) => {
-                    Record::run_cmp(&ra.as_record(), &rb.as_record()).is_le()
-                }
+                (Some(ra), Some(rb)) => OwnedRecord::run_cmp(ra, rb).is_le(),
                 (Some(_), None) => true,
                 (None, Some(_)) => false,
                 (None, None) => break,
             };
             let rec = if take_a { a.next().unwrap() } else { b.next().unwrap() };
             match out.last_mut() {
-                Some(last) if {
-                    let l: &OwnedRecord = last;
-                    l.hash == rec.hash && l.key == rec.key
-                } => {
-                    let last: &mut OwnedRecord = last;
-                    last.count = reduce(last.count, rec.count);
+                Some(last) if last.hash == rec.hash && last.key == rec.key => {
+                    ops.reduce_owned(&mut last.value, &rec.value);
                 }
                 _ => out.push(rec),
             }
@@ -340,29 +351,36 @@ impl SortedRun {
 
     /// Verify run invariants (tests / debug).
     pub fn check_invariants(&self) -> bool {
-        self.records.windows(2).all(|w| {
-            Record::run_cmp(&w[0].as_record(), &w[1].as_record()).is_lt()
-        })
+        self.records.windows(2).all(|w| OwnedRecord::run_cmp(&w[0], &w[1]).is_lt())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mapreduce::kv::{ConcatOps, SumOps};
 
     fn rec(key: &str, count: u64) -> OwnedRecord {
-        OwnedRecord { hash: kv::hash_key(key.as_bytes()), key: key.as_bytes().into(), count }
+        OwnedRecord {
+            hash: kv::hash_key(key.as_bytes()),
+            key: key.as_bytes().into(),
+            value: Value::U64(count),
+        }
+    }
+
+    fn count_of(r: &OwnedRecord) -> u64 {
+        r.value.as_u64().unwrap()
     }
 
     #[test]
     fn table_local_reduce_merges_counts() {
         let mut t = KeyTable::new();
         let h = kv::hash_key(b"w");
-        t.merge(h, b"w", 1, u64::wrapping_add);
-        t.merge(h, b"w", 2, u64::wrapping_add);
+        t.merge(h, b"w", &1u64.to_le_bytes(), &SumOps);
+        t.merge(h, b"w", &2u64.to_le_bytes(), &SumOps);
         assert_eq!(t.len(), 1);
         let recs = t.drain_records();
-        assert_eq!(recs[0].count, 3);
+        assert_eq!(count_of(&recs[0]), 3);
         assert!(t.is_empty());
     }
 
@@ -370,20 +388,33 @@ mod tests {
     fn table_keeps_hash_collisions_distinct() {
         let mut t = KeyTable::new();
         // Force two different keys into the same artificial hash.
-        t.merge(42, b"alpha", 1, u64::wrapping_add);
-        t.merge(42, b"beta", 5, u64::wrapping_add);
+        t.merge(42, b"alpha", &1u64.to_le_bytes(), &SumOps);
+        t.merge(42, b"beta", &5u64.to_le_bytes(), &SumOps);
         assert_eq!(t.len(), 2);
         let mut recs = t.drain_records();
         recs.sort_by(|a, b| a.key.cmp(&b.key));
-        assert_eq!(recs[0].count, 1);
-        assert_eq!(recs[1].count, 5);
+        assert_eq!(count_of(&recs[0]), 1);
+        assert_eq!(count_of(&recs[1]), 5);
+    }
+
+    #[test]
+    fn table_grows_variable_values() {
+        let mut t = KeyTable::new();
+        let h = kv::hash_key(b"k");
+        t.merge(h, b"k", b"aa", &ConcatOps);
+        let before = t.bytes();
+        t.merge(h, b"k", b"bb", &ConcatOps);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.bytes(), before + 2, "byte accounting tracks value growth");
+        let recs = t.drain_records();
+        assert_eq!(recs[0].value.as_bytes(), Some(b"aabb".as_slice()));
     }
 
     #[test]
     fn drain_by_owner_routes_by_hash_bucket() {
         let mut t = KeyTable::new();
         for w in ["a", "b", "c", "d", "e"] {
-            t.merge(kv::hash_key(w.as_bytes()), w.as_bytes(), 1, u64::wrapping_add);
+            t.merge(kv::hash_key(w.as_bytes()), w.as_bytes(), &1u64.to_le_bytes(), &SumOps);
         }
         let parts = t.drain_by_owner(4);
         assert_eq!(parts.len(), 4);
@@ -396,41 +427,53 @@ mod tests {
 
     #[test]
     fn build_scalar_sorts_and_folds() {
-        let run = SortedRun::build_scalar(
-            vec![rec("b", 1), rec("a", 2), rec("b", 3)],
-            u64::wrapping_add,
-        );
+        let run =
+            SortedRun::build_scalar(vec![rec("b", 1), rec("a", 2), rec("b", 3)], &SumOps);
         assert_eq!(run.len(), 2);
         assert!(run.check_invariants());
-        let total: u64 = run.records().iter().map(|r| r.count).sum();
+        let total: u64 = run.records().iter().map(count_of).sum();
         assert_eq!(total, 6);
     }
 
     #[test]
     fn encode_decode_run_roundtrip() {
-        let run = SortedRun::build_scalar(
-            vec![rec("x", 1), rec("y", 2), rec("z", 3)],
-            u64::wrapping_add,
-        );
-        let decoded = SortedRun::decode(&run.encode()).unwrap();
+        let run =
+            SortedRun::build_scalar(vec![rec("x", 1), rec("y", 2), rec("z", 3)], &SumOps);
+        let decoded = SortedRun::decode(&run.encode(), ValueKind::InlineU64).unwrap();
         assert_eq!(decoded.records(), run.records());
     }
 
     #[test]
+    fn variable_run_roundtrip_and_merge() {
+        let mk = |key: &str, payload: &[u8]| OwnedRecord {
+            hash: kv::hash_key(key.as_bytes()),
+            key: key.as_bytes().into(),
+            value: Value::Bytes(payload.to_vec()),
+        };
+        let a = SortedRun::build_scalar(vec![mk("k1", b"x"), mk("k2", b"y")], &ConcatOps);
+        let decoded = SortedRun::decode(&a.encode(), ValueKind::Variable).unwrap();
+        assert_eq!(decoded.records(), a.records());
+        let b = SortedRun::build_scalar(vec![mk("k2", b"z")], &ConcatOps);
+        let m = a.merge(b, &ConcatOps);
+        let k2 = m.records().iter().find(|r| r.key.as_ref() == b"k2").unwrap();
+        assert_eq!(k2.value.as_bytes(), Some(b"yz".as_slice()));
+    }
+
+    #[test]
     fn merge_reduces_shared_keys() {
-        let a = SortedRun::build_scalar(vec![rec("k1", 1), rec("k2", 2)], u64::wrapping_add);
-        let b = SortedRun::build_scalar(vec![rec("k2", 10), rec("k3", 3)], u64::wrapping_add);
-        let m = a.merge(b, u64::wrapping_add);
+        let a = SortedRun::build_scalar(vec![rec("k1", 1), rec("k2", 2)], &SumOps);
+        let b = SortedRun::build_scalar(vec![rec("k2", 10), rec("k3", 3)], &SumOps);
+        let m = a.merge(b, &SumOps);
         assert_eq!(m.len(), 3);
         assert!(m.check_invariants());
         let k2 = m.records().iter().find(|r| r.key.as_ref() == b"k2").unwrap();
-        assert_eq!(k2.count, 12);
+        assert_eq!(count_of(k2), 12);
     }
 
     #[test]
     fn merge_with_empty_is_identity() {
-        let a = SortedRun::build_scalar(vec![rec("k", 4)], u64::wrapping_add);
-        let m = a.clone().merge(SortedRun::default(), u64::wrapping_add);
+        let a = SortedRun::build_scalar(vec![rec("k", 4)], &SumOps);
+        let m = a.clone().merge(SortedRun::default(), &SumOps);
         assert_eq!(m.records(), a.records());
     }
 
@@ -439,10 +482,10 @@ mod tests {
         // sort_hook only orders by hash; equal-hash keys must come out
         // key-ordered and distinct.
         let records = vec![
-            OwnedRecord { hash: 7, key: b"zz".as_slice().into(), count: 1 },
-            OwnedRecord { hash: 7, key: b"aa".as_slice().into(), count: 2 },
+            OwnedRecord { hash: 7, key: b"zz".as_slice().into(), value: Value::U64(1) },
+            OwnedRecord { hash: 7, key: b"aa".as_slice().into(), value: Value::U64(2) },
         ];
-        let run = SortedRun::build(records, |r| r.sort_by_key(|x| x.hash), u64::wrapping_add);
+        let run = SortedRun::build(records, |r| r.sort_by_key(|x| x.hash), &SumOps);
         assert_eq!(run.records()[0].key.as_ref(), b"aa");
         assert!(run.check_invariants());
     }

@@ -14,20 +14,72 @@ use crate::storage::StripedFile;
 
 use super::bucket::{KeyTable, SortedRun};
 use super::config::{BackendKind, JobConfig};
-use super::kv;
+use super::kv::{self, Value, ValueKind, ValueOps};
 
 /// A use-case plugged into the framework (the paper's *Use-case class*:
 /// `Map()` + `Reduce()`, with local reduce applied automatically).
+///
+/// Values are free-form byte strings on the wire (`| h | key | value |`,
+/// §2.1).  A use-case whose values are fixed 8-byte integers declares
+/// [`ValueKind::InlineU64`] and implements [`UseCase::reduce_u64`]; the
+/// framework then keeps its values inline (no per-value allocation,
+/// bit-compatible with the kernel count lanes).  Variable-width
+/// use-cases declare [`ValueKind::Variable`] and implement
+/// [`UseCase::reduce`] over value byte slices.
 pub trait UseCase: Send + Sync {
     /// Display name.
     fn name(&self) -> &'static str;
 
-    /// Map one input record (a line; record integrity across task
-    /// boundaries is the framework's job) into key/value emissions.
-    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], u64));
+    /// How values of this use-case are represented and reduced.
+    fn value_kind(&self) -> ValueKind;
 
-    /// Merge two values of the same key (associative + commutative).
-    fn reduce(&self, a: u64, b: u64) -> u64;
+    /// Map one input record (a line; record integrity across task
+    /// boundaries is the framework's job) into `(key, value-bytes)`
+    /// emissions.  Inline-u64 use-cases emit 8 LE bytes per value.
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8]));
+
+    /// Merge two inline values (associative + commutative).  Only called
+    /// for [`ValueKind::InlineU64`] use-cases.
+    fn reduce_u64(&self, _a: u64, _b: u64) -> u64 {
+        unreachable!("{}: reduce_u64 on a variable-width use-case", self.name())
+    }
+
+    /// Fold `incoming` value bytes into the accumulator `acc`
+    /// (associative + commutative).  The default routes through
+    /// [`UseCase::reduce_u64`], so inline-u64 use-cases need not
+    /// implement it.
+    fn reduce(&self, acc: &mut Vec<u8>, incoming: &[u8]) {
+        let folded = self.reduce_u64(kv::u64_from_value(acc), kv::u64_from_value(incoming));
+        acc.clear();
+        acc.extend_from_slice(&folded.to_le_bytes());
+    }
+
+    /// Render an output value for human display (CLI / examples).
+    fn render_value(&self, value: &Value) -> String {
+        match value {
+            Value::U64(v) => v.to_string(),
+            Value::Bytes(b) => format!("<{} bytes>", b.len()),
+        }
+    }
+}
+
+/// [`ValueOps`] adapter over a use-case: what jobs thread through the
+/// bucket / sorted-run machinery.
+#[derive(Clone, Copy)]
+pub struct UseCaseOps<'a>(pub &'a dyn UseCase);
+
+impl ValueOps for UseCaseOps<'_> {
+    fn kind(&self) -> ValueKind {
+        self.0.value_kind()
+    }
+
+    fn reduce_u64(&self, a: u64, b: u64) -> u64 {
+        self.0.reduce_u64(a, b)
+    }
+
+    fn reduce_bytes(&self, acc: &mut Vec<u8>, incoming: &[u8]) {
+        self.0.reduce(acc, incoming);
+    }
 }
 
 /// One Map task: a byte extent of the input.
@@ -59,6 +111,13 @@ pub struct JobShared {
     pub engine: Option<Arc<Engine>>,
     /// Node-wide memory tracker.
     pub mem: Arc<MemoryTracker>,
+}
+
+impl JobShared {
+    /// Value-ops view of the use-case (thread through tables and runs).
+    pub fn ops(&self) -> UseCaseOps<'_> {
+        UseCaseOps(&*self.usecase)
+    }
 }
 
 /// What one rank thread hands back to the driver.
@@ -155,14 +214,13 @@ pub fn run_map_task(
     records: &[u8],
     staging: &mut KeyTable,
 ) -> Result<usize> {
-    let usecase = &*shared.usecase;
-    let reduce = |a, b| usecase.reduce(a, b);
+    let ops = shared.ops();
     let local_reduce = shared.config.local_reduce;
-    let stage = |staging: &mut KeyTable, hash: u64, key: &[u8], count: u64| {
+    let stage = |staging: &mut KeyTable, hash: u64, key: &[u8], value: &[u8]| {
         if local_reduce {
-            staging.merge(hash, key, count, reduce);
+            staging.merge(hash, key, value, &ops);
         } else {
-            staging.push_unmerged(hash, key, count);
+            staging.push_unmerged(hash, key, value, &ops);
         }
     };
 
@@ -171,14 +229,17 @@ pub fn run_map_task(
         Some(engine) => {
             // Kernel path: collect emissions into a flat arena (one
             // allocation pool, not one Vec per token) and hash in
-            // geometry-sized batches through the PJRT artifact.
+            // geometry-sized batches through the PJRT artifact.  Keys
+            // and values share the arena; spans index into it.
             let mut bytes: Vec<u8> = Vec::with_capacity(records.len());
-            let mut spans: Vec<(u32, u16, u64)> = Vec::with_capacity(records.len() / 6);
+            let mut spans: Vec<(u32, u16, u32, u16)> = Vec::with_capacity(records.len() / 6);
             for line in records.split(|&b| b == b'\n') {
-                usecase.map_record(line, &mut |k, v| {
-                    let off = bytes.len() as u32;
+                shared.usecase.map_record(line, &mut |k, v| {
+                    let koff = bytes.len() as u32;
                     bytes.extend_from_slice(k);
-                    spans.push((off, k.len() as u16, v));
+                    let voff = bytes.len() as u32;
+                    bytes.extend_from_slice(v);
+                    spans.push((koff, k.len() as u16, voff, v.len() as u16));
                 });
             }
             emitted = spans.len();
@@ -186,12 +247,15 @@ pub fn run_map_task(
             for chunk in spans.chunks(batch) {
                 let refs: Vec<&[u8]> = chunk
                     .iter()
-                    .map(|&(off, len, _)| &bytes[off as usize..off as usize + len as usize])
+                    .map(|&(koff, klen, _, _)| {
+                        &bytes[koff as usize..koff as usize + klen as usize]
+                    })
                     .collect();
                 let (hashes, _buckets) = engine.hash_batch(&refs)?;
-                for (h, &(off, len, count)) in hashes.iter().zip(chunk) {
-                    let key = &bytes[off as usize..off as usize + len as usize];
-                    stage(staging, *h, key, count);
+                for (h, &(koff, klen, voff, vlen)) in hashes.iter().zip(chunk) {
+                    let key = &bytes[koff as usize..koff as usize + klen as usize];
+                    let value = &bytes[voff as usize..voff as usize + vlen as usize];
+                    stage(staging, *h, key, value);
                 }
             }
         }
@@ -199,7 +263,7 @@ pub fn run_map_task(
             // Scalar path: stream emissions straight into the staging
             // table — no intermediate buffering at all.
             for line in records.split(|&b| b == b'\n') {
-                usecase.map_record(line, &mut |k, v| {
+                shared.usecase.map_record(line, &mut |k, v| {
                     emitted += 1;
                     stage(staging, kv::hash_key(k), k, v);
                 });
@@ -222,7 +286,7 @@ pub fn run_map_task(
 pub fn build_local_run(
     shared: &JobShared,
     records: Vec<super::bucket::OwnedRecord>,
-    reduce: impl Fn(u64, u64) -> u64 + Copy,
+    ops: &dyn ValueOps,
 ) -> SortedRun {
     match &shared.engine {
         Some(engine) => {
@@ -262,10 +326,10 @@ pub fn build_local_run(
                     }
                     *recs = merged;
                 },
-                reduce,
+                ops,
             )
         }
-        None => SortedRun::build_scalar(records, reduce),
+        None => SortedRun::build_scalar(records, ops),
     }
 }
 
@@ -305,8 +369,8 @@ pub struct Job {
 pub struct JobOutput {
     /// Metrics and timings.
     pub report: JobReport,
-    /// Final `(key, count)` pairs in run order (hash, then key).
-    pub result: Vec<(Vec<u8>, u64)>,
+    /// Final `(key, value)` pairs in run order (hash, then key).
+    pub result: Vec<(Vec<u8>, Value)>,
 }
 
 impl Job {
@@ -375,14 +439,15 @@ impl Job {
         }
         let run = result_run.ok_or_else(|| Error::Config("no rank produced a result".into()))?;
         let unique_keys = run.len() as u64;
-        // Wrapping: values need not be additive counts (e.g. the
-        // inverted-index use-case reduces 64-bit shard masks with OR).
+        // Wrapping: inline values need not be additive counts, and
+        // variable values contribute their payload length (see
+        // `Value::weight`).
         let total_count: u64 = run
             .records()
             .iter()
-            .fold(0u64, |acc, r| acc.wrapping_add(r.count));
-        let result: Vec<(Vec<u8>, u64)> =
-            run.records().iter().map(|r| (r.key.to_vec(), r.count)).collect();
+            .fold(0u64, |acc, r| acc.wrapping_add(r.value.weight()));
+        let result: Vec<(Vec<u8>, Value)> =
+            run.records().iter().map(|r| (r.key.to_vec(), r.value.clone())).collect();
 
         let report = JobReport {
             backend: backend.name(),
@@ -403,7 +468,9 @@ impl Job {
 
 /// Process-wide engine cache: artifacts are compiled once per process
 /// (PJRT compilation of the three HLO modules costs seconds; jobs run
-/// back-to-back in the harness and tests).
+/// back-to-back in the harness and tests).  Returns `None` — and jobs
+/// fall back to the scalar path — when artifacts are absent or the
+/// build carries the inert `xla` stub.
 pub fn cached_engine() -> Option<Arc<Engine>> {
     use std::sync::OnceLock;
     static ENGINE: OnceLock<Option<Arc<Engine>>> = OnceLock::new();

@@ -1,51 +1,63 @@
 //! Variable-length key-value records with a fixed-size header.
 //!
 //! The wire/bucket format of §2.1: every tuple is encoded as a
-//! fixed-size header followed by the variable-length key — so remote
-//! processes can split a retrieved byte range by "interpreting the
-//! headers".  Unlike the paper's `| h | key | value |` with free-form
-//! value bytes, values in this framework are 64-bit reduce-able counts
-//! (all shipped use-cases reduce integers), and we additionally carry the
-//! 64-bit key hash so receivers never re-hash:
+//! fixed-size header followed by the variable-length key and value — so
+//! remote processes can split a retrieved byte range by "interpreting the
+//! headers".  We additionally carry the 64-bit key hash so receivers
+//! never re-hash:
 //!
 //! ```text
-//! | hash: u64 | klen: u16 | count: u64 | key: klen bytes |
+//! | hash: u64 | klen: u16 | vlen: u16 | key: klen bytes | value: vlen bytes |
 //! ```
 //!
 //! Records sort by `(hash, key)`; equal keys reduce.
+//!
+//! ## Two-tier values
+//!
+//! Value bytes are free-form (posting lists, aggregates, top-k sets…),
+//! but the dominant use-cases (word-count, histogram) reduce fixed
+//! 8-byte integers.  Owned storage therefore keeps two tiers
+//! ([`Value`]): use-cases that declare [`ValueKind::InlineU64`] store
+//! their value as a bare `u64` (no heap allocation, bit-compatible with
+//! the L1/L2 kernels' `u64` count lanes), while [`ValueKind::Variable`]
+//! use-cases own their bytes and reduce through byte-slice folds.  On
+//! the wire both tiers use the same encoding — an inline value is
+//! exactly 8 little-endian bytes.
 
 use crate::error::{Error, Result};
 
-/// Header bytes preceding the key.
-pub const HEADER_BYTES: usize = 8 + 2 + 8;
+/// Header bytes preceding the key (`hash` + `klen` + `vlen`).
+pub const HEADER_BYTES: usize = 8 + 2 + 2;
 
 /// Longest key the framework accepts (u16 length field).
 pub const MAX_KEY_LEN: usize = u16::MAX as usize;
 
-/// One decoded key-value record (borrowing the key from its buffer).
+/// Longest value the framework accepts (u16 length field).  Use-cases
+/// with unbounded accumulators (posting lists…) must bound them below
+/// this (the shipped inverted index caps its shard space accordingly).
+pub const MAX_VALUE_LEN: usize = u16::MAX as usize;
+
+/// One decoded key-value record (borrowing key and value from its
+/// buffer).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Record<'a> {
     /// 64-bit hash of the key (FNV-1a over the first 24 bytes).
     pub hash: u64,
     /// Key bytes.
     pub key: &'a [u8],
-    /// Reduce-able value.
-    pub count: u64,
+    /// Value bytes (8 LE bytes for inline-u64 use-cases).
+    pub value: &'a [u8],
 }
 
 impl<'a> Record<'a> {
     /// Encoded size of this record.
     pub fn encoded_len(&self) -> usize {
-        HEADER_BYTES + self.key.len()
+        HEADER_BYTES + self.key.len() + self.value.len()
     }
 
     /// Append the encoded record to `out`.
     pub fn encode_into(&self, out: &mut Vec<u8>) {
-        debug_assert!(self.key.len() <= MAX_KEY_LEN);
-        out.extend_from_slice(&self.hash.to_le_bytes());
-        out.extend_from_slice(&(self.key.len() as u16).to_le_bytes());
-        out.extend_from_slice(&self.count.to_le_bytes());
-        out.extend_from_slice(self.key);
+        encode_parts(self.hash, self.key, self.value, out);
     }
 
     /// Decode one record at `buf[off..]`; returns (record, next offset).
@@ -59,20 +71,206 @@ impl<'a> Record<'a> {
         }
         let hash = u64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
         let klen = u16::from_le_bytes(buf[off + 8..off + 10].try_into().unwrap()) as usize;
-        let count = u64::from_le_bytes(buf[off + 10..off + 18].try_into().unwrap());
-        let end = hdr_end + klen;
+        let vlen = u16::from_le_bytes(buf[off + 10..off + 12].try_into().unwrap()) as usize;
+        let key_end = hdr_end + klen;
+        let end = key_end + vlen;
         if end > buf.len() {
             return Err(Error::KvDecode(format!(
-                "truncated key at {off}: klen {klen}, buf len {}",
+                "truncated record at {off}: klen {klen}, vlen {vlen}, buf len {}",
                 buf.len()
             )));
         }
-        Ok((Record { hash, key: &buf[hdr_end..end], count }, end))
+        Ok((
+            Record { hash, key: &buf[hdr_end..key_end], value: &buf[key_end..end] },
+            end,
+        ))
     }
 
     /// Ordering used by sorted runs: by hash, ties broken by key bytes.
     pub fn run_cmp(a: &Record<'_>, b: &Record<'_>) -> std::cmp::Ordering {
         a.hash.cmp(&b.hash).then_with(|| a.key.cmp(b.key))
+    }
+}
+
+/// Append one encoded record built from parts (shared by the borrowed
+/// and owned representations).
+pub fn encode_parts(hash: u64, key: &[u8], value: &[u8], out: &mut Vec<u8>) {
+    debug_assert!(key.len() <= MAX_KEY_LEN);
+    debug_assert!(value.len() <= MAX_VALUE_LEN);
+    out.extend_from_slice(&hash.to_le_bytes());
+    out.extend_from_slice(&(key.len() as u16).to_le_bytes());
+    out.extend_from_slice(&(value.len() as u16).to_le_bytes());
+    out.extend_from_slice(key);
+    out.extend_from_slice(value);
+}
+
+/// How a use-case's values are represented in owned storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ValueKind {
+    /// Values are always exactly 8 LE bytes, kept inline as `u64` and
+    /// reduced with the integer reducer — the hot path, bit-compatible
+    /// with the kernels' count lanes.
+    InlineU64,
+    /// Free-form byte strings reduced with the byte-slice reducer.
+    Variable,
+}
+
+/// An owned value in one of the two tiers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Value {
+    /// Inline 8-byte integer (fast path).
+    U64(u64),
+    /// Variable-width payload bytes.
+    Bytes(Vec<u8>),
+}
+
+impl Value {
+    /// Materialize a wire value under `kind`.
+    pub fn from_wire(kind: ValueKind, bytes: &[u8]) -> Value {
+        match kind {
+            ValueKind::InlineU64 => Value::U64(u64_from_value(bytes)),
+            ValueKind::Variable => Value::Bytes(bytes.to_vec()),
+        }
+    }
+
+    /// Bytes this value occupies on the wire.
+    pub fn wire_len(&self) -> usize {
+        match self {
+            Value::U64(_) => 8,
+            Value::Bytes(b) => b.len(),
+        }
+    }
+
+    /// Append the wire encoding of this value to `out`.
+    pub fn write_into(&self, out: &mut Vec<u8>) {
+        match self {
+            Value::U64(v) => out.extend_from_slice(&v.to_le_bytes()),
+            Value::Bytes(b) => out.extend_from_slice(b),
+        }
+    }
+
+    /// The integer value, when this is the inline tier.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::U64(v) => Some(*v),
+            Value::Bytes(_) => None,
+        }
+    }
+
+    /// The payload bytes, when this is the variable tier.
+    pub fn as_bytes(&self) -> Option<&[u8]> {
+        match self {
+            Value::U64(_) => None,
+            Value::Bytes(b) => Some(b),
+        }
+    }
+
+    /// Scalar weight used for report totals and display ordering:
+    /// inline values count as themselves, variable values as their
+    /// payload length.
+    pub fn weight(&self) -> u64 {
+        match self {
+            Value::U64(v) => *v,
+            Value::Bytes(b) => b.len() as u64,
+        }
+    }
+}
+
+/// Interpret wire value bytes as a little-endian `u64` (inline tier).
+///
+/// Contract: inline values are exactly 8 bytes — enforced in debug
+/// builds.  In release builds malformed input degrades gracefully
+/// (shorter zero-extends, longer truncates) rather than panicking a
+/// whole job.
+#[inline]
+pub fn u64_from_value(bytes: &[u8]) -> u64 {
+    debug_assert!(bytes.len() == 8, "inline value must be 8 bytes, got {}", bytes.len());
+    let mut raw = [0u8; 8];
+    let n = bytes.len().min(8);
+    raw[..n].copy_from_slice(&bytes[..n]);
+    u64::from_le_bytes(raw)
+}
+
+/// Reduce semantics over two-tier values.
+///
+/// The backends and the bucket/run machinery are generic over this
+/// trait; jobs thread a [`crate::mapreduce::job::UseCaseOps`] adapter
+/// through it, and tests/benches use the concrete ops below.
+pub trait ValueOps: Sync {
+    /// Which tier values of this operator live in.
+    fn kind(&self) -> ValueKind;
+
+    /// Merge two inline values (associative + commutative).
+    fn reduce_u64(&self, a: u64, b: u64) -> u64;
+
+    /// Fold wire bytes `incoming` into the byte accumulator `acc`.
+    fn reduce_bytes(&self, acc: &mut Vec<u8>, incoming: &[u8]);
+
+    /// Materialize a wire value into owned storage.
+    fn make_value(&self, wire: &[u8]) -> Value {
+        Value::from_wire(self.kind(), wire)
+    }
+
+    /// Fold wire bytes into an owned accumulator (tier chosen by the
+    /// accumulator, so inline stays allocation-free).
+    fn reduce_into(&self, acc: &mut Value, incoming: &[u8]) {
+        match acc {
+            Value::U64(a) => *a = self.reduce_u64(*a, u64_from_value(incoming)),
+            Value::Bytes(v) => self.reduce_bytes(v, incoming),
+        }
+    }
+
+    /// Fold an owned value into an owned accumulator.
+    fn reduce_owned(&self, acc: &mut Value, incoming: &Value) {
+        match incoming {
+            Value::U64(b) => match acc {
+                Value::U64(a) => *a = self.reduce_u64(*a, *b),
+                Value::Bytes(v) => {
+                    let tmp = b.to_le_bytes();
+                    self.reduce_bytes(v, &tmp);
+                }
+            },
+            Value::Bytes(bytes) => self.reduce_into(acc, bytes),
+        }
+    }
+}
+
+/// Wrapping-sum over inline u64 values (tests and benches).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SumOps;
+
+impl ValueOps for SumOps {
+    fn kind(&self) -> ValueKind {
+        ValueKind::InlineU64
+    }
+
+    fn reduce_u64(&self, a: u64, b: u64) -> u64 {
+        a.wrapping_add(b)
+    }
+
+    fn reduce_bytes(&self, acc: &mut Vec<u8>, incoming: &[u8]) {
+        let sum = u64_from_value(acc).wrapping_add(u64_from_value(incoming));
+        acc.clear();
+        acc.extend_from_slice(&sum.to_le_bytes());
+    }
+}
+
+/// Byte-wise concatenation over variable values (tests exercising the
+/// variable tier without a full use-case).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ConcatOps;
+
+impl ValueOps for ConcatOps {
+    fn kind(&self) -> ValueKind {
+        ValueKind::Variable
+    }
+
+    fn reduce_u64(&self, _a: u64, _b: u64) -> u64 {
+        unreachable!("ConcatOps is a variable-width operator")
+    }
+
+    fn reduce_bytes(&self, acc: &mut Vec<u8>, incoming: &[u8]) {
+        acc.extend_from_slice(incoming);
     }
 }
 
@@ -150,48 +348,103 @@ mod tests {
     #[test]
     fn encode_decode_roundtrip() {
         let mut buf = Vec::new();
-        let rec = Record { hash: 0xDEADBEEF, key: b"the-key", count: 42 };
+        let rec = Record { hash: 0xDEADBEEF, key: b"the-key", value: &42u64.to_le_bytes() };
         rec.encode_into(&mut buf);
         let (dec, next) = Record::decode(&buf, 0).unwrap();
         assert_eq!(dec, rec);
         assert_eq!(next, buf.len());
+        assert_eq!(u64_from_value(dec.value), 42);
+    }
+
+    #[test]
+    fn variable_width_values_roundtrip() {
+        let mut buf = Vec::new();
+        let payloads: [&[u8]; 3] = [b"", b"abc", b"a-much-longer-posting-list-payload"];
+        for (i, p) in payloads.iter().enumerate() {
+            Record { hash: i as u64, key: b"k", value: p }.encode_into(&mut buf);
+        }
+        let recs = decode_all(&buf).unwrap();
+        assert_eq!(recs.len(), 3);
+        for (rec, p) in recs.iter().zip(payloads.iter()) {
+            assert_eq!(rec.value, *p);
+        }
     }
 
     #[test]
     fn iterates_multiple_records() {
         let mut buf = Vec::new();
         for i in 0..10u64 {
-            Record { hash: i, key: format!("k{i}").as_bytes(), count: i * 2 }
-                .encode_into(&mut buf);
+            Record {
+                hash: i,
+                key: format!("k{i}").as_bytes(),
+                value: &(i * 2).to_le_bytes(),
+            }
+            .encode_into(&mut buf);
         }
         let recs = decode_all(&buf).unwrap();
         assert_eq!(recs.len(), 10);
         assert_eq!(recs[3].key, b"k3");
-        assert_eq!(recs[3].count, 6);
+        assert_eq!(u64_from_value(recs[3].value), 6);
     }
 
     #[test]
-    fn empty_key_is_legal() {
+    fn empty_key_and_value_are_legal() {
         let mut buf = Vec::new();
-        Record { hash: 1, key: b"", count: 7 }.encode_into(&mut buf);
+        Record { hash: 1, key: b"", value: b"" }.encode_into(&mut buf);
         let recs = decode_all(&buf).unwrap();
         assert_eq!(recs[0].key, b"");
+        assert_eq!(recs[0].value, b"");
     }
 
     #[test]
     fn truncated_header_is_error() {
         let mut buf = Vec::new();
-        Record { hash: 1, key: b"abc", count: 7 }.encode_into(&mut buf);
+        Record { hash: 1, key: b"abc", value: b"v" }.encode_into(&mut buf);
         buf.truncate(HEADER_BYTES - 1);
         assert!(decode_all(&buf).is_err());
     }
 
     #[test]
-    fn truncated_key_is_error() {
+    fn truncated_body_is_error() {
         let mut buf = Vec::new();
-        Record { hash: 1, key: b"abcdef", count: 7 }.encode_into(&mut buf);
+        Record { hash: 1, key: b"abcdef", value: b"payload" }.encode_into(&mut buf);
         buf.truncate(buf.len() - 2);
         assert!(decode_all(&buf).is_err());
+    }
+
+    #[test]
+    fn value_tiers_roundtrip_through_wire() {
+        let inline = Value::from_wire(ValueKind::InlineU64, &7u64.to_le_bytes());
+        assert_eq!(inline, Value::U64(7));
+        assert_eq!(inline.wire_len(), 8);
+        let mut out = Vec::new();
+        inline.write_into(&mut out);
+        assert_eq!(out, 7u64.to_le_bytes());
+
+        let var = Value::from_wire(ValueKind::Variable, b"xyz");
+        assert_eq!(var.as_bytes(), Some(b"xyz".as_slice()));
+        assert_eq!(var.wire_len(), 3);
+        assert_eq!(var.weight(), 3);
+    }
+
+    #[test]
+    fn sum_ops_reduces_both_tiers() {
+        let mut acc = Value::U64(3);
+        SumOps.reduce_into(&mut acc, &4u64.to_le_bytes());
+        assert_eq!(acc, Value::U64(7));
+        SumOps.reduce_owned(&mut acc, &Value::U64(1));
+        assert_eq!(acc, Value::U64(8));
+
+        let mut bytes_acc = Value::Bytes(3u64.to_le_bytes().to_vec());
+        SumOps.reduce_into(&mut bytes_acc, &4u64.to_le_bytes());
+        assert_eq!(bytes_acc, Value::Bytes(7u64.to_le_bytes().to_vec()));
+    }
+
+    #[test]
+    fn concat_ops_appends() {
+        let mut acc = Value::Bytes(b"ab".to_vec());
+        ConcatOps.reduce_into(&mut acc, b"cd");
+        assert_eq!(acc.as_bytes(), Some(b"abcd".as_slice()));
     }
 
     #[test]
@@ -219,9 +472,9 @@ mod tests {
 
     #[test]
     fn run_cmp_orders_by_hash_then_key() {
-        let a = Record { hash: 1, key: b"b", count: 0 };
-        let b = Record { hash: 1, key: b"c", count: 0 };
-        let c = Record { hash: 2, key: b"a", count: 0 };
+        let a = Record { hash: 1, key: b"b", value: b"" };
+        let b = Record { hash: 1, key: b"c", value: b"" };
+        let c = Record { hash: 2, key: b"a", value: b"" };
         assert!(Record::run_cmp(&a, &b).is_lt());
         assert!(Record::run_cmp(&b, &c).is_lt());
     }

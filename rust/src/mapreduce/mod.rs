@@ -16,5 +16,5 @@ pub mod onesided;
 pub mod twosided;
 
 pub use config::{BackendKind, JobConfig};
-pub use job::{Job, JobOutput, UseCase};
-pub use kv::Record;
+pub use job::{Job, JobOutput, UseCase, UseCaseOps};
+pub use kv::{Record, Value, ValueKind, ValueOps};

@@ -39,7 +39,7 @@ use super::job::{
     build_local_run, read_len, read_start, run_map_task, task_records, timed, Backend,
     JobShared, RankOutcome,
 };
-use super::kv;
+use super::kv::{self, ValueOps};
 
 /// Rank status values published through the Status window.
 pub const STATUS_MAP: u64 = 0;
@@ -188,7 +188,7 @@ impl Backend for Mr1s {
         let me = ctx.rank();
         let n = ctx.nranks();
         let cfg = &shared.config;
-        let reduce = |a, b| shared.usecase.reduce(a, b);
+        let ops = shared.ops();
 
         // ---- Window setup (collective) + init fence ------------------
         let ctrl = Window::create(ctx, ctrl_size(n));
@@ -337,7 +337,7 @@ impl Backend for Mr1s {
                 }
                 // Decode headers, reduce locally.
                 for rec in kv::RecordIter::new(&buf) {
-                    reduce_table.merge_record(rec?, reduce);
+                    reduce_table.merge_record(rec?, &ops);
                 }
                 ctx.clock.advance(ctx.cost.compute.reduce_cost(fill as usize));
             }
@@ -361,7 +361,7 @@ impl Backend for Mr1s {
             let mut records = reduce_table.drain_records();
             records.extend(retained.drain_records());
             let nbytes: usize = records.iter().map(|r| r.encoded_len()).sum();
-            let mut merged = build_local_run(shared, records, reduce);
+            let mut merged = build_local_run(shared, records, &ops);
             ctx.clock.advance(ctx.cost.compute.combine_cost(nbytes));
 
             // Checkpoint the reduced state (window sync after Reduce).
@@ -405,9 +405,9 @@ impl Backend for Mr1s {
                             off += take;
                         }
                         comb_win.unlock(&ctx.clock, LockKind::Shared, peer);
-                        let peer_run = SortedRun::decode(&buf)?;
+                        let peer_run = SortedRun::decode(&buf, ops.kind())?;
                         shared.mem.alloc(ctx.clock.now(), len as u64);
-                        merged = merged.merge(peer_run, reduce);
+                        merged = merged.merge(peer_run, &ops);
                         ctx.clock.advance(ctx.cost.compute.combine_cost(len));
                         shared.mem.free(ctx.clock.now(), len as u64);
                     }
@@ -470,7 +470,7 @@ impl Mr1s {
     ) -> Result<Vec<u8>> {
         let me = ctx.rank();
         let n = ctx.nranks();
-        let reduce = |a, b| shared.usecase.reduce(a, b);
+        let ops = shared.ops();
         let mut appended = Vec::new();
 
         let parts = staging.drain_by_owner(n);
@@ -481,7 +481,7 @@ impl Mr1s {
             if t == me {
                 // Own keys reduce in place — no window traffic.
                 for rec in kv::RecordIter::new(&buf) {
-                    reduce_table.merge_record(rec?, reduce);
+                    reduce_table.merge_record(rec?, &ops);
                 }
                 continue;
             }
@@ -490,7 +490,7 @@ impl Mr1s {
             if status >= STATUS_REDUCE || out_buckets[t].closed {
                 out_buckets[t].closed = true;
                 for rec in kv::RecordIter::new(&buf) {
-                    retained.merge_record(rec?, reduce);
+                    retained.merge_record(rec?, &ops);
                 }
                 continue;
             }
@@ -500,7 +500,7 @@ impl Mr1s {
                     // Closed (or full) under us: ownership transfer.
                     out_buckets[t].closed = true;
                     for rec in kv::RecordIter::new(&buf) {
-                        retained.merge_record(rec?, reduce);
+                        retained.merge_record(rec?, &ops);
                     }
                 }
             }

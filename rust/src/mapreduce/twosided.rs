@@ -21,7 +21,7 @@ use super::job::{
     build_local_run, read_len, read_start, run_map_task, task_records, timed, Backend,
     JobShared, RankOutcome, TaskSpec,
 };
-use super::kv;
+use super::kv::{self, ValueOps};
 
 /// Message tag for Combine-tree run transfers.
 const TAG_COMBINE: u64 = 0xC0;
@@ -34,7 +34,7 @@ impl Backend for Mr2s {
         let tl = Timeline::new();
         let me = ctx.rank();
         let n = ctx.nranks();
-        let reduce = |a, b| shared.usecase.reduce(a, b);
+        let ops = shared.ops();
 
         // ---- Master-slave task distribution (MPI_Scatter) ------------
         let assignment: Option<Vec<Vec<TaskSpec>>> = (me == 0).then(|| {
@@ -83,14 +83,14 @@ impl Backend for Mr2s {
         let mut reduce_table = KeyTable::new();
         timed(ctx, &tl, EventKind::Reduce, || -> Result<()> {
             for rec in kv::RecordIter::new(&own) {
-                reduce_table.merge_record(rec?, reduce);
+                reduce_table.merge_record(rec?, &ops);
             }
             for (s, buf) in recv.iter().enumerate() {
                 if s == me || buf.is_empty() {
                     continue;
                 }
                 for rec in kv::RecordIter::new(buf) {
-                    reduce_table.merge_record(rec?, reduce);
+                    reduce_table.merge_record(rec?, &ops);
                 }
                 ctx.clock.advance(ctx.cost.compute.reduce_cost(buf.len()));
             }
@@ -107,7 +107,7 @@ impl Backend for Mr2s {
         timed(ctx, &tl, EventKind::Combine, || -> Result<()> {
             let records = reduce_table.drain_records();
             let nbytes: usize = records.iter().map(|r| r.encoded_len()).sum();
-            let mut merged = build_local_run(shared, records, reduce);
+            let mut merged = build_local_run(shared, records, &ops);
             ctx.clock.advance(ctx.cost.compute.combine_cost(nbytes));
 
             let mut level = 1usize;
@@ -122,9 +122,9 @@ impl Backend for Mr2s {
                     if peer < n {
                         let (_, _, buf) =
                             ctx.comm.recv(&ctx.clock, Some(peer), Some(TAG_COMBINE));
-                        let peer_run = SortedRun::decode(&buf)?;
+                        let peer_run = SortedRun::decode(&buf, ops.kind())?;
                         shared.mem.alloc(ctx.clock.now(), buf.len() as u64);
-                        merged = merged.merge(peer_run, reduce);
+                        merged = merged.merge(peer_run, &ops);
                         ctx.clock.advance(ctx.cost.compute.combine_cost(buf.len()));
                         shared.mem.free(ctx.clock.now(), buf.len() as u64);
                     }

@@ -64,7 +64,9 @@ pub struct JobReport {
     pub memory_series: Vec<(f64, u64)>,
     /// Number of unique output keys.
     pub unique_keys: u64,
-    /// Sum of all output values (e.g. total word occurrences).
+    /// Wrapping sum of output value weights: inline-u64 use-cases
+    /// contribute their values (e.g. total word occurrences),
+    /// variable-width use-cases their payload byte lengths.
     pub total_count: u64,
 }
 

@@ -5,8 +5,12 @@
 //! vocabulary.  Exercises the framework where the Shuffle is negligible
 //! and Local Reduce dominates (the paper's §4 "benefits directly depend
 //! on the particular use-case").
+//!
+//! Values are inline u64 counts — the kernel-compatible fast path.
 
-use crate::mapreduce::UseCase;
+use crate::mapreduce::{UseCase, ValueKind};
+
+use super::wordcount::ONE;
 
 /// The word-length-histogram use-case.
 #[derive(Debug, Default)]
@@ -24,7 +28,11 @@ impl UseCase for LengthHistogram {
         "length-histogram"
     }
 
-    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], u64)) {
+    fn value_kind(&self) -> ValueKind {
+        ValueKind::InlineU64
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
         // Only the token length matters: no lowercase, no allocation.
         let mut key = *b"len:00";
         for tok in record.split(|b| !b.is_ascii_alphanumeric()) {
@@ -34,11 +42,11 @@ impl UseCase for LengthHistogram {
             let len = tok.len().min(99);
             key[4] = b'0' + (len / 10) as u8;
             key[5] = b'0' + (len % 10) as u8;
-            emit(&key, 1);
+            emit(&key, &ONE);
         }
     }
 
-    fn reduce(&self, a: u64, b: u64) -> u64 {
+    fn reduce_u64(&self, a: u64, b: u64) -> u64 {
         a + b
     }
 }
@@ -50,12 +58,15 @@ mod tests {
     #[test]
     fn bins_by_length() {
         let mut out = Vec::new();
-        LengthHistogram.map_record(b"a bb ccc bb", &mut |k, v| out.push((k.to_vec(), v)));
+        LengthHistogram.map_record(b"a bb ccc bb", &mut |k, v| {
+            out.push((k.to_vec(), crate::mapreduce::kv::u64_from_value(v)));
+        });
         assert_eq!(out.len(), 4);
         assert_eq!(out[0].0, b"len:01");
         assert_eq!(out[1].0, b"len:02");
         assert_eq!(out[2].0, b"len:03");
         assert_eq!(out[3].0, b"len:02");
+        assert!(out.iter().all(|&(_, v)| v == 1));
     }
 
     #[test]

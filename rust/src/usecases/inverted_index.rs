@@ -1,24 +1,73 @@
-//! Inverted index (sharded): which of 64 document shards contain a word.
+//! Inverted index: which document shards contain a word, as true
+//! posting lists.
 //!
-//! Demonstrates a non-additive reduce (bitwise OR) over the same
-//! framework — the paper's future work asks for "additional use-cases"
-//! beyond Word-Count.  A record's shard is derived from its content hash
-//! (the corpus has no explicit document ids), giving a stable 64-way
-//! partition of lines into pseudo-documents.
+//! The paper's future work asks for "additional use-cases" beyond
+//! Word-Count; this one exercises the variable-width value tier
+//! end-to-end.  A record's shard is derived from its content hash (the
+//! corpus has no explicit document ids), partitioning lines into
+//! [`InvertedIndex::NSHARDS`] pseudo-documents — far beyond the 64 a
+//! bitmask could express.
+//!
+//! A value is a posting list: strictly increasing `u32` shard ids, each
+//! 4 LE bytes.  A single Map emission is a one-entry list; Reduce is a
+//! sorted-set union, so the operator is associative, commutative and
+//! idempotent regardless of merge order across Local Reduce, the
+//! Reduce windows and the Combine tree.  The list is bounded by
+//! `NSHARDS * 4 = 16 KiB`, comfortably under
+//! [`crate::mapreduce::kv::MAX_VALUE_LEN`].
 
-use crate::mapreduce::kv;
-use crate::mapreduce::UseCase;
+use crate::mapreduce::kv::{self, Value};
+use crate::mapreduce::{UseCase, ValueKind};
 
 use super::wordcount::WordCount;
 
-/// The sharded inverted-index use-case.
+/// The posting-list inverted-index use-case.
 #[derive(Debug, Default)]
 pub struct InvertedIndex;
 
 impl InvertedIndex {
-    /// Shard id of a record (0..64).
+    /// Number of pseudo-document shards lines are partitioned into.
+    pub const NSHARDS: u32 = 4096;
+
+    /// Shard id of a record (0..NSHARDS).
     pub fn shard(record: &[u8]) -> u32 {
-        (kv::hash_key(record) % 64) as u32
+        (kv::hash_key(record) % u64::from(Self::NSHARDS)) as u32
+    }
+
+    /// Decode a posting-list value into shard ids.
+    pub fn decode_postings(value: &[u8]) -> Vec<u32> {
+        value
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    /// Union of two sorted-distinct posting lists (wire encoding).
+    fn union(a: &[u8], b: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            let x = u32::from_le_bytes(a[i..i + 4].try_into().unwrap());
+            let y = u32::from_le_bytes(b[j..j + 4].try_into().unwrap());
+            match x.cmp(&y) {
+                std::cmp::Ordering::Less => {
+                    out.extend_from_slice(&a[i..i + 4]);
+                    i += 4;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.extend_from_slice(&b[j..j + 4]);
+                    j += 4;
+                }
+                std::cmp::Ordering::Equal => {
+                    out.extend_from_slice(&a[i..i + 4]);
+                    i += 4;
+                    j += 4;
+                }
+            }
+        }
+        out.extend_from_slice(&a[i..]);
+        out.extend_from_slice(&b[j..]);
+        out
     }
 }
 
@@ -27,17 +76,48 @@ impl UseCase for InvertedIndex {
         "inverted-index"
     }
 
-    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], u64)) {
+    fn value_kind(&self) -> ValueKind {
+        ValueKind::Variable
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
         if record.is_empty() {
             return;
         }
-        let bit = 1u64 << Self::shard(record);
+        let posting = Self::shard(record).to_le_bytes();
         let mut scratch = Vec::with_capacity(32);
-        WordCount::tokens_into(record, &mut scratch, &mut |tok, _| emit(tok, bit));
+        WordCount::tokens_into(record, &mut scratch, &mut |tok| emit(tok, &posting));
     }
 
-    fn reduce(&self, a: u64, b: u64) -> u64 {
-        a | b
+    fn reduce(&self, acc: &mut Vec<u8>, incoming: &[u8]) {
+        debug_assert_eq!(acc.len() % 4, 0);
+        debug_assert_eq!(incoming.len() % 4, 0);
+        // Fast path: a single incoming entry that extends the tail
+        // (common once lists grow) appends without a rebuild.  Compare
+        // numerically — LE byte order is not lexicographic.
+        if incoming.len() == 4 {
+            let id = u32::from_le_bytes(incoming.try_into().unwrap());
+            let tail = acc
+                .len()
+                .checked_sub(4)
+                .map(|t| u32::from_le_bytes(acc[t..].try_into().unwrap()));
+            match tail {
+                Some(last) if last >= id => {} // falls through to the union
+                _ => {
+                    acc.extend_from_slice(incoming);
+                    return;
+                }
+            }
+        }
+        *acc = Self::union(acc, incoming);
+    }
+
+    fn render_value(&self, value: &Value) -> String {
+        let Some(bytes) = value.as_bytes() else { return "?".into() };
+        let ids = Self::decode_postings(bytes);
+        let head: Vec<String> = ids.iter().take(6).map(u32::to_string).collect();
+        let ellipsis = if ids.len() > 6 { ",…" } else { "" };
+        format!("{} shards [{}{}]", ids.len(), head.join(","), ellipsis)
     }
 }
 
@@ -46,25 +126,45 @@ mod tests {
     use super::*;
 
     #[test]
-    fn emits_shard_bit_per_token() {
+    fn emits_one_entry_posting_per_token() {
         let mut out = Vec::new();
-        InvertedIndex.map_record(b"alpha beta", &mut |k, v| out.push((k.to_vec(), v)));
+        InvertedIndex.map_record(b"alpha beta", &mut |k, v| {
+            out.push((k.to_vec(), v.to_vec()));
+        });
         assert_eq!(out.len(), 2);
-        let bit = out[0].1;
-        assert_eq!(bit.count_ones(), 1);
-        assert!(out.iter().all(|&(_, v)| v == bit), "same record, same shard");
+        let ids = InvertedIndex::decode_postings(&out[0].1);
+        assert_eq!(ids.len(), 1);
+        assert!(ids[0] < InvertedIndex::NSHARDS);
+        assert_eq!(out[0].1, out[1].1, "same record, same shard");
     }
 
     #[test]
-    fn different_records_can_hit_different_shards() {
+    fn shard_space_exceeds_64() {
         let shards: std::collections::HashSet<u32> =
-            (0..100).map(|i| InvertedIndex::shard(format!("line {i}").as_bytes())).collect();
-        assert!(shards.len() > 10);
+            (0..4000).map(|i| InvertedIndex::shard(format!("line {i}").as_bytes())).collect();
+        assert!(shards.len() > 64, "only {} shards", shards.len());
     }
 
     #[test]
-    fn reduce_is_or() {
-        assert_eq!(InvertedIndex.reduce(0b01, 0b10), 0b11);
-        assert_eq!(InvertedIndex.reduce(0b11, 0b10), 0b11);
+    fn reduce_is_sorted_set_union() {
+        let enc = |ids: &[u32]| -> Vec<u8> {
+            ids.iter().flat_map(|i| i.to_le_bytes()).collect()
+        };
+        let mut acc = enc(&[1, 5, 9]);
+        InvertedIndex.reduce(&mut acc, &enc(&[3, 5, 11]));
+        assert_eq!(InvertedIndex::decode_postings(&acc), vec![1, 3, 5, 9, 11]);
+        // Idempotent.
+        InvertedIndex.reduce(&mut acc, &enc(&[3]));
+        assert_eq!(InvertedIndex::decode_postings(&acc), vec![1, 3, 5, 9, 11]);
+        // Tail append fast path.
+        InvertedIndex.reduce(&mut acc, &enc(&[20]));
+        assert_eq!(InvertedIndex::decode_postings(&acc), vec![1, 3, 5, 9, 11, 20]);
+    }
+
+    #[test]
+    fn reduce_from_empty_accumulator() {
+        let mut acc = Vec::new();
+        InvertedIndex.reduce(&mut acc, &7u32.to_le_bytes());
+        assert_eq!(InvertedIndex::decode_postings(&acc), vec![7]);
     }
 }

@@ -1,0 +1,108 @@
+//! Per-key mean record length: a variable-width aggregate value.
+//!
+//! For every token occurrence, Map emits the length of the *record*
+//! (line) the token appeared in; Reduce keeps a running
+//! `(occurrences, total record bytes)` pair, so the final value answers
+//! "how long is the average line mentioning this word?".  This is the
+//! classic mean-aggregate pattern the hardcoded `u64` pipeline could not
+//! express: the accumulator is a 16-byte struct, not a counter, and the
+//! division must happen *after* the last merge (means do not compose;
+//! sum/count pairs do).
+//!
+//! Wire value: `| occurrences: u64 LE | total_len: u64 LE |`.
+
+use crate::mapreduce::kv::Value;
+use crate::mapreduce::{UseCase, ValueKind};
+
+use super::wordcount::WordCount;
+
+/// The mean-record-length use-case.
+#[derive(Debug, Default)]
+pub struct MeanLength;
+
+impl MeanLength {
+    /// Encode an `(occurrences, total_len)` aggregate.
+    pub fn encode(occurrences: u64, total_len: u64) -> [u8; 16] {
+        let mut out = [0u8; 16];
+        out[..8].copy_from_slice(&occurrences.to_le_bytes());
+        out[8..].copy_from_slice(&total_len.to_le_bytes());
+        out
+    }
+
+    /// Decode an aggregate value into `(occurrences, total_len)`.
+    pub fn decode(value: &[u8]) -> (u64, u64) {
+        debug_assert_eq!(value.len(), 16);
+        let occ = u64::from_le_bytes(value[..8].try_into().unwrap());
+        let total = u64::from_le_bytes(value[8..16].try_into().unwrap());
+        (occ, total)
+    }
+
+    /// Mean record length of a decoded aggregate.
+    pub fn mean(value: &[u8]) -> f64 {
+        let (occ, total) = Self::decode(value);
+        if occ == 0 {
+            0.0
+        } else {
+            total as f64 / occ as f64
+        }
+    }
+}
+
+impl UseCase for MeanLength {
+    fn name(&self) -> &'static str {
+        "mean-length"
+    }
+
+    fn value_kind(&self) -> ValueKind {
+        ValueKind::Variable
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        let aggregate = Self::encode(1, record.len() as u64);
+        let mut scratch = Vec::with_capacity(32);
+        WordCount::tokens_into(record, &mut scratch, &mut |tok| emit(tok, &aggregate));
+    }
+
+    fn reduce(&self, acc: &mut Vec<u8>, incoming: &[u8]) {
+        let (ao, at) = Self::decode(acc);
+        let (bo, bt) = Self::decode(incoming);
+        let folded = Self::encode(ao.wrapping_add(bo), at.wrapping_add(bt));
+        acc.clear();
+        acc.extend_from_slice(&folded);
+    }
+
+    fn render_value(&self, value: &Value) -> String {
+        let Some(bytes) = value.as_bytes() else { return "?".into() };
+        let (occ, _) = Self::decode(bytes);
+        format!("mean={:.1}B over {} occurrences", Self::mean(bytes), occ)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_line_length_per_token() {
+        let line = b"alpha beta gamma";
+        let mut out = Vec::new();
+        MeanLength.map_record(line, &mut |k, v| out.push((k.to_vec(), v.to_vec())));
+        assert_eq!(out.len(), 3);
+        for (_, v) in &out {
+            assert_eq!(MeanLength::decode(v), (1, line.len() as u64));
+        }
+    }
+
+    #[test]
+    fn reduce_sums_componentwise() {
+        let mut acc = MeanLength::encode(2, 100).to_vec();
+        MeanLength.reduce(&mut acc, &MeanLength::encode(3, 50));
+        assert_eq!(MeanLength::decode(&acc), (5, 150));
+        assert!((MeanLength::mean(&acc) - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_of_empty_aggregate_is_zero() {
+        assert_eq!(MeanLength::mean(&MeanLength::encode(0, 0)), 0.0);
+    }
+}

@@ -2,12 +2,98 @@
 //!
 //! Word-Count is the paper's evaluation workload (§3.1); the others are
 //! the "additional use-cases" its future work calls for, exercising
-//! different reduce semantics over the same framework.
+//! different reduce semantics — inline integer counts and variable-width
+//! aggregates — over the same framework.
+//!
+//! New use-cases register themselves in [`REGISTRY`]; the CLI derives
+//! its `--usecase` parsing, `--help` listing and error messages from it,
+//! so adding an entry here is the only wiring needed.
+
+use std::sync::Arc;
+
+use crate::mapreduce::UseCase;
 
 pub mod histogram;
 pub mod inverted_index;
+pub mod meanlen;
 pub mod wordcount;
 
 pub use histogram::LengthHistogram;
 pub use inverted_index::InvertedIndex;
+pub use meanlen::MeanLength;
 pub use wordcount::WordCount;
+
+/// One registered use-case: canonical name, accepted aliases, a
+/// one-line summary and a constructor.
+pub struct UseCaseEntry {
+    /// Canonical `--usecase` name.
+    pub name: &'static str,
+    /// Additional accepted spellings.
+    pub aliases: &'static [&'static str],
+    /// One-line summary for `--help`.
+    pub summary: &'static str,
+    /// Constructor.
+    pub make: fn() -> Arc<dyn UseCase>,
+}
+
+/// All shipped use-cases.
+pub static REGISTRY: &[UseCaseEntry] = &[
+    UseCaseEntry {
+        name: "word-count",
+        aliases: &["wordcount", "wc"],
+        summary: "count token occurrences (inline-u64 fast path)",
+        make: || Arc::new(WordCount),
+    },
+    UseCaseEntry {
+        name: "inverted-index",
+        aliases: &["invidx"],
+        summary: "posting list of document shards per token (variable-width)",
+        make: || Arc::new(InvertedIndex),
+    },
+    UseCaseEntry {
+        name: "length-histogram",
+        aliases: &["hist"],
+        summary: "token-length histogram (inline-u64 fast path)",
+        make: || Arc::new(LengthHistogram),
+    },
+    UseCaseEntry {
+        name: "mean-length",
+        aliases: &["meanlen"],
+        summary: "mean containing-line length per token (variable-width)",
+        make: || Arc::new(MeanLength),
+    },
+];
+
+/// Look up a use-case by canonical name or alias.
+pub fn by_name(name: &str) -> Option<Arc<dyn UseCase>> {
+    REGISTRY
+        .iter()
+        .find(|e| e.name == name || e.aliases.contains(&name))
+        .map(|e| (e.make)())
+}
+
+/// Canonical names of all registered use-cases.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_names_and_aliases() {
+        assert_eq!(by_name("word-count").unwrap().name(), "word-count");
+        assert_eq!(by_name("wc").unwrap().name(), "word-count");
+        assert_eq!(by_name("invidx").unwrap().name(), "inverted-index");
+        assert_eq!(by_name("mean-length").unwrap().name(), "mean-length");
+        assert!(by_name("no-such-usecase").is_none());
+    }
+
+    #[test]
+    fn registry_names_match_usecase_names() {
+        for entry in REGISTRY {
+            assert_eq!((entry.make)().name(), entry.name, "registry/name drift");
+        }
+    }
+}

@@ -4,8 +4,13 @@
 //! maximal runs of ASCII alphanumerics, lowercased — a fixed, easily
 //! reproducible tokenizer so counts can be cross-checked by independent
 //! implementations (see `verify_count` in the tests and the harness).
+//!
+//! Values are inline u64 counts — the kernel-compatible fast path.
 
-use crate::mapreduce::UseCase;
+use crate::mapreduce::{UseCase, ValueKind};
+
+/// Little-endian wire encoding of the count `1` (the per-token emission).
+pub const ONE: [u8; 8] = 1u64.to_le_bytes();
 
 /// The Word-Count use-case.
 #[derive(Debug, Default)]
@@ -24,14 +29,14 @@ impl WordCount {
     /// scratch buffer and yields it to `emit`.  Must stay semantically
     /// identical to [`WordCount::tokens`] (asserted in tests).
     #[inline]
-    pub fn tokens_into(record: &[u8], scratch: &mut Vec<u8>, emit: &mut dyn FnMut(&[u8], u64)) {
+    pub fn tokens_into(record: &[u8], scratch: &mut Vec<u8>, emit: &mut dyn FnMut(&[u8])) {
         for tok in record.split(|b| !b.is_ascii_alphanumeric()) {
             if tok.is_empty() {
                 continue;
             }
             scratch.clear();
             scratch.extend(tok.iter().map(u8::to_ascii_lowercase));
-            emit(scratch, 1);
+            emit(scratch);
         }
     }
 }
@@ -41,14 +46,18 @@ impl UseCase for WordCount {
         "word-count"
     }
 
-    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], u64)) {
-        // Hot path: one reused scratch buffer instead of a heap
-        // allocation per token (EXPERIMENTS.md §Perf).
-        let mut scratch = Vec::with_capacity(32);
-        Self::tokens_into(record, &mut scratch, emit);
+    fn value_kind(&self) -> ValueKind {
+        ValueKind::InlineU64
     }
 
-    fn reduce(&self, a: u64, b: u64) -> u64 {
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        // Hot path: one reused scratch buffer instead of a heap
+        // allocation per token (DESIGN.md §5).
+        let mut scratch = Vec::with_capacity(32);
+        Self::tokens_into(record, &mut scratch, &mut |tok| emit(tok, &ONE));
+    }
+
+    fn reduce_u64(&self, a: u64, b: u64) -> u64 {
         a + b
     }
 }
@@ -59,7 +68,9 @@ mod tests {
 
     fn counts(record: &[u8]) -> Vec<(Vec<u8>, u64)> {
         let mut out: Vec<(Vec<u8>, u64)> = Vec::new();
-        WordCount.map_record(record, &mut |k, v| out.push((k.to_vec(), v)));
+        WordCount.map_record(record, &mut |k, v| {
+            out.push((k.to_vec(), crate::mapreduce::kv::u64_from_value(v)));
+        });
         out
     }
 
@@ -79,7 +90,15 @@ mod tests {
 
     #[test]
     fn reduce_is_sum() {
-        assert_eq!(WordCount.reduce(3, 4), 7);
+        assert_eq!(WordCount.reduce_u64(3, 4), 7);
+    }
+
+    #[test]
+    fn byte_reduce_matches_inline_reduce() {
+        // The default byte-slice reducer must agree with the inline one.
+        let mut acc = 3u64.to_le_bytes().to_vec();
+        WordCount.reduce(&mut acc, &4u64.to_le_bytes());
+        assert_eq!(acc, 7u64.to_le_bytes().to_vec());
     }
 
     #[test]

@@ -40,7 +40,7 @@ impl SkewSpec {
     /// a ~25% heavy-task hotspot at 2.5x, like a handful of outsized
     /// Wikipedia revision-history files in an otherwise regular dataset.
     /// Calibrated so the weak-scaling improvement lands in the paper's
-    /// band (≈23% average, ≈34% peak — see EXPERIMENTS.md).
+    /// band (≈23% average, ≈34% peak — see DESIGN.md §4).
     pub fn paper_unbalanced() -> Self {
         SkewSpec::Hotspot { p_heavy: 0.25, factor: 2.5 }
     }

@@ -1,17 +1,29 @@
 //! End-to-end integration: both backends, real corpora, exact-count
 //! verification against an independent single-threaded oracle.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use mr1s::mapreduce::kv::Value;
 use mr1s::mapreduce::{BackendKind, Job, JobConfig};
 use mr1s::sim::CostModel;
-use mr1s::usecases::{InvertedIndex, LengthHistogram, WordCount};
+use mr1s::usecases::{InvertedIndex, LengthHistogram, MeanLength, WordCount};
 use mr1s::workload::{generate_corpus, skew_factors, CorpusSpec, SkewSpec};
 
 fn tmppath(name: &str) -> PathBuf {
     std::env::temp_dir().join(format!("mr1s-it-{name}-{}", std::process::id()))
+}
+
+/// Collapse a job result into a `key -> u64` map (inline-u64 use-cases).
+fn counts_map(result: Vec<(Vec<u8>, Value)>) -> HashMap<Vec<u8>, u64> {
+    result
+        .into_iter()
+        .map(|(k, v)| {
+            let c = v.as_u64().expect("inline-u64 value");
+            (k, c)
+        })
+        .collect()
 }
 
 /// Independent oracle: single pass over the whole file, no framework
@@ -45,7 +57,7 @@ fn run_and_check(backend: BackendKind, nranks: usize, cfg: JobConfig) {
     assert_eq!(out.report.unique_keys as usize, oracle.len(), "unique key count");
     let total: u64 = oracle.values().sum();
     assert_eq!(out.report.total_count, total, "total occurrences");
-    let got: HashMap<Vec<u8>, u64> = out.result.into_iter().collect();
+    let got = counts_map(out.result);
     assert_eq!(got.len(), oracle.len());
     for (word, count) in &oracle {
         assert_eq!(got.get(word), Some(count), "word {:?}", String::from_utf8_lossy(word));
@@ -84,8 +96,8 @@ fn both_backends_agree_with_each_other() {
     let job2 = Job::new(Arc::new(WordCount), small_config(p.clone())).unwrap();
     let r1 = job1.run(BackendKind::OneSided, 4, CostModel::default()).unwrap();
     let r2 = job2.run(BackendKind::TwoSided, 4, CostModel::default()).unwrap();
-    let m1: HashMap<Vec<u8>, u64> = r1.result.into_iter().collect();
-    let m2: HashMap<Vec<u8>, u64> = r2.result.into_iter().collect();
+    let m1 = counts_map(r1.result);
+    let m2 = counts_map(r2.result);
     assert_eq!(m1, m2);
     std::fs::remove_file(&p).ok();
 }
@@ -109,8 +121,8 @@ fn unbalanced_runs_produce_identical_counts() {
         .unwrap()
         .run(BackendKind::OneSided, 4, CostModel::default())
         .unwrap();
-    let mb: HashMap<Vec<u8>, u64> = out_b.result.into_iter().collect();
-    let ms: HashMap<Vec<u8>, u64> = out_s.result.into_iter().collect();
+    let mb = counts_map(out_b.result);
+    let ms = counts_map(out_s.result);
     assert_eq!(mb, ms);
     // ... but the skewed run must be slower.
     assert!(out_s.report.elapsed_ns > out_b.report.elapsed_ns);
@@ -130,8 +142,8 @@ fn scalar_and_kernel_paths_agree() {
         .unwrap()
         .run(BackendKind::OneSided, 3, CostModel::default())
         .unwrap();
-    let mk: HashMap<Vec<u8>, u64> = rk.result.into_iter().collect();
-    let ms: HashMap<Vec<u8>, u64> = rs.result.into_iter().collect();
+    let mk = counts_map(rk.result);
+    let ms = counts_map(rs.result);
     assert_eq!(mk, ms);
     std::fs::remove_file(&p).ok();
 }
@@ -162,24 +174,67 @@ fn checkpointed_run_matches_and_writes_files() {
 }
 
 #[test]
-fn inverted_index_reduces_with_or() {
+fn inverted_index_builds_true_posting_lists() {
     let p = corpus("invidx", 80_000, 8);
-    let job = Job::new(Arc::new(InvertedIndex), small_config(p.clone())).unwrap();
-    let out = job.run(BackendKind::OneSided, 4, CostModel::default()).unwrap();
-    // Oracle.
-    let data = std::fs::read(&p).unwrap();
-    let mut oracle: HashMap<Vec<u8>, u64> = HashMap::new();
-    for line in data.split(|&b| b == b'\n') {
-        if line.is_empty() {
-            continue;
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        let job = Job::new(Arc::new(InvertedIndex), small_config(p.clone())).unwrap();
+        let out = job.run(backend, 4, CostModel::default()).unwrap();
+        // Oracle: per-token set of containing shards.
+        let data = std::fs::read(&p).unwrap();
+        let mut oracle: HashMap<Vec<u8>, BTreeSet<u32>> = HashMap::new();
+        for line in data.split(|&b| b == b'\n') {
+            if line.is_empty() {
+                continue;
+            }
+            let shard = InvertedIndex::shard(line);
+            for tok in WordCount::tokens(line) {
+                oracle.entry(tok).or_default().insert(shard);
+            }
         }
-        let bit = 1u64 << InvertedIndex::shard(line);
+        let mut seen_shards: BTreeSet<u32> = BTreeSet::new();
+        let mut got = 0usize;
+        for (key, value) in out.result {
+            let postings = InvertedIndex::decode_postings(value.as_bytes().unwrap());
+            // Posting lists must be strictly increasing (sorted, deduped).
+            assert!(postings.windows(2).all(|w| w[0] < w[1]), "unsorted postings");
+            let want = oracle.get(&key).unwrap_or_else(|| {
+                panic!("unexpected key {:?}", String::from_utf8_lossy(&key))
+            });
+            let got_set: BTreeSet<u32> = postings.iter().copied().collect();
+            assert_eq!(&got_set, want, "postings of {:?}", String::from_utf8_lossy(&key));
+            seen_shards.extend(postings);
+            got += 1;
+        }
+        assert_eq!(got, oracle.len(), "key count");
+        // The whole point of the refactor: more than 64 shards exist.
+        assert!(seen_shards.len() > 64, "only {} shards used", seen_shards.len());
+        assert!(seen_shards.iter().any(|&s| s >= 64), "no shard id beyond the old bitmask cap");
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn mean_length_matches_oracle_on_both_backends() {
+    let p = corpus("meanlen", 80_000, 13);
+    let data = std::fs::read(&p).unwrap();
+    let mut oracle: HashMap<Vec<u8>, (u64, u64)> = HashMap::new();
+    for line in data.split(|&b| b == b'\n') {
         for tok in WordCount::tokens(line) {
-            *oracle.entry(tok).or_insert(0) |= bit;
+            let e = oracle.entry(tok).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += line.len() as u64;
         }
     }
-    let got: HashMap<Vec<u8>, u64> = out.result.into_iter().collect();
-    assert_eq!(got, oracle);
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        let job = Job::new(Arc::new(MeanLength), small_config(p.clone())).unwrap();
+        let out = job.run(backend, 4, CostModel::default()).unwrap();
+        assert_eq!(out.report.unique_keys as usize, oracle.len());
+        for (key, value) in out.result {
+            let got = MeanLength::decode(value.as_bytes().unwrap());
+            let want = oracle[&key];
+            assert_eq!(got, want, "aggregate of {:?}", String::from_utf8_lossy(&key));
+        }
+    }
     std::fs::remove_file(&p).ok();
 }
 
@@ -195,7 +250,7 @@ fn length_histogram_matches_oracle() {
             *oracle.entry(LengthHistogram::key_for(tok.len())).or_insert(0) += 1;
         }
     }
-    let got: HashMap<Vec<u8>, u64> = out.result.into_iter().collect();
+    let got = counts_map(out.result);
     assert_eq!(got, oracle);
     std::fs::remove_file(&p).ok();
 }
@@ -222,8 +277,8 @@ fn job_stealing_exact_counts_and_speedup_under_skew() {
         .run(BackendKind::OneSided, 4, CostModel::default())
         .unwrap();
 
-    let mp: HashMap<Vec<u8>, u64> = plain.result.into_iter().collect();
-    let ms: HashMap<Vec<u8>, u64> = stolen.result.into_iter().collect();
+    let mp = counts_map(plain.result);
+    let ms = counts_map(stolen.result);
     assert_eq!(mp.len(), oracle.len());
     assert_eq!(ms, mp, "stealing changed the results");
     assert!(
@@ -242,7 +297,7 @@ fn tiny_input_single_task() {
     let cfg = small_config(p.clone());
     let job = Job::new(Arc::new(WordCount), cfg).unwrap();
     let out = job.run(BackendKind::OneSided, 4, CostModel::default()).unwrap();
-    let got: HashMap<Vec<u8>, u64> = out.result.into_iter().collect();
+    let got = counts_map(out.result);
     assert_eq!(got.get(b"one".as_slice()), Some(&1));
     assert_eq!(got.get(b"two".as_slice()), Some(&2));
     assert_eq!(got.get(b"three".as_slice()), Some(&3));

@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use mr1s::mapreduce::bucket::{KeyTable, OwnedRecord, SortedRun};
 use mr1s::mapreduce::job::{read_len, read_start, split_tasks, task_records};
-use mr1s::mapreduce::kv::{self, Record};
+use mr1s::mapreduce::kv::{self, ConcatOps, Record, SumOps, Value, ValueKind};
 use mr1s::mapreduce::{BackendKind, Job, JobConfig};
 use mr1s::sim::CostModel;
 use mr1s::testing::PropRunner;
@@ -20,6 +20,11 @@ fn rand_key(rng: &mut SplitMix64) -> Vec<u8> {
     (0..len).map(|_| rng.below(256) as u8).collect()
 }
 
+fn rand_value(rng: &mut SplitMix64) -> Vec<u8> {
+    let len = rng.below(24) as usize; // includes empty and non-8-byte
+    (0..len).map(|_| rng.below(256) as u8).collect()
+}
+
 #[test]
 fn prop_kv_roundtrip_any_records() {
     PropRunner::new(200).check(
@@ -27,20 +32,20 @@ fn prop_kv_roundtrip_any_records() {
         |rng| {
             let n = 1 + rng.below(64) as usize;
             (0..n)
-                .map(|_| (rand_key(rng), rng.next_u64(), rng.next_u64()))
+                .map(|_| (rand_key(rng), rng.next_u64(), rand_value(rng)))
                 .collect::<Vec<_>>()
         },
         |recs| {
             let mut buf = Vec::new();
-            for (key, hash, count) in recs {
-                Record { hash: *hash, key, count: *count }.encode_into(&mut buf);
+            for (key, hash, value) in recs {
+                Record { hash: *hash, key, value }.encode_into(&mut buf);
             }
             let decoded = kv::decode_all(&buf).map_err(|e| e.to_string())?;
             if decoded.len() != recs.len() {
                 return Err(format!("{} != {}", decoded.len(), recs.len()));
             }
-            for (d, (key, hash, count)) in decoded.iter().zip(recs) {
-                if d.key != key.as_slice() || d.hash != *hash || d.count != *count {
+            for (d, (key, hash, value)) in decoded.iter().zip(recs) {
+                if d.key != key.as_slice() || d.hash != *hash || d.value != value.as_slice() {
                     return Err("record mismatch".into());
                 }
             }
@@ -87,11 +92,44 @@ fn prop_keytable_preserves_total_count() {
             let mut table = KeyTable::new();
             for (k, c) in pairs {
                 let key = k.to_le_bytes();
-                table.merge(kv::hash_key(&key), &key, *c, u64::wrapping_add);
+                table.merge(kv::hash_key(&key), &key, &c.to_le_bytes(), &SumOps);
             }
             let want: u64 = pairs.iter().map(|(_, c)| *c).sum();
-            let got: u64 = table.drain_records().iter().map(|r| r.count).sum();
+            let got: u64 = table
+                .drain_records()
+                .iter()
+                .map(|r| r.value.as_u64().unwrap())
+                .sum();
             (got == want).then_some(()).ok_or(format!("{got} != {want}"))
+        },
+    );
+}
+
+#[test]
+fn prop_keytable_variable_values_concatenate_all_bytes() {
+    // The variable tier must conserve payload bytes through local
+    // reduce + drain, independent of merge order.
+    PropRunner::new(60).check(
+        "keytable variable-value conservation",
+        |rng| {
+            let n = 1 + rng.below(200) as usize;
+            (0..n)
+                .map(|_| (rng.below(10), rand_value(rng)))
+                .collect::<Vec<(u64, Vec<u8>)>>()
+        },
+        |pairs| {
+            let mut table = KeyTable::new();
+            for (k, v) in pairs {
+                let key = k.to_le_bytes();
+                table.merge(kv::hash_key(&key), &key, v, &ConcatOps);
+            }
+            let want: usize = pairs.iter().map(|(_, v)| v.len()).sum();
+            let got: usize = table
+                .drain_records()
+                .iter()
+                .map(|r| r.value.as_bytes().unwrap().len())
+                .sum();
+            (got == want).then_some(()).ok_or(format!("{got} != {want} payload bytes"))
         },
     );
 }
@@ -108,7 +146,7 @@ fn prop_keytable_partition_is_exact() {
         |(keys, nranks)| {
             let mut table = KeyTable::new();
             for k in keys {
-                table.merge(kv::hash_key(k), k, 1, u64::wrapping_add);
+                table.merge(kv::hash_key(k), k, &1u64.to_le_bytes(), &SumOps);
             }
             let unique = table.len();
             let parts = table.drain_by_owner(*nranks);
@@ -150,22 +188,26 @@ fn prop_sorted_run_invariants_and_merge_algebra() {
                     .map(|(k, c)| OwnedRecord {
                         hash: kv::hash_key(k),
                         key: k.as_slice().into(),
-                        count: *c,
+                        value: Value::U64(*c),
                     })
                     .collect::<Vec<_>>()
             };
-            let ra = SortedRun::build_scalar(to_records(a), u64::wrapping_add);
-            let rb = SortedRun::build_scalar(to_records(b), u64::wrapping_add);
+            let ra = SortedRun::build_scalar(to_records(a), &SumOps);
+            let rb = SortedRun::build_scalar(to_records(b), &SumOps);
             if !ra.check_invariants() || !rb.check_invariants() {
                 return Err("build violated run invariants".into());
             }
-            let merged = ra.merge(rb, u64::wrapping_add);
+            let merged = ra.merge(rb, &SumOps);
             if !merged.check_invariants() {
                 return Err("merge violated run invariants".into());
             }
             // Count conservation through build + merge.
             let want: u64 = a.iter().chain(b).map(|(_, c)| *c).sum();
-            let got: u64 = merged.records().iter().map(|r| r.count).sum();
+            let got: u64 = merged
+                .records()
+                .iter()
+                .map(|r| r.value.as_u64().unwrap())
+                .sum();
             (got == want).then_some(()).ok_or(format!("{got} != {want}"))
         },
     );
@@ -186,11 +228,12 @@ fn prop_run_encode_decode_roundtrip() {
                 .map(|(k, c)| OwnedRecord {
                     hash: kv::hash_key(k),
                     key: k.as_slice().into(),
-                    count: *c,
+                    value: Value::U64(*c),
                 })
                 .collect();
-            let run = SortedRun::build_scalar(records, u64::wrapping_add);
-            let rt = SortedRun::decode(&run.encode()).map_err(|e| e.to_string())?;
+            let run = SortedRun::build_scalar(records, &SumOps);
+            let rt = SortedRun::decode(&run.encode(), ValueKind::InlineU64)
+                .map_err(|e| e.to_string())?;
             (rt.records() == run.records()).then_some(()).ok_or("roundtrip mismatch".into())
         },
     );
@@ -276,13 +319,102 @@ fn prop_mini_jobs_match_oracle_both_backends() {
                     .map_err(|e| e.to_string())?
                     .run(backend, *nranks, CostModel::default())
                     .map_err(|e| e.to_string())?;
-                let got: HashMap<Vec<u8>, u64> = out.result.into_iter().collect();
+                let got: HashMap<Vec<u8>, u64> = out
+                    .result
+                    .into_iter()
+                    .map(|(k, v)| (k, v.as_u64().unwrap()))
+                    .collect();
                 if got != oracle {
                     return Err(format!(
                         "{} disagrees with oracle ({} vs {} keys)",
                         backend.name(),
                         got.len(),
                         oracle.len()
+                    ));
+                }
+            }
+            std::fs::remove_file(&path).ok();
+            Ok(())
+        },
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn prop_hash_colliding_keys_stay_distinct_end_to_end() {
+    // Two distinct keys sharing the full 24-byte HASH_WIDTH prefix hash
+    // identically (`hash_key` truncates), so they collide in every
+    // hash-keyed structure — the staging table, the wire buckets, the
+    // sorted runs (`bucket::Chain::Many` across the wire).  A full job
+    // must still count them separately on both backends.
+    let tmp = std::env::temp_dir().join(format!("mr1s-prop-coll-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let mut case_no = 0usize;
+    PropRunner::new(6).check(
+        "hash-collision e2e",
+        |rng| {
+            // A random 24-byte lowercase prefix + 1-byte distinct suffixes.
+            let prefix: String =
+                (0..kv::HASH_WIDTH).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+            let ca = (b'a' + rng.below(13) as u8) as char;
+            let cb = (b'n' + rng.below(13) as u8) as char; // disjoint range: always distinct
+            let na = 1 + rng.below(40) as usize;
+            let nb = 1 + rng.below(40) as usize;
+            let filler_lines = rng.below(30) as usize;
+            let task_size = 64 + rng.below(800) as usize;
+            let nranks = 1 + rng.below(5) as usize;
+            (format!("{prefix}{ca}"), format!("{prefix}{cb}"), na, nb, filler_lines, task_size, nranks)
+        },
+        |(key_a, key_b, na, nb, filler_lines, task_size, nranks)| {
+            let ha = kv::hash_key(key_a.as_bytes());
+            let hb = kv::hash_key(key_b.as_bytes());
+            if ha != hb {
+                return Err("premise broken: prefix-sharing keys must collide".into());
+            }
+            if key_a == key_b {
+                return Err("premise broken: keys must be distinct".into());
+            }
+            case_no += 1;
+            let path = tmp.join(format!("case-{case_no}.txt"));
+            let mut text = String::new();
+            for i in 0..*na {
+                text.push_str(key_a);
+                text.push(if i % 3 == 0 { '\n' } else { ' ' });
+            }
+            for i in 0..*nb {
+                text.push_str(key_b);
+                text.push(if i % 2 == 0 { '\n' } else { ' ' });
+            }
+            for i in 0..*filler_lines {
+                text.push_str(&format!("filler words number {i}\n"));
+            }
+            std::fs::write(&path, &text).map_err(|e| e.to_string())?;
+
+            for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+                let cfg = JobConfig {
+                    input: path.clone(),
+                    task_size: *task_size,
+                    win_size: 8 << 10,
+                    chunk_size: 2 << 10,
+                    use_kernel: false,
+                    ..Default::default()
+                };
+                let out = Job::new(Arc::new(WordCount), cfg)
+                    .map_err(|e| e.to_string())?
+                    .run(backend, *nranks, CostModel::default())
+                    .map_err(|e| e.to_string())?;
+                let got: HashMap<Vec<u8>, u64> = out
+                    .result
+                    .into_iter()
+                    .map(|(k, v)| (k, v.as_u64().unwrap()))
+                    .collect();
+                let ca = got.get(key_a.as_bytes()).copied();
+                let cb = got.get(key_b.as_bytes()).copied();
+                if ca != Some(*na as u64) || cb != Some(*nb as u64) {
+                    return Err(format!(
+                        "{}: colliding keys miscounted: {key_a}={ca:?} (want {na}), \
+                         {key_b}={cb:?} (want {nb})",
+                        backend.name()
                     ));
                 }
             }
