@@ -13,6 +13,7 @@
 
 use std::sync::Arc;
 
+use mr1s::bench::{write_json, Sample};
 use mr1s::harness::Scenario;
 use mr1s::mapreduce::kv;
 use mr1s::mapreduce::{BackendKind, Job, JobConfig, UseCase, ValueKind};
@@ -60,6 +61,7 @@ fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let scenario = if full { Scenario::default() } else { Scenario::smoke() };
     let input = scenario.corpus(scenario.strong_bytes).expect("corpus");
+    let mut samples: Vec<Sample> = Vec::new();
     let base = scenario.config(input.clone(), false);
     let ntasks = (scenario.strong_bytes as usize).div_ceil(base.task_size);
 
@@ -70,6 +72,10 @@ fn main() {
         let (secs, mem) = run(cfg, BackendKind::OneSided);
         println!("local_reduce={label:<4} {secs:>8.3}s  peak_mem={}MiB", mem >> 20);
         println!("#csv,ablation_local_reduce,{label},{secs:.4},{mem}");
+        samples.push(Sample::from_measurements(
+            format!("ablation_local_reduce_{label}_secs"),
+            &[secs],
+        ));
     }
 
     println!("\n== ablation: task size (MR-1S, balanced) ==");
@@ -78,6 +84,10 @@ fn main() {
         let (secs, _) = run(cfg, BackendKind::OneSided);
         println!("task_size={task_kib:>5}KiB {secs:>8.3}s");
         println!("#csv,ablation_task_size,{task_kib},{secs:.4}");
+        samples.push(Sample::from_measurements(
+            format!("ablation_task_size_{task_kib}k_secs"),
+            &[secs],
+        ));
     }
 
     println!("\n== ablation: one-sided op limit (MR-1S, balanced) ==");
@@ -86,6 +96,10 @@ fn main() {
         let (secs, _) = run(cfg, BackendKind::OneSided);
         println!("chunk_size={chunk_kib:>5}KiB {secs:>8.3}s");
         println!("#csv,ablation_op_limit,{chunk_kib},{secs:.4}");
+        samples.push(Sample::from_measurements(
+            format!("ablation_op_limit_{chunk_kib}k_secs"),
+            &[secs],
+        ));
     }
 
     println!("\n== ablation: bucket size (MR-1S, balanced) ==");
@@ -94,6 +108,10 @@ fn main() {
         let (secs, mem) = run(cfg, BackendKind::OneSided);
         println!("win_size={win_kib:>5}KiB {secs:>8.3}s  peak_mem={}MiB", mem >> 20);
         println!("#csv,ablation_win_size,{win_kib},{secs:.4},{mem}");
+        samples.push(Sample::from_measurements(
+            format!("ablation_win_size_{win_kib}k_secs"),
+            &[secs],
+        ));
     }
 
     println!("\n== ablation: value tier (inline-u64 fast path vs byte path; MR-1S, balanced) ==");
@@ -112,6 +130,10 @@ fn main() {
             out.report.peak_memory_bytes >> 20
         );
         println!("#csv,ablation_value_tier,{label},{:.4},{wall:.4}", out.report.elapsed_secs());
+        samples.push(Sample::from_measurements(
+            format!("ablation_value_tier_{label}_secs"),
+            &[out.report.elapsed_secs()],
+        ));
     }
 
     println!("\n== extension: job stealing (paper §6 future work; MR-1S, unbalanced) ==");
@@ -120,6 +142,10 @@ fn main() {
         let (secs, _) = run(cfg, BackendKind::OneSided);
         println!("stealing={label:<4} {secs:>8.3}s");
         println!("#csv,extension_stealing,{label},{secs:.4}");
+        samples.push(Sample::from_measurements(
+            format!("extension_stealing_{label}_secs"),
+            &[secs],
+        ));
     }
 
     println!("\n== ablation: skew intensity (MR-1S vs MR-2S) ==");
@@ -134,5 +160,11 @@ fn main() {
         let imp = (s2 - s1) / s2 * 100.0;
         println!("factor={factor:<4} MR-1S {s1:>7.3}s  MR-2S {s2:>7.3}s  improvement {imp:+.1}%");
         println!("#csv,ablation_skew,{factor},{s1:.4},{s2:.4},{imp:.2}");
+        samples.push(Sample::from_measurements(
+            format!("ablation_skew_{factor}_improvement_pct"),
+            &[imp],
+        ));
     }
+
+    write_json("ablations", &samples).expect("json summary");
 }

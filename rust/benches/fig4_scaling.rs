@@ -5,6 +5,7 @@
 //! `cargo bench --bench fig4_scaling -- --full` runs the paper-scaled
 //! scenario from DESIGN.md §4 (as `mr1s figures` does).
 
+use mr1s::bench::{write_json, Sample};
 use mr1s::harness::figures::{run_figure, FigureId};
 use mr1s::harness::Scenario;
 
@@ -15,11 +16,14 @@ fn main() {
         "fig4 scaling bench ({} profile)",
         if full { "full" } else { "smoke" }
     );
+    let mut samples: Vec<Sample> = Vec::new();
     for id in [FigureId::Fig4a, FigureId::Fig4b, FigureId::Fig4c, FigureId::Fig4d] {
         let data = run_figure(id, &scenario).expect("figure runs");
         println!("{}", data.render());
         for (name, v) in &data.aggregates {
             println!("#csv,fig{},{name},{v:.3}", data.id);
+            samples.push(Sample::from_measurements(format!("fig{}_{name}", data.id), &[*v]));
         }
     }
+    write_json("fig4_scaling", &samples).expect("json summary");
 }

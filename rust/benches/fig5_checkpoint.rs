@@ -3,6 +3,7 @@
 //! Paper's finding: checkpoint overhead ≈ 4.8% on average because the
 //! storage flush overlaps with computation.
 
+use mr1s::bench::{write_json, Sample};
 use mr1s::harness::figures::{run_figure, FigureId};
 use mr1s::harness::Scenario;
 
@@ -13,11 +14,14 @@ fn main() {
         "fig5 checkpoint bench ({} profile)",
         if full { "full" } else { "smoke" }
     );
+    let mut samples: Vec<Sample> = Vec::new();
     for id in [FigureId::Fig5a, FigureId::Fig5b] {
         let data = run_figure(id, &scenario).expect("figure runs");
         println!("{}", data.render());
         for (name, v) in &data.aggregates {
             println!("#csv,fig{},{name},{v:.3}", data.id);
+            samples.push(Sample::from_measurements(format!("fig{}_{name}", data.id), &[*v]));
         }
     }
+    write_json("fig5_checkpoint", &samples).expect("json summary");
 }

@@ -4,6 +4,7 @@
 //! (10.4–13.7 GB on 24 GB/node workloads), with the peak during Combine
 //! at the end of the execution.
 
+use mr1s::bench::{write_json, Sample};
 use mr1s::harness::figures::{run_figure, FigureId};
 use mr1s::harness::Scenario;
 
@@ -14,8 +15,25 @@ fn main() {
         "fig6 memory bench ({} profile)",
         if full { "full" } else { "smoke" }
     );
+    let mut samples: Vec<Sample> = Vec::new();
     for id in [FigureId::Fig6a, FigureId::Fig6b] {
         let data = run_figure(id, &scenario).expect("figure runs");
         println!("{}", data.render());
+        // Fig 6a's rows (peak bytes per dataset size) are the headline
+        // numbers; 6b's dense memory timeline stays in the CSV render.
+        if id == FigureId::Fig6a {
+            for row in &data.rows {
+                for (series, v) in data.series.iter().zip(&row.values) {
+                    samples.push(Sample::from_measurements(
+                        format!("fig6a_x{}_{series}", row.x),
+                        &[*v],
+                    ));
+                }
+            }
+        }
+        for (name, v) in &data.aggregates {
+            samples.push(Sample::from_measurements(format!("fig{}_{name}", data.id), &[*v]));
+        }
     }
+    write_json("fig6_memory", &samples).expect("json summary");
 }

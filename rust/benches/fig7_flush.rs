@@ -5,6 +5,7 @@
 //! and Reduce tasks improves performance ~5% on average by forcing RMA
 //! progress, though communication patterns remain visible.
 
+use mr1s::bench::{write_json, Sample};
 use mr1s::harness::figures::{run_figure, FigureId};
 use mr1s::harness::Scenario;
 
@@ -15,11 +16,14 @@ fn main() {
         "fig7 flush-epoch bench ({} profile)",
         if full { "full" } else { "smoke" }
     );
+    let mut samples: Vec<Sample> = Vec::new();
     for id in [FigureId::Fig7a, FigureId::Fig7b] {
         let data = run_figure(id, &scenario).expect("figure runs");
         println!("{}", data.render());
         for (name, v) in &data.aggregates {
             println!("#csv,fig{},{name},{v:.3}", data.id);
+            samples.push(Sample::from_measurements(format!("fig{}_{name}", data.id), &[*v]));
         }
     }
+    write_json("fig7_flush", &samples).expect("json summary");
 }

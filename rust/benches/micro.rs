@@ -2,7 +2,7 @@
 //! time): kv encode/decode, window RMA ops, sorted-run machinery, the
 //! kernel-vs-scalar hash path (the L1 ablation), and corpus generation.
 
-use mr1s::bench::{report, section, Bencher};
+use mr1s::bench::{record, section, write_json, Bencher, Sample};
 use mr1s::mapreduce::bucket::{KeyTable, OwnedRecord, SortedRun};
 use mr1s::mapreduce::job::cached_engine;
 use mr1s::mapreduce::kv::{self, Record, SumOps, Value};
@@ -25,17 +25,18 @@ fn words(n: usize, seed: u64) -> Vec<Vec<u8>> {
 
 fn main() {
     let b = Bencher::default();
+    let mut samples: Vec<Sample> = Vec::new();
 
     section("kv encode/decode (64k records)");
     let ws = words(65_536, 1);
     let mut buf = Vec::new();
-    report(&b.wall("kv_encode_64k", || {
+    record(&mut samples, b.wall("kv_encode_64k", || {
         buf.clear();
         for w in &ws {
             Record { hash: kv::hash_key(w), key: w, value: &ONE }.encode_into(&mut buf);
         }
     }));
-    report(&b.wall("kv_decode_64k", || {
+    record(&mut samples, b.wall("kv_decode_64k", || {
         let mut n = 0usize;
         for rec in kv::RecordIter::new(&buf) {
             let _ = rec.unwrap();
@@ -45,7 +46,7 @@ fn main() {
     }));
 
     section("scalar FNV hash (64k tokens)");
-    report(&b.wall("hash_scalar_64k", || {
+    record(&mut samples, b.wall("hash_scalar_64k", || {
         let mut acc = 0u64;
         for w in &ws {
             acc = acc.wrapping_add(kv::hash_key(w));
@@ -55,15 +56,15 @@ fn main() {
 
     section("kernel vs scalar hash batch (4096 tokens) [ablation_kernel]");
     let refs: Vec<&[u8]> = ws[..4096].iter().map(Vec::as_slice).collect();
-    report(&b.wall("hash_batch_scalar_4096", || {
+    record(&mut samples, b.wall("hash_batch_scalar_4096", || {
         let _ = Engine::hash_batch_scalar(&refs, 256);
     }));
     if let Some(engine) = cached_engine() {
-        report(&b.wall("hash_batch_kernel_4096", || {
+        record(&mut samples, b.wall("hash_batch_kernel_4096", || {
             let _ = engine.hash_batch(&refs).unwrap();
         }));
         let keys: Vec<u64> = ws[..4096].iter().map(|w| kv::hash_key(w)).collect();
-        report(&b.wall("sort_perm_kernel_4096", || {
+        record(&mut samples, b.wall("sort_perm_kernel_4096", || {
             let _ = engine.sort_perm(&keys).unwrap();
         }));
     } else {
@@ -76,7 +77,7 @@ fn main() {
         table.merge(kv::hash_key(w), w, &ONE, &SumOps);
     }
     let records = table.drain_records();
-    report(&b.wall("run_build_scalar", || {
+    record(&mut samples, b.wall("run_build_scalar", || {
         let _ = SortedRun::build_scalar(records.clone(), &SumOps);
     }));
     let run_a = SortedRun::build_scalar(records.clone(), &SumOps);
@@ -91,12 +92,12 @@ fn main() {
             .collect();
         SortedRun::build_scalar(recs, &SumOps)
     };
-    report(&b.wall("run_merge_2way", || {
+    record(&mut samples, b.wall("run_merge_2way", || {
         let _ = run_a.clone().merge(run_b.clone(), &SumOps);
     }));
 
     section("window RMA ops (4 ranks, 1 MiB puts)");
-    report(&b.wall("window_put_get_1mib_x4ranks", || {
+    record(&mut samples, b.wall("window_put_get_1mib_x4ranks", || {
         let outs = Universe::new(4, CostModel::default()).run(|ctx| {
             let win = Window::create(ctx, 1 << 20);
             ctx.barrier();
@@ -112,7 +113,7 @@ fn main() {
     }));
 
     section("atomics (2 ranks, 10k CAS)");
-    report(&b.wall("atomic_cas_10k", || {
+    record(&mut samples, b.wall("atomic_cas_10k", || {
         let outs = Universe::new(2, CostModel::default()).run(|ctx| {
             let win = Window::create(ctx, 64);
             ctx.barrier();
@@ -125,4 +126,6 @@ fn main() {
         });
         std::hint::black_box(outs);
     }));
+
+    write_json("micro", &samples).expect("json summary");
 }

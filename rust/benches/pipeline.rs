@@ -1,0 +1,49 @@
+//! Bench: multi-stage pipelines (TF-IDF chain and equi-join) on both
+//! backends — stage virtual seconds, end-to-end makespan, and the
+//! stage-boundary prefetch overlap MR-1S buys (DESIGN.md §6).
+//!
+//! `cargo bench --bench pipeline` runs the smoke profile;
+//! `-- --full` runs the paper-scaled scenario.
+
+use mr1s::bench::{section, write_json, Sample};
+use mr1s::harness::Scenario;
+use mr1s::mapreduce::BackendKind;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scenario = if full { Scenario::default() } else { Scenario::smoke() };
+    println!("pipeline bench ({} profile)", if full { "full" } else { "smoke" });
+
+    let mut samples: Vec<Sample> = Vec::new();
+    for plan in ["tfidf", "join"] {
+        for backend in [BackendKind::TwoSided, BackendKind::OneSided] {
+            section(&format!("{plan} on {}", backend.name()));
+            for &nranks in &scenario.ranks {
+                let out = scenario.run_pipeline(plan, backend, nranks).expect("pipeline runs");
+                let secs = out.elapsed_ns as f64 / 1e9;
+                // Total stage-boundary overlap won (0 on the coupled
+                // backend, where stages start behind collectives).
+                let overlap_ns: u64 = (1..out.stages.len())
+                    .filter_map(|i| out.handoff(i))
+                    .map(|(issue, prev_end)| prev_end.saturating_sub(issue))
+                    .sum();
+                println!(
+                    "{plan:<6} {} ranks={nranks:<3} elapsed={secs:>8.3}s overlap={:.3}s keys={}",
+                    backend.name(),
+                    overlap_ns as f64 / 1e9,
+                    out.result.len(),
+                );
+                let tag = format!("{plan}_{}_r{nranks}", backend.name());
+                samples.push(Sample::from_measurements(
+                    format!("{tag}_elapsed_ns"),
+                    &[out.elapsed_ns as f64],
+                ));
+                samples.push(Sample::from_measurements(
+                    format!("{tag}_overlap_ns"),
+                    &[overlap_ns as f64],
+                ));
+            }
+        }
+    }
+    write_json("pipeline", &samples).expect("json summary");
+}

@@ -8,8 +8,11 @@
 //!   scheduling nondeterminism (see DESIGN.md on virtual time).
 //!
 //! Output is a fixed-width table plus machine-readable CSV lines prefixed
-//! `#csv,` so bench logs can be grepped into plots.
+//! `#csv,` so bench logs can be grepped into plots, plus a
+//! `BENCH_<name>.json` summary per bench binary ([`write_json`]) so CI
+//! can collect results without parsing logs.
 
+use std::io::Write;
 use std::time::Instant;
 
 /// One measured series.
@@ -93,6 +96,71 @@ pub fn report(sample: &Sample) {
     println!("{}", sample.csv());
 }
 
+/// Print one sample and keep it for the JSON summary.
+pub fn record(samples: &mut Vec<Sample>, sample: Sample) {
+    report(&sample);
+    samples.push(sample);
+}
+
+/// Minimal JSON string escaping (names are code-controlled, but keep
+/// the output well-formed regardless).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write a machine-readable `BENCH_<name>.json` summary of `samples`.
+///
+/// Directory: `$MR1S_BENCH_DIR` or the current working directory.
+/// Schema: `{"bench": .., "samples": [{"name", "mean", "stddev", "n"},
+/// ..]}` — `mean`/`stddev` are in the bench's native unit (ns for wall
+/// benches, virtual ns for job benches, percent for figure aggregates;
+/// the sample name says which).  Returns the written path.
+pub fn write_json(bench: &str, samples: &[Sample]) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::env::var_os("MR1S_BENCH_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    write_json_to(&dir, bench, samples)
+}
+
+/// [`write_json`] with an explicit output directory (no env lookup).
+pub fn write_json_to(
+    dir: &std::path::Path,
+    bench: &str,
+    samples: &[Sample],
+) -> std::io::Result<std::path::PathBuf> {
+    let path = dir.join(format!("BENCH_{bench}.json"));
+    let mut out = String::new();
+    out.push_str(&format!("{{\"bench\":\"{}\",\"samples\":[", json_escape(bench)));
+    for (i, s) in samples.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"mean\":{:.3},\"stddev\":{:.3},\"n\":{}}}",
+            json_escape(&s.name),
+            s.mean,
+            s.stddev,
+            s.n
+        ));
+    }
+    out.push_str("]}\n");
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(out.as_bytes())?;
+    println!("wrote {}", path.display());
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,5 +187,22 @@ mod tests {
     fn csv_is_greppable() {
         let s = Sample::from_measurements("a,b", &[5.0]);
         assert!(s.csv().starts_with("#csv,a,b,"));
+    }
+
+    #[test]
+    fn json_summary_is_well_formed() {
+        let dir = std::env::temp_dir().join(format!("mr1s-benchjson-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let samples = vec![
+            Sample::from_measurements("alpha", &[1.0, 3.0]),
+            Sample::from_measurements("with\"quote", &[5.0]),
+        ];
+        let path = write_json_to(&dir, "unit_test", &samples).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("{\"bench\":\"unit_test\""));
+        assert!(text.contains("\"name\":\"alpha\",\"mean\":2.000"));
+        assert!(text.contains("with\\\"quote"));
+        assert!(text.trim_end().ends_with("]}"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -18,8 +18,10 @@ use crate::error::{Error, Result};
 use crate::harness::figures::{run_figure, FigureId};
 use crate::harness::Scenario;
 use crate::mapreduce::{BackendKind, Job, JobConfig, UseCase};
+use crate::metrics::timeline;
+use crate::pipeline::{oracle, plans, Pipeline};
 use crate::sim::CostModel;
-use crate::usecases::{self, WordCount};
+use crate::usecases::{self, EquiJoin, MeanLength, TfIdfScore, WordCount};
 use crate::workload::{generate_corpus, skew_factors, CorpusSpec, SkewSpec};
 
 /// Parsed flag map: `--key value` and bare `--switch`.
@@ -84,10 +86,15 @@ USAGE:
            [--task-size S] [--win-size S] [--chunk-size S] [--unbalanced]
            [--checkpoints] [--flush-epochs] [--stealing] [--no-kernel]
            [--top N]
+  mr1s pipeline --input <PATH> [--usecase tfidf|join] [--backend 1s|2s]
+           [--ranks N] [--task-size S] [--win-size S] [--chunk-size S]
+           [--no-kernel] [--timeline] [--top N]
   mr1s compare --input <PATH> [--ranks N] [--unbalanced]
   mr1s figures --fig <ID|all> [--smoke]
   mr1s help
 
+Pipelines chain MapReduce stages over spilled record files (DESIGN.md
+section 6); outputs are verified against a single-threaded oracle.
 Figures: 4a 4b 4c 4d 5a 5b 6a 6b 7a 7b (DESIGN.md section 4).
 Sizes accept K/M/G suffixes.";
 
@@ -113,6 +120,7 @@ pub fn main(args: &[String]) -> Result<i32> {
     match cmd {
         "gen" => cmd_gen(&flags),
         "run" => cmd_run(&flags),
+        "pipeline" => cmd_pipeline(&flags),
         "compare" => cmd_compare(&flags),
         "figures" => cmd_figures(&flags),
         "help" | "--help" | "-h" => {
@@ -222,6 +230,113 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
     by_weight.sort_by(|a, b| b.1.weight().cmp(&a.1.weight()).then_with(|| a.0.cmp(&b.0)));
     for (key, value) in by_weight.into_iter().take(top) {
         println!("{:>40}  {}", usecase.render_value(&value), String::from_utf8_lossy(&key));
+    }
+    Ok(0)
+}
+
+/// Verify a pipeline's final output against the single-threaded oracle
+/// of its plan; returns the number of verified keys.
+fn verify_pipeline(
+    which: &str,
+    corpus: &[u8],
+    result: &[(Vec<u8>, crate::mapreduce::Value)],
+) -> Result<usize> {
+    let mismatch = |what: &str| Error::Config(format!("pipeline disagrees with oracle: {what}"));
+    match which {
+        "tfidf" => {
+            let want = oracle::tfidf(corpus);
+            if want.len() != result.len() {
+                return Err(mismatch(&format!("{} keys vs {}", result.len(), want.len())));
+            }
+            for (key, value) in result {
+                let scores = value.as_bytes().map(TfIdfScore::decode_scores).unwrap_or_default();
+                if want.get(key) != Some(&scores) {
+                    return Err(mismatch(&format!("key '{}'", String::from_utf8_lossy(key))));
+                }
+            }
+            Ok(result.len())
+        }
+        "join" => {
+            let want = oracle::join(corpus);
+            if want.len() != result.len() {
+                return Err(mismatch(&format!("{} keys vs {}", result.len(), want.len())));
+            }
+            for (key, value) in result {
+                let pairs = value.as_bytes().map(EquiJoin::decode_pairs).unwrap_or_default();
+                let Some(&(count, (occ, total))) = want.get(key.as_slice()) else {
+                    return Err(mismatch(&format!("extra key '{}'", String::from_utf8_lossy(key))));
+                };
+                let left = count.to_le_bytes().to_vec();
+                let right = MeanLength::encode(occ, total).to_vec();
+                if pairs != vec![(left, right)] {
+                    return Err(mismatch(&format!("pair of '{}'", String::from_utf8_lossy(key))));
+                }
+            }
+            Ok(result.len())
+        }
+        other => Err(Error::Config(format!("no oracle for pipeline '{other}'"))),
+    }
+}
+
+fn cmd_pipeline(flags: &Flags) -> Result<i32> {
+    let backend: BackendKind = flags.get("backend").unwrap_or("1s").parse()?;
+    let input = flags.get("input").ok_or_else(|| Error::Config("--input required".into()))?;
+    let which = plans::canonical_name(flags.get("usecase").unwrap_or("tfidf")).ok_or_else(|| {
+        Error::Config(format!(
+            "unknown pipeline '{}' (available: {})",
+            flags.get("usecase").unwrap_or("tfidf"),
+            plans::names().join(", ")
+        ))
+    })?;
+    let nranks = ranks(flags)?;
+    let top = flags.get("top").map_or(Ok(10), |s| {
+        s.parse::<usize>().map_err(|_| Error::Config("bad --top".into()))
+    })?;
+    let base = JobConfig {
+        input: input.into(),
+        task_size: flags.size("task-size", 128 << 10)?,
+        win_size: flags.size("win-size", 1 << 20)?,
+        chunk_size: flags.size("chunk-size", 256 << 10)?,
+        use_kernel: !flags.has("no-kernel"),
+        ..Default::default()
+    };
+    let plan = plans::by_name(which, input.into(), backend).expect("canonical name resolves");
+    let pipe = Pipeline::new(plan, nranks, CostModel::default(), base)?;
+    let out = pipe.run()?;
+
+    for (i, stage) in out.stages.iter().enumerate() {
+        println!("stage {i} {:<12} {}", stage.name, stage.report.summary());
+        if let Some((issue, prev_end)) = out.handoff(i) {
+            let verdict = if issue < prev_end {
+                format!("prefetch overlap {:.3}s", (prev_end - issue) as f64 / 1e9)
+            } else {
+                "no overlap".into()
+            };
+            println!(
+                "        first read issued @{:.3}s, stage {} Combine ended @{:.3}s -> {verdict}",
+                issue as f64 / 1e9,
+                i - 1,
+                prev_end as f64 / 1e9,
+            );
+        }
+    }
+    println!("pipeline elapsed: {:.3}s (virtual)", out.elapsed_ns as f64 / 1e9);
+    if flags.has("timeline") {
+        println!("{}", timeline::render_ascii(&out.merged_timelines(), 100));
+    }
+
+    // Intermediate spills are only needed while stages run.
+    std::fs::remove_dir_all(pipe.workdir()).ok();
+
+    let corpus = std::fs::read(input)?;
+    let verified = verify_pipeline(which, &corpus, &out.result)?;
+    println!("oracle: {verified} keys verified");
+
+    let render = pipe.plan().stages.last().expect("plan non-empty").usecase.clone();
+    let mut by_weight = out.result;
+    by_weight.sort_by(|a, b| b.1.weight().cmp(&a.1.weight()).then_with(|| a.0.cmp(&b.0)));
+    for (key, value) in by_weight.into_iter().take(top) {
+        println!("{:>40}  {}", render.render_value(&value), String::from_utf8_lossy(&key));
     }
     Ok(0)
 }

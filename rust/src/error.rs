@@ -30,6 +30,17 @@ pub enum Error {
     /// Key-value record decoding failed (corrupt header / truncated data).
     KvDecode(String),
 
+    /// A reduce accumulator outgrew the wire format's u16 value-length
+    /// field (`kv::MAX_VALUE_LEN`).  Carries the offending key so the
+    /// use-case author can see which accumulator must be bounded
+    /// (posting lists cap their shard space, top-k trims to K, …).
+    ValueOverflow {
+        /// Key whose reduced value overflowed.
+        key: Vec<u8>,
+        /// Size the accumulator reached, in bytes.
+        len: usize,
+    },
+
     /// Malformed configuration.
     Config(String),
 
@@ -57,6 +68,12 @@ impl std::fmt::Display for Error {
                 write!(f, "invalid rank {rank} (communicator size {size})")
             }
             Error::KvDecode(msg) => write!(f, "kv decode error: {msg}"),
+            Error::ValueOverflow { key, len } => write!(
+                f,
+                "value overflow: key '{}' reduced to {len} bytes (max {})",
+                String::from_utf8_lossy(key),
+                crate::mapreduce::kv::MAX_VALUE_LEN,
+            ),
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),

@@ -3,8 +3,9 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::mapreduce::{BackendKind, Job, JobConfig, JobOutput};
+use crate::pipeline::{plans, Pipeline, PipelineOutput};
 use crate::sim::CostModel;
 use crate::usecases::WordCount;
 use crate::workload::{generate_corpus, skew_factors, CorpusSpec, SkewSpec};
@@ -112,6 +113,24 @@ impl Scenario {
         nranks: usize,
     ) -> Result<JobOutput> {
         Job::new(Arc::new(WordCount), cfg)?.run(backend, nranks, CostModel::default())
+    }
+
+    /// Run a named pipeline plan (see `crate::pipeline::plans`) over the
+    /// cached strong-scaling corpus on `nranks` ranks.
+    pub fn run_pipeline(
+        &self,
+        name: &str,
+        backend: BackendKind,
+        nranks: usize,
+    ) -> Result<PipelineOutput> {
+        let input = self.corpus(self.strong_bytes)?;
+        let base = self.config(input.clone(), false);
+        let plan = plans::by_name(name, input, backend)
+            .ok_or_else(|| Error::Config(format!("unknown pipeline '{name}'")))?;
+        let pipe = Pipeline::new(plan, nranks, CostModel::default(), base)?;
+        let out = pipe.run();
+        std::fs::remove_dir_all(pipe.workdir()).ok();
+        out
     }
 
     /// Convenience: run both backends on the same workload.

@@ -13,7 +13,9 @@
 //! * **L3 (this crate)** — the coordinator: the decoupled protocol over an
 //!   MPI-3-style RMA substrate ([`mpi`]), the storage substrate
 //!   ([`storage`]), workload generation ([`workload`]), metrics
-//!   ([`metrics`]) and the figure-regeneration harness ([`harness`]).
+//!   ([`metrics`]), the figure-regeneration harness ([`harness`]) and
+//!   the multi-stage pipeline executor ([`pipeline`]) chaining jobs
+//!   over spilled stage outputs with stage-boundary prefetch overlap.
 //! * **L2 (python/compile/model.py, build-time)** — the Map-phase hash
 //!   graph and Combine-phase sort graph, AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels/, build-time)** — Pallas kernels for the
@@ -34,6 +36,7 @@ pub mod harness;
 pub mod mapreduce;
 pub mod metrics;
 pub mod mpi;
+pub mod pipeline;
 pub mod runtime;
 pub mod sim;
 pub mod storage;

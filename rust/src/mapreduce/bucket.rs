@@ -65,11 +65,18 @@ impl OwnedRecord {
     }
 
     /// Append the wire encoding to `out`.
-    pub fn encode_into(&self, out: &mut Vec<u8>) {
+    ///
+    /// Fails with [`crate::error::Error::ValueOverflow`] when a reduce
+    /// accumulator outgrew the u16 value-length field.
+    pub fn encode_into(&self, out: &mut Vec<u8>) -> crate::error::Result<()> {
         match &self.value {
             Value::U64(v) => kv::encode_parts(self.hash, &self.key, &v.to_le_bytes(), out),
-            Value::Bytes(b) => kv::encode_parts(self.hash, &self.key, b, out),
+            Value::Bytes(b) => {
+                kv::check_value_len(&self.key, b.len())?;
+                kv::encode_parts(self.hash, &self.key, b, out);
+            }
         }
+        Ok(())
     }
 
     /// Run ordering: by hash, ties broken by key bytes.
@@ -183,25 +190,27 @@ impl KeyTable {
     }
 
     /// Drain into per-owner encoded buffers (bucket partitioning):
-    /// `out[r]` holds the records owned by rank `r`.
-    pub fn drain_by_owner(&mut self, nranks: usize) -> Vec<Vec<u8>> {
+    /// `out[r]` holds the records owned by rank `r`.  Fails with a typed
+    /// [`crate::error::Error::ValueOverflow`] when an accumulator no
+    /// longer fits the wire format.
+    pub fn drain_by_owner(&mut self, nranks: usize) -> crate::error::Result<Vec<Vec<u8>>> {
         let mut out = vec![Vec::new(); nranks];
         for (hash, chain) in self.slots.drain() {
             let owner = kv::owner_of(hash, nranks);
             match chain {
                 Chain::One(key, value) => {
-                    OwnedRecord { hash, key, value }.encode_into(&mut out[owner]);
+                    OwnedRecord { hash, key, value }.encode_into(&mut out[owner])?;
                 }
                 Chain::Many(chain) => {
                     for (key, value) in chain {
-                        OwnedRecord { hash, key, value }.encode_into(&mut out[owner]);
+                        OwnedRecord { hash, key, value }.encode_into(&mut out[owner])?;
                     }
                 }
             }
         }
         self.entries = 0;
         self.bytes = 0;
-        out
+        Ok(out)
     }
 
     /// Drain into a vector of owned records (unsorted).
@@ -300,13 +309,15 @@ impl SortedRun {
         self.records.iter().map(OwnedRecord::encoded_len).sum()
     }
 
-    /// Encode the run for window publication.
-    pub fn encode(&self) -> Vec<u8> {
+    /// Encode the run for window publication.  Fails with a typed
+    /// [`crate::error::Error::ValueOverflow`] when a reduced value no
+    /// longer fits the wire format's u16 length field.
+    pub fn encode(&self) -> crate::error::Result<Vec<u8>> {
         let mut out = Vec::with_capacity(self.encoded_bytes());
         for rec in &self.records {
-            rec.encode_into(&mut out);
+            rec.encode_into(&mut out)?;
         }
-        out
+        Ok(out)
     }
 
     /// Decode a run previously produced by [`SortedRun::encode`],
@@ -416,7 +427,7 @@ mod tests {
         for w in ["a", "b", "c", "d", "e"] {
             t.merge(kv::hash_key(w.as_bytes()), w.as_bytes(), &1u64.to_le_bytes(), &SumOps);
         }
-        let parts = t.drain_by_owner(4);
+        let parts = t.drain_by_owner(4).unwrap();
         assert_eq!(parts.len(), 4);
         for (r, buf) in parts.iter().enumerate() {
             for rec in kv::RecordIter::new(buf) {
@@ -439,7 +450,7 @@ mod tests {
     fn encode_decode_run_roundtrip() {
         let run =
             SortedRun::build_scalar(vec![rec("x", 1), rec("y", 2), rec("z", 3)], &SumOps);
-        let decoded = SortedRun::decode(&run.encode(), ValueKind::InlineU64).unwrap();
+        let decoded = SortedRun::decode(&run.encode().unwrap(), ValueKind::InlineU64).unwrap();
         assert_eq!(decoded.records(), run.records());
     }
 
@@ -451,7 +462,7 @@ mod tests {
             value: Value::Bytes(payload.to_vec()),
         };
         let a = SortedRun::build_scalar(vec![mk("k1", b"x"), mk("k2", b"y")], &ConcatOps);
-        let decoded = SortedRun::decode(&a.encode(), ValueKind::Variable).unwrap();
+        let decoded = SortedRun::decode(&a.encode().unwrap(), ValueKind::Variable).unwrap();
         assert_eq!(decoded.records(), a.records());
         let b = SortedRun::build_scalar(vec![mk("k2", b"z")], &ConcatOps);
         let m = a.merge(b, &ConcatOps);
@@ -475,6 +486,24 @@ mod tests {
         let a = SortedRun::build_scalar(vec![rec("k", 4)], &SumOps);
         let m = a.clone().merge(SortedRun::default(), &SumOps);
         assert_eq!(m.records(), a.records());
+    }
+
+    #[test]
+    fn overflowing_accumulator_is_typed_error() {
+        let mut t = KeyTable::new();
+        let h = kv::hash_key(b"hot");
+        let chunk = vec![7u8; 16 << 10];
+        for _ in 0..5 {
+            t.merge(h, b"hot", &chunk, &ConcatOps); // 80 KiB > u16::MAX
+        }
+        let err = t.drain_by_owner(2).unwrap_err();
+        match err {
+            crate::error::Error::ValueOverflow { key, len } => {
+                assert_eq!(key, b"hot".to_vec());
+                assert!(len > kv::MAX_VALUE_LEN);
+            }
+            other => panic!("expected ValueOverflow, got {other}"),
+        }
     }
 
     #[test]

@@ -61,6 +61,16 @@ pub trait UseCase: Send + Sync {
             Value::Bytes(b) => format!("<{} bytes>", b.len()),
         }
     }
+
+    /// Transform the final reduced value of `key` at the end of Combine,
+    /// before it reaches [`JobOutput`] (and, in a pipeline, the next
+    /// stage).  This is where accumulated structures become outputs: the
+    /// equi-join expands its tagged tuple halves into joined pairs, the
+    /// TF-IDF scorer turns `(df, [(shard, tf)])` into scores.  Default:
+    /// identity.
+    fn finalize(&self, _key: &[u8], value: Value) -> Value {
+        value
+    }
 }
 
 /// [`ValueOps`] adapter over a use-case: what jobs thread through the
@@ -111,12 +121,50 @@ pub struct JobShared {
     pub engine: Option<Arc<Engine>>,
     /// Node-wide memory tracker.
     pub mem: Arc<MemoryTracker>,
+    /// Record boundaries of a record-format input (a re-ingested stage
+    /// output); `None` = newline text input.
+    pub record_bounds: Option<Arc<Vec<u64>>>,
+    /// Per-rank virtual start times (pipeline stage handoff; empty =
+    /// every rank starts at 0).
+    pub start_vts: Vec<u64>,
+    /// Running as one stage of a pipeline: window infrastructure is
+    /// modeled as pre-allocated by the persistent runtime, so stage
+    /// entry synchronizes rank threads in real time only (no virtual
+    /// clock coupling — the decoupling lifted to stage boundaries).
+    pub pipelined: bool,
 }
 
 impl JobShared {
     /// Value-ops view of the use-case (thread through tables and runs).
     pub fn ops(&self) -> UseCaseOps<'_> {
         UseCaseOps(&*self.usecase)
+    }
+
+    /// True when the input is a record stream (spilled stage output)
+    /// rather than newline-delimited text.
+    pub fn record_input(&self) -> bool {
+        self.record_bounds.is_some()
+    }
+
+    /// Raw read span for a task: text tasks read one look-behind byte
+    /// plus the line overlap; record tasks are boundary-aligned by
+    /// construction and read exactly their extent.
+    pub fn read_span(&self, task: &TaskSpec) -> (u64, usize) {
+        if self.record_input() {
+            (task.offset, task.len)
+        } else {
+            (read_start(task), read_len(task))
+        }
+    }
+
+    /// The byte range of `data` (read via [`JobShared::read_span`]) that
+    /// this task owns.
+    pub fn owned_range(&self, task: &TaskSpec, data: &[u8]) -> std::ops::Range<usize> {
+        if self.record_input() {
+            0..task.len.min(data.len())
+        } else {
+            task_records(task, data)
+        }
     }
 }
 
@@ -130,6 +178,9 @@ pub struct RankOutcome {
     pub result: Option<SortedRun>,
     /// Input bytes this rank consumed.
     pub input_bytes: u64,
+    /// Virtual time this rank issued its first input read (pipeline
+    /// stage-overlap evidence).
+    pub first_read_issue_vt: Option<u64>,
 }
 
 /// A MapReduce backend (the paper's *Back-end class*).
@@ -148,6 +199,34 @@ pub fn split_tasks(file_len: u64, task_size: usize) -> Vec<TaskSpec> {
         tasks.push(TaskSpec { id, offset, len });
         offset += len as u64;
         id += 1;
+    }
+    tasks
+}
+
+/// Split a record-format input into tasks aligned to record boundaries.
+///
+/// The wire format is not self-synchronizing (no newline to scan for),
+/// so extents are cut exactly on the `boundaries` the spill writer
+/// recorded: each task starts on a boundary and ends on the first
+/// boundary at or past `task_size` bytes (or EOF).  Every record belongs
+/// to exactly one task; a record larger than `task_size` gets a task of
+/// its own.
+pub fn split_tasks_records(boundaries: &[u64], file_len: u64, task_size: usize) -> Vec<TaskSpec> {
+    let mut tasks = Vec::new();
+    let mut id = 0usize;
+    let mut b = 0usize;
+    while b < boundaries.len() {
+        let start = boundaries[b];
+        let target = start.saturating_add(task_size as u64);
+        let mut e = b + 1;
+        while e < boundaries.len() && boundaries[e] < target {
+            e += 1;
+        }
+        let end = if e < boundaries.len() { boundaries[e] } else { file_len };
+        debug_assert!(end > start, "boundaries must be strictly increasing");
+        tasks.push(TaskSpec { id, offset: start, len: (end - start) as usize });
+        id += 1;
+        b = e;
     }
     tasks
 }
@@ -201,6 +280,26 @@ pub fn read_len(task: &TaskSpec) -> usize {
     (task.offset - read_start(task)) as usize + task.len + LINE_OVERLAP
 }
 
+/// Drive `f` over each input unit of `data`: the lines of a text input,
+/// or the whole encoded records (`| h | klen | vlen | key | value |`) of
+/// a record-format input — the unit a use-case's `map_record` receives.
+/// Stage use-cases decode their unit with [`kv::Record::decode`].
+pub fn for_each_unit(record_input: bool, data: &[u8], f: &mut dyn FnMut(&[u8])) -> Result<()> {
+    if record_input {
+        let mut off = 0usize;
+        while off < data.len() {
+            let (_, next) = kv::Record::decode(data, off)?;
+            f(&data[off..next]);
+            off = next;
+        }
+    } else {
+        for line in data.split(|&b| b == b'\n') {
+            f(line);
+        }
+    }
+    Ok(())
+}
+
 /// Run the Map + Local-Reduce of one task's records into `staging`.
 ///
 /// Tokenizes via the use-case, hashes emissions (kernel batches when an
@@ -233,15 +332,15 @@ pub fn run_map_task(
             // and values share the arena; spans index into it.
             let mut bytes: Vec<u8> = Vec::with_capacity(records.len());
             let mut spans: Vec<(u32, u16, u32, u16)> = Vec::with_capacity(records.len() / 6);
-            for line in records.split(|&b| b == b'\n') {
-                shared.usecase.map_record(line, &mut |k, v| {
+            for_each_unit(shared.record_input(), records, &mut |unit| {
+                shared.usecase.map_record(unit, &mut |k, v| {
                     let koff = bytes.len() as u32;
                     bytes.extend_from_slice(k);
                     let voff = bytes.len() as u32;
                     bytes.extend_from_slice(v);
                     spans.push((koff, k.len() as u16, voff, v.len() as u16));
                 });
-            }
+            })?;
             emitted = spans.len();
             let batch = engine.geometry().batch;
             for chunk in spans.chunks(batch) {
@@ -262,12 +361,12 @@ pub fn run_map_task(
         None => {
             // Scalar path: stream emissions straight into the staging
             // table — no intermediate buffering at all.
-            for line in records.split(|&b| b == b'\n') {
-                shared.usecase.map_record(line, &mut |k, v| {
+            for_each_unit(shared.record_input(), records, &mut |unit| {
+                shared.usecase.map_record(unit, &mut |k, v| {
                     emitted += 1;
                     stage(staging, kv::hash_key(k), k, v);
                 });
-            }
+            })?;
         }
     }
 
@@ -369,8 +468,35 @@ pub struct Job {
 pub struct JobOutput {
     /// Metrics and timings.
     pub report: JobReport,
-    /// Final `(key, value)` pairs in run order (hash, then key).
+    /// Final `(key, value)` pairs in run order (hash, then key), with
+    /// [`UseCase::finalize`] applied.
     pub result: Vec<(Vec<u8>, Value)>,
+}
+
+/// A pre-opened record-format input: a spilled stage output handed to
+/// the next job of a pipeline.
+pub struct StagedInput {
+    /// The data file (usually availability-floored — see
+    /// [`crate::storage::spill`]).
+    pub file: StripedFile,
+    /// Record start offsets (task alignment).
+    pub boundaries: Arc<Vec<u64>>,
+}
+
+/// How a job plugs into a pipeline stage (see `crate::pipeline`).
+///
+/// The default is a standalone job: text input from the config path,
+/// all ranks starting at virtual time 0, collective window setup.
+#[derive(Default)]
+pub struct StageExec {
+    /// Per-rank virtual start times — rank `r` begins when its thread
+    /// finished the previous stage.  Empty = all zero.
+    pub start_vts: Vec<u64>,
+    /// Record-format input (overrides the config input path).
+    pub input: Option<StagedInput>,
+    /// Pipeline mode: stage entry synchronizes rank threads in real
+    /// time only (windows are modeled as pre-allocated).
+    pub pipelined: bool,
 }
 
 impl Job {
@@ -386,11 +512,19 @@ impl Job {
     }
 
     /// Execute on `nranks` simulated ranks with `backend`.
-    pub fn run(
+    pub fn run(&self, backend: BackendKind, nranks: usize, cost: CostModel) -> Result<JobOutput> {
+        self.run_staged(backend, nranks, cost, StageExec::default())
+    }
+
+    /// Execute as one stage of a pipeline: per-rank start times carry
+    /// over from the previous stage, and a spilled stage output can be
+    /// re-ingested in the record format (see `crate::pipeline`).
+    pub fn run_staged(
         &self,
         backend: BackendKind,
         nranks: usize,
         mut cost: CostModel,
+        stage: StageExec,
     ) -> Result<JobOutput> {
         // Fig. 7b variant: redundant flush epochs force RMA progress, so
         // the lazy-progress delay disappears (the epochs' own cost is
@@ -398,8 +532,20 @@ impl Job {
         if self.config.flush_epochs {
             cost.net.progress_delay_ns = 0;
         }
-        let file = StripedFile::open(&self.config.input)?;
-        let tasks = split_tasks(file.len(), self.config.task_size);
+        if !stage.start_vts.is_empty() && stage.start_vts.len() != nranks {
+            return Err(Error::Config(format!(
+                "stage start_vts has {} entries for {nranks} ranks",
+                stage.start_vts.len()
+            )));
+        }
+        let (file, record_bounds) = match stage.input {
+            Some(input) => (input.file, Some(input.boundaries)),
+            None => (StripedFile::open(&self.config.input)?, None),
+        };
+        let tasks = match &record_bounds {
+            Some(bounds) => split_tasks_records(bounds, file.len(), self.config.task_size),
+            None => split_tasks(file.len(), self.config.task_size),
+        };
         if tasks.is_empty() {
             return Err(Error::Config("empty input".into()));
         }
@@ -411,6 +557,9 @@ impl Job {
             tasks,
             engine,
             mem: Arc::new(MemoryTracker::new()),
+            record_bounds,
+            start_vts: stage.start_vts,
+            pipelined: stage.pipelined,
         });
 
         let backend_impl: Arc<dyn Backend> = match backend {
@@ -419,12 +568,18 @@ impl Job {
         };
 
         let shared2 = shared.clone();
-        let outcomes: Vec<Result<RankOutcome>> = Universe::new(nranks, cost)
-            .run(move |ctx| backend_impl.execute(ctx, &shared2));
+        let outcomes: Vec<Result<RankOutcome>> = Universe::new(nranks, cost).run(move |ctx| {
+            // Stage handoff: this rank's thread becomes free when it
+            // finished the previous stage, not when the stage barrier
+            // would have let it go.
+            ctx.clock.sync_to(shared2.start_vts.get(ctx.rank()).copied().unwrap_or(0));
+            backend_impl.execute(ctx, &shared2)
+        });
 
         let mut rank_elapsed = Vec::with_capacity(nranks);
         let mut breakdowns = Vec::with_capacity(nranks);
         let mut timelines = Vec::with_capacity(nranks);
+        let mut first_read_issue = Vec::with_capacity(nranks);
         let mut input_bytes = 0u64;
         let mut result_run = None;
         for outcome in outcomes {
@@ -432,22 +587,29 @@ impl Job {
             rank_elapsed.push(o.elapsed_ns);
             breakdowns.push(PhaseBreakdown::from_events(&o.events));
             timelines.push(o.events);
+            first_read_issue.push(o.first_read_issue_vt);
             input_bytes += o.input_bytes;
             if let Some(run) = o.result {
                 result_run = Some(run);
             }
         }
         let run = result_run.ok_or_else(|| Error::Config("no rank produced a result".into()))?;
-        let unique_keys = run.len() as u64;
+        // Finalize at the end of Combine (joins expand their pairs,
+        // scores are computed from accumulated aggregates, ...).
+        let result: Vec<(Vec<u8>, Value)> = run
+            .records()
+            .iter()
+            .map(|r| {
+                let value = self.usecase.finalize(&r.key, r.value.clone());
+                (r.key.to_vec(), value)
+            })
+            .collect();
+        let unique_keys = result.len() as u64;
         // Wrapping: inline values need not be additive counts, and
         // variable values contribute their payload length (see
         // `Value::weight`).
-        let total_count: u64 = run
-            .records()
-            .iter()
-            .fold(0u64, |acc, r| acc.wrapping_add(r.value.weight()));
-        let result: Vec<(Vec<u8>, Value)> =
-            run.records().iter().map(|r| (r.key.to_vec(), r.value.clone())).collect();
+        let total_count: u64 =
+            result.iter().fold(0u64, |acc, (_, v)| acc.wrapping_add(v.weight()));
 
         let report = JobReport {
             backend: backend.name(),
@@ -457,6 +619,7 @@ impl Job {
             rank_elapsed_ns: rank_elapsed,
             breakdowns,
             timelines,
+            first_read_issue_ns: first_read_issue,
             peak_memory_bytes: shared.mem.peak(),
             memory_series: shared.mem.normalized_series(256),
             unique_keys,
@@ -514,6 +677,48 @@ mod tests {
     }
 
     #[test]
+    fn split_tasks_records_aligns_to_boundaries() {
+        // Records at 0, 10, 25, 40, 90; file len 120.
+        let bounds = [0u64, 10, 25, 40, 90];
+        let tasks = split_tasks_records(&bounds, 120, 30);
+        // Task 0: 0..40 (first boundary >= 30 is 40); task 1: 40..90;
+        // task 2: 90..120.
+        assert_eq!(tasks.len(), 3);
+        assert_eq!((tasks[0].offset, tasks[0].len), (0, 40));
+        assert_eq!((tasks[1].offset, tasks[1].len), (40, 50));
+        assert_eq!((tasks[2].offset, tasks[2].len), (90, 30));
+        // Extents tile the file exactly.
+        assert!(tasks.windows(2).all(|w| w[0].offset + w[0].len as u64 == w[1].offset));
+        // Every task starts on a record boundary.
+        assert!(tasks.iter().all(|t| bounds.contains(&t.offset)));
+    }
+
+    #[test]
+    fn split_tasks_records_handles_oversize_record() {
+        let bounds = [0u64, 1000];
+        let tasks = split_tasks_records(&bounds, 1100, 16);
+        assert_eq!(tasks.len(), 2);
+        assert_eq!((tasks[0].offset, tasks[0].len), (0, 1000));
+        assert_eq!((tasks[1].offset, tasks[1].len), (1000, 100));
+    }
+
+    #[test]
+    fn for_each_unit_walks_encoded_records() {
+        let mut buf = Vec::new();
+        for i in 0..5u64 {
+            kv::encode_parts(i, format!("k{i}").as_bytes(), &i.to_le_bytes(), &mut buf);
+        }
+        let mut seen = Vec::new();
+        for_each_unit(true, &buf, &mut |unit| {
+            let (rec, n) = kv::Record::decode(unit, 0).unwrap();
+            assert_eq!(n, unit.len(), "unit is exactly one record");
+            seen.push(rec.hash);
+        })
+        .unwrap();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
     fn task_records_partition_lines_exactly() {
         // Every line must be owned by exactly one task, regardless of how
         // extents cut lines.
@@ -522,10 +727,10 @@ mod tests {
             let tasks = split_tasks(text.len() as u64, task_size);
             let mut seen: Vec<u8> = Vec::new();
             for t in &tasks {
-                let rs = read_start(&t) as usize;
-                let re = (rs + read_len(&t)).min(text.len());
+                let rs = read_start(t) as usize;
+                let re = (rs + read_len(t)).min(text.len());
                 let data = &text[rs..re];
-                let range = task_records(&t, data);
+                let range = task_records(t, data);
                 seen.extend_from_slice(&data[range]);
             }
             assert_eq!(seen, text.to_vec(), "task_size={task_size}");
@@ -539,9 +744,9 @@ mod tests {
             let tasks = split_tasks(text.len() as u64, task_size);
             let mut seen: Vec<u8> = Vec::new();
             for t in &tasks {
-                let rs = read_start(&t) as usize;
-                let re = (rs + read_len(&t)).min(text.len());
-                let range = task_records(&t, &text[rs..re]);
+                let rs = read_start(t) as usize;
+                let re = (rs + read_len(t)).min(text.len());
+                let range = task_records(t, &text[rs..re]);
                 seen.extend_from_slice(&text[rs..re][range]);
             }
             assert_eq!(seen, text.to_vec(), "task_size={task_size}");

@@ -92,6 +92,21 @@ impl<'a> Record<'a> {
     }
 }
 
+/// Guard a reduced value length against [`MAX_VALUE_LEN`].
+///
+/// Map emissions are bounded by construction (use-cases emit small
+/// values), but reduce accumulators grow — an unbounded operator can
+/// outgrow the u16 length field.  Every owned-record encode path calls
+/// this, so the failure is a typed [`Error::ValueOverflow`] carrying the
+/// key instead of a wire-corrupting truncation (or a debug panic).
+#[inline]
+pub fn check_value_len(key: &[u8], len: usize) -> Result<()> {
+    if len > MAX_VALUE_LEN {
+        return Err(Error::ValueOverflow { key: key.to_vec(), len });
+    }
+    Ok(())
+}
+
 /// Append one encoded record built from parts (shared by the borrowed
 /// and owned representations).
 pub fn encode_parts(hash: u64, key: &[u8], value: &[u8], out: &mut Vec<u8>) {

@@ -35,10 +35,7 @@ use crate::mpi::{LockKind, RankCtx, Window};
 use crate::storage::{Prefetcher, StorageWindow};
 
 use super::bucket::{KeyTable, SortedRun};
-use super::job::{
-    build_local_run, read_len, read_start, run_map_task, task_records, timed, Backend,
-    JobShared, RankOutcome,
-};
+use super::job::{build_local_run, run_map_task, timed, Backend, JobShared, RankOutcome};
 use super::kv::{self, ValueOps};
 
 /// Rank status values published through the Status window.
@@ -110,6 +107,7 @@ struct OutBucket {
 struct TaskClaimer<'a> {
     queues: &'a [Vec<super::job::TaskSpec>],
     stealing: bool,
+    shared: &'a JobShared,
 }
 
 impl TaskClaimer<'_> {
@@ -130,7 +128,8 @@ impl TaskClaimer<'_> {
         // Own queue first (local atomic: free).
         let idx = ctrl.fetch_add(&ctx.clock, me, C_TASK_NEXT, 1)? as usize;
         if let Some(task) = self.queues[me].get(idx) {
-            return Ok(Some((*task, prefetcher.issue(ctx, read_start(task), read_len(task)))));
+            let (off, len) = self.shared.read_span(task);
+            return Ok(Some((*task, prefetcher.issue(ctx, off, len))));
         }
         if !self.stealing {
             return Ok(None);
@@ -169,10 +168,8 @@ impl TaskClaimer<'_> {
                 );
             }
             if let Some(task) = self.queues[victim].get(idx) {
-                return Ok(Some((
-                    *task,
-                    prefetcher.issue(ctx, read_start(task), read_len(task)),
-                )));
+                let (off, len) = self.shared.read_span(task);
+                return Ok(Some((*task, prefetcher.issue(ctx, off, len))));
             }
             // Raced with the victim's own claims; rescan.
         }
@@ -191,14 +188,32 @@ impl Backend for Mr1s {
         let ops = shared.ops();
 
         // ---- Window setup (collective) + init fence ------------------
-        let ctrl = Window::create(ctx, ctrl_size(n));
-        let kv_win = Window::create(ctx, 0);
-        let comb_win = Window::create(ctx, 0);
+        // Standalone jobs pay the collective creation + barrier (as
+        // MPI_Win_create does).  Pipeline stages reuse the persistent
+        // runtime's window infrastructure: the rank threads still meet
+        // in real time (the regions must exist before any peer RMAs into
+        // them) but virtual clocks stay decoupled, so a rank that
+        // finished the previous stage early starts this one early.
+        let pipelined = shared.pipelined;
+        let mk_win = |size: usize| {
+            if pipelined {
+                Window::create_decoupled(ctx, size)
+            } else {
+                Window::create(ctx, size)
+            }
+        };
+        let ctrl = mk_win(ctrl_size(n));
+        let kv_win = mk_win(0);
+        let comb_win = mk_win(0);
         // Paper: each process acquires the exclusive lock over its own
         // Combine window during initialization.
         comb_win.lock(&ctx.clock, LockKind::Exclusive, me);
         let t0 = ctx.clock.now();
-        ctx.barrier();
+        if pipelined {
+            ctx.rendezvous_real();
+        } else {
+            ctx.barrier();
+        }
         tl.record(t0, ctx.clock.now(), EventKind::Wait);
 
         let mut out_buckets = vec![OutBucket::default(); n];
@@ -219,10 +234,11 @@ impl Backend for Mr1s {
         let queues: Vec<Vec<_>> = (0..n)
             .map(|r| shared.tasks.iter().copied().filter(|t| t.id % n == r).collect())
             .collect();
-        let claimer = TaskClaimer { queues: &queues, stealing: cfg.job_stealing };
+        let claimer = TaskClaimer { queues: &queues, stealing: cfg.job_stealing, shared };
         let prefetcher = Prefetcher::new(shared.file.clone());
         let mut input_bytes = 0u64;
         let mut pending = claimer.claim(ctx, &ctrl, &prefetcher)?;
+        let first_read_issue_vt = pending.as_ref().map(|(_, read)| read.issued_vt());
 
         while let Some((task, read)) = pending {
             let data = timed(ctx, &tl, EventKind::Io, || read.wait(ctx))?;
@@ -233,7 +249,7 @@ impl Backend for Mr1s {
             let task = &task;
 
             let mut staging = KeyTable::new();
-            let range = task_records(task, &data);
+            let range = shared.owned_range(task, &data);
             timed(ctx, &tl, EventKind::Map, || {
                 run_map_task(ctx, shared, task, &data[range], &mut staging)
             })?;
@@ -366,7 +382,7 @@ impl Backend for Mr1s {
 
             // Checkpoint the reduced state (window sync after Reduce).
             if let Some(ckpt) = checkpoint.as_mut() {
-                let enc = merged.encode();
+                let enc = merged.encode()?;
                 let t0 = ctx.clock.now();
                 ckpt.sync(ctx, ckpt_off, &enc)?;
                 ckpt.drain(ctx)?;
@@ -414,7 +430,7 @@ impl Backend for Mr1s {
                     level += 1;
                 } else {
                     // Child: publish the run and release the init lock.
-                    let enc = merged.encode();
+                    let enc = merged.encode()?;
                     let disp = comb_win.attach(enc.len().max(1));
                     shared.mem.alloc(ctx.clock.now(), enc.len() as u64);
                     comb_win.put(&ctx.clock, me, disp, &enc)?;
@@ -448,6 +464,7 @@ impl Backend for Mr1s {
             events: tl.events(),
             result,
             input_bytes,
+            first_read_issue_vt,
         })
     }
 }
@@ -473,7 +490,7 @@ impl Mr1s {
         let ops = shared.ops();
         let mut appended = Vec::new();
 
-        let parts = staging.drain_by_owner(n);
+        let parts = staging.drain_by_owner(n)?;
         for (t, buf) in parts.into_iter().enumerate() {
             if buf.is_empty() {
                 continue;

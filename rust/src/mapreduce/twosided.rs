@@ -18,8 +18,7 @@ use crate::mpi::RankCtx;
 
 use super::bucket::{KeyTable, SortedRun};
 use super::job::{
-    build_local_run, read_len, read_start, run_map_task, task_records, timed, Backend,
-    JobShared, RankOutcome, TaskSpec,
+    build_local_run, run_map_task, timed, Backend, JobShared, RankOutcome, TaskSpec,
 };
 use super::kv::{self, ValueOps};
 
@@ -53,18 +52,27 @@ impl Backend for Mr2s {
         // ---- Map rounds under collective I/O --------------------------
         let mut all_staging = KeyTable::new();
         let mut input_bytes = 0u64;
+        let mut first_read_issue_vt = None;
         for round in 0..rounds {
             let task = my_tasks.get(round);
             // Collective read: everyone participates every round, even
             // with no task left (MPI collective I/O semantics).
-            let (offset, len) = task.map_or((0, 0), |t| (read_start(t), read_len(t)));
+            let (offset, len) = task.map_or((0, 0), |t| shared.read_span(t));
             let data = timed(ctx, &tl, EventKind::Io, || {
                 shared.file.read_collective(ctx, offset, len)
             })?;
+            // A collective read is only *issued* once every rank has
+            // entered it (the barrier inside read_collective), so the
+            // post-read clock is the honest issue evidence — recording
+            // the pre-barrier entry time would fabricate stage overlap
+            // the coupled backend cannot have.
+            if first_read_issue_vt.is_none() {
+                first_read_issue_vt = Some(ctx.clock.now());
+            }
             let Some(task) = task else { continue };
             input_bytes += task.len as u64;
 
-            let range = task_records(task, &data);
+            let range = shared.owned_range(task, &data);
             timed(ctx, &tl, EventKind::Map, || {
                 run_map_task(ctx, shared, task, &data[range], &mut all_staging)
             })?;
@@ -73,7 +81,7 @@ impl Backend for Mr2s {
         let staging_bytes = all_staging.bytes() as u64;
 
         // ---- Shuffle: Alltoallv of per-owner buffers ------------------
-        let mut parts = all_staging.drain_by_owner(n);
+        let mut parts = all_staging.drain_by_owner(n)?;
         let own = std::mem::take(&mut parts[me]);
         let sent_bytes: usize = parts.iter().map(Vec::len).sum();
         let recv = timed(ctx, &tl, EventKind::Wait, || ctx.alltoallv(parts));
@@ -131,7 +139,7 @@ impl Backend for Mr2s {
                     level += 1;
                 } else {
                     let parent = me - half;
-                    ctx.comm.send(&ctx.clock, parent, TAG_COMBINE, merged.encode());
+                    ctx.comm.send(&ctx.clock, parent, TAG_COMBINE, merged.encode()?);
                     break;
                 }
             }
@@ -147,6 +155,7 @@ impl Backend for Mr2s {
             events: tl.events(),
             result,
             input_bytes,
+            first_read_issue_vt,
         })
     }
 }

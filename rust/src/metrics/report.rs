@@ -58,6 +58,10 @@ pub struct JobReport {
     pub breakdowns: Vec<PhaseBreakdown>,
     /// Per-rank timelines.
     pub timelines: Vec<Vec<Event>>,
+    /// Per-rank virtual time of the first input-read issue (None when a
+    /// rank never read input).  In a pipeline this is the evidence that
+    /// stage N+1's prefetch went out before stage N fully finished.
+    pub first_read_issue_ns: Vec<Option<u64>>,
     /// Peak tracked memory over the node (bytes).
     pub peak_memory_bytes: u64,
     /// Normalized (t, bytes) memory series.
@@ -74,6 +78,24 @@ impl JobReport {
     /// Makespan in (virtual) seconds.
     pub fn elapsed_secs(&self) -> f64 {
         self.elapsed_ns as f64 / 1e9
+    }
+
+    /// Virtual time the last rank finished its Combine phase (0 when no
+    /// Combine interval was recorded).  Pipelines compare the next
+    /// stage's first read issue against this.
+    pub fn combine_end_ns(&self) -> u64 {
+        self.timelines
+            .iter()
+            .flatten()
+            .filter(|e| e.kind == EventKind::Combine)
+            .map(|e| e.t1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Earliest first-read issue across ranks (None when no rank read).
+    pub fn first_read_issue_min_ns(&self) -> Option<u64> {
+        self.first_read_issue_ns.iter().flatten().copied().min()
     }
 
     /// Mean of per-rank wait fractions (load-imbalance indicator).
@@ -136,6 +158,7 @@ mod tests {
                 PhaseBreakdown { wait_ns: 0, ..Default::default() },
             ],
             timelines: vec![vec![], vec![]],
+            first_read_issue_ns: vec![None, None],
             peak_memory_bytes: 0,
             memory_series: vec![],
             unique_keys: 0,

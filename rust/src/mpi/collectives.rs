@@ -23,6 +23,15 @@ impl RankCtx {
         self.clock.advance(self.cost.net.collective_cost(self.nranks(), 0));
     }
 
+    /// Real-time-only rendezvous: all rank threads meet, virtual clocks
+    /// are untouched.  Simulator-internal synchronization for pipeline
+    /// stage entry, where the modeled runtime has no collective (window
+    /// infrastructure persists across stages) but the *threads* must
+    /// still agree the stage's shared state exists before using it.
+    pub fn rendezvous_real(&self) {
+        let _ = self.comm.shared.rendezvous.run(self.rank(), self.clock.now(), (), |_| ());
+    }
+
     /// Broadcast `data` from `root`; every rank returns a copy.
     pub fn bcast(&self, root: usize, data: Option<Vec<u8>>) -> Vec<u8> {
         assert!(root < self.nranks());

@@ -140,6 +140,21 @@ impl Window {
     /// displacement 0 on every rank (pass 0 for a dynamic window and use
     /// [`Window::attach`]).
     pub fn create(ctx: &RankCtx, local_size: usize) -> Window {
+        Self::create_inner(ctx, local_size, true)
+    }
+
+    /// Window creation for a pipeline stage: the rank threads still
+    /// rendezvous in real time (the shared regions must exist before any
+    /// peer RMAs into them), but virtual clocks are left untouched — the
+    /// pipeline models stage windows as pre-allocated by the persistent
+    /// runtime during the previous stage, so stage entry costs no
+    /// collective synchronization (the paper's decoupling lifted to
+    /// stage boundaries; see DESIGN.md §6).
+    pub fn create_decoupled(ctx: &RankCtx, local_size: usize) -> Window {
+        Self::create_inner(ctx, local_size, false)
+    }
+
+    fn create_inner(ctx: &RankCtx, local_size: usize, sync_clocks: bool) -> Window {
         let nranks = ctx.comm.size();
         let net = *ctx.comm.net();
         let (shared, max_vt) = ctx.comm.shared.rendezvous.run(
@@ -156,7 +171,9 @@ impl Window {
                 })
             },
         );
-        ctx.clock.sync_to(max_vt);
+        if sync_clocks {
+            ctx.clock.sync_to(max_vt);
+        }
         let win = Window { shared: (*shared).clone(), my_rank: ctx.comm.rank() };
         if local_size > 0 {
             win.attach(local_size);

@@ -1,0 +1,209 @@
+//! The pipeline executor: run a [`Plan`] stage by stage, materializing
+//! each output through the storage substrate and handing rank threads
+//! straight into the next stage.
+//!
+//! Virtual-time model of a stage boundary (DESIGN.md §6):
+//!
+//! * stage N's result lands on its root rank at that rank's completion;
+//!   the spill writer flushes it to the stage file on a background
+//!   flusher, chunk by chunk, from that moment (`write_cost` per chunk);
+//! * rank `r` of stage N+1 *starts* when rank `r` of stage N finished —
+//!   no barrier between stages (windows persist; see
+//!   `Window::create_decoupled`) — and immediately issues its first
+//!   non-blocking input read;
+//! * that read *completes* no earlier than the durability of the bytes
+//!   it covers, so early ranks overlap their idle tail with the
+//!   producer's Combine + flush instead of waiting behind a barrier —
+//!   the paper's non-blocking-I/O overlap lifted to stage boundaries.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+use crate::mapreduce::job::{StageExec, StagedInput};
+use crate::mapreduce::kv::Value;
+use crate::mapreduce::{Job, JobConfig, JobOutput};
+use crate::metrics::{Event, JobReport};
+use crate::sim::CostModel;
+use crate::storage::SpillWriter;
+
+use super::plan::{Plan, StageSource};
+
+/// What one executed stage reports back.
+pub struct StageReport {
+    /// Stage name from the plan.
+    pub name: String,
+    /// Backend that executed it ("MR-1S" / "MR-2S").
+    pub backend: &'static str,
+    /// The stage job's full report; all virtual times are absolute
+    /// pipeline times (rank clocks carry over between stages).
+    pub report: JobReport,
+    /// Virtual time the stage's input was fully durable (0 = corpus).
+    pub input_ready_vt: u64,
+}
+
+/// Result of a pipeline execution.
+pub struct PipelineOutput {
+    /// Per-stage reports, in plan order.
+    pub stages: Vec<StageReport>,
+    /// The last stage's finalized `(key, value)` pairs.
+    pub result: Vec<(Vec<u8>, Value)>,
+    /// Pipeline makespan in virtual ns.
+    pub elapsed_ns: u64,
+}
+
+impl PipelineOutput {
+    /// Stage-boundary overlap evidence for stage `i > 0`: the virtual
+    /// time stage `i` issued its first input read, and the virtual time
+    /// stage `i-1`'s last rank finished Combine.  Issue < combine-end
+    /// means the next stage's prefetch went out while the previous
+    /// stage was still combining.
+    pub fn handoff(&self, i: usize) -> Option<(u64, u64)> {
+        if i == 0 {
+            return None;
+        }
+        let issue = self.stages.get(i)?.report.first_read_issue_min_ns()?;
+        let prev_combine_end = self.stages.get(i - 1)?.report.combine_end_ns();
+        Some((issue, prev_combine_end))
+    }
+
+    /// Merge all stages' per-rank timelines into one pipeline timeline
+    /// (event times are absolute, so plain concatenation is correct).
+    pub fn merged_timelines(&self) -> Vec<Vec<Event>> {
+        let nranks = self.stages.iter().map(|s| s.report.timelines.len()).max().unwrap_or(0);
+        let mut merged: Vec<Vec<Event>> = vec![Vec::new(); nranks];
+        for stage in &self.stages {
+            for (rank, tl) in stage.report.timelines.iter().enumerate() {
+                merged[rank].extend_from_slice(tl);
+            }
+        }
+        merged
+    }
+}
+
+/// Executes a [`Plan`] over a fixed rank count and cost model.
+pub struct Pipeline {
+    plan: Plan,
+    nranks: usize,
+    cost: CostModel,
+    base: JobConfig,
+    workdir: PathBuf,
+}
+
+impl Pipeline {
+    /// Build an executor.  `base` supplies the per-stage job settings
+    /// (task/win/chunk sizes, kernel toggle, ...); its `input` and
+    /// `skew` fields are ignored (per-stage inputs come from the plan,
+    /// and imbalance belongs to corpus workloads, not re-ingested
+    /// records).  Job stealing is disabled: its real-time pacing gate is
+    /// calibrated to jobs that start at virtual time 0.
+    pub fn new(plan: Plan, nranks: usize, cost: CostModel, base: JobConfig) -> Result<Pipeline> {
+        plan.validate()?;
+        if nranks == 0 {
+            return Err(Error::Config("pipeline needs at least one rank".into()));
+        }
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let workdir = std::env::temp_dir().join(format!(
+            "mr1s-pipeline-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        Ok(Pipeline { plan, nranks, cost, base, workdir })
+    }
+
+    /// Override where intermediate spill files are written.
+    pub fn with_workdir(mut self, dir: impl Into<PathBuf>) -> Pipeline {
+        self.workdir = dir.into();
+        self
+    }
+
+    /// Directory holding the intermediate spill files.
+    pub fn workdir(&self) -> &PathBuf {
+        &self.workdir
+    }
+
+    /// The plan being executed (e.g. to render values via the last
+    /// stage's use-case).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Execute every stage; returns the last stage's output plus
+    /// per-stage reports.
+    pub fn run(&self) -> Result<PipelineOutput> {
+        std::fs::create_dir_all(&self.workdir)?;
+        // Stage results are retained only until their consumers have
+        // re-spilled them; reports move into StageReport (not cloned).
+        let mut results: Vec<Vec<(Vec<u8>, Value)>> = Vec::new();
+        // When stage i's result became available (its root rank's
+        // completion — the run lives on rank 0 after Combine).
+        let mut ready_vts: Vec<u64> = Vec::new();
+        let mut start_vts = vec![0u64; self.nranks];
+        let mut stages: Vec<StageReport> = Vec::new();
+
+        for (i, stage) in self.plan.stages.iter().enumerate() {
+            let (input_path, staged, input_ready_vt) = match &stage.sources[0] {
+                StageSource::Corpus(path) => (path.clone(), None, 0u64),
+                StageSource::Stage { .. } => {
+                    // Each consumer materializes its own input file: a
+                    // multi-consumer producer is re-encoded per consumer
+                    // because the byte stream genuinely differs (side
+                    // byte / companion sources).  Sharing the untagged
+                    // spill across consumers is a ROADMAP follow-on.
+                    let path = self.workdir.join(format!("stage-{i}-{}.spill", stage.name));
+                    let mut writer = SpillWriter::create(&path)?;
+                    for source in &stage.sources {
+                        let StageSource::Stage { index, tag } = source else {
+                            unreachable!("validate(): no corpus among stage sources");
+                        };
+                        writer.append_records(
+                            &results[*index],
+                            *tag,
+                            ready_vts[*index],
+                            &self.cost.storage,
+                        )?;
+                    }
+                    if writer.is_empty() {
+                        return Err(Error::Config(format!(
+                            "stage {i} '{}' has an empty input",
+                            stage.name
+                        )));
+                    }
+                    let spill = writer.finish()?;
+                    let ready = spill.availability.last_vt();
+                    let staged =
+                        StagedInput { file: spill.file, boundaries: spill.boundaries };
+                    (path, Some(staged), ready)
+                }
+            };
+
+            let config = JobConfig {
+                input: input_path,
+                skew: Vec::new(),
+                job_stealing: false,
+                ..self.base.clone()
+            };
+            let JobOutput { report, result } = Job::new(stage.usecase.clone(), config)?
+                .run_staged(
+                    stage.backend,
+                    self.nranks,
+                    self.cost,
+                    StageExec { start_vts: start_vts.clone(), input: staged, pipelined: true },
+                )?;
+
+            start_vts = report.rank_elapsed_ns.clone();
+            ready_vts.push(report.rank_elapsed_ns.first().copied().unwrap_or(0));
+            stages.push(StageReport {
+                name: stage.name.clone(),
+                backend: report.backend,
+                report,
+                input_ready_vt,
+            });
+            results.push(result);
+        }
+
+        let result = results.pop().expect("plan has stages");
+        let elapsed_ns = stages.last().expect("plan has stages").report.elapsed_ns;
+        Ok(PipelineOutput { stages, result, elapsed_ns })
+    }
+}

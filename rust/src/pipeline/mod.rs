@@ -1,0 +1,31 @@
+//! Multi-stage pipeline executor: chained MapReduce jobs over the
+//! storage substrate.
+//!
+//! The paper decouples Map and Reduce *within* one job; real workloads
+//! (TF-IDF, joins, per-key top-k) chain jobs, each stage's output being
+//! the next stage's input.  This module lifts the paper's decoupling to
+//! those stage boundaries:
+//!
+//! * a [`plan::Plan`] names the [`plan::Stage`]s — each a `UseCase` plus
+//!   a backend choice — and how they feed each other (a linearized DAG;
+//!   multi-input stages read tagged records);
+//! * the [`driver::Pipeline`] materializes every stage's `JobOutput`
+//!   back into the storage layer through the spill writer
+//!   (`crate::storage::spill`), charging real write costs on the
+//!   virtual clock, and launches the next stage with prefetch overlap:
+//!   rank `r` of stage N+1 starts the moment rank `r` of stage N
+//!   finished and immediately issues its first non-blocking input read,
+//!   which completes when the producer's flushed bytes are durable —
+//!   stage N+1's reads overlap stage N's Combine tail;
+//! * [`plans`] ships the proof chains: a three-stage TF-IDF and a
+//!   two-input equi-join, runnable on both MR-1S and MR-2S.
+//!
+//! See DESIGN.md §6 for the stage-boundary cost accounting.
+
+pub mod driver;
+pub mod oracle;
+pub mod plan;
+pub mod plans;
+
+pub use driver::{Pipeline, PipelineOutput, StageReport};
+pub use plan::{Plan, Stage, StageSource};

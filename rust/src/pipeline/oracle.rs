@@ -1,0 +1,67 @@
+//! Single-threaded reference implementations of the shipped pipeline
+//! plans — one pass over the raw corpus, no framework code beyond the
+//! shared tokenizer/shard/score helpers.  The CLI and the integration
+//! tests compare pipeline outputs against these.
+
+use std::collections::HashMap;
+
+use crate::usecases::tfidf::score_micro;
+use crate::usecases::{InvertedIndex, WordCount};
+
+/// TF-IDF oracle: `word → sorted (shard, score_micro) pairs`.
+pub fn tfidf(corpus: &[u8]) -> HashMap<Vec<u8>, Vec<(u32, u64)>> {
+    let mut tf: HashMap<(Vec<u8>, u32), u64> = HashMap::new();
+    for line in corpus.split(|&b| b == b'\n') {
+        if line.is_empty() {
+            continue;
+        }
+        let shard = InvertedIndex::shard(line);
+        for tok in WordCount::tokens(line) {
+            *tf.entry((tok, shard)).or_insert(0) += 1;
+        }
+    }
+    let mut df: HashMap<Vec<u8>, u64> = HashMap::new();
+    for (word, _) in tf.keys() {
+        *df.entry(word.clone()).or_insert(0) += 1;
+    }
+    let mut out: HashMap<Vec<u8>, Vec<(u32, u64)>> = HashMap::new();
+    for ((word, shard), count) in tf {
+        let d = df[&word];
+        out.entry(word).or_default().push((shard, score_micro(count, d)));
+    }
+    for scores in out.values_mut() {
+        scores.sort_unstable();
+    }
+    out
+}
+
+/// Equi-join oracle for the word-count ⋈ mean-length plan:
+/// `word → (count, (occurrences, total line bytes))`.
+pub fn join(corpus: &[u8]) -> HashMap<Vec<u8>, (u64, (u64, u64))> {
+    let mut out: HashMap<Vec<u8>, (u64, (u64, u64))> = HashMap::new();
+    for line in corpus.split(|&b| b == b'\n') {
+        for tok in WordCount::tokens(line) {
+            let e = out.entry(tok).or_insert((0, (0, 0)));
+            e.0 += 1;
+            e.1 .0 += 1;
+            e.1 .1 += line.len() as u64;
+        }
+    }
+    out
+}
+
+/// Top-k oracle (the registered standalone use-case): `word → K largest
+/// containing-line lengths, descending`.
+pub fn topk(corpus: &[u8]) -> HashMap<Vec<u8>, Vec<u64>> {
+    let mut out: HashMap<Vec<u8>, Vec<u64>> = HashMap::new();
+    for line in corpus.split(|&b| b == b'\n') {
+        for tok in WordCount::tokens(line) {
+            out.entry(tok).or_default().push(line.len() as u64);
+        }
+    }
+    for obs in out.values_mut() {
+        obs.sort_unstable_by(|a, b| b.cmp(a));
+        obs.truncate(crate::usecases::TopK::K);
+    }
+    out
+}

@@ -1,0 +1,196 @@
+//! Pipeline plans: a linearized DAG of MapReduce stages.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::mapreduce::{BackendKind, UseCase};
+
+/// Where a stage's input comes from.
+#[derive(Debug, Clone)]
+pub enum StageSource {
+    /// A newline-delimited text corpus on disk (pipeline roots).
+    Corpus(PathBuf),
+    /// The output of an earlier stage, re-ingested in the record format.
+    /// With `tag`, every value is prefixed by the side byte so a
+    /// multi-input stage can tell its sources apart.
+    Stage {
+        /// Index of the producing stage in [`Plan::stages`].
+        index: usize,
+        /// Side byte prefixed to each value (required when a stage has
+        /// more than one source).
+        tag: Option<u8>,
+    },
+}
+
+/// One stage: a use-case executed by a backend over its sources.
+pub struct Stage {
+    /// Display name ("tf", "df", "join", ...).
+    pub name: String,
+    /// The use-case run at this stage.
+    pub usecase: Arc<dyn UseCase>,
+    /// Which backend executes it.
+    pub backend: BackendKind,
+    /// Inputs: exactly one corpus, or one-or-more earlier stages.
+    pub sources: Vec<StageSource>,
+}
+
+/// An ordered chain of stages; stage `i` may only consume stages `< i`.
+/// The last stage's output is the pipeline result.
+pub struct Plan {
+    /// The stages, in execution order.
+    pub stages: Vec<Stage>,
+}
+
+impl Plan {
+    /// Check the plan's structural invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.stages.is_empty() {
+            return Err(Error::Config("pipeline plan has no stages".into()));
+        }
+        for (i, stage) in self.stages.iter().enumerate() {
+            if stage.sources.is_empty() {
+                return Err(Error::Config(format!("stage {i} '{}' has no source", stage.name)));
+            }
+            let corpus = stage.sources.iter().any(|s| matches!(s, StageSource::Corpus(_)));
+            let staged = stage.sources.iter().any(|s| matches!(s, StageSource::Stage { .. }));
+            if corpus && staged {
+                return Err(Error::Config(format!(
+                    "stage {i} '{}' mixes corpus and stage sources",
+                    stage.name
+                )));
+            }
+            if corpus && stage.sources.len() > 1 {
+                return Err(Error::Config(format!(
+                    "stage {i} '{}' has multiple corpus sources",
+                    stage.name
+                )));
+            }
+            let mut tags = Vec::new();
+            for source in &stage.sources {
+                if let StageSource::Stage { index, tag } = source {
+                    if *index >= i {
+                        return Err(Error::Config(format!(
+                            "stage {i} '{}' consumes stage {index} (not earlier)",
+                            stage.name
+                        )));
+                    }
+                    if stage.sources.len() > 1 {
+                        match tag {
+                            None => {
+                                return Err(Error::Config(format!(
+                                    "stage {i} '{}': multi-input sources must be tagged",
+                                    stage.name
+                                )))
+                            }
+                            Some(t) => {
+                                if tags.contains(t) {
+                                    return Err(Error::Config(format!(
+                                        "stage {i} '{}': duplicate source tag {t}",
+                                        stage.name
+                                    )));
+                                }
+                                tags.push(*t);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::usecases::WordCount;
+
+    fn corpus_stage(name: &str) -> Stage {
+        Stage {
+            name: name.into(),
+            usecase: Arc::new(WordCount),
+            backend: BackendKind::OneSided,
+            sources: vec![StageSource::Corpus(PathBuf::from("/dev/null"))],
+        }
+    }
+
+    fn staged(name: &str, sources: Vec<StageSource>) -> Stage {
+        Stage {
+            name: name.into(),
+            usecase: Arc::new(WordCount),
+            backend: BackendKind::OneSided,
+            sources,
+        }
+    }
+
+    #[test]
+    fn empty_plan_rejected() {
+        assert!(Plan { stages: vec![] }.validate().is_err());
+    }
+
+    #[test]
+    fn chain_and_tagged_fanin_validate() {
+        let plan = Plan {
+            stages: vec![
+                corpus_stage("a"),
+                staged("b", vec![StageSource::Stage { index: 0, tag: None }]),
+                staged(
+                    "c",
+                    vec![
+                        StageSource::Stage { index: 0, tag: Some(1) },
+                        StageSource::Stage { index: 1, tag: Some(2) },
+                    ],
+                ),
+            ],
+        };
+        assert!(plan.validate().is_ok());
+    }
+
+    #[test]
+    fn forward_reference_rejected() {
+        let plan = Plan {
+            stages: vec![
+                corpus_stage("a"),
+                staged("b", vec![StageSource::Stage { index: 1, tag: None }]),
+            ],
+        };
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn untagged_multi_input_rejected() {
+        let plan = Plan {
+            stages: vec![
+                corpus_stage("a"),
+                corpus_stage("b"),
+                staged(
+                    "c",
+                    vec![
+                        StageSource::Stage { index: 0, tag: Some(1) },
+                        StageSource::Stage { index: 1, tag: None },
+                    ],
+                ),
+            ],
+        };
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn duplicate_tags_rejected() {
+        let plan = Plan {
+            stages: vec![
+                corpus_stage("a"),
+                corpus_stage("b"),
+                staged(
+                    "c",
+                    vec![
+                        StageSource::Stage { index: 0, tag: Some(3) },
+                        StageSource::Stage { index: 1, tag: Some(3) },
+                    ],
+                ),
+            ],
+        };
+        assert!(plan.validate().is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Shipped pipeline plans: the proof chains the CLI, harness and benches
+//! run (`mr1s pipeline --usecase tfidf|join`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::mapreduce::BackendKind;
+use crate::usecases::{DocFreq, EquiJoin, MeanLength, TermFreq, TfIdfScore, WordCount};
+
+use super::plan::{Plan, Stage, StageSource};
+
+/// TF-IDF over pseudo-document shards, as three chained stages:
+/// `tf` (corpus) → `df` (tf records) → `tfidf` (tf ⊕ df, tagged).
+pub fn tfidf_plan(corpus: PathBuf, backend: BackendKind) -> Plan {
+    Plan {
+        stages: vec![
+            Stage {
+                name: "tf".into(),
+                usecase: Arc::new(TermFreq),
+                backend,
+                sources: vec![StageSource::Corpus(corpus)],
+            },
+            Stage {
+                name: "df".into(),
+                usecase: Arc::new(DocFreq),
+                backend,
+                sources: vec![StageSource::Stage { index: 0, tag: None }],
+            },
+            Stage {
+                name: "tfidf".into(),
+                usecase: Arc::new(TfIdfScore),
+                backend,
+                sources: vec![
+                    StageSource::Stage { index: 0, tag: Some(TfIdfScore::TAG_TF) },
+                    StageSource::Stage { index: 1, tag: Some(TfIdfScore::TAG_DF) },
+                ],
+            },
+        ],
+    }
+}
+
+/// Equi-join of two aggregations of the same corpus on the token key:
+/// word-count ⋈ mean-length, via tagged tuple halves.
+pub fn join_plan(corpus: PathBuf, backend: BackendKind) -> Plan {
+    Plan {
+        stages: vec![
+            Stage {
+                name: "word-count".into(),
+                usecase: Arc::new(WordCount),
+                backend,
+                sources: vec![StageSource::Corpus(corpus.clone())],
+            },
+            Stage {
+                name: "mean-length".into(),
+                usecase: Arc::new(MeanLength),
+                backend,
+                sources: vec![StageSource::Corpus(corpus)],
+            },
+            Stage {
+                name: "join".into(),
+                usecase: Arc::new(EquiJoin),
+                backend,
+                sources: vec![
+                    StageSource::Stage { index: 0, tag: Some(EquiJoin::TAG_LEFT) },
+                    StageSource::Stage { index: 1, tag: Some(EquiJoin::TAG_RIGHT) },
+                ],
+            },
+        ],
+    }
+}
+
+/// Canonical name of a plan spelling ("tf-idf" → "tfidf").
+pub fn canonical_name(name: &str) -> Option<&'static str> {
+    match name {
+        "tfidf" | "tf-idf" => Some("tfidf"),
+        "join" | "equi-join" => Some("join"),
+        _ => None,
+    }
+}
+
+/// Named plans the CLI accepts for `mr1s pipeline --usecase`.
+pub fn by_name(name: &str, corpus: PathBuf, backend: BackendKind) -> Option<Plan> {
+    match canonical_name(name)? {
+        "tfidf" => Some(tfidf_plan(corpus, backend)),
+        "join" => Some(join_plan(corpus, backend)),
+        _ => None,
+    }
+}
+
+/// Canonical plan names (help text).
+pub fn names() -> &'static [&'static str] {
+    &["tfidf", "join"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shipped_plans_validate() {
+        for name in names() {
+            let plan = by_name(name, PathBuf::from("corpus.txt"), BackendKind::OneSided)
+                .expect("named plan exists");
+            plan.validate().unwrap_or_else(|e| panic!("plan '{name}': {e}"));
+        }
+        assert!(by_name("bogus", PathBuf::new(), BackendKind::OneSided).is_none());
+    }
+}

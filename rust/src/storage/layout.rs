@@ -8,12 +8,20 @@ use std::sync::Arc;
 use crate::error::Result;
 use crate::mpi::RankCtx;
 
+use super::spill::Availability;
+
 /// A read-only input file with a recorded stripe layout.
 ///
 /// The paper creates its inputs with a 1 MB stripe size over 165 OSTs;
 /// here the bytes live in one local file and the stripe geometry is
 /// metadata used by documentation and the cost model.  All reads are real
 /// `pread`-style accesses.
+///
+/// A file may carry an [`Availability`] schedule (pipeline stage inputs
+/// that are still being flushed by the producing stage): reads then
+/// complete no earlier than the durability of the bytes they cover, so
+/// overlapped reads are free and premature ones stall — in virtual time
+/// only; the real bytes are always on disk by the time a reader runs.
 #[derive(Debug, Clone)]
 pub struct StripedFile {
     path: PathBuf,
@@ -23,6 +31,7 @@ pub struct StripedFile {
     /// Stripe count (paper: 165).
     pub stripe_count: u32,
     handle: Arc<File>,
+    availability: Option<Arc<Availability>>,
 }
 
 impl StripedFile {
@@ -40,7 +49,25 @@ impl StripedFile {
         let path = path.as_ref().to_path_buf();
         let handle = File::open(&path)?;
         let len = handle.metadata()?.len();
-        Ok(StripedFile { path, len, stripe_size, stripe_count, handle: Arc::new(handle) })
+        Ok(StripedFile {
+            path,
+            len,
+            stripe_size,
+            stripe_count,
+            handle: Arc::new(handle),
+            availability: None,
+        })
+    }
+
+    /// Attach a durability schedule (pipeline stage inputs).
+    pub fn with_availability(mut self, availability: Arc<Availability>) -> Self {
+        self.availability = Some(availability);
+        self
+    }
+
+    /// Virtual time at which bytes `[0, end)` are durable (0 = already).
+    pub fn available_vt(&self, end: u64) -> u64 {
+        self.availability.as_ref().map_or(0, |a| a.available_at(end))
     }
 
     /// Create an input file from `data` and open it.
@@ -86,9 +113,12 @@ impl StripedFile {
     }
 
     /// Independent (per-process) read: full request latency — this is the
-    /// access mode of MapReduce-1S's self-managed tasks.
+    /// access mode of MapReduce-1S's self-managed tasks.  On a file with
+    /// a durability schedule the request cannot complete before the
+    /// covered bytes have landed.
     pub fn read_independent(&self, ctx: &RankCtx, offset: u64, len: usize) -> Result<Vec<u8>> {
         let data = self.read_at_raw(offset, len)?;
+        ctx.clock.sync_to(self.available_vt(offset + data.len() as u64));
         ctx.clock.advance(ctx.cost.storage.read_cost(data.len()));
         Ok(data)
     }
@@ -99,6 +129,7 @@ impl StripedFile {
     pub fn read_collective(&self, ctx: &RankCtx, offset: u64, len: usize) -> Result<Vec<u8>> {
         ctx.barrier();
         let data = self.read_at_raw(offset, len)?;
+        ctx.clock.sync_to(self.available_vt(offset + data.len() as u64));
         ctx.clock
             .advance(ctx.cost.storage.collective_read_cost(ctx.nranks(), data.len()));
         Ok(data)

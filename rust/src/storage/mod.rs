@@ -11,8 +11,10 @@
 
 pub mod layout;
 pub mod prefetch;
+pub mod spill;
 pub mod storage_window;
 
 pub use layout::StripedFile;
 pub use prefetch::{PendingRead, Prefetcher};
+pub use spill::{Availability, SpillFile, SpillWriter};
 pub use storage_window::StorageWindow;

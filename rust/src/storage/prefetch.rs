@@ -22,6 +22,8 @@ pub struct PendingRead {
     rx: mpsc::Receiver<Result<Vec<u8>>>,
     /// Virtual time at which the data is available.
     completion_vt: u64,
+    /// Virtual time the request was issued.
+    issued_vt: u64,
     issued_bytes: usize,
 }
 
@@ -37,6 +39,11 @@ impl PendingRead {
     /// Virtual completion timestamp (for timeline instrumentation).
     pub fn completion_vt(&self) -> u64 {
         self.completion_vt
+    }
+
+    /// Virtual time the request was issued (pipeline overlap evidence).
+    pub fn issued_vt(&self) -> u64 {
+        self.issued_vt
     }
 
     /// Bytes requested at issue time.
@@ -64,17 +71,23 @@ impl Prefetcher {
     /// Start a non-blocking read of `[offset, offset+len)` (MPI_File_iread
     /// equivalent).  A small issue overhead is charged now; the transfer
     /// itself lands at `now + read_cost` in virtual time while a real
-    /// thread fetches the bytes.
+    /// thread fetches the bytes.  On a file with a durability schedule
+    /// (a pipeline stage input still being flushed by its producer) the
+    /// transfer instead starts when the covered bytes have landed — so
+    /// issuing ahead of the producer is free, and only an actual wait at
+    /// [`PendingRead::wait`] costs time.
     pub fn issue(&self, ctx: &RankCtx, offset: u64, len: usize) -> PendingRead {
         // Nonblocking-call software overhead (request setup).
         ctx.clock.advance(2_000);
-        let completion_vt = ctx.clock.now() + ctx.cost.storage.read_cost(len);
+        let issued_vt = ctx.clock.now();
+        let ready_vt = issued_vt.max(self.file.available_vt(offset + len as u64));
+        let completion_vt = ready_vt + ctx.cost.storage.read_cost(len);
         let (tx, rx) = mpsc::channel();
         let file = self.file.clone();
         thread::spawn(move || {
             let _ = tx.send(file.read_at_raw(offset, len));
         });
-        PendingRead { rx, completion_vt, issued_bytes: len }
+        PendingRead { rx, completion_vt, issued_vt, issued_bytes: len }
     }
 }
 

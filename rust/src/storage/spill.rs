@@ -1,0 +1,411 @@
+//! Spill writer: materialize a job's output back into the storage
+//! substrate so a later MapReduce stage can re-ingest it.
+//!
+//! The pipeline executor (see `crate::pipeline`) chains jobs: stage N's
+//! final `(key, value)` pairs are re-encoded in the §2.1 wire format
+//! (`| hash | klen | vlen | key | value |`) and written to a real file
+//! that [`StripedFile`] then serves to stage N+1.  Three things make the
+//! stage boundary more than a plain file copy:
+//!
+//! * **Boundary index** — the wire format is not self-synchronizing (a
+//!   task starting mid-file cannot find a record header), so the writer
+//!   records every record's start offset and persists it to a `.idx`
+//!   sidecar.  Stage N+1's task splitter cuts extents exactly on these
+//!   boundaries — the record-stream counterpart of the newline rule.
+//! * **Durability schedule** — writes are charged to a background
+//!   flusher on the virtual clock ([`crate::sim::StorageModel`]
+//!   `write_cost`, the same model storage windows use), producing an
+//!   [`Availability`]: the virtual time at which each chunk of the file
+//!   is durable.  Stage N+1's non-blocking reads complete no earlier
+//!   than the availability of the bytes they cover — so issuing them
+//!   early is free (overlap), reading ahead of the flusher stalls.
+//! * **Tagging** — a multi-input stage reads several upstream outputs
+//!   from one file; each source's records get a side byte prefixed to
+//!   the value so the consuming use-case can tell the inputs apart
+//!   (tagged records, the equi-join substrate).
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::mapreduce::kv::{self, Value};
+use crate::sim::StorageModel;
+
+use super::layout::StripedFile;
+
+/// Magic header of the sidecar boundary index.
+const IDX_MAGIC: &[u8; 8] = b"MR1SIDX1";
+
+/// Durability chunk granularity of the background flusher (bytes).
+const FLUSH_CHUNK: usize = 256 << 10;
+
+/// Virtual-time durability schedule of a file that readers may start
+/// consuming while it is still being flushed (the stage boundary).
+///
+/// Entries are `(end_offset, durable_vt)` pairs, non-decreasing in both
+/// components: bytes `[0, end_offset)` are durable at `durable_vt`.
+#[derive(Debug, Default, Clone)]
+pub struct Availability {
+    chunks: Vec<(u64, u64)>,
+}
+
+impl Availability {
+    /// Record that bytes up to `end_offset` become durable at `vt`.
+    pub fn push(&mut self, end_offset: u64, vt: u64) {
+        debug_assert!(
+            self.chunks.last().map_or(true, |&(e, t)| end_offset >= e && vt >= t),
+            "availability entries must be monotonic"
+        );
+        self.chunks.push((end_offset, vt));
+    }
+
+    /// Virtual time at which bytes `[0, end)` are durable (0 = already,
+    /// e.g. a pre-existing corpus or `end == 0`).
+    ///
+    /// O(log chunks): this sits on every read issue of the consuming
+    /// stage, and a large spill has one entry per flush chunk.
+    pub fn available_at(&self, end: u64) -> u64 {
+        if end == 0 {
+            return 0;
+        }
+        let i = self.chunks.partition_point(|&(e, _)| e < end);
+        match self.chunks.get(i) {
+            Some(&(_, vt)) => vt,
+            // Beyond the written range: everything must have landed.
+            None => self.last_vt(),
+        }
+    }
+
+    /// Virtual time at which the whole file is durable.
+    pub fn last_vt(&self) -> u64 {
+        self.chunks.last().map_or(0, |&(_, vt)| vt)
+    }
+}
+
+/// A fully-written spill file: data, record boundaries, durability.
+#[derive(Debug, Clone)]
+pub struct SpillFile {
+    /// The data file, availability-floored for staged reads.
+    pub file: StripedFile,
+    /// Start offset of every record (strictly increasing, first is 0).
+    pub boundaries: Arc<Vec<u64>>,
+    /// When each chunk of the file lands on storage (virtual time).
+    pub availability: Arc<Availability>,
+}
+
+impl SpillFile {
+    /// Open a previously-written spill (data + `.idx` sidecar) as an
+    /// already-durable input (availability floor 0).
+    pub fn open(path: impl AsRef<Path>) -> Result<SpillFile> {
+        let path = path.as_ref();
+        let file = StripedFile::open(path)?;
+        let boundaries = read_index(&index_path(path), file.len())?;
+        Ok(SpillFile {
+            file,
+            boundaries: Arc::new(boundaries),
+            availability: Arc::new(Availability::default()),
+        })
+    }
+
+    /// Decode every record in the file (tests / small outputs).
+    pub fn decode_all(&self) -> Result<Vec<(u64, Vec<u8>, Vec<u8>)>> {
+        let data = self.file.read_at_raw(0, self.file.len() as usize)?;
+        let mut out = Vec::new();
+        for rec in kv::RecordIter::new(&data) {
+            let rec = rec?;
+            out.push((rec.hash, rec.key.to_vec(), rec.value.to_vec()));
+        }
+        Ok(out)
+    }
+}
+
+/// Sidecar path of a spill data file (`<path>.idx`).
+pub fn index_path(data: &Path) -> PathBuf {
+    let mut os = data.as_os_str().to_os_string();
+    os.push(".idx");
+    PathBuf::from(os)
+}
+
+/// Parse and validate a sidecar index against the data file's length:
+/// entries must start at 0, be strictly increasing, and stay inside the
+/// data — a stale or corrupt sidecar must surface as a typed decode
+/// error, never as a wrapped task extent.
+fn read_index(path: &Path, data_len: u64) -> Result<Vec<u64>> {
+    let mut buf = Vec::new();
+    File::open(path)?.read_to_end(&mut buf)?;
+    if buf.len() < 16 || &buf[..8] != IDX_MAGIC {
+        return Err(Error::KvDecode(format!("bad spill index {}", path.display())));
+    }
+    let count = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    if buf.len() != 16 + count * 8 {
+        return Err(Error::KvDecode(format!(
+            "spill index {} truncated: {} entries, {} bytes",
+            path.display(),
+            count,
+            buf.len()
+        )));
+    }
+    let boundaries: Vec<u64> = buf[16..]
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let monotonic = boundaries.windows(2).all(|w| w[0] < w[1]);
+    let in_range = boundaries.first().map_or(true, |&b| b == 0)
+        && boundaries.last().map_or(true, |&b| b < data_len);
+    if !monotonic || !in_range {
+        return Err(Error::KvDecode(format!(
+            "spill index {} inconsistent with data ({} bytes)",
+            path.display(),
+            data_len
+        )));
+    }
+    Ok(boundaries)
+}
+
+/// Streams job outputs into a spill file, charging flush costs on a
+/// background-flusher virtual timeline (cf. `StorageWindow`).
+pub struct SpillWriter {
+    path: PathBuf,
+    file: File,
+    len: u64,
+    boundaries: Vec<u64>,
+    avail: Availability,
+    flusher_free_vt: u64,
+}
+
+impl SpillWriter {
+    /// Create (truncate) a spill file at `path`.
+    pub fn create(path: impl AsRef<Path>) -> Result<SpillWriter> {
+        let path = path.as_ref().to_path_buf();
+        let file = File::create(&path)?;
+        Ok(SpillWriter {
+            path,
+            file,
+            len: 0,
+            boundaries: Vec::new(),
+            avail: Availability::default(),
+            flusher_free_vt: 0,
+        })
+    }
+
+    /// Append one producing stage's final records, re-encoded on the
+    /// wire, optionally prefixing a side byte to every value (tagged
+    /// multi-input records).
+    ///
+    /// `ready_vt` is the virtual time the producing stage's result
+    /// became available (its root rank's completion); flush costs are
+    /// charged from `max(ready_vt, flusher busy)` in [`FLUSH_CHUNK`]
+    /// steps, so consumers of early chunks need not wait for the tail.
+    pub fn append_records(
+        &mut self,
+        records: &[(Vec<u8>, Value)],
+        tag: Option<u8>,
+        ready_vt: u64,
+        storage: &StorageModel,
+    ) -> Result<()> {
+        let mut buf = Vec::new();
+        let mut value_buf = Vec::new();
+        for (key, value) in records {
+            self.boundaries.push(self.len + buf.len() as u64);
+            value_buf.clear();
+            if let Some(t) = tag {
+                value_buf.push(t);
+            }
+            value.write_into(&mut value_buf);
+            kv::check_value_len(key, value_buf.len())?;
+            kv::encode_parts(kv::hash_key(key), key, &value_buf, &mut buf);
+        }
+        self.file.write_all(&buf)?;
+
+        // Background flush: chunk i of this batch lands at
+        // start + (i+1) * write_cost(chunk).
+        let mut vt = self.flusher_free_vt.max(ready_vt);
+        let mut off = 0usize;
+        while off < buf.len() {
+            let take = FLUSH_CHUNK.min(buf.len() - off);
+            vt += storage.write_cost(take);
+            off += take;
+            self.avail.push(self.len + off as u64, vt);
+        }
+        self.flusher_free_vt = vt;
+        self.len += buf.len() as u64;
+        Ok(())
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    /// True when nothing has been appended.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Virtual time at which everything appended so far is durable.
+    pub fn durable_vt(&self) -> u64 {
+        self.avail.last_vt()
+    }
+
+    /// Finish the spill: persist the sidecar boundary index and reopen
+    /// the data as a [`StripedFile`] floored by the flush schedule.
+    pub fn finish(self) -> Result<SpillFile> {
+        self.file.sync_all()?;
+        let mut idx = Vec::with_capacity(16 + self.boundaries.len() * 8);
+        idx.extend_from_slice(IDX_MAGIC);
+        idx.extend_from_slice(&(self.boundaries.len() as u64).to_le_bytes());
+        for b in &self.boundaries {
+            idx.extend_from_slice(&b.to_le_bytes());
+        }
+        std::fs::write(index_path(&self.path), idx)?;
+
+        let availability = Arc::new(self.avail);
+        let file = StripedFile::open(&self.path)?.with_availability(availability.clone());
+        Ok(SpillFile { file, boundaries: Arc::new(self.boundaries), availability })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmppath(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mr1s-spill-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn availability_floors_monotonically() {
+        let mut a = Availability::default();
+        a.push(100, 10);
+        a.push(200, 30);
+        assert_eq!(a.available_at(0), 0);
+        assert_eq!(a.available_at(1), 10);
+        assert_eq!(a.available_at(100), 10);
+        assert_eq!(a.available_at(101), 30);
+        assert_eq!(a.available_at(10_000), 30, "beyond range needs everything");
+        assert_eq!(a.last_vt(), 30);
+    }
+
+    #[test]
+    fn empty_availability_is_always_ready() {
+        let a = Availability::default();
+        assert_eq!(a.available_at(0), 0);
+        assert_eq!(a.available_at(1 << 30), 0);
+    }
+
+    #[test]
+    fn spill_roundtrips_records_and_boundaries() {
+        let p = tmppath("rt");
+        let storage = StorageModel::default();
+        let records = vec![
+            (b"alpha".to_vec(), Value::U64(7)),
+            (b"beta".to_vec(), Value::Bytes(b"payload".to_vec())),
+            (b"gamma".to_vec(), Value::Bytes(Vec::new())),
+        ];
+        let mut w = SpillWriter::create(&p).unwrap();
+        w.append_records(&records, None, 1_000, &storage).unwrap();
+        let spill = w.finish().unwrap();
+
+        assert_eq!(spill.boundaries.len(), 3);
+        assert_eq!(spill.boundaries[0], 0);
+        let decoded = spill.decode_all().unwrap();
+        assert_eq!(decoded.len(), 3);
+        for ((hash, key, value), (k, v)) in decoded.iter().zip(&records) {
+            assert_eq!(*hash, kv::hash_key(k));
+            assert_eq!(key, k);
+            let mut want = Vec::new();
+            v.write_into(&mut want);
+            assert_eq!(*value, want);
+        }
+        // Flush schedule starts no earlier than the producer's ready vt.
+        assert!(spill.availability.available_at(1) > 1_000);
+
+        // Reopen through the sidecar: identical boundaries, durable now.
+        let reopened = SpillFile::open(&p).unwrap();
+        assert_eq!(reopened.boundaries, spill.boundaries);
+        assert_eq!(reopened.availability.available_at(spill.file.len()), 0);
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(index_path(&p)).ok();
+    }
+
+    #[test]
+    fn tag_prefixes_every_value() {
+        let p = tmppath("tag");
+        let mut w = SpillWriter::create(&p).unwrap();
+        w.append_records(
+            &[(b"k".to_vec(), Value::U64(3))],
+            Some(9),
+            0,
+            &StorageModel::default(),
+        )
+        .unwrap();
+        let spill = w.finish().unwrap();
+        let decoded = spill.decode_all().unwrap();
+        assert_eq!(decoded[0].2[0], 9, "tag byte leads the value");
+        assert_eq!(decoded[0].2.len(), 9, "tag + 8 value bytes");
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(index_path(&p)).ok();
+    }
+
+    #[test]
+    fn corrupt_sidecar_is_typed_error() {
+        let p = tmppath("badidx");
+        let mut w = SpillWriter::create(&p).unwrap();
+        w.append_records(
+            &[(b"a".to_vec(), Value::U64(1)), (b"b".to_vec(), Value::U64(2))],
+            None,
+            0,
+            &StorageModel::default(),
+        )
+        .unwrap();
+        let spill = w.finish().unwrap();
+        // Out-of-order boundaries: rewrite the sidecar with swapped entries.
+        let mut idx = Vec::new();
+        idx.extend_from_slice(IDX_MAGIC);
+        idx.extend_from_slice(&2u64.to_le_bytes());
+        idx.extend_from_slice(&spill.boundaries[1].to_le_bytes());
+        idx.extend_from_slice(&spill.boundaries[0].to_le_bytes());
+        std::fs::write(index_path(&p), &idx).unwrap();
+        assert!(matches!(SpillFile::open(&p), Err(Error::KvDecode(_))));
+        // Boundary beyond the data file is rejected too.
+        let mut idx = Vec::new();
+        idx.extend_from_slice(IDX_MAGIC);
+        idx.extend_from_slice(&1u64.to_le_bytes());
+        idx.extend_from_slice(&(spill.file.len() + 8).to_le_bytes());
+        std::fs::write(index_path(&p), &idx).unwrap();
+        assert!(matches!(SpillFile::open(&p), Err(Error::KvDecode(_))));
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(index_path(&p)).ok();
+    }
+
+    #[test]
+    fn oversize_value_is_typed_overflow() {
+        let p = tmppath("ovf");
+        let mut w = SpillWriter::create(&p).unwrap();
+        let huge = Value::Bytes(vec![0u8; kv::MAX_VALUE_LEN + 1]);
+        let err = w
+            .append_records(&[(b"big".to_vec(), huge)], None, 0, &StorageModel::default())
+            .unwrap_err();
+        assert!(matches!(err, Error::ValueOverflow { .. }), "got {err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn append_sessions_extend_schedule_monotonically() {
+        let p = tmppath("sess");
+        let storage = StorageModel::default();
+        let mut w = SpillWriter::create(&p).unwrap();
+        w.append_records(&[(b"a".to_vec(), Value::U64(1))], Some(1), 500, &storage).unwrap();
+        let first_durable = w.durable_vt();
+        // Second producer finished earlier in virtual time; the flusher
+        // still serializes behind the first batch.
+        w.append_records(&[(b"b".to_vec(), Value::U64(2))], Some(2), 100, &storage).unwrap();
+        assert!(w.durable_vt() >= first_durable);
+        let spill = w.finish().unwrap();
+        assert_eq!(spill.boundaries.len(), 2);
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(index_path(&p)).ok();
+    }
+}

@@ -1,0 +1,209 @@
+//! Two-input equi-join over tagged records — the ROADMAP "joins"
+//! workload, shipped as a pipeline stage.
+//!
+//! The pipeline driver materializes both upstream outputs into one
+//! record-format input, prefixing a side byte to every value
+//! ([`EquiJoin::TAG_LEFT`] / [`EquiJoin::TAG_RIGHT`]).  Map re-emits
+//! each record under its join key with a length-prefixed tagged tuple
+//! half; Reduce concatenates the halves (associative + commutative);
+//! the join itself — the pairwise concatenation of every left half with
+//! every right half — is emitted at the end of Combine via
+//! [`UseCase::finalize`], exactly the shape the ROADMAP sketched.
+//!
+//! Accumulator entry: `| side: u8 | len: u16 LE | payload |`.
+//! Finalized value: for each (left, right) pair in deterministic
+//! (sorted) order, `| llen: u16 | left | rlen: u16 | right |`.
+
+use crate::mapreduce::kv::{self, Value};
+use crate::mapreduce::{UseCase, ValueKind};
+
+/// The equi-join use-case (a pipeline stage over two tagged inputs).
+#[derive(Debug, Default)]
+pub struct EquiJoin;
+
+impl EquiJoin {
+    /// Side byte of the left relation in the combined input.
+    pub const TAG_LEFT: u8 = 1;
+    /// Side byte of the right relation.
+    pub const TAG_RIGHT: u8 = 2;
+
+    /// Split an accumulator into (left, right) payload lists.
+    fn split_sides(entries: &[u8]) -> (Vec<&[u8]>, Vec<&[u8]>) {
+        let mut left = Vec::new();
+        let mut right = Vec::new();
+        let mut off = 0usize;
+        while off + 3 <= entries.len() {
+            let side = entries[off];
+            let len = u16::from_le_bytes(entries[off + 1..off + 3].try_into().unwrap()) as usize;
+            let end = off + 3 + len;
+            if end > entries.len() {
+                break; // malformed tail: stop rather than misparse
+            }
+            let payload = &entries[off + 3..end];
+            match side {
+                Self::TAG_LEFT => left.push(payload),
+                Self::TAG_RIGHT => right.push(payload),
+                _ => {}
+            }
+            off = end;
+        }
+        (left, right)
+    }
+
+    /// Decode a finalized value into (left, right) payload pairs.
+    pub fn decode_pairs(value: &[u8]) -> Vec<(Vec<u8>, Vec<u8>)> {
+        let mut out = Vec::new();
+        let mut off = 0usize;
+        while off + 2 <= value.len() {
+            let llen = u16::from_le_bytes(value[off..off + 2].try_into().unwrap()) as usize;
+            let lend = off + 2 + llen;
+            if lend + 2 > value.len() {
+                break;
+            }
+            let rlen = u16::from_le_bytes(value[lend..lend + 2].try_into().unwrap()) as usize;
+            let rend = lend + 2 + rlen;
+            if rend > value.len() {
+                break;
+            }
+            out.push((value[off + 2..lend].to_vec(), value[lend + 2..rend].to_vec()));
+            off = rend;
+        }
+        out
+    }
+}
+
+impl UseCase for EquiJoin {
+    fn name(&self) -> &'static str {
+        "equi-join"
+    }
+
+    fn value_kind(&self) -> ValueKind {
+        ValueKind::Variable
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        if record.is_empty() {
+            return;
+        }
+        let Ok((rec, _)) = kv::Record::decode(record, 0) else { return };
+        let Some((&side, payload)) = rec.value.split_first() else { return };
+        if side != Self::TAG_LEFT && side != Self::TAG_RIGHT {
+            return;
+        }
+        let mut entry = Vec::with_capacity(3 + payload.len());
+        entry.push(side);
+        entry.extend_from_slice(&(payload.len() as u16).to_le_bytes());
+        entry.extend_from_slice(payload);
+        emit(rec.key, &entry);
+    }
+
+    fn reduce(&self, acc: &mut Vec<u8>, incoming: &[u8]) {
+        acc.extend_from_slice(incoming);
+    }
+
+    fn finalize(&self, _key: &[u8], value: Value) -> Value {
+        let Some(entries) = value.as_bytes() else { return value };
+        let (mut left, mut right) = Self::split_sides(entries);
+        // Deterministic pair order regardless of merge order.
+        left.sort_unstable();
+        right.sort_unstable();
+        let mut out = Vec::new();
+        for l in &left {
+            for r in &right {
+                out.extend_from_slice(&(l.len() as u16).to_le_bytes());
+                out.extend_from_slice(l);
+                out.extend_from_slice(&(r.len() as u16).to_le_bytes());
+                out.extend_from_slice(r);
+            }
+        }
+        Value::Bytes(out)
+    }
+
+    fn render_value(&self, value: &Value) -> String {
+        let Some(bytes) = value.as_bytes() else { return "?".into() };
+        let pairs = Self::decode_pairs(bytes);
+        match pairs.first() {
+            Some((l, r)) => format!("{} pair(s), first {}B⋈{}B", pairs.len(), l.len(), r.len()),
+            None => "no match".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record_with(key: &[u8], side: u8, payload: &[u8]) -> Vec<u8> {
+        let mut value = vec![side];
+        value.extend_from_slice(payload);
+        let mut rec = Vec::new();
+        kv::encode_parts(kv::hash_key(key), key, &value, &mut rec);
+        rec
+    }
+
+    #[test]
+    fn map_tags_halves_by_side() {
+        let rec = record_with(b"k", EquiJoin::TAG_LEFT, b"LL");
+        let mut out = Vec::new();
+        EquiJoin.map_record(&rec, &mut |k, v| out.push((k.to_vec(), v.to_vec())));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, b"k");
+        assert_eq!(out[0].1, vec![EquiJoin::TAG_LEFT, 2, 0, b'L', b'L']);
+    }
+
+    #[test]
+    fn finalize_emits_cross_product() {
+        let mut acc = Vec::new();
+        for (side, payload) in [
+            (EquiJoin::TAG_LEFT, b"a1".as_slice()),
+            (EquiJoin::TAG_RIGHT, b"b1"),
+            (EquiJoin::TAG_LEFT, b"a2"),
+        ] {
+            let rec = record_with(b"k", side, payload);
+            EquiJoin.map_record(&rec, &mut |_, v| EquiJoin.reduce(&mut acc, v));
+        }
+        let out = EquiJoin.finalize(b"k", Value::Bytes(acc));
+        let pairs = EquiJoin::decode_pairs(out.as_bytes().unwrap());
+        assert_eq!(
+            pairs,
+            vec![
+                (b"a1".to_vec(), b"b1".to_vec()),
+                (b"a2".to_vec(), b"b1".to_vec()),
+            ]
+        );
+    }
+
+    #[test]
+    fn finalize_is_merge_order_independent() {
+        let entries: Vec<Vec<u8>> = [
+            (EquiJoin::TAG_RIGHT, b"r".as_slice()),
+            (EquiJoin::TAG_LEFT, b"l2"),
+            (EquiJoin::TAG_LEFT, b"l1"),
+        ]
+        .iter()
+        .map(|&(side, p)| {
+            let mut e = vec![side];
+            e.extend_from_slice(&(p.len() as u16).to_le_bytes());
+            e.extend_from_slice(p);
+            e
+        })
+        .collect();
+        let mut fwd = Vec::new();
+        entries.iter().for_each(|e| EquiJoin.reduce(&mut fwd, e));
+        let mut rev = Vec::new();
+        entries.iter().rev().for_each(|e| EquiJoin.reduce(&mut rev, e));
+        assert_eq!(
+            EquiJoin.finalize(b"k", Value::Bytes(fwd)),
+            EquiJoin.finalize(b"k", Value::Bytes(rev))
+        );
+    }
+
+    #[test]
+    fn unmatched_key_finalizes_to_empty() {
+        let rec = record_with(b"only-left", EquiJoin::TAG_LEFT, b"x");
+        let mut acc = Vec::new();
+        EquiJoin.map_record(&rec, &mut |_, v| EquiJoin.reduce(&mut acc, v));
+        let out = EquiJoin.finalize(b"only-left", Value::Bytes(acc));
+        assert_eq!(EquiJoin::decode_pairs(out.as_bytes().unwrap()), vec![]);
+    }
+}

@@ -7,7 +7,10 @@
 //!
 //! New use-cases register themselves in [`REGISTRY`]; the CLI derives
 //! its `--usecase` parsing, `--help` listing and error messages from it,
-//! so adding an entry here is the only wiring needed.
+//! so adding an entry here is the only wiring needed.  Pipeline *stage*
+//! use-cases ([`tfidf`], [`join`]) consume re-ingested record-format
+//! inputs and are wired by `crate::pipeline::plans` instead — they make
+//! no sense under the standalone `mr1s run` text path.
 
 use std::sync::Arc;
 
@@ -15,12 +18,18 @@ use crate::mapreduce::UseCase;
 
 pub mod histogram;
 pub mod inverted_index;
+pub mod join;
 pub mod meanlen;
+pub mod tfidf;
+pub mod topk;
 pub mod wordcount;
 
 pub use histogram::LengthHistogram;
 pub use inverted_index::InvertedIndex;
+pub use join::EquiJoin;
 pub use meanlen::MeanLength;
+pub use tfidf::{DocFreq, TermFreq, TfIdfScore};
+pub use topk::TopK;
 pub use wordcount::WordCount;
 
 /// One registered use-case: canonical name, accepted aliases, a
@@ -61,6 +70,12 @@ pub static REGISTRY: &[UseCaseEntry] = &[
         aliases: &["meanlen"],
         summary: "mean containing-line length per token (variable-width)",
         make: || Arc::new(MeanLength),
+    },
+    UseCaseEntry {
+        name: "top-k",
+        aliases: &["topk"],
+        summary: "K largest containing-line lengths per token (bounded sorted set)",
+        make: || Arc::new(TopK),
     },
 ];
 

@@ -1,0 +1,302 @@
+//! TF-IDF as a three-stage pipeline: the canonical chained-MapReduce
+//! workload, expressed as three `UseCase`s the pipeline executor wires
+//! together (see `crate::pipeline::plans::tfidf_plan`).
+//!
+//! Documents are the corpus's pseudo-document shards (a line belongs to
+//! shard `InvertedIndex::shard(line)`, the same partitioning the
+//! inverted index uses):
+//!
+//! 1. **[`TermFreq`]** reads corpus text: `(word⊕shard) → tf` — how
+//!    often `word` occurs in document `shard` (inline-u64 counts).
+//! 2. **[`DocFreq`]** re-ingests stage 1's records: `word → df` — in how
+//!    many documents `word` appears (one stage-1 record = one document).
+//! 3. **[`TfIdfScore`]** is a two-input stage over stages 1 *and* 2,
+//!    told apart by the side byte the spill writer prefixed to every
+//!    value ([`TfIdfScore::TAG_TF`] / [`TfIdfScore::TAG_DF`]): Map
+//!    re-keys both to `word`, Reduce accumulates the tagged entries, and
+//!    `finalize` (end of Combine) emits per-document scores
+//!    `tf · ln(N/df)` in fixed-point micro units.
+//!
+//! Stage-2/3 Map functions receive whole encoded records
+//! (`| h | klen | vlen | key | value |`) and decode them with
+//! [`kv::Record::decode`] — the record-format re-ingest path.
+
+use crate::mapreduce::kv::{self, Value};
+use crate::mapreduce::{UseCase, ValueKind};
+
+use super::inverted_index::InvertedIndex;
+use super::wordcount::WordCount;
+
+/// Number of pseudo-documents (the shard universe of the corpus
+/// partitioning; shared with the inverted index).
+pub const NDOCS: u32 = InvertedIndex::NSHARDS;
+
+/// Encode a stage-1 key: `word ++ 0x00 ++ shard (4 LE bytes)`.  Words
+/// are lowercase alphanumerics, so the NUL separator is unambiguous.
+pub fn encode_word_shard(word: &[u8], shard: u32) -> Vec<u8> {
+    let mut key = Vec::with_capacity(word.len() + 5);
+    key.extend_from_slice(word);
+    key.push(0);
+    key.extend_from_slice(&shard.to_le_bytes());
+    key
+}
+
+/// Decode a stage-1 key back into `(word, shard)`.
+pub fn decode_word_shard(key: &[u8]) -> Option<(&[u8], u32)> {
+    let n = key.len().checked_sub(5)?;
+    if key[n] != 0 {
+        return None;
+    }
+    let shard = u32::from_le_bytes(key[n + 1..].try_into().unwrap());
+    Some((&key[..n], shard))
+}
+
+/// TF-IDF score of one `(tf, df)` pair, in fixed-point micro units
+/// (deterministic integer output; shared with the test oracles).
+pub fn score_micro(tf: u64, df: u64) -> u64 {
+    let idf = (f64::from(NDOCS) / df.max(1) as f64).ln();
+    (tf as f64 * idf * 1e6).round() as u64
+}
+
+/// Pipeline stage 1: per-document term frequency over corpus text.
+#[derive(Debug, Default)]
+pub struct TermFreq;
+
+impl UseCase for TermFreq {
+    fn name(&self) -> &'static str {
+        "pipeline-tf"
+    }
+
+    fn value_kind(&self) -> ValueKind {
+        ValueKind::InlineU64
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        if record.is_empty() {
+            return;
+        }
+        let shard = InvertedIndex::shard(record);
+        let mut scratch = Vec::with_capacity(32);
+        WordCount::tokens_into(record, &mut scratch, &mut |tok| {
+            emit(&encode_word_shard(tok, shard), &1u64.to_le_bytes());
+        });
+    }
+
+    fn reduce_u64(&self, a: u64, b: u64) -> u64 {
+        a + b
+    }
+}
+
+/// Pipeline stage 2: document frequency over stage 1's records.
+#[derive(Debug, Default)]
+pub struct DocFreq;
+
+impl UseCase for DocFreq {
+    fn name(&self) -> &'static str {
+        "pipeline-df"
+    }
+
+    fn value_kind(&self) -> ValueKind {
+        ValueKind::InlineU64
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        if record.is_empty() {
+            return;
+        }
+        let Ok((rec, _)) = kv::Record::decode(record, 0) else { return };
+        let Some((word, _shard)) = decode_word_shard(rec.key) else { return };
+        // One stage-1 record = `word` present in one document.
+        emit(word, &1u64.to_le_bytes());
+    }
+
+    fn reduce_u64(&self, a: u64, b: u64) -> u64 {
+        a + b
+    }
+}
+
+/// Pipeline stage 3: join tf (stage 1) with df (stage 2) per word and
+/// score each document.
+///
+/// Accumulator entries are self-describing and concatenation-reduced:
+/// `| TAG_TF | shard: u32 | tf: u64 |` (13 bytes) or
+/// `| TAG_DF | df: u64 |` (9 bytes).  A word's entry list is bounded by
+/// `NDOCS · 13 + 9 < MAX_VALUE_LEN`.
+#[derive(Debug, Default)]
+pub struct TfIdfScore;
+
+impl TfIdfScore {
+    /// Side byte of stage-1 (tf) records in the combined input.
+    pub const TAG_TF: u8 = 1;
+    /// Side byte of stage-2 (df) records in the combined input.
+    pub const TAG_DF: u8 = 2;
+
+    /// Decode a finalized value into `(shard, score_micro)` pairs
+    /// (ascending shard order).
+    pub fn decode_scores(value: &[u8]) -> Vec<(u32, u64)> {
+        value
+            .chunks_exact(12)
+            .map(|c| {
+                (
+                    u32::from_le_bytes(c[..4].try_into().unwrap()),
+                    u64::from_le_bytes(c[4..].try_into().unwrap()),
+                )
+            })
+            .collect()
+    }
+}
+
+impl UseCase for TfIdfScore {
+    fn name(&self) -> &'static str {
+        "pipeline-tfidf"
+    }
+
+    fn value_kind(&self) -> ValueKind {
+        ValueKind::Variable
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        if record.is_empty() {
+            return;
+        }
+        let Ok((rec, _)) = kv::Record::decode(record, 0) else { return };
+        let Some((&tag, payload)) = rec.value.split_first() else { return };
+        match tag {
+            Self::TAG_TF => {
+                let Some((word, shard)) = decode_word_shard(rec.key) else { return };
+                let mut entry = [0u8; 13];
+                entry[0] = Self::TAG_TF;
+                entry[1..5].copy_from_slice(&shard.to_le_bytes());
+                entry[5..].copy_from_slice(&kv::u64_from_value(payload).to_le_bytes());
+                emit(word, &entry);
+            }
+            Self::TAG_DF => {
+                let mut entry = [0u8; 9];
+                entry[0] = Self::TAG_DF;
+                entry[1..].copy_from_slice(&kv::u64_from_value(payload).to_le_bytes());
+                emit(rec.key, &entry);
+            }
+            _ => {}
+        }
+    }
+
+    fn reduce(&self, acc: &mut Vec<u8>, incoming: &[u8]) {
+        // Entry lists concatenate; finalize makes sense of them.
+        acc.extend_from_slice(incoming);
+    }
+
+    fn finalize(&self, _key: &[u8], value: Value) -> Value {
+        let Some(entries) = value.as_bytes() else { return value };
+        let mut df = 0u64;
+        let mut tfs: Vec<(u32, u64)> = Vec::new();
+        let mut off = 0usize;
+        while off < entries.len() {
+            match entries[off] {
+                Self::TAG_TF if off + 13 <= entries.len() => {
+                    let shard = u32::from_le_bytes(entries[off + 1..off + 5].try_into().unwrap());
+                    let tf = u64::from_le_bytes(entries[off + 5..off + 13].try_into().unwrap());
+                    tfs.push((shard, tf));
+                    off += 13;
+                }
+                Self::TAG_DF if off + 9 <= entries.len() => {
+                    df += u64::from_le_bytes(entries[off + 1..off + 9].try_into().unwrap());
+                    off += 9;
+                }
+                _ => break, // malformed tail: stop rather than misparse
+            }
+        }
+        tfs.sort_unstable();
+        let mut out = Vec::with_capacity(tfs.len() * 12);
+        for (shard, tf) in tfs {
+            out.extend_from_slice(&shard.to_le_bytes());
+            out.extend_from_slice(&score_micro(tf, df).to_le_bytes());
+        }
+        Value::Bytes(out)
+    }
+
+    fn render_value(&self, value: &Value) -> String {
+        let Some(bytes) = value.as_bytes() else { return "?".into() };
+        let scores = Self::decode_scores(bytes);
+        let best = scores.iter().map(|&(_, s)| s).max().unwrap_or(0);
+        format!("{} docs, best {:.3}", scores.len(), best as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_shard_key_roundtrip() {
+        let key = encode_word_shard(b"wiki", 1234);
+        assert_eq!(decode_word_shard(&key), Some((b"wiki".as_slice(), 1234)));
+        assert_eq!(decode_word_shard(b"no-separator"), None);
+        assert_eq!(decode_word_shard(b""), None);
+    }
+
+    #[test]
+    fn termfreq_keys_carry_the_line_shard() {
+        let line = b"alpha beta alpha";
+        let mut out = Vec::new();
+        TermFreq.map_record(line, &mut |k, v| out.push((k.to_vec(), v.to_vec())));
+        assert_eq!(out.len(), 3);
+        let shard = InvertedIndex::shard(line);
+        for (k, v) in &out {
+            let (_, s) = decode_word_shard(k).unwrap();
+            assert_eq!(s, shard);
+            assert_eq!(kv::u64_from_value(v), 1);
+        }
+    }
+
+    #[test]
+    fn docfreq_emits_word_per_stage1_record() {
+        let mut encoded = Vec::new();
+        let key = encode_word_shard(b"wiki", 7);
+        kv::encode_parts(kv::hash_key(&key), &key, &3u64.to_le_bytes(), &mut encoded);
+        let mut out = Vec::new();
+        DocFreq.map_record(&encoded, &mut |k, v| out.push((k.to_vec(), v.to_vec())));
+        assert_eq!(out, vec![(b"wiki".to_vec(), 1u64.to_le_bytes().to_vec())]);
+    }
+
+    #[test]
+    fn score_stage_joins_and_scores() {
+        // Build a tagged input: tf records for shards 5 and 2, df = 2.
+        let mut emissions = Vec::new();
+        for (shard, tf) in [(5u32, 4u64), (2, 1)] {
+            let key = encode_word_shard(b"wiki", shard);
+            let mut value = vec![TfIdfScore::TAG_TF];
+            value.extend_from_slice(&tf.to_le_bytes());
+            let mut rec = Vec::new();
+            kv::encode_parts(kv::hash_key(&key), &key, &value, &mut rec);
+            emissions.push(rec);
+        }
+        {
+            let mut value = vec![TfIdfScore::TAG_DF];
+            value.extend_from_slice(&2u64.to_le_bytes());
+            let mut rec = Vec::new();
+            kv::encode_parts(kv::hash_key(b"wiki"), b"wiki", &value, &mut rec);
+            emissions.push(rec);
+        }
+
+        let mut acc = Vec::new();
+        for rec in &emissions {
+            TfIdfScore.map_record(rec, &mut |k, v| {
+                assert_eq!(k, b"wiki");
+                TfIdfScore.reduce(&mut acc, v);
+            });
+        }
+        let out = TfIdfScore.finalize(b"wiki", Value::Bytes(acc));
+        let scores = TfIdfScore::decode_scores(out.as_bytes().unwrap());
+        assert_eq!(scores.len(), 2);
+        assert_eq!(scores[0], (2, score_micro(1, 2)), "ascending shard order");
+        assert_eq!(scores[1], (5, score_micro(4, 2)));
+        assert!(score_micro(4, 2) > score_micro(1, 2));
+    }
+
+    #[test]
+    fn score_is_monotone_in_tf_and_antitone_in_df() {
+        assert!(score_micro(10, 2) > score_micro(5, 2));
+        assert!(score_micro(5, 2) > score_micro(5, 200));
+        assert_eq!(score_micro(0, 1), 0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Top-k per key: the ROADMAP's bounded-sorted-set workload.
+//!
+//! For every token occurrence, Map emits the length of the containing
+//! line; Reduce keeps only the K largest observations per token — a
+//! *bounded accumulator*, the third reduce shape after integer folds
+//! (word-count) and set unions (inverted index).  Because the merge
+//! trims to K at every level, the value fits
+//! [`crate::mapreduce::kv::MAX_VALUE_LEN`] by construction no matter how
+//! skewed a key is.
+//!
+//! Wire value: up to `K` u64 observations, 8 LE bytes each, sorted
+//! descending.  Merge-and-trim over multisets is associative and
+//! commutative, so any merge order across Local Reduce, the Reduce
+//! windows and the Combine tree yields the same top-k.
+
+use crate::mapreduce::kv::Value;
+use crate::mapreduce::{UseCase, ValueKind};
+
+use super::wordcount::WordCount;
+
+/// The top-k-per-key use-case.
+#[derive(Debug, Default)]
+pub struct TopK;
+
+impl TopK {
+    /// Observations kept per key.
+    pub const K: usize = 16;
+
+    /// Decode a value into its observations (descending).
+    pub fn decode(value: &[u8]) -> Vec<u64> {
+        value
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    /// Merge two descending observation lists, keeping the K largest
+    /// (duplicates survive: observations form a multiset).
+    fn merge_trim(a: &[u8], b: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity((a.len() + b.len()).min(Self::K * 8));
+        let (mut i, mut j) = (0usize, 0usize);
+        while out.len() < Self::K * 8 && (i < a.len() || j < b.len()) {
+            let x = (i < a.len()).then(|| u64::from_le_bytes(a[i..i + 8].try_into().unwrap()));
+            let y = (j < b.len()).then(|| u64::from_le_bytes(b[j..j + 8].try_into().unwrap()));
+            match (x, y) {
+                (Some(x), Some(y)) if x >= y => {
+                    out.extend_from_slice(&a[i..i + 8]);
+                    i += 8;
+                }
+                (Some(_), Some(_)) | (None, Some(_)) => {
+                    out.extend_from_slice(&b[j..j + 8]);
+                    j += 8;
+                }
+                (Some(_), None) => {
+                    out.extend_from_slice(&a[i..i + 8]);
+                    i += 8;
+                }
+                (None, None) => unreachable!("loop condition"),
+            }
+        }
+        out
+    }
+}
+
+impl UseCase for TopK {
+    fn name(&self) -> &'static str {
+        "top-k"
+    }
+
+    fn value_kind(&self) -> ValueKind {
+        ValueKind::Variable
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        let obs = (record.len() as u64).to_le_bytes();
+        let mut scratch = Vec::with_capacity(32);
+        WordCount::tokens_into(record, &mut scratch, &mut |tok| emit(tok, &obs));
+    }
+
+    fn reduce(&self, acc: &mut Vec<u8>, incoming: &[u8]) {
+        debug_assert_eq!(acc.len() % 8, 0);
+        debug_assert_eq!(incoming.len() % 8, 0);
+        *acc = Self::merge_trim(acc, incoming);
+    }
+
+    fn render_value(&self, value: &Value) -> String {
+        let Some(bytes) = value.as_bytes() else { return "?".into() };
+        let obs = Self::decode(bytes);
+        let head: Vec<String> = obs.iter().take(4).map(u64::to_string).collect();
+        let ellipsis = if obs.len() > 4 { ",…" } else { "" };
+        format!("top{} [{}{}]", obs.len(), head.join(","), ellipsis)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enc(xs: &[u64]) -> Vec<u8> {
+        xs.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn emits_line_length_per_token() {
+        let mut out = Vec::new();
+        TopK.map_record(b"alpha beta", &mut |k, v| out.push((k.to_vec(), v.to_vec())));
+        assert_eq!(out.len(), 2);
+        assert_eq!(TopK::decode(&out[0].1), vec![10]);
+    }
+
+    #[test]
+    fn reduce_merges_descending_and_trims() {
+        let mut acc = enc(&[90, 50, 10]);
+        TopK.reduce(&mut acc, &enc(&[70, 50, 5]));
+        assert_eq!(TopK::decode(&acc), vec![90, 70, 50, 50, 10, 5], "duplicates survive");
+
+        // Fill past K and confirm the trim.
+        let mut acc = enc(&(0..TopK::K as u64).map(|i| 1000 - i).collect::<Vec<_>>());
+        TopK.reduce(&mut acc, &enc(&[2000, 1]));
+        let obs = TopK::decode(&acc);
+        assert_eq!(obs.len(), TopK::K);
+        assert_eq!(obs[0], 2000);
+        assert!(!obs.contains(&1), "smallest observation trimmed");
+        assert!(obs.windows(2).all(|w| w[0] >= w[1]), "descending order");
+    }
+
+    #[test]
+    fn reduce_is_order_insensitive() {
+        let parts = [enc(&[9, 3]), enc(&[8, 8]), enc(&[100]), enc(&[])];
+        let mut fwd = Vec::new();
+        for p in &parts {
+            TopK.reduce(&mut fwd, p);
+        }
+        let mut rev = Vec::new();
+        for p in parts.iter().rev() {
+            TopK.reduce(&mut rev, p);
+        }
+        assert_eq!(fwd, rev);
+        assert_eq!(TopK::decode(&fwd), vec![100, 9, 8, 8, 3]);
+    }
+
+    #[test]
+    fn value_is_bounded_by_construction() {
+        let mut acc = Vec::new();
+        for i in 0..1000u64 {
+            TopK.reduce(&mut acc, &enc(&[i]));
+        }
+        assert_eq!(acc.len(), TopK::K * 8);
+    }
+}

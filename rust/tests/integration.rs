@@ -5,10 +5,14 @@ use std::collections::{BTreeSet, HashMap};
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use mr1s::error::Error;
 use mr1s::mapreduce::kv::Value;
-use mr1s::mapreduce::{BackendKind, Job, JobConfig};
+use mr1s::mapreduce::{BackendKind, Job, JobConfig, UseCase, ValueKind};
+use mr1s::pipeline::{oracle, plans, Pipeline};
 use mr1s::sim::CostModel;
-use mr1s::usecases::{InvertedIndex, LengthHistogram, MeanLength, WordCount};
+use mr1s::usecases::{
+    EquiJoin, InvertedIndex, LengthHistogram, MeanLength, TfIdfScore, TopK, WordCount,
+};
 use mr1s::workload::{generate_corpus, skew_factors, CorpusSpec, SkewSpec};
 
 fn tmppath(name: &str) -> PathBuf {
@@ -287,6 +291,149 @@ fn job_stealing_exact_counts_and_speedup_under_skew() {
         stolen.report.elapsed_ns,
         plain.report.elapsed_ns
     );
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn topk_matches_oracle_on_both_backends() {
+    let p = corpus("topk", 80_000, 14);
+    let want = oracle::topk(&std::fs::read(&p).unwrap());
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        let job = Job::new(Arc::new(TopK), small_config(p.clone())).unwrap();
+        let out = job.run(backend, 4, CostModel::default()).unwrap();
+        assert_eq!(out.report.unique_keys as usize, want.len());
+        for (key, value) in out.result {
+            let got = TopK::decode(value.as_bytes().unwrap());
+            assert!(got.len() <= TopK::K);
+            assert_eq!(got, want[&key], "top-k of {:?}", String::from_utf8_lossy(&key));
+        }
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn tfidf_pipeline_matches_oracle_on_both_backends() {
+    let p = corpus("pipe-tfidf", 60_000, 21);
+    let want = oracle::tfidf(&std::fs::read(&p).unwrap());
+    assert!(!want.is_empty());
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        let plan = plans::tfidf_plan(p.clone(), backend);
+        let pipe = Pipeline::new(plan, 4, CostModel::default(), small_config(p.clone())).unwrap();
+        let out = pipe.run().unwrap();
+        assert_eq!(out.stages.len(), 3);
+        assert_eq!(out.result.len(), want.len(), "{}", backend.name());
+        for (key, value) in &out.result {
+            let scores = TfIdfScore::decode_scores(value.as_bytes().unwrap());
+            assert_eq!(
+                want.get(key),
+                Some(&scores),
+                "{}: scores of {:?}",
+                backend.name(),
+                String::from_utf8_lossy(key)
+            );
+        }
+        std::fs::remove_dir_all(pipe.workdir()).ok();
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn join_pipeline_matches_oracle_on_both_backends() {
+    let p = corpus("pipe-join", 60_000, 23);
+    let want = oracle::join(&std::fs::read(&p).unwrap());
+    assert!(!want.is_empty());
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        let plan = plans::join_plan(p.clone(), backend);
+        let pipe = Pipeline::new(plan, 4, CostModel::default(), small_config(p.clone())).unwrap();
+        let out = pipe.run().unwrap();
+        assert_eq!(out.result.len(), want.len(), "{}", backend.name());
+        for (key, value) in &out.result {
+            let pairs = EquiJoin::decode_pairs(value.as_bytes().unwrap());
+            let (count, (occ, total)) = want[key.as_slice()];
+            assert_eq!(
+                pairs,
+                vec![(count.to_le_bytes().to_vec(), MeanLength::encode(occ, total).to_vec())],
+                "{}: join of {:?}",
+                backend.name(),
+                String::from_utf8_lossy(key)
+            );
+        }
+        std::fs::remove_dir_all(pipe.workdir()).ok();
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn pipeline_stages_overlap_on_mr1s() {
+    // The acceptance shape of the stage boundary: stage N+1's first
+    // input read must be issued before stage N's last rank finishes
+    // Combine (prefetch overlaps the producer's tail), while the read
+    // itself cannot complete before the spilled input is durable.
+    let p = corpus("pipe-overlap", 400_000, 22);
+    let plan = plans::tfidf_plan(p.clone(), BackendKind::OneSided);
+    let pipe = Pipeline::new(plan, 4, CostModel::default(), small_config(p.clone())).unwrap();
+    let out = pipe.run().unwrap();
+
+    let (issue, prev_combine_end) = out.handoff(1).expect("stage 1 recorded a read issue");
+    assert!(
+        issue < prev_combine_end,
+        "stage 1 first read (vt {issue}) must be issued before stage 0's last rank \
+         finishes Combine (vt {prev_combine_end})"
+    );
+    // The spill is charged on the virtual clock: stage 1's input only
+    // became durable after stage 0's root had its result.
+    assert!(out.stages[1].input_ready_vt > 0);
+    // Absolute pipeline time: later stages end no earlier than earlier.
+    assert!(out.stages[1].report.elapsed_ns >= out.stages[0].report.elapsed_ns);
+    assert!(out.elapsed_ns >= out.stages[2].report.elapsed_ns);
+    std::fs::remove_dir_all(pipe.workdir()).ok();
+    std::fs::remove_file(&p).ok();
+}
+
+/// A deliberately unbounded variable-width reducer: every token appends
+/// an 8 KiB chunk to one hot key, overflowing `MAX_VALUE_LEN` fast.
+struct UnboundedConcat;
+
+impl UseCase for UnboundedConcat {
+    fn name(&self) -> &'static str {
+        "unbounded-concat"
+    }
+
+    fn value_kind(&self) -> ValueKind {
+        ValueKind::Variable
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        let chunk = [7u8; 8192];
+        for _ in WordCount::tokens(record) {
+            emit(b"hot", &chunk);
+        }
+    }
+
+    fn reduce(&self, acc: &mut Vec<u8>, incoming: &[u8]) {
+        acc.extend_from_slice(incoming);
+    }
+}
+
+#[test]
+fn variable_reduce_overflow_is_typed_error() {
+    let p = tmppath("overflow");
+    let mut text = String::new();
+    for _ in 0..40 {
+        text.push_str("spill spill spill spill\n");
+    }
+    std::fs::write(&p, text).unwrap();
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        let job = Job::new(Arc::new(UnboundedConcat), small_config(p.clone())).unwrap();
+        let err = job.run(backend, 1, CostModel::default()).unwrap_err();
+        match err {
+            Error::ValueOverflow { key, len } => {
+                assert_eq!(key, b"hot".to_vec(), "{}", backend.name());
+                assert!(len > 65_535, "{}: len {len}", backend.name());
+            }
+            other => panic!("{}: expected ValueOverflow, got {other}", backend.name()),
+        }
+    }
     std::fs::remove_file(&p).ok();
 }
 

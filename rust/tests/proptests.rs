@@ -7,10 +7,13 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use mr1s::mapreduce::bucket::{KeyTable, OwnedRecord, SortedRun};
-use mr1s::mapreduce::job::{read_len, read_start, split_tasks, task_records};
+use mr1s::mapreduce::job::{
+    read_len, read_start, split_tasks, split_tasks_records, task_records,
+};
 use mr1s::mapreduce::kv::{self, ConcatOps, Record, SumOps, Value, ValueKind};
 use mr1s::mapreduce::{BackendKind, Job, JobConfig};
-use mr1s::sim::CostModel;
+use mr1s::sim::{CostModel, StorageModel};
+use mr1s::storage::spill::{index_path, SpillFile, SpillWriter};
 use mr1s::testing::PropRunner;
 use mr1s::usecases::WordCount;
 use mr1s::workload::SplitMix64;
@@ -149,7 +152,7 @@ fn prop_keytable_partition_is_exact() {
                 table.merge(kv::hash_key(k), k, &1u64.to_le_bytes(), &SumOps);
             }
             let unique = table.len();
-            let parts = table.drain_by_owner(*nranks);
+            let parts = table.drain_by_owner(*nranks).map_err(|e| e.to_string())?;
             let mut total = 0usize;
             for (r, buf) in parts.iter().enumerate() {
                 for rec in kv::RecordIter::new(buf) {
@@ -232,8 +235,9 @@ fn prop_run_encode_decode_roundtrip() {
                 })
                 .collect();
             let run = SortedRun::build_scalar(records, &SumOps);
-            let rt = SortedRun::decode(&run.encode(), ValueKind::InlineU64)
-                .map_err(|e| e.to_string())?;
+            let encoded = run.encode().map_err(|e| e.to_string())?;
+            let rt =
+                SortedRun::decode(&encoded, ValueKind::InlineU64).map_err(|e| e.to_string())?;
             (rt.records() == run.records()).then_some(()).ok_or("roundtrip mismatch".into())
         },
     );
@@ -419,6 +423,87 @@ fn prop_hash_colliding_keys_stay_distinct_end_to_end() {
                 }
             }
             std::fs::remove_file(&path).ok();
+            Ok(())
+        },
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn prop_spill_roundtrip_both_tiers() {
+    // A job output spilled through the storage layer and read back via
+    // StripedFile must decode bit-exactly — for inline-u64 and variable
+    // values, tagged or not — and the sidecar boundary index must both
+    // match the records and survive a reopen.
+    let tmp = std::env::temp_dir().join(format!("mr1s-prop-spill-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let mut case_no = 0usize;
+    PropRunner::new(40).check(
+        "spill roundtrip",
+        |rng| {
+            let n = 1 + rng.below(60) as usize;
+            let inline_tier = rng.below(2) == 0;
+            let tag = (rng.below(2) == 0).then(|| rng.below(256) as u8);
+            let records: Vec<(Vec<u8>, Value)> = (0..n)
+                .map(|_| {
+                    let key = rand_key(rng);
+                    let value = if inline_tier {
+                        Value::U64(rng.next_u64())
+                    } else {
+                        Value::Bytes(rand_value(rng))
+                    };
+                    (key, value)
+                })
+                .collect();
+            (records, tag)
+        },
+        |(records, tag)| {
+            case_no += 1;
+            let path = tmp.join(format!("case-{case_no}.spill"));
+            let mut writer = SpillWriter::create(&path).map_err(|e| e.to_string())?;
+            writer
+                .append_records(records, *tag, 0, &StorageModel::default())
+                .map_err(|e| e.to_string())?;
+            let spill = writer.finish().map_err(|e| e.to_string())?;
+
+            let decoded = spill.decode_all().map_err(|e| e.to_string())?;
+            if decoded.len() != records.len() {
+                return Err(format!("{} records != {}", decoded.len(), records.len()));
+            }
+            for ((hash, key, value), (k, v)) in decoded.iter().zip(records) {
+                if *hash != kv::hash_key(k) || key != k {
+                    return Err("hash/key mismatch".into());
+                }
+                let mut want = Vec::new();
+                if let Some(t) = tag {
+                    want.push(*t);
+                }
+                v.write_into(&mut want);
+                if *value != want {
+                    return Err("value bytes mismatch".into());
+                }
+            }
+
+            // Boundary index: one entry per record, strictly increasing,
+            // starting at 0; task splitting tiles the file exactly.
+            if spill.boundaries.len() != records.len() || spill.boundaries[0] != 0 {
+                return Err("bad boundary count".into());
+            }
+            if !spill.boundaries.windows(2).all(|w| w[0] < w[1]) {
+                return Err("boundaries not increasing".into());
+            }
+            let tasks = split_tasks_records(&spill.boundaries, spill.file.len(), 64);
+            let covered: u64 = tasks.iter().map(|t| t.len as u64).sum();
+            if covered != spill.file.len() {
+                return Err(format!("tasks cover {covered} of {}", spill.file.len()));
+            }
+
+            let reopened = SpillFile::open(&path).map_err(|e| e.to_string())?;
+            if reopened.boundaries != spill.boundaries {
+                return Err("sidecar reopen disagrees".into());
+            }
+            std::fs::remove_file(&path).ok();
+            std::fs::remove_file(index_path(&path)).ok();
             Ok(())
         },
     );
