@@ -13,10 +13,10 @@
 
 use std::sync::Arc;
 
-use mr1s::bench::{write_json, Sample};
+use mr1s::bench::{imbalance_samples, write_json, Sample};
 use mr1s::harness::Scenario;
 use mr1s::mapreduce::kv;
-use mr1s::mapreduce::{BackendKind, Job, JobConfig, UseCase, ValueKind};
+use mr1s::mapreduce::{BackendKind, Job, JobConfig, RouteConfig, UseCase, ValueKind};
 use mr1s::sim::CostModel;
 use mr1s::usecases::WordCount;
 use mr1s::workload::{skew_factors, SkewSpec};
@@ -146,6 +146,29 @@ fn main() {
             format!("extension_stealing_{label}_secs"),
             &[secs],
         ));
+    }
+
+    println!("\n== extension: shuffle route (modulo vs planned; MR-1S, raw shuffle) ==");
+    // Local reduce off so reduce bytes are occurrence-weighted — the
+    // workload whose reduce-side skew the planner exists to remove.
+    for (label, route) in [
+        ("modulo", RouteConfig::Modulo),
+        ("planned", RouteConfig::Planned { split: RouteConfig::DEFAULT_SPLIT }),
+    ] {
+        let cfg = JobConfig { local_reduce: false, route, ..base.clone() };
+        let out = Job::new(Arc::new(WordCount), cfg)
+            .unwrap()
+            .run(BackendKind::OneSided, RANKS, CostModel::default())
+            .unwrap();
+        let secs = out.report.elapsed_secs();
+        let imb = out.report.reduce_max_over_mean();
+        println!("route={label:<8} {secs:>8.3}s  red-imb={imb:.2}");
+        println!("#csv,extension_route,{label},{secs:.4},{imb:.4}");
+        samples.push(Sample::from_measurements(
+            format!("extension_route_{label}_secs"),
+            &[secs],
+        ));
+        samples.extend(imbalance_samples(&format!("extension_route_{label}"), &out.report));
     }
 
     println!("\n== ablation: skew intensity (MR-1S vs MR-2S) ==");

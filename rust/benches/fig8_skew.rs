@@ -1,0 +1,63 @@
+//! Bench: reduce-side key skew (new "figure 8" — beyond the paper).
+//!
+//! Sweeps the corpus zipf exponent `s ∈ {0.8, 1.1, 1.4}` × both backends
+//! × `--route modulo|planned` over a value-weight-skewed use-case
+//! (inverted index: a head word's posting list spans thousands of
+//! shards, a tail word's a handful), reporting virtual makespan and the
+//! per-rank reduce-load imbalance the shuffle planner removes.
+//!
+//! `cargo bench --bench fig8_skew` runs the smoke profile; `-- --full`
+//! the paper-scaled one.  Emits `BENCH_fig8_skew.json`.
+
+use std::sync::Arc;
+
+use mr1s::bench::{imbalance_samples, record, section, write_json, Sample};
+use mr1s::harness::Scenario;
+use mr1s::mapreduce::{BackendKind, Job, JobConfig, RouteConfig};
+use mr1s::sim::CostModel;
+use mr1s::usecases::InvertedIndex;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let base = if full { Scenario::default() } else { Scenario::smoke() };
+    let nranks = *base.ranks.last().expect("scenario has rank counts");
+    println!("fig8 skew bench ({} profile, {nranks} ranks)", if full { "full" } else { "smoke" });
+
+    let routes = [
+        ("modulo", RouteConfig::Modulo),
+        ("planned", RouteConfig::Planned { split: RouteConfig::DEFAULT_SPLIT }),
+    ];
+    let mut samples: Vec<Sample> = Vec::new();
+    for s in [0.8f64, 1.1, 1.4] {
+        let scenario = Scenario { zipf_s: s, ..base.clone() };
+        let input = scenario.corpus(scenario.strong_bytes).expect("corpus generates");
+        section(&format!("zipf s={s}"));
+        for backend in [BackendKind::TwoSided, BackendKind::OneSided] {
+            for (route_name, route) in routes {
+                let cfg = JobConfig { route, ..scenario.config(input.clone(), false) };
+                let out = Job::new(Arc::new(InvertedIndex), cfg)
+                    .expect("config valid")
+                    .run(backend, nranks, CostModel::default())
+                    .expect("job runs");
+                let tag = format!("s{s}_{}_{route_name}", out.report.backend);
+                println!(
+                    "{tag:<24} elapsed={:>7.3}s red-imb={:.2} cov={:.2}",
+                    out.report.elapsed_secs(),
+                    out.report.reduce_max_over_mean(),
+                    out.report.reduce_cov(),
+                );
+                record(
+                    &mut samples,
+                    Sample::from_measurements(
+                        format!("{tag}_elapsed_ns"),
+                        &[out.report.elapsed_ns as f64],
+                    ),
+                );
+                for sample in imbalance_samples(&tag, &out.report) {
+                    record(&mut samples, sample);
+                }
+            }
+        }
+    }
+    write_json("fig8_skew", &samples).expect("json summary");
+}

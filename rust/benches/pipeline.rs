@@ -5,7 +5,7 @@
 //! `cargo bench --bench pipeline` runs the smoke profile;
 //! `-- --full` runs the paper-scaled scenario.
 
-use mr1s::bench::{section, write_json, Sample};
+use mr1s::bench::{imbalance_samples, section, write_json, Sample};
 use mr1s::harness::Scenario;
 use mr1s::mapreduce::BackendKind;
 
@@ -42,6 +42,9 @@ fn main() {
                     format!("{tag}_overlap_ns"),
                     &[overlap_ns as f64],
                 ));
+                if let Some(last) = out.stages.last() {
+                    samples.extend(imbalance_samples(&tag, &last.report));
+                }
             }
         }
     }

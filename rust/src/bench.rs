@@ -102,6 +102,27 @@ pub fn record(samples: &mut Vec<Sample>, sample: Sample) {
     samples.push(sample);
 }
 
+/// Reduce-imbalance samples of a job report (per-rank reduce bytes as
+/// max/mean and CoV, plus the planner's predicted max/mean when a
+/// planned route ran) — recorded under `<tag>_...` into every bench
+/// JSON that executes whole jobs.
+pub fn imbalance_samples(tag: &str, report: &crate::metrics::JobReport) -> Vec<Sample> {
+    let mut out = vec![
+        Sample::from_measurements(
+            format!("{tag}_reduce_max_over_mean"),
+            &[report.reduce_max_over_mean()],
+        ),
+        Sample::from_measurements(format!("{tag}_reduce_cov"), &[report.reduce_cov()]),
+    ];
+    if let Some(planned) = report.planned_reduce_max_over_mean() {
+        out.push(Sample::from_measurements(
+            format!("{tag}_planned_reduce_max_over_mean"),
+            &[planned],
+        ));
+    }
+    out
+}
+
 /// Minimal JSON string escaping (names are code-controlled, but keep
 /// the output well-formed regardless).
 fn json_escape(s: &str) -> String {

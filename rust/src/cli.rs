@@ -1,10 +1,11 @@
 //! Hand-rolled CLI (clap is unavailable offline).
 //!
 //! ```text
-//! mr1s gen --bytes 32M --out corpus.txt [--seed 42]
+//! mr1s gen --bytes 32M --out corpus.txt [--seed 42] [--zipf-s 1.05]
 //! mr1s run --input corpus.txt [--backend 1s|2s] [--ranks 8]
 //!          [--usecase NAME]   (see `mr1s help` for the registry)
 //!          [--task-size 512K] [--win-size 1M] [--chunk-size 256K]
+//!          [--route modulo|planned[:split=K]]
 //!          [--unbalanced] [--checkpoints] [--flush-epochs] [--no-kernel]
 //!          [--top 20]
 //! mr1s compare --input corpus.txt [--ranks 8] [--unbalanced]
@@ -17,7 +18,7 @@ use std::sync::Arc;
 use crate::error::{Error, Result};
 use crate::harness::figures::{run_figure, FigureId};
 use crate::harness::Scenario;
-use crate::mapreduce::{BackendKind, Job, JobConfig, UseCase};
+use crate::mapreduce::{BackendKind, Job, JobConfig, RouteConfig, UseCase};
 use crate::metrics::timeline;
 use crate::pipeline::{oracle, plans, Pipeline};
 use crate::sim::CostModel;
@@ -81,13 +82,15 @@ pub fn parse_size(s: &str) -> Result<usize> {
 const HELP: &str = "mr1s — decoupled MapReduce (MapReduce-1S reproduction)
 
 USAGE:
-  mr1s gen --bytes <SIZE> --out <PATH> [--seed N]
+  mr1s gen --bytes <SIZE> --out <PATH> [--seed N] [--zipf-s S] [--vocab N]
   mr1s run --input <PATH> [--backend 1s|2s] [--ranks N] [--usecase NAME]
            [--task-size S] [--win-size S] [--chunk-size S] [--unbalanced]
+           [--route modulo|planned[:split=K]]
            [--checkpoints] [--flush-epochs] [--stealing] [--no-kernel]
            [--top N]
   mr1s pipeline --input <PATH> [--usecase tfidf|join] [--backend 1s|2s]
            [--ranks N] [--task-size S] [--win-size S] [--chunk-size S]
+           [--route modulo|planned[:split=K]] [--stealing]
            [--no-kernel] [--timeline] [--top N]
   mr1s compare --input <PATH> [--ranks N] [--unbalanced]
   mr1s figures --fig <ID|all> [--smoke]
@@ -95,6 +98,9 @@ USAGE:
 
 Pipelines chain MapReduce stages over spilled record files (DESIGN.md
 section 6); outputs are verified against a single-threaded oracle.
+--route planned shuffles by the measured key distribution: sketches are
+exchanged one-sidedly, buckets are LPT bin-packed onto ranks, and the
+top heavy-hitter keys are split K ways (DESIGN.md section 7).
 Figures: 4a 4b 4c 4d 5a 5b 6a 6b 7a 7b (DESIGN.md section 4).
 Sizes accept K/M/G suffixes.";
 
@@ -137,8 +143,22 @@ fn cmd_gen(flags: &Flags) -> Result<i32> {
     let seed = flags.get("seed").map_or(Ok(42), |s| {
         s.parse().map_err(|_| Error::Config("bad --seed".into()))
     })?;
-    let written = generate_corpus(out, &CorpusSpec { bytes, seed, ..Default::default() })?;
-    println!("wrote {written} bytes to {out} (seed {seed})");
+    let defaults = CorpusSpec::default();
+    let zipf_s = flags.get("zipf-s").map_or(Ok(defaults.zipf_s), |s| {
+        s.parse::<f64>().map_err(|_| Error::Config("bad --zipf-s".into()))
+    })?;
+    let vocab = flags.get("vocab").map_or(Ok(defaults.vocab), |s| {
+        s.parse::<usize>().map_err(|_| Error::Config("bad --vocab".into()))
+    })?;
+    if vocab == 0 {
+        return Err(Error::Config("--vocab must be >= 1".into()));
+    }
+    if !zipf_s.is_finite() || zipf_s < 0.0 {
+        return Err(Error::Config(format!("--zipf-s must be a finite exponent >= 0, got {zipf_s}")));
+    }
+    let written =
+        generate_corpus(out, &CorpusSpec { bytes, seed, zipf_s, vocab, ..Default::default() })?;
+    println!("wrote {written} bytes to {out} (seed {seed}, zipf s={zipf_s}, vocab {vocab})");
     Ok(0)
 }
 
@@ -159,6 +179,7 @@ fn job_config(flags: &Flags) -> Result<JobConfig> {
         flush_epochs: flags.has("flush-epochs"),
         use_kernel: !flags.has("no-kernel"),
         job_stealing: flags.has("stealing"),
+        route: flags.get("route").map_or(Ok(RouteConfig::Modulo), |s| s.parse())?,
         ..Default::default()
     };
     if flags.has("unbalanced") {
@@ -298,6 +319,8 @@ fn cmd_pipeline(flags: &Flags) -> Result<i32> {
         win_size: flags.size("win-size", 1 << 20)?,
         chunk_size: flags.size("chunk-size", 256 << 10)?,
         use_kernel: !flags.has("no-kernel"),
+        job_stealing: flags.has("stealing"),
+        route: flags.get("route").map_or(Ok(RouteConfig::Modulo), |s| s.parse())?,
         ..Default::default()
     };
     let plan = plans::by_name(which, input.into(), backend).expect("canonical name resolves");

@@ -31,6 +31,9 @@ pub struct Scenario {
     pub skew: SkewSpec,
     /// Seed for corpus + skew.
     pub seed: u64,
+    /// Zipf exponent of the generated corpora (key-frequency skew; the
+    /// fig8 sweep varies this).
+    pub zipf_s: f64,
     /// Route hot-spots through the PJRT kernels.
     pub use_kernel: bool,
 }
@@ -46,6 +49,7 @@ impl Default for Scenario {
             chunk_size: 256 << 10,
             skew: SkewSpec::paper_unbalanced(),
             seed: 42,
+            zipf_s: CorpusSpec::default().zipf_s,
             use_kernel: false, // scalar map path: figures sweep dozens of jobs
         }
     }
@@ -73,14 +77,18 @@ impl Scenario {
         dir.join("mr1s-corpora")
     }
 
-    /// Generate (or reuse) a corpus of `bytes`; cached by (bytes, seed).
+    /// Generate (or reuse) a corpus of `bytes`; cached by
+    /// (bytes, seed, zipf exponent).
     pub fn corpus(&self, bytes: u64) -> Result<PathBuf> {
         let dir = Self::corpus_dir();
         std::fs::create_dir_all(&dir)?;
-        let path = dir.join(format!("wiki-{}-{}.txt", bytes, self.seed));
+        let path = dir.join(format!("wiki-{}-{}-s{:.2}.txt", bytes, self.seed, self.zipf_s));
         let valid = std::fs::metadata(&path).map(|m| m.len() >= bytes).unwrap_or(false);
         if !valid {
-            generate_corpus(&path, &CorpusSpec { bytes, seed: self.seed, ..Default::default() })?;
+            generate_corpus(
+                &path,
+                &CorpusSpec { bytes, seed: self.seed, zipf_s: self.zipf_s, ..Default::default() },
+            )?;
         }
         Ok(path)
     }

@@ -13,9 +13,11 @@
 //! * **L3 (this crate)** — the coordinator: the decoupled protocol over an
 //!   MPI-3-style RMA substrate ([`mpi`]), the storage substrate
 //!   ([`storage`]), workload generation ([`workload`]), metrics
-//!   ([`metrics`]), the figure-regeneration harness ([`harness`]) and
-//!   the multi-stage pipeline executor ([`pipeline`]) chaining jobs
-//!   over spilled stage outputs with stage-boundary prefetch overlap.
+//!   ([`metrics`]), the figure-regeneration harness ([`harness`]), the
+//!   multi-stage pipeline executor ([`pipeline`]) chaining jobs over
+//!   spilled stage outputs with stage-boundary prefetch overlap, and the
+//!   skew-aware shuffle planner ([`shuffle`]) routing reduce keys by the
+//!   measured key distribution instead of a blind hash.
 //! * **L2 (python/compile/model.py, build-time)** — the Map-phase hash
 //!   graph and Combine-phase sort graph, AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels/, build-time)** — Pallas kernels for the
@@ -38,6 +40,7 @@ pub mod metrics;
 pub mod mpi;
 pub mod pipeline;
 pub mod runtime;
+pub mod shuffle;
 pub mod sim;
 pub mod storage;
 pub mod testing;

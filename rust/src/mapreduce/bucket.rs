@@ -190,13 +190,27 @@ impl KeyTable {
     }
 
     /// Drain into per-owner encoded buffers (bucket partitioning):
-    /// `out[r]` holds the records owned by rank `r`.  Fails with a typed
+    /// `out[r]` holds the records owned by rank `r` under the legacy
+    /// modulo route.  Fails with a typed
     /// [`crate::error::Error::ValueOverflow`] when an accumulator no
     /// longer fits the wire format.
     pub fn drain_by_owner(&mut self, nranks: usize) -> crate::error::Result<Vec<Vec<u8>>> {
-        let mut out = vec![Vec::new(); nranks];
+        self.drain_routed(&crate::shuffle::Route::modulo(nranks), 0)
+    }
+
+    /// Route-aware drain: `out[r]` holds the records `route` assigns to
+    /// rank `r` when shuffled by `source`.  With [`crate::shuffle::Route::Modulo`]
+    /// this is exactly [`KeyTable::drain_by_owner`]; a planned route
+    /// consults its bucket table and spreads split heavy-hitter keys by
+    /// the source rank.
+    pub fn drain_routed(
+        &mut self,
+        route: &crate::shuffle::Route,
+        source: usize,
+    ) -> crate::error::Result<Vec<Vec<u8>>> {
+        let mut out = vec![Vec::new(); route.nranks()];
         for (hash, chain) in self.slots.drain() {
-            let owner = kv::owner_of(hash, nranks);
+            let owner = route.owner(hash, source);
             match chain {
                 Chain::One(key, value) => {
                     OwnedRecord { hash, key, value }.encode_into(&mut out[owner])?;
@@ -211,6 +225,24 @@ impl KeyTable {
         self.entries = 0;
         self.bytes = 0;
         Ok(out)
+    }
+
+    /// Visit `(hash, encoded wire size)` of every stored record without
+    /// draining — what the shuffle sketch observes before the route
+    /// exists (the table keeps the records until the plan arrives).
+    pub fn for_each_size(&self, f: &mut dyn FnMut(u64, usize)) {
+        for (&hash, chain) in &self.slots {
+            match chain {
+                Chain::One(key, value) => {
+                    f(hash, HEADER_BYTES + key.len() + value.wire_len());
+                }
+                Chain::Many(chain) => {
+                    for (key, value) in chain {
+                        f(hash, HEADER_BYTES + key.len() + value.wire_len());
+                    }
+                }
+            }
+        }
     }
 
     /// Drain into a vector of owned records (unsorted).
@@ -434,6 +466,46 @@ mod tests {
                 assert_eq!(kv::owner_of(rec.unwrap().hash, 4), r);
             }
         }
+    }
+
+    #[test]
+    fn drain_routed_modulo_matches_drain_by_owner() {
+        let fill = |t: &mut KeyTable| {
+            for w in ["a", "b", "c", "d", "e", "f"] {
+                t.merge(kv::hash_key(w.as_bytes()), w.as_bytes(), &1u64.to_le_bytes(), &SumOps);
+            }
+        };
+        let mut t1 = KeyTable::new();
+        let mut t2 = KeyTable::new();
+        fill(&mut t1);
+        fill(&mut t2);
+        let by_owner = t1.drain_by_owner(3).unwrap();
+        let routed = t2.drain_routed(&crate::shuffle::Route::modulo(3), 2).unwrap();
+        // Buffers may order records differently (hash-map drain), so
+        // compare the per-rank record sets.
+        for (a, b) in by_owner.iter().zip(&routed) {
+            let mut ra: Vec<_> = kv::decode_all(a).unwrap().iter().map(|r| r.hash).collect();
+            let mut rb: Vec<_> = kv::decode_all(b).unwrap().iter().map(|r| r.hash).collect();
+            ra.sort_unstable();
+            rb.sort_unstable();
+            assert_eq!(ra, rb);
+        }
+    }
+
+    #[test]
+    fn for_each_size_reports_wire_sizes_without_draining() {
+        let mut t = KeyTable::new();
+        t.merge(kv::hash_key(b"ab"), b"ab", &1u64.to_le_bytes(), &SumOps);
+        t.merge(kv::hash_key(b"xyz"), b"xyz", &1u64.to_le_bytes(), &SumOps);
+        let mut total = 0usize;
+        let mut seen = 0usize;
+        t.for_each_size(&mut |_h, len| {
+            total += len;
+            seen += 1;
+        });
+        assert_eq!(seen, 2);
+        assert_eq!(total, t.bytes(), "sizes must match the byte accounting");
+        assert_eq!(t.len(), 2, "visiting must not drain");
     }
 
     #[test]

@@ -34,6 +34,46 @@ impl std::str::FromStr for BackendKind {
     }
 }
 
+/// How reduce keys are routed onto ranks (see `crate::shuffle`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteConfig {
+    /// Static `bucket % nranks` routing (`kv::owner_of`) — the legacy
+    /// default, bit-identical to the pre-planner behavior.
+    Modulo,
+    /// Sketch the key distribution during Map, exchange sketches, and
+    /// shuffle by a planned bucket→rank table with top heavy hitters
+    /// split `split` ways (1 = no splitting).
+    Planned {
+        /// Ranks a split heavy-hitter key spreads over (clamped to the
+        /// world size).
+        split: usize,
+    },
+}
+
+impl RouteConfig {
+    /// Default split width of `--route planned` without an argument.
+    pub const DEFAULT_SPLIT: usize = 4;
+}
+
+impl std::str::FromStr for RouteConfig {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "modulo" => Ok(RouteConfig::Modulo),
+            "planned" => Ok(RouteConfig::Planned { split: Self::DEFAULT_SPLIT }),
+            other => match other.strip_prefix("planned:split=") {
+                Some(k) => match k.parse::<usize>() {
+                    Ok(split) if split >= 1 => Ok(RouteConfig::Planned { split }),
+                    _ => Err(Error::Config(format!("bad split width '{k}' (need >= 1)"))),
+                },
+                None => Err(Error::Config(format!(
+                    "unknown route '{other}' (use modulo | planned[:split=K])"
+                ))),
+            },
+        }
+    }
+}
+
 /// Settings of one MapReduce job.
 ///
 /// Field names track the paper's `Init(filename, win_size, chunk_size,
@@ -72,6 +112,9 @@ pub struct JobConfig {
     /// their tails.  MR-1S only; ignored by MR-2S (master-slave
     /// distribution is static by design).
     pub job_stealing: bool,
+    /// Reduce-key routing: the static modulo route or the skew-aware
+    /// planned route (sketch → exchange → plan; see `crate::shuffle`).
+    pub route: RouteConfig,
     /// Directory for checkpoint backing files.
     pub checkpoint_dir: PathBuf,
     /// Per-task compute multipliers simulating workload imbalance the
@@ -93,6 +136,7 @@ impl Default for JobConfig {
             flush_epochs: false,
             local_reduce: true,
             job_stealing: false,
+            route: RouteConfig::Modulo,
             checkpoint_dir: std::env::temp_dir(),
             skew: Vec::new(),
         }
@@ -113,6 +157,11 @@ impl JobConfig {
         }
         if self.skew.iter().any(|&s| s < 1.0) {
             return Err(Error::Config("skew factors must be >= 1.0".into()));
+        }
+        if let RouteConfig::Planned { split } = self.route {
+            if split == 0 {
+                return Err(Error::Config("route split width must be >= 1".into()));
+            }
         }
         Ok(())
     }
@@ -154,6 +203,28 @@ mod tests {
         assert_eq!(cfg.skew_for_task(0), 1.0);
         assert_eq!(cfg.skew_for_task(1), 3.0);
         assert_eq!(cfg.skew_for_task(2), 1.0);
+    }
+
+    #[test]
+    fn route_parses_from_str() {
+        assert_eq!("modulo".parse::<RouteConfig>().unwrap(), RouteConfig::Modulo);
+        assert_eq!(
+            "planned".parse::<RouteConfig>().unwrap(),
+            RouteConfig::Planned { split: RouteConfig::DEFAULT_SPLIT }
+        );
+        assert_eq!(
+            "planned:split=2".parse::<RouteConfig>().unwrap(),
+            RouteConfig::Planned { split: 2 }
+        );
+        assert!("planned:split=0".parse::<RouteConfig>().is_err());
+        assert!("zigzag".parse::<RouteConfig>().is_err());
+    }
+
+    #[test]
+    fn zero_split_rejected() {
+        let cfg =
+            JobConfig { route: RouteConfig::Planned { split: 0 }, ..Default::default() };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -181,6 +181,16 @@ pub struct RankOutcome {
     /// Virtual time this rank issued its first input read (pipeline
     /// stage-overlap evidence).
     pub first_read_issue_vt: Option<u64>,
+    /// Wire bytes of reduce work this rank performed: its own bucket,
+    /// every peer bucket it pulled, and any retained
+    /// (ownership-transferred) records it folded itself — the measured
+    /// reduce load, with nothing dropped from the ledger.
+    pub reduce_bytes: u64,
+    /// Unique keys this rank reduced (including retained foreign keys).
+    pub reduce_keys: u64,
+    /// The shuffle planner's estimate of this rank's reduce bytes
+    /// (None under the modulo route).
+    pub planned_reduce_bytes: Option<u64>,
 }
 
 /// A MapReduce backend (the paper's *Back-end class*).
@@ -580,6 +590,9 @@ impl Job {
         let mut breakdowns = Vec::with_capacity(nranks);
         let mut timelines = Vec::with_capacity(nranks);
         let mut first_read_issue = Vec::with_capacity(nranks);
+        let mut reduce_bytes_per_rank = Vec::with_capacity(nranks);
+        let mut reduce_keys_per_rank = Vec::with_capacity(nranks);
+        let mut planned_reduce = Vec::with_capacity(nranks);
         let mut input_bytes = 0u64;
         let mut result_run = None;
         for outcome in outcomes {
@@ -588,11 +601,18 @@ impl Job {
             breakdowns.push(PhaseBreakdown::from_events(&o.events));
             timelines.push(o.events);
             first_read_issue.push(o.first_read_issue_vt);
+            reduce_bytes_per_rank.push(o.reduce_bytes);
+            reduce_keys_per_rank.push(o.reduce_keys);
+            planned_reduce.push(o.planned_reduce_bytes);
             input_bytes += o.input_bytes;
             if let Some(run) = o.result {
                 result_run = Some(run);
             }
         }
+        // Planned loads are all-or-nothing: every rank shuffles by the
+        // same route, so a mixed vector would be a backend bug.
+        let planned_reduce_bytes_per_rank: Option<Vec<u64>> =
+            planned_reduce.into_iter().collect();
         let run = result_run.ok_or_else(|| Error::Config("no rank produced a result".into()))?;
         // Finalize at the end of Combine (joins expand their pairs,
         // scores are computed from accumulated aggregates, ...).
@@ -620,6 +640,9 @@ impl Job {
             breakdowns,
             timelines,
             first_read_issue_ns: first_read_issue,
+            reduce_bytes_per_rank,
+            reduce_keys_per_rank,
+            planned_reduce_bytes_per_rank,
             peak_memory_bytes: shared.mem.peak(),
             memory_series: shared.mem.normalized_series(256),
             unique_keys,

@@ -15,6 +15,6 @@ pub mod kv;
 pub mod onesided;
 pub mod twosided;
 
-pub use config::{BackendKind, JobConfig};
+pub use config::{BackendKind, JobConfig, RouteConfig};
 pub use job::{Job, JobOutput, UseCase, UseCaseOps};
 pub use kv::{Record, Value, ValueKind, ValueOps};

@@ -32,9 +32,11 @@
 use crate::error::Result;
 use crate::metrics::{EventKind, Timeline};
 use crate::mpi::{LockKind, RankCtx, Window};
+use crate::shuffle::{exchange, Route, Sketch};
 use crate::storage::{Prefetcher, StorageWindow};
 
 use super::bucket::{KeyTable, SortedRun};
+use super::config::RouteConfig;
 use super::job::{build_local_run, run_map_task, timed, Backend, JobShared, RankOutcome};
 use super::kv::{self, ValueOps};
 
@@ -108,6 +110,10 @@ struct TaskClaimer<'a> {
     queues: &'a [Vec<super::job::TaskSpec>],
     stealing: bool,
     shared: &'a JobShared,
+    /// Virtual baseline for the real-time pacing gate: 0 for standalone
+    /// jobs, the earliest rank start of a pipeline stage otherwise (the
+    /// uniform shift keeps cross-rank claim ordering faithful).
+    gate_base_vt: u64,
 }
 
 impl TaskClaimer<'_> {
@@ -123,7 +129,7 @@ impl TaskClaimer<'_> {
         // slow straggler must not race ahead in real time and drain its
         // queue before thieves arrive).
         if self.stealing {
-            ctx.gate_to_virtual();
+            ctx.gate_to_virtual_since(self.gate_base_vt);
         }
         // Own queue first (local atomic: free).
         let idx = ctrl.fetch_add(&ctx.clock, me, C_TASK_NEXT, 1)? as usize;
@@ -205,6 +211,17 @@ impl Backend for Mr1s {
         let ctrl = mk_win(ctrl_size(n));
         let kv_win = mk_win(0);
         let comb_win = mk_win(0);
+        // Planned routing needs a fourth window for the sketch/route
+        // exchange (creation is collective, so it must exist up front).
+        let planned_split = match cfg.route {
+            RouteConfig::Planned { split } => Some(split),
+            RouteConfig::Modulo => None,
+        };
+        let plan_win = planned_split.map(|_| {
+            let w = mk_win(0);
+            exchange::init_window(&w);
+            w
+        });
         // Paper: each process acquires the exclusive lock over its own
         // Combine window during initialization.
         comb_win.lock(&ctx.clock, LockKind::Exclusive, me);
@@ -234,11 +251,27 @@ impl Backend for Mr1s {
         let queues: Vec<Vec<_>> = (0..n)
             .map(|r| shared.tasks.iter().copied().filter(|t| t.id % n == r).collect())
             .collect();
-        let claimer = TaskClaimer { queues: &queues, stealing: cfg.job_stealing, shared };
+        let claimer = TaskClaimer {
+            queues: &queues,
+            stealing: cfg.job_stealing,
+            shared,
+            gate_base_vt: shared.start_vts.iter().copied().min().unwrap_or(0),
+        };
         let prefetcher = Prefetcher::new(shared.file.clone());
         let mut input_bytes = 0u64;
         let mut pending = claimer.claim(ctx, &ctrl, &prefetcher)?;
         let first_read_issue_vt = pending.as_ref().map(|(_, read)| read.issued_vt());
+
+        // Planned routing stages the whole Map output locally (owners
+        // are unknown until the sketch exchange), so the per-task bucket
+        // flush is deferred to one routed flush after the plan arrives.
+        let mut map_table = KeyTable::new();
+        // Measured reduce load: wire bytes this rank ingests as the
+        // reduce side — its own bucket (counted at flush) plus every
+        // peer bucket it pulls.  This is the quantity the shuffle
+        // planner's sketch estimates, so planned-vs-actual compares
+        // like with like.
+        let mut reduce_ingest_bytes = 0u64;
 
         while let Some((task, read)) = pending {
             let data = timed(ctx, &tl, EventKind::Io, || read.wait(ctx))?;
@@ -248,45 +281,58 @@ impl Backend for Mr1s {
             input_bytes += task.len as u64;
             let task = &task;
 
-            let mut staging = KeyTable::new();
-            let range = shared.owned_range(task, &data);
-            timed(ctx, &tl, EventKind::Map, || {
-                run_map_task(ctx, shared, task, &data[range], &mut staging)
-            })?;
-            shared.mem.alloc(ctx.clock.now(), staging.bytes() as u64);
-            let staged_bytes = staging.bytes() as u64;
-
-            // Flush the task's locally-reduced tuples into buckets.
-            let flushed = timed(ctx, &tl, EventKind::LocalReduce, || {
-                self.flush_staging(
-                    ctx,
-                    shared,
-                    &ctrl,
-                    &kv_win,
-                    &mut out_buckets,
-                    &mut staging,
-                    &mut reduce_table,
-                    &mut retained,
-                )
-            })?;
-            shared.mem.free(ctx.clock.now(), staged_bytes);
-
-            // Window synchronization point after each Map task (Fig. 5).
-            // MPI_Win_sync guarantees window↔storage consistency: the
-            // caller pays a snapshot of the (dirty) window region, the
-            // flush itself overlaps with the next task's compute.
-            if let Some(ckpt) = checkpoint.as_mut() {
-                timed(ctx, &tl, EventKind::Checkpoint, || -> Result<()> {
-                    // Consistency point: write-through of the dirty delta
-                    // (~1 GB/s) plus a sweep of the attached region —
-                    // calibrated to the paper's ~4.8% average overhead.
-                    ctx.clock.advance(
-                        flushed.len() as u64 + kv_win.attached_bytes(me) as u64 / 4,
-                    );
-                    ckpt.sync(ctx, ckpt_off, &flushed)?;
-                    ckpt_off += flushed.len() as u64;
-                    Ok(())
+            if planned_split.is_some() {
+                let before = map_table.bytes() as u64;
+                let range = shared.owned_range(task, &data);
+                timed(ctx, &tl, EventKind::Map, || {
+                    run_map_task(ctx, shared, task, &data[range], &mut map_table)
                 })?;
+                shared
+                    .mem
+                    .alloc(ctx.clock.now(), (map_table.bytes() as u64).saturating_sub(before));
+            } else {
+                let mut staging = KeyTable::new();
+                let range = shared.owned_range(task, &data);
+                timed(ctx, &tl, EventKind::Map, || {
+                    run_map_task(ctx, shared, task, &data[range], &mut staging)
+                })?;
+                shared.mem.alloc(ctx.clock.now(), staging.bytes() as u64);
+                let staged_bytes = staging.bytes() as u64;
+
+                // Flush the task's locally-reduced tuples into buckets.
+                let flushed = timed(ctx, &tl, EventKind::LocalReduce, || {
+                    self.flush_staging(
+                        ctx,
+                        shared,
+                        &ctrl,
+                        &kv_win,
+                        &mut out_buckets,
+                        &mut staging,
+                        &mut reduce_table,
+                        &mut retained,
+                        &Route::modulo(n),
+                        &mut reduce_ingest_bytes,
+                    )
+                })?;
+                shared.mem.free(ctx.clock.now(), staged_bytes);
+
+                // Window synchronization point after each Map task (Fig. 5).
+                // MPI_Win_sync guarantees window↔storage consistency: the
+                // caller pays a snapshot of the (dirty) window region, the
+                // flush itself overlaps with the next task's compute.
+                if let Some(ckpt) = checkpoint.as_mut() {
+                    timed(ctx, &tl, EventKind::Checkpoint, || -> Result<()> {
+                        // Consistency point: write-through of the dirty delta
+                        // (~1 GB/s) plus a sweep of the attached region —
+                        // calibrated to the paper's ~4.8% average overhead.
+                        ctx.clock.advance(
+                            flushed.len() as u64 + kv_win.attached_bytes(me) as u64 / 4,
+                        );
+                        ckpt.sync(ctx, ckpt_off, &flushed)?;
+                        ckpt_off += flushed.len() as u64;
+                        Ok(())
+                    })?;
+                }
             }
             // Fig. 7b variant: redundant lock/unlock to force progress.
             if cfg.flush_epochs {
@@ -295,6 +341,59 @@ impl Backend for Mr1s {
                 kv_win.flush(&ctx.clock, me);
             }
         }
+
+        // Planned route: sketch what this rank will shuffle, exchange
+        // sketches one-sidedly, then flush the whole Map output through
+        // the published route (DESIGN.md §7).  The wait is a pairwise
+        // data dependency on the planner's publication, not a barrier.
+        let route = match planned_split {
+            None => Route::modulo(n),
+            Some(split) => {
+                let plan_win = plan_win.as_ref().expect("created at window setup");
+                let mut sketch = Sketch::new();
+                map_table.for_each_size(&mut |h, len| sketch.observe(h, len as u64));
+                let route = timed(ctx, &tl, EventKind::Wait, || {
+                    exchange::exchange_and_plan(ctx, plan_win, &sketch, split)
+                })?;
+                let staged_bytes = map_table.bytes() as u64;
+                let flushed = timed(ctx, &tl, EventKind::LocalReduce, || {
+                    self.flush_staging(
+                        ctx,
+                        shared,
+                        &ctrl,
+                        &kv_win,
+                        &mut out_buckets,
+                        &mut map_table,
+                        &mut reduce_table,
+                        &mut retained,
+                        &route,
+                        &mut reduce_ingest_bytes,
+                    )
+                })?;
+                shared.mem.free(ctx.clock.now(), staged_bytes);
+                // One consistency point for the routed flush (the
+                // per-task points of the modulo path collapse into it).
+                if let Some(ckpt) = checkpoint.as_mut() {
+                    timed(ctx, &tl, EventKind::Checkpoint, || -> Result<()> {
+                        ctx.clock.advance(
+                            flushed.len() as u64 + kv_win.attached_bytes(me) as u64 / 4,
+                        );
+                        ckpt.sync(ctx, ckpt_off, &flushed)?;
+                        ckpt_off += flushed.len() as u64;
+                        Ok(())
+                    })?;
+                }
+                // Every rank's routed flush starts at the plan's publish
+                // time, so *virtually* all flushes complete before any
+                // peer's Reduce-side close.  Enforce that visibility
+                // order in real time too (zero virtual cost): otherwise
+                // the one-core host serializes the flush burst
+                // arbitrarily and the close/retain path would reflect
+                // thread scheduling instead of protocol timing.
+                ctx.rendezvous_real();
+                route
+            }
+        };
 
         // ---- Status -> REDUCE (atomic put: Accumulate + REPLACE) -----
         ctrl.atomic_store(&ctx.clock, me, C_STATUS, STATUS_REDUCE)?;
@@ -352,6 +451,7 @@ impl Backend for Mr1s {
                     off += take;
                 }
                 // Decode headers, reduce locally.
+                reduce_ingest_bytes += fill;
                 for rec in kv::RecordIter::new(&buf) {
                     reduce_table.merge_record(rec?, &ops);
                 }
@@ -366,8 +466,13 @@ impl Backend for Mr1s {
             ctrl.flush(&ctx.clock, me);
         }
 
+        // Unique keys this rank reduced (the companion to the ingest
+        // byte count accumulated above; retained foreign keys are this
+        // rank's work too).
+        let reduce_keys = (reduce_table.len() + retained.len()) as u64;
+
         // ---- Combine: merge-sort tree over one-sided gets (Fig. 3) ---
-        let reduce_bytes = reduce_table.bytes() as u64;
+        let reduce_table_bytes = reduce_table.bytes() as u64;
         let retained_bytes = retained.bytes() as u64;
         shared.mem.alloc(ctx.clock.now(), retained_bytes);
         let mut result: Option<SortedRun> = None;
@@ -446,7 +551,7 @@ impl Backend for Mr1s {
             }
             Ok(())
         })?;
-        shared.mem.free(ctx.clock.now(), reduce_bytes + retained_bytes);
+        shared.mem.free(ctx.clock.now(), reduce_table_bytes + retained_bytes);
 
         ctrl.atomic_store(&ctx.clock, me, C_STATUS, STATUS_DONE)?;
         if let Some(ckpt) = checkpoint.as_mut() {
@@ -465,6 +570,9 @@ impl Backend for Mr1s {
             result,
             input_bytes,
             first_read_issue_vt,
+            reduce_bytes: reduce_ingest_bytes,
+            reduce_keys,
+            planned_reduce_bytes: route.planned_load(me),
         })
     }
 }
@@ -484,19 +592,21 @@ impl Mr1s {
         staging: &mut KeyTable,
         reduce_table: &mut KeyTable,
         retained: &mut KeyTable,
+        route: &Route,
+        own_ingest_bytes: &mut u64,
     ) -> Result<Vec<u8>> {
         let me = ctx.rank();
-        let n = ctx.nranks();
         let ops = shared.ops();
         let mut appended = Vec::new();
 
-        let parts = staging.drain_by_owner(n)?;
+        let parts = staging.drain_routed(route, me)?;
         for (t, buf) in parts.into_iter().enumerate() {
             if buf.is_empty() {
                 continue;
             }
             if t == me {
                 // Own keys reduce in place — no window traffic.
+                *own_ingest_bytes += buf.len() as u64;
                 for rec in kv::RecordIter::new(&buf) {
                     reduce_table.merge_record(rec?, &ops);
                 }
@@ -505,7 +615,13 @@ impl Mr1s {
             // §2.1: ensure the target is not already in Reduce.
             let status = ctrl.atomic_load(&ctx.clock, t, C_STATUS)?;
             if status >= STATUS_REDUCE || out_buckets[t].closed {
+                // Ownership transfer: this rank now does the reduce work
+                // for these bytes, so they count toward *its* measured
+                // load — otherwise retained records vanish from every
+                // rank's ledger and the imbalance figures undercount
+                // exactly the runs that retain most.
                 out_buckets[t].closed = true;
+                *own_ingest_bytes += buf.len() as u64;
                 for rec in kv::RecordIter::new(&buf) {
                     retained.merge_record(rec?, &ops);
                 }
@@ -514,8 +630,10 @@ impl Mr1s {
             match self.append_bucket(ctx, shared, ctrl, kv_win, &mut out_buckets[t], t, &buf)? {
                 true => appended.extend_from_slice(&buf),
                 false => {
-                    // Closed (or full) under us: ownership transfer.
+                    // Closed (or full) under us: ownership transfer
+                    // (counted as this rank's load, as above).
                     out_buckets[t].closed = true;
+                    *own_ingest_bytes += buf.len() as u64;
                     for rec in kv::RecordIter::new(&buf) {
                         retained.merge_record(rec?, &ops);
                     }

@@ -15,8 +15,10 @@
 use crate::error::Result;
 use crate::metrics::{EventKind, Timeline};
 use crate::mpi::RankCtx;
+use crate::shuffle::{exchange, plan_route, Route};
 
 use super::bucket::{KeyTable, SortedRun};
+use super::config::RouteConfig;
 use super::job::{
     build_local_run, run_map_task, timed, Backend, JobShared, RankOutcome, TaskSpec,
 };
@@ -80,8 +82,27 @@ impl Backend for Mr2s {
         shared.mem.alloc(ctx.clock.now(), all_staging.bytes() as u64);
         let staging_bytes = all_staging.bytes() as u64;
 
+        // ---- Shuffle route ------------------------------------------
+        // The collective backend stays collective: planned routing
+        // all-to-alls the encoded sketches, then every rank merges them
+        // in rank order and runs the deterministic planner — identical
+        // inputs, identical route, no extra round.
+        let route = match shared.config.route {
+            RouteConfig::Modulo => Route::modulo(n),
+            RouteConfig::Planned { split } => {
+                let mut sketch = crate::shuffle::Sketch::new();
+                all_staging.for_each_size(&mut |h, len| sketch.observe(h, len as u64));
+                let enc = sketch.encode();
+                let recv = timed(ctx, &tl, EventKind::Wait, || {
+                    ctx.alltoallv(vec![enc; n])
+                });
+                let merged = exchange::merge_encoded(&recv)?;
+                plan_route(&merged, n, split)
+            }
+        };
+
         // ---- Shuffle: Alltoallv of per-owner buffers ------------------
-        let mut parts = all_staging.drain_by_owner(n)?;
+        let mut parts = all_staging.drain_routed(&route, me)?;
         let own = std::mem::take(&mut parts[me]);
         let sent_bytes: usize = parts.iter().map(Vec::len).sum();
         let recv = timed(ctx, &tl, EventKind::Wait, || ctx.alltoallv(parts));
@@ -107,7 +128,17 @@ impl Backend for Mr2s {
         })?;
         shared.mem.free(ctx.clock.now(), staging_bytes);
         shared.mem.alloc(ctx.clock.now(), reduce_table.bytes() as u64);
-        let reduce_bytes = reduce_table.bytes() as u64;
+        let reduce_table_bytes = reduce_table.bytes() as u64;
+        // Measured reduce load: wire bytes ingested (own buffer + every
+        // received buffer) — the quantity the shuffle planner estimates.
+        let reduce_bytes = own.len() as u64
+            + recv
+                .iter()
+                .enumerate()
+                .filter(|&(s, _)| s != me)
+                .map(|(_, b)| b.len() as u64)
+                .sum::<u64>();
+        let reduce_keys = reduce_table.len() as u64;
         let _ = sent_bytes;
 
         // ---- Combine: same tree, point-to-point -----------------------
@@ -148,7 +179,7 @@ impl Backend for Mr2s {
             }
             Ok(())
         })?;
-        shared.mem.free(ctx.clock.now(), reduce_bytes);
+        shared.mem.free(ctx.clock.now(), reduce_table_bytes);
 
         Ok(RankOutcome {
             elapsed_ns: ctx.clock.now(),
@@ -156,6 +187,9 @@ impl Backend for Mr2s {
             result,
             input_bytes,
             first_read_issue_vt,
+            reduce_bytes,
+            reduce_keys,
+            planned_reduce_bytes: route.planned_load(me),
         })
     }
 }

@@ -62,6 +62,17 @@ pub struct JobReport {
     /// rank never read input).  In a pipeline this is the evidence that
     /// stage N+1's prefetch went out before stage N fully finished.
     pub first_read_issue_ns: Vec<Option<u64>>,
+    /// Per-rank reduce load: wire bytes each rank folded itself — own
+    /// bucket, pulled peer buckets, and retained (ownership-transferred)
+    /// records.  The raw series behind the skew figures; see
+    /// [`JobReport::reduce_max_over_mean`].
+    pub reduce_bytes_per_rank: Vec<u64>,
+    /// Per-rank reduce load in unique keys.
+    pub reduce_keys_per_rank: Vec<u64>,
+    /// Planned per-rank reduce bytes (the shuffle planner's sketch
+    /// estimate) — `None` under the modulo route, which plans nothing.
+    /// Compare against `reduce_bytes_per_rank` for planned-vs-actual.
+    pub planned_reduce_bytes_per_rank: Option<Vec<u64>>,
     /// Peak tracked memory over the node (bytes).
     pub peak_memory_bytes: u64,
     /// Normalized (t, bytes) memory series.
@@ -112,10 +123,38 @@ impl JobReport {
         fr / self.rank_elapsed_ns.len() as f64
     }
 
+    /// Max-over-mean of the per-rank reduce bytes (1.0 = perfectly
+    /// balanced; 0.0 when nothing was reduced).
+    pub fn reduce_max_over_mean(&self) -> f64 {
+        max_over_mean(&self.reduce_bytes_per_rank)
+    }
+
+    /// Coefficient of variation (stddev/mean) of the per-rank reduce
+    /// bytes (0.0 = perfectly balanced or nothing reduced).
+    pub fn reduce_cov(&self) -> f64 {
+        let xs = &self.reduce_bytes_per_rank;
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let mean = xs.iter().sum::<u64>() as f64 / xs.len() as f64;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let sq_dev = |x: &u64| (*x as f64 - mean) * (*x as f64 - mean);
+        let var = xs.iter().map(sq_dev).sum::<f64>() / xs.len() as f64;
+        var.sqrt() / mean
+    }
+
+    /// Max-over-mean of the *planned* per-rank reduce bytes (None under
+    /// the modulo route).
+    pub fn planned_reduce_max_over_mean(&self) -> Option<f64> {
+        self.planned_reduce_bytes_per_rank.as_ref().map(|xs| max_over_mean(xs))
+    }
+
     /// One-line summary used by the CLI.
     pub fn summary(&self) -> String {
         format!(
-            "{}: ranks={} input={}MiB elapsed={:.3}s keys={} count={} peak_mem={}MiB wait={:.1}%",
+            "{}: ranks={} input={}MiB elapsed={:.3}s keys={} count={} peak_mem={}MiB wait={:.1}% red-imb={:.2}",
             self.backend,
             self.nranks,
             self.input_bytes >> 20,
@@ -124,8 +163,21 @@ impl JobReport {
             self.total_count,
             self.peak_memory_bytes >> 20,
             self.mean_wait_fraction() * 100.0,
+            self.reduce_max_over_mean(),
         )
     }
+}
+
+/// max / mean of a series (0.0 when empty or all-zero).
+fn max_over_mean(xs: &[u64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mean = xs.iter().sum::<u64>() as f64 / xs.len() as f64;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    *xs.iter().max().unwrap() as f64 / mean
 }
 
 #[cfg(test)]
@@ -159,11 +211,17 @@ mod tests {
             ],
             timelines: vec![vec![], vec![]],
             first_read_issue_ns: vec![None, None],
+            reduce_bytes_per_rank: vec![300, 100],
+            reduce_keys_per_rank: vec![3, 1],
+            planned_reduce_bytes_per_rank: None,
             peak_memory_bytes: 0,
             memory_series: vec![],
             unique_keys: 0,
             total_count: 0,
         };
         assert!((r.mean_wait_fraction() - 0.25).abs() < 1e-9);
+        assert!((r.reduce_max_over_mean() - 1.5).abs() < 1e-9);
+        assert!((r.reduce_cov() - 0.5).abs() < 1e-9);
+        assert_eq!(r.planned_reduce_max_over_mean(), None);
     }
 }

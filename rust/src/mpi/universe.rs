@@ -47,10 +47,22 @@ impl RankCtx {
     /// whose *outcome* should reflect virtual-time ordering — atomic task
     /// claiming for job stealing — call this first, so a virtually-slow
     /// straggler is also paced slower in real time and thieves really do
-    /// find unclaimed work.  Cost: bounded by makespan/8 of real sleep
+    /// find unclaimed work.  Cost: bounded by the makespan of real sleep
     /// per rank, paid only by gated call sites.
     pub fn gate_to_virtual(&self) {
-        let target = Duration::from_nanos(self.clock.now() >> GATE_SHIFT);
+        self.gate_to_virtual_since(0);
+    }
+
+    /// [`RankCtx::gate_to_virtual`] relative to a virtual baseline: real
+    /// time tracks `clock.now() - base_vt`.  Pipeline stages hand ranks
+    /// clocks far from zero (stage handoff carries the previous stages'
+    /// virtual time) while `epoch` restarts at stage entry, so gating
+    /// against the absolute clock would sleep the whole pipeline history;
+    /// gating against the stage's earliest start re-imposes only the
+    /// within-stage virtual ordering, which is what claim outcomes need.
+    pub fn gate_to_virtual_since(&self, base_vt: u64) {
+        let target =
+            Duration::from_nanos(self.clock.now().saturating_sub(base_vt) >> GATE_SHIFT);
         let elapsed = self.epoch.elapsed();
         if target > elapsed {
             thread::sleep(target - elapsed);

@@ -92,11 +92,14 @@ pub struct Pipeline {
 
 impl Pipeline {
     /// Build an executor.  `base` supplies the per-stage job settings
-    /// (task/win/chunk sizes, kernel toggle, ...); its `input` and
-    /// `skew` fields are ignored (per-stage inputs come from the plan,
-    /// and imbalance belongs to corpus workloads, not re-ingested
-    /// records).  Job stealing is disabled: its real-time pacing gate is
-    /// calibrated to jobs that start at virtual time 0.
+    /// (task/win/chunk sizes, kernel toggle, route, job stealing, ...);
+    /// its `input` and `skew` fields are ignored (per-stage inputs come
+    /// from the plan, and imbalance belongs to corpus workloads, not
+    /// re-ingested records).  With job stealing on, each stage's claim
+    /// gate paces against the stage's earliest rank start (the per-rank
+    /// virtual clocks carried over from the previous stage), so stealing
+    /// works mid-pipeline; with planned routing, every stage re-sketches
+    /// and re-plans its own shuffle.
     pub fn new(plan: Plan, nranks: usize, cost: CostModel, base: JobConfig) -> Result<Pipeline> {
         plan.validate()?;
         if nranks == 0 {
@@ -177,12 +180,7 @@ impl Pipeline {
                 }
             };
 
-            let config = JobConfig {
-                input: input_path,
-                skew: Vec::new(),
-                job_stealing: false,
-                ..self.base.clone()
-            };
+            let config = JobConfig { input: input_path, skew: Vec::new(), ..self.base.clone() };
             let JobOutput { report, result } = Job::new(stage.usecase.clone(), config)?
                 .run_staged(
                     stage.backend,

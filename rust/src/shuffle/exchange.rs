@@ -1,0 +1,189 @@
+//! One-sided sketch/route exchange over an RMA window.
+//!
+//! The decoupled backend must learn the global key distribution without
+//! re-introducing the collectives the paper removed.  The exchange is
+//! built purely from the window primitives MR-1S already leans on:
+//!
+//! * every rank *publishes* its sketch — local `attach` + `put`, then two
+//!   atomic cells (`disp`, `len+1`) in its own region, exactly the
+//!   dynamic-window displacement-sharing pattern of paper footnote 1;
+//! * the planner rank (rank 0) *pulls* each peer's sketch as it appears
+//!   (`wait_atomic` on the peer's length cell, then `get`), merges them
+//!   in rank order, runs the deterministic planner, and publishes the
+//!   encoded route table the same way;
+//! * every other rank waits only on the planner's route cell.
+//!
+//! No collective ever happens: each wait is a pairwise data dependency,
+//! and `wait_atomic` carries exactly the publisher's clock, so a rank's
+//! virtual time after the exchange reflects the true critical path (the
+//! slowest mapper → the planner → the consumer) and nothing more.  The
+//! plan *does* serialize on the slowest mapper — distribution-aware
+//! routing fundamentally needs every rank's histogram (OS4M makes the
+//! same trade at the operation level) — but fast ranks block on data,
+//! not on a barrier, and ranks re-decouple immediately after.
+
+use crate::error::Result;
+use crate::mpi::{RankCtx, Window};
+
+use super::plan::{plan_route, Route};
+use super::sketch::Sketch;
+
+/// Atomic cells in each rank's region of the exchange window (the first
+/// [`CELLS_PAD`] bytes are a reserved pad segment so bulk payloads never
+/// share a displacement with the cells — the substrate's accumulate
+/// model keeps them separate anyway, but the protocol keeps the MPI rule
+/// of never mixing atomics and bulk transfers on one location).
+const C_SKETCH_DISP: u64 = 0;
+const C_SKETCH_LEN: u64 = 8; // stored as len + 1; 0 = unpublished
+const C_ROUTE_DISP: u64 = 16;
+const C_ROUTE_LEN: u64 = 24; // stored as len + 1; 0 = unpublished
+
+/// Pad attached at displacement 0 of every region (see above).
+pub const CELLS_PAD: usize = 32;
+
+/// The planning rank.
+pub const PLANNER: usize = 0;
+
+/// Prepare a freshly created dynamic window for the exchange: reserve
+/// the cell pad so data segments start past the atomic cells.  Must be
+/// called by every rank right after the (collective) window creation.
+pub fn init_window(win: &Window) {
+    let disp = win.attach(CELLS_PAD);
+    assert_eq!(disp, 0, "pad must be the first attach");
+}
+
+/// Publish `payload` in the local region and flag it via the given
+/// (disp, len) cells.
+fn publish(
+    ctx: &RankCtx,
+    win: &Window,
+    cell_disp: u64,
+    cell_len: u64,
+    payload: &[u8],
+) -> Result<()> {
+    let me = ctx.rank();
+    let disp = win.attach(payload.len().max(1));
+    win.put(&ctx.clock, me, disp, payload)?;
+    win.atomic_store(&ctx.clock, me, cell_disp, disp)?;
+    win.atomic_store(&ctx.clock, me, cell_len, payload.len() as u64 + 1)?;
+    Ok(())
+}
+
+/// Wait for `target`'s payload behind the given cells and pull it.
+fn fetch(
+    ctx: &RankCtx,
+    win: &Window,
+    target: usize,
+    cell_disp: u64,
+    cell_len: u64,
+) -> Result<Vec<u8>> {
+    let len = win.wait_atomic(&ctx.clock, target, cell_len, |v| v > 0)? - 1;
+    let disp = win.atomic_load(&ctx.clock, target, cell_disp)?;
+    let mut buf = vec![0u8; len as usize];
+    if !buf.is_empty() {
+        win.get(&ctx.clock, target, disp, &mut buf)?;
+    }
+    Ok(buf)
+}
+
+/// Run the full exchange for this rank: publish `sketch`, then either
+/// plan (rank [`PLANNER`]) or pull the published route.  Returns the
+/// route every rank will shuffle by.
+pub fn exchange_and_plan(
+    ctx: &RankCtx,
+    win: &Window,
+    sketch: &Sketch,
+    split_ways: usize,
+) -> Result<Route> {
+    let me = ctx.rank();
+    let n = ctx.nranks();
+    publish(ctx, win, C_SKETCH_DISP, C_SKETCH_LEN, &sketch.encode())?;
+    if me == PLANNER {
+        let mut merged = Sketch::new();
+        for s in 0..n {
+            if s == me {
+                merged.merge(sketch);
+            } else {
+                merged.merge(&Sketch::decode(&fetch(ctx, win, s, C_SKETCH_DISP, C_SKETCH_LEN)?)?);
+            }
+        }
+        let route = plan_route(&merged, n, split_ways);
+        publish(ctx, win, C_ROUTE_DISP, C_ROUTE_LEN, &route.encode())?;
+        Ok(route)
+    } else {
+        Route::decode(&fetch(ctx, win, PLANNER, C_ROUTE_DISP, C_ROUTE_LEN)?)
+    }
+}
+
+/// Merge a set of encoded sketches (rank order) into one view — the
+/// collective-backend path: MR-2S all-to-alls the encoded sketches and
+/// every rank merges and plans locally; the deterministic planner
+/// guarantees all ranks derive the same route.
+pub fn merge_encoded(encoded: &[Vec<u8>]) -> Result<Sketch> {
+    let mut merged = Sketch::new();
+    for buf in encoded {
+        merged.merge(&Sketch::decode(buf)?);
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::Universe;
+    use crate::sim::CostModel;
+
+    #[test]
+    fn every_rank_derives_the_published_route() {
+        let outs = Universe::new(4, CostModel::default()).run(|ctx| {
+            let win = Window::create(ctx, 0);
+            init_window(&win);
+            ctx.barrier();
+            let mut sketch = Sketch::new();
+            // Rank-dependent observations; one shared heavy key.
+            for i in 0..200u64 {
+                sketch.observe(ctx.rank() as u64 * 10_000 + i, 15);
+            }
+            for _ in 0..100 {
+                sketch.observe(7, 40);
+            }
+            exchange_and_plan(ctx, &win, &sketch, 2).unwrap()
+        });
+        for r in &outs[1..] {
+            assert_eq!(r, &outs[0], "all ranks must hold the same route");
+        }
+        assert!(matches!(outs[0], Route::Planned(_)));
+    }
+
+    #[test]
+    fn exchange_clock_carries_slowest_publisher() {
+        let outs = Universe::new(3, CostModel::default()).run(|ctx| {
+            let win = Window::create(ctx, 0);
+            init_window(&win);
+            ctx.barrier();
+            if ctx.rank() == 2 {
+                ctx.clock.advance(5_000_000); // straggling mapper
+            }
+            let sketch = Sketch::new();
+            exchange_and_plan(ctx, &win, &sketch, 1).unwrap();
+            ctx.clock.now()
+        });
+        // The planner (and therefore everyone) is causally after the
+        // straggler's publication.
+        assert!(outs.iter().all(|&t| t >= 5_000_000), "clocks {outs:?}");
+    }
+
+    #[test]
+    fn merge_encoded_matches_direct_merge() {
+        let mut a = Sketch::new();
+        let mut b = Sketch::new();
+        a.observe(1, 10);
+        b.observe(2, 20);
+        let merged = merge_encoded(&[a.encode(), b.encode()]).unwrap();
+        let mut direct = Sketch::new();
+        direct.merge(&a);
+        direct.merge(&b);
+        assert_eq!(merged.buckets(), direct.buckets());
+        assert_eq!(merged.heavy_hitters(), direct.heavy_hitters());
+    }
+}

@@ -1,0 +1,35 @@
+//! Skew-aware shuffle planning: sketch-sampled key routing with
+//! heavy-hitter splitting.
+//!
+//! The static `kv::owner_of(hash) = bucket % nranks` route is blind to
+//! the key distribution, so a zipfian corpus piles its heavy keys onto a
+//! few ranks no matter how well the map side is decoupled.  This
+//! subsystem replaces it with a *planned* route measured from the data
+//! (after Fan et al., 1401.0355):
+//!
+//! * [`sketch`] — during Map every rank builds a per-bucket weight
+//!   histogram plus a space-saving heavy-hitter summary of the records
+//!   it will shuffle;
+//! * [`exchange`] — sketches are exchanged over one-sided window
+//!   operations (publish + `wait_atomic` + `get`): pairwise data
+//!   dependencies only, never a collective, so decoupled ranks stay
+//!   decoupled; the collective backend instead all-to-alls the encoded
+//!   sketches;
+//! * [`plan`] — a deterministic planner LPT-bin-packs the
+//!   [`plan::ROUTE_BUCKETS`] buckets onto ranks and *splits* top heavy
+//!   hitters across several ranks (per-source target choice); the split
+//!   partial aggregates re-combine in the existing Combine merge tree,
+//!   so any associative-commutative `UseCase` is oracle-identical under
+//!   any route.
+//!
+//! Both backends consume the resulting [`plan::Route`] through
+//! `KeyTable::drain_routed`; `--route modulo` (the default) short-
+//! circuits to the legacy behavior bit-for-bit.  See DESIGN.md §7.
+
+pub mod exchange;
+pub mod plan;
+pub mod sketch;
+pub(crate) mod wire;
+
+pub use plan::{plan_route, route_bucket_of, PlannedRoute, Route, ROUTE_BUCKETS};
+pub use sketch::{Sketch, SKETCH_CAPACITY};

@@ -1,0 +1,365 @@
+//! The deterministic shuffle planner: bucket→rank bin-packing plus
+//! heavy-hitter splitting.
+//!
+//! Input is the merged [`super::sketch::Sketch`] — the measured weight of
+//! every route bucket and the heaviest individual key hashes across all
+//! ranks.  Output is a [`Route`]:
+//!
+//! 1. **Split selection.** Heavy hitters whose estimated weight exceeds
+//!    half a fair per-rank share are split: the key's records spread over
+//!    `split_ways` ranks (each *source* rank deterministically picks one
+//!    target, so a key's per-source partial aggregates land spread out).
+//!    The partials re-combine in the existing Combine merge tree — the
+//!    reduce operator is associative and commutative by the `UseCase`
+//!    contract, so results are bit-identical to unsplit routing.
+//! 2. **LPT bin-packing.** Remaining bucket weights are assigned
+//!    longest-processing-time-first onto the least-loaded rank.
+//! 3. Split keys are then placed on the least-loaded `split_ways` ranks.
+//!
+//! The planner is a pure function of (sketch, nranks, split_ways) with
+//! deterministic tie-breaks throughout, so every rank that runs it over
+//! the same merged sketch derives the same route — MR-2S relies on this
+//! (each rank plans locally after an all-to-all of sketches), while MR-1S
+//! has rank 0 plan once and publish the encoded table through a window.
+//!
+//! Correctness never depends on the sketch being accurate, or even on
+//! ranks agreeing: any total map `hash → rank` yields correct results
+//! because partial reductions merge in the Combine tree.  The sketch
+//! only buys *balance*.
+
+use crate::error::Result;
+use crate::mapreduce::kv;
+
+use super::sketch::Sketch;
+use super::wire::Reader;
+
+/// Number of route buckets the planner bin-packs (finer than the 256-way
+/// `kv::bucket_of`, which is pinned to the kernel's histogram width; the
+/// planned route does not feed the kernel, so it is free to use more).
+pub const ROUTE_BUCKETS: usize = 4096;
+
+/// Route bucket of a hash (low 12 bits).
+#[inline]
+pub fn route_bucket_of(hash: u64) -> usize {
+    (hash & (ROUTE_BUCKETS as u64 - 1)) as usize
+}
+
+/// Most heavy-hitter keys a plan will split.
+pub const MAX_SPLITS: usize = 16;
+
+/// A bucket→rank routing decision, consumed by both backends' shuffles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Route {
+    /// The legacy static route: `kv::owner_of` (bucket % nranks).
+    /// Bit-identical to the pre-planner behavior.
+    Modulo {
+        /// World size.
+        nranks: usize,
+    },
+    /// A planned route (bin-packed table + split heavy hitters).
+    Planned(PlannedRoute),
+}
+
+/// The planner's output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlannedRoute {
+    /// Owning rank per route bucket ([`ROUTE_BUCKETS`] entries).
+    pub table: Vec<u16>,
+    /// Split heavy hitters, sorted by hash: each key's records spread
+    /// over its target ranks (chosen per source rank).
+    pub splits: Vec<(u64, Vec<u16>)>,
+    /// Planned per-rank reduce load in wire bytes (sketch estimate) —
+    /// reported next to the measured load in `metrics::JobReport`.
+    pub planned_loads: Vec<u64>,
+}
+
+impl Route {
+    /// The legacy modulo route over `nranks`.
+    pub fn modulo(nranks: usize) -> Route {
+        Route::Modulo { nranks }
+    }
+
+    /// World size this route maps onto.
+    pub fn nranks(&self) -> usize {
+        match self {
+            Route::Modulo { nranks } => *nranks,
+            Route::Planned(p) => p.planned_loads.len(),
+        }
+    }
+
+    /// Owning rank for a record of `hash` shuffled by `source`.
+    ///
+    /// For split keys the target depends on the *source* rank, spreading
+    /// the per-source partial aggregates; for everything else it is a
+    /// pure function of the hash.
+    #[inline]
+    pub fn owner(&self, hash: u64, source: usize) -> usize {
+        match self {
+            Route::Modulo { nranks } => kv::owner_of(hash, *nranks),
+            Route::Planned(p) => {
+                if !p.splits.is_empty() {
+                    if let Ok(i) = p.splits.binary_search_by_key(&hash, |s| s.0) {
+                        let targets = &p.splits[i].1;
+                        return targets[source % targets.len()] as usize;
+                    }
+                }
+                p.table[route_bucket_of(hash)] as usize
+            }
+        }
+    }
+
+    /// Planned reduce load of `rank` (None for the modulo route, which
+    /// plans nothing).
+    pub fn planned_load(&self, rank: usize) -> Option<u64> {
+        match self {
+            Route::Modulo { .. } => None,
+            Route::Planned(p) => p.planned_loads.get(rank).copied(),
+        }
+    }
+
+    /// Wire encoding (window publication):
+    /// `| nranks: u16 | nsplits: u16 | table: ROUTE_BUCKETS * u16 |
+    ///  loads: nranks * u64 | nsplits * (hash u64, ways u16, ways * u16) |`.
+    /// Only planned routes are published; encoding a modulo route is a
+    /// caller bug.
+    pub fn encode(&self) -> Vec<u8> {
+        let Route::Planned(p) = self else {
+            unreachable!("only planned routes are published");
+        };
+        let mut out = Vec::with_capacity(4 + ROUTE_BUCKETS * 2 + p.planned_loads.len() * 8);
+        out.extend_from_slice(&(p.planned_loads.len() as u16).to_le_bytes());
+        out.extend_from_slice(&(p.splits.len() as u16).to_le_bytes());
+        for &r in &p.table {
+            out.extend_from_slice(&r.to_le_bytes());
+        }
+        for &l in &p.planned_loads {
+            out.extend_from_slice(&l.to_le_bytes());
+        }
+        for (hash, targets) in &p.splits {
+            out.extend_from_slice(&hash.to_le_bytes());
+            out.extend_from_slice(&(targets.len() as u16).to_le_bytes());
+            for &t in targets {
+                out.extend_from_slice(&t.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Decode a route published by [`Route::encode`].
+    pub fn decode(buf: &[u8]) -> Result<Route> {
+        let mut r = Reader::new(buf, "route");
+        let nranks = r.u16()? as usize;
+        let nsplits = r.u16()? as usize;
+        if nranks == 0 {
+            return Err(r.err("zero ranks"));
+        }
+        let mut table = Vec::with_capacity(ROUTE_BUCKETS);
+        for _ in 0..ROUTE_BUCKETS {
+            let owner = r.u16()?;
+            if owner as usize >= nranks {
+                return Err(r.err(&format!("bucket owner {owner} >= {nranks}")));
+            }
+            table.push(owner);
+        }
+        let mut planned_loads = Vec::with_capacity(nranks);
+        for _ in 0..nranks {
+            planned_loads.push(r.u64()?);
+        }
+        let mut splits = Vec::with_capacity(nsplits);
+        for _ in 0..nsplits {
+            let hash = r.u64()?;
+            let ways = r.u16()? as usize;
+            if ways == 0 {
+                return Err(r.err("zero-way split"));
+            }
+            let mut targets = Vec::with_capacity(ways);
+            for _ in 0..ways {
+                let t = r.u16()?;
+                if t as usize >= nranks {
+                    return Err(r.err(&format!("split target {t} >= {nranks}")));
+                }
+                targets.push(t);
+            }
+            splits.push((hash, targets));
+        }
+        if !splits.windows(2).all(|w| w[0].0 < w[1].0) {
+            return Err(r.err("splits not sorted by hash"));
+        }
+        r.finish()?;
+        Ok(Route::Planned(PlannedRoute { table, splits, planned_loads }))
+    }
+}
+
+/// Plan a route for `nranks` from a merged sketch, splitting heavy
+/// hitters `split_ways` ways (1 = no splitting).  Deterministic.
+pub fn plan_route(sketch: &Sketch, nranks: usize, split_ways: usize) -> Route {
+    assert!(nranks > 0 && nranks <= u16::MAX as usize, "rank count fits the route encoding");
+    let total = sketch.total();
+    let mut weights: Vec<u64> = sketch.buckets().to_vec();
+
+    // 1. Split selection: a key worth at least half a fair share would
+    //    dominate whatever rank its bucket lands on; split it instead.
+    //    (Conservative estimate: weight minus the space-saving
+    //    overestimate, so noise-inflated counters do not trigger splits.)
+    let ways = split_ways.clamp(1, nranks);
+    let mut splits: Vec<(u64, Vec<u16>)> = Vec::new();
+    let mut split_weights: Vec<(u64, u64)> = Vec::new(); // (hash, weight)
+    if ways >= 2 && nranks >= 2 && total > 0 {
+        let threshold = total / (2 * nranks as u64).max(1);
+        for (hash, c) in sketch.heavy_hitters() {
+            if split_weights.len() >= MAX_SPLITS {
+                break;
+            }
+            let lower_bound = c.weight.saturating_sub(c.overestimate);
+            if lower_bound > threshold && threshold > 0 {
+                split_weights.push((hash, c.weight));
+                let b = route_bucket_of(hash);
+                weights[b] = weights[b].saturating_sub(c.weight);
+            }
+        }
+    }
+
+    // 2. LPT: heaviest bucket first onto the least-loaded rank.
+    let mut loads = vec![0u64; nranks];
+    let mut order: Vec<usize> = (0..ROUTE_BUCKETS).collect();
+    order.sort_by(|&a, &b| weights[b].cmp(&weights[a]).then_with(|| a.cmp(&b)));
+    let mut table = vec![0u16; ROUTE_BUCKETS];
+    for b in order {
+        let r = argmin(&loads);
+        table[b] = r as u16;
+        loads[r] += weights[b];
+    }
+
+    // 3. Place each split key on the `ways` least-loaded ranks.
+    for (hash, weight) in split_weights {
+        let mut by_load: Vec<usize> = (0..nranks).collect();
+        by_load.sort_by_key(|&r| (loads[r], r));
+        let targets: Vec<u16> = by_load[..ways].iter().map(|&r| r as u16).collect();
+        let share = weight / ways as u64;
+        for (i, &t) in targets.iter().enumerate() {
+            loads[t as usize] += share + if i == 0 { weight % ways as u64 } else { 0 };
+        }
+        splits.push((hash, targets));
+    }
+    splits.sort_by_key(|s| s.0);
+
+    Route::Planned(PlannedRoute { table, splits, planned_loads: loads })
+}
+
+#[inline]
+fn argmin(loads: &[u64]) -> usize {
+    let mut best = 0usize;
+    for (r, &l) in loads.iter().enumerate() {
+        if l < loads[best] {
+            best = r;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skewed_sketch(heavy_hash: u64, heavy_weight: u64) -> Sketch {
+        let mut s = Sketch::new();
+        for i in 0..2000u64 {
+            s.observe(i.wrapping_mul(0x9E3779B97F4A7C15), 20);
+        }
+        s.observe(heavy_hash, heavy_weight);
+        s
+    }
+
+    #[test]
+    fn modulo_route_matches_owner_of() {
+        let r = Route::modulo(5);
+        for h in [0u64, 1, 0xFF, 0xDEADBEEF, u64::MAX] {
+            for src in 0..5 {
+                assert_eq!(r.owner(h, src), kv::owner_of(h, 5));
+            }
+        }
+        assert_eq!(r.nranks(), 5);
+        assert_eq!(r.planned_load(0), None);
+    }
+
+    #[test]
+    fn planned_route_is_total_and_in_range() {
+        let route = plan_route(&skewed_sketch(42, 100_000), 7, 3);
+        for h in (0..5000u64).map(|i| i.wrapping_mul(0x12345679)) {
+            for src in 0..7 {
+                assert!(route.owner(h, src) < 7);
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_key_is_split_across_sources() {
+        let route = plan_route(&skewed_sketch(42, 100_000), 4, 4);
+        let Route::Planned(p) = &route else { panic!("planned") };
+        assert!(p.splits.iter().any(|(h, _)| *h == 42), "heavy key must split");
+        let owners: std::collections::BTreeSet<usize> =
+            (0..4).map(|src| route.owner(42, src)).collect();
+        assert!(owners.len() > 1, "split key must spread over sources: {owners:?}");
+    }
+
+    #[test]
+    fn split_ways_one_disables_splitting() {
+        let route = plan_route(&skewed_sketch(42, 100_000), 4, 1);
+        let Route::Planned(p) = &route else { panic!("planned") };
+        assert!(p.splits.is_empty());
+        // An unsplit key routes identically from every source.
+        let o0 = route.owner(42, 0);
+        assert!((1..4).all(|src| route.owner(42, src) == o0));
+    }
+
+    #[test]
+    fn lpt_balances_better_than_modulo() {
+        // Pile weight into a few buckets that all collide mod 4.
+        let mut s = Sketch::new();
+        for b in [0u64, 4, 8, 12] {
+            s.observe(b, 1000); // route buckets 0,4,8,12; kv buckets all ≡ b
+        }
+        for i in 0..64u64 {
+            s.observe(0x1_0000 + i, 10);
+        }
+        let route = plan_route(&s, 4, 1);
+        let Route::Planned(p) = &route else { panic!("planned") };
+        let max = *p.planned_loads.iter().max().unwrap() as f64;
+        let mean = p.planned_loads.iter().sum::<u64>() as f64 / 4.0;
+        assert!(max / mean < 1.5, "LPT left max/mean {}", max / mean);
+        // Modulo puts all four 1000-weight buckets (hashes 0,4,8,12 share
+        // bucket_of % 4 ∈ {0}) onto rank 0.
+        assert!((0..4).all(|src| Route::modulo(4).owner(0, src) == 0));
+    }
+
+    #[test]
+    fn planner_is_deterministic() {
+        let s = skewed_sketch(7, 50_000);
+        assert_eq!(plan_route(&s, 8, 4), plan_route(&s, 8, 4));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let route = plan_route(&skewed_sketch(42, 100_000), 6, 3);
+        let dec = Route::decode(&route.encode()).unwrap();
+        assert_eq!(dec, route);
+    }
+
+    #[test]
+    fn decode_rejects_out_of_range_owner() {
+        let route = plan_route(&skewed_sketch(42, 100_000), 3, 2);
+        let mut enc = route.encode();
+        enc[4] = 0xFF; // table[0] -> 0xFF (>= nranks)
+        enc[5] = 0x00;
+        assert!(Route::decode(&enc).is_err());
+        assert!(Route::decode(&[0, 0]).is_err());
+    }
+
+    #[test]
+    fn single_rank_plan_routes_everything_home() {
+        let route = plan_route(&skewed_sketch(1, 10_000), 1, 4);
+        for h in 0..100u64 {
+            assert_eq!(route.owner(h, 0), 0);
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! Map-side load sketches: a per-bucket weight histogram plus a
+//! space-saving heavy-hitter summary.
+//!
+//! The modulo route (`kv::owner_of`) is blind to the key distribution: a
+//! zipfian corpus piles its head keys onto whichever ranks their hash
+//! buckets land on, and no amount of map-side decoupling fixes a
+//! reduce-side hot spot.  Fan et al. (1401.0355) show that partitioning
+//! by the *measured* distribution removes the imbalance; the measurement
+//! is this sketch.
+//!
+//! Every rank observes the records it is about to shuffle — weight = the
+//! record's wire size, i.e. exactly the bytes the reduce side will pull —
+//! into two structures:
+//!
+//! * a `ROUTE_BUCKETS`-wide weight histogram (the planner's bin-packing
+//!   input), and
+//! * a space-saving sketch of the heaviest individual key hashes
+//!   (Metwally et al.): bounded memory, guaranteed to retain any key
+//!   whose true weight exceeds `total / capacity` — far below the
+//!   threshold at which a single key matters to rank-level balance.
+//!
+//! Sketches merge commutatively bucket-by-bucket and counter-by-counter,
+//! so any exchange order yields the same merged view, and the wire
+//! encoding is canonical (counters sorted by weight, then hash) so every
+//! rank serializes the same bytes for the same sketch.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::error::Result;
+
+use super::plan::{route_bucket_of, ROUTE_BUCKETS};
+use super::wire::Reader;
+
+/// Heavy-hitter counters a sketch retains (per rank, and after merge).
+pub const SKETCH_CAPACITY: usize = 128;
+
+/// One heavy-hitter counter: estimated weight plus the space-saving
+/// overestimation bound (the evicted minimum it inherited).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Counter {
+    /// Estimated total weight of the hash (upper bound on the truth).
+    pub weight: u64,
+    /// Portion of `weight` that may belong to other keys.
+    pub overestimate: u64,
+}
+
+/// Per-rank (and merged) shuffle-load sketch.
+#[derive(Debug, Clone)]
+pub struct Sketch {
+    /// Wire bytes destined for each route bucket.
+    buckets: Vec<u64>,
+    /// Space-saving counters, keyed by record hash.
+    counters: HashMap<u64, Counter>,
+    /// Companion ordering of `counters` by `(weight, hash)`: evictions
+    /// need the minimum counter, and a linear scan per unseen tail key
+    /// would make the whole sketch pass O(capacity) per record.
+    index: BTreeSet<(u64, u64)>,
+}
+
+impl Default for Sketch {
+    /// Same as [`Sketch::new`] — a derived default would produce an
+    /// empty bucket vector, not a [`ROUTE_BUCKETS`]-wide zero one.
+    fn default() -> Self {
+        Sketch::new()
+    }
+}
+
+impl Sketch {
+    /// Empty sketch.
+    pub fn new() -> Sketch {
+        Sketch {
+            buckets: vec![0; ROUTE_BUCKETS],
+            counters: HashMap::new(),
+            index: BTreeSet::new(),
+        }
+    }
+
+    /// Observe one record of `weight` wire bytes under `hash`.
+    pub fn observe(&mut self, hash: u64, weight: u64) {
+        self.buckets[route_bucket_of(hash)] += weight;
+        if let Some(c) = self.counters.get_mut(&hash) {
+            self.index.remove(&(c.weight, hash));
+            c.weight += weight;
+            self.index.insert((c.weight, hash));
+            return;
+        }
+        if self.counters.len() < SKETCH_CAPACITY {
+            self.counters.insert(hash, Counter { weight, overestimate: 0 });
+            self.index.insert((weight, hash));
+            return;
+        }
+        // Space-saving eviction: the minimum-weight counter is replaced
+        // and its weight inherited as the newcomer's overestimate.  The
+        // index makes this O(log capacity) with the same deterministic
+        // (weight, hash) tie-break a full scan would use.
+        let &(min_weight, victim) = self.index.iter().next().expect("capacity > 0");
+        self.index.remove(&(min_weight, victim));
+        self.counters.remove(&victim);
+        self.counters
+            .insert(hash, Counter { weight: min_weight + weight, overestimate: min_weight });
+        self.index.insert((min_weight + weight, hash));
+    }
+
+    /// Recompute the eviction index from the counters (bulk edits).
+    fn rebuild_index(&mut self) {
+        self.index = self.counters.iter().map(|(&h, c)| (c.weight, h)).collect();
+    }
+
+    /// Total observed weight (sum over buckets).
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// The per-bucket weight histogram.
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Heavy hitters, heaviest first (ties broken by hash).
+    pub fn heavy_hitters(&self) -> Vec<(u64, Counter)> {
+        let mut out: Vec<(u64, Counter)> = self.counters.iter().map(|(&h, &c)| (h, c)).collect();
+        out.sort_by(|a, b| b.1.weight.cmp(&a.1.weight).then_with(|| a.0.cmp(&b.0)));
+        out
+    }
+
+    /// Merge `other` into `self` (commutative up to the deterministic
+    /// re-trim: buckets add lane-wise, counters add weight-wise, then the
+    /// heaviest [`SKETCH_CAPACITY`] survive).
+    pub fn merge(&mut self, other: &Sketch) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        for (&hash, &c) in &other.counters {
+            let e = self.counters.entry(hash).or_insert(Counter { weight: 0, overestimate: 0 });
+            e.weight += c.weight;
+            e.overestimate += c.overestimate;
+        }
+        if self.counters.len() > SKETCH_CAPACITY {
+            let mut all: Vec<(u64, Counter)> =
+                self.counters.drain().collect();
+            all.sort_by(|a, b| b.1.weight.cmp(&a.1.weight).then_with(|| a.0.cmp(&b.0)));
+            all.truncate(SKETCH_CAPACITY);
+            self.counters = all.into_iter().collect();
+        }
+        self.rebuild_index();
+    }
+
+    /// Canonical wire encoding:
+    /// `| nbuckets: u32 | buckets: nbuckets * u64 | ncounters: u32 |
+    ///  ncounters * (hash u64, weight u64, overestimate u64) |`,
+    /// counters ordered heaviest-first (hash tie-break).
+    pub fn encode(&self) -> Vec<u8> {
+        let hitters = self.heavy_hitters();
+        let mut out =
+            Vec::with_capacity(8 + self.buckets.len() * 8 + hitters.len() * 24);
+        out.extend_from_slice(&(self.buckets.len() as u32).to_le_bytes());
+        for &w in &self.buckets {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.extend_from_slice(&(hitters.len() as u32).to_le_bytes());
+        for (hash, c) in hitters {
+            out.extend_from_slice(&hash.to_le_bytes());
+            out.extend_from_slice(&c.weight.to_le_bytes());
+            out.extend_from_slice(&c.overestimate.to_le_bytes());
+        }
+        out
+    }
+
+    /// Decode a sketch produced by [`Sketch::encode`].
+    pub fn decode(buf: &[u8]) -> Result<Sketch> {
+        let mut r = Reader::new(buf, "sketch");
+        let nbuckets = r.u32()? as usize;
+        if nbuckets != ROUTE_BUCKETS {
+            return Err(r.err(&format!("bucket count {nbuckets} != {ROUTE_BUCKETS}")));
+        }
+        let mut buckets = Vec::with_capacity(nbuckets);
+        for _ in 0..nbuckets {
+            buckets.push(r.u64()?);
+        }
+        let ncounters = r.u32()? as usize;
+        let mut counters = HashMap::with_capacity(ncounters);
+        for _ in 0..ncounters {
+            let hash = r.u64()?;
+            let weight = r.u64()?;
+            let overestimate = r.u64()?;
+            counters.insert(hash, Counter { weight, overestimate });
+        }
+        r.finish()?;
+        let mut sketch = Sketch { buckets, counters, index: BTreeSet::new() };
+        sketch.rebuild_index();
+        Ok(sketch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_accumulates_buckets_and_counters() {
+        let mut s = Sketch::new();
+        s.observe(0x1001, 10);
+        s.observe(0x1001, 5);
+        s.observe(0x2002, 3);
+        assert_eq!(s.total(), 18);
+        assert_eq!(s.buckets()[route_bucket_of(0x1001)], 15);
+        let hh = s.heavy_hitters();
+        assert_eq!(hh[0], (0x1001, Counter { weight: 15, overestimate: 0 }));
+        assert_eq!(hh[1].0, 0x2002);
+    }
+
+    #[test]
+    fn eviction_keeps_heavy_keys_with_bounded_error() {
+        let mut s = Sketch::new();
+        // One heavy key plus enough distinct light keys to overflow.
+        for i in 0..(SKETCH_CAPACITY as u64 * 3) {
+            s.observe(1_000_000 + i, 1);
+        }
+        for _ in 0..500 {
+            s.observe(7, 10);
+        }
+        let hh = s.heavy_hitters();
+        assert_eq!(hh.len(), SKETCH_CAPACITY);
+        assert_eq!(hh[0].0, 7, "heavy key must survive eviction pressure");
+        // Space-saving guarantee: estimate >= truth, error bounded by the
+        // recorded overestimate.
+        assert!(hh[0].1.weight >= 5000);
+        assert!(hh[0].1.weight - hh[0].1.overestimate <= 5000);
+    }
+
+    #[test]
+    fn merge_is_lane_and_counter_additive() {
+        let mut a = Sketch::new();
+        let mut b = Sketch::new();
+        a.observe(1, 4);
+        b.observe(1, 6);
+        b.observe(2, 3);
+        a.merge(&b);
+        assert_eq!(a.total(), 13);
+        let hh = a.heavy_hitters();
+        assert_eq!(hh[0], (1, Counter { weight: 10, overestimate: 0 }));
+        assert_eq!(hh[1].0, 2);
+    }
+
+    #[test]
+    fn merge_order_does_not_change_the_merged_view() {
+        let mut parts = Vec::new();
+        for r in 0..4u64 {
+            let mut s = Sketch::new();
+            for i in 0..200 {
+                s.observe(r * 1000 + i % 50, 1 + i % 7);
+            }
+            parts.push(s);
+        }
+        let mut fwd = Sketch::new();
+        for p in &parts {
+            fwd.merge(p);
+        }
+        let mut rev = Sketch::new();
+        for p in parts.iter().rev() {
+            rev.merge(p);
+        }
+        assert_eq!(fwd.buckets(), rev.buckets());
+        assert_eq!(fwd.heavy_hitters(), rev.heavy_hitters());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut s = Sketch::new();
+        for i in 0..300u64 {
+            s.observe(i.wrapping_mul(0x9E3779B97F4A7C15), 1 + i % 13);
+        }
+        let dec = Sketch::decode(&s.encode()).unwrap();
+        assert_eq!(dec.buckets(), s.buckets());
+        assert_eq!(dec.heavy_hitters(), s.heavy_hitters());
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Sketch::decode(&[1, 2, 3]).is_err());
+        let mut enc = Sketch::new().encode();
+        enc.push(0); // trailing byte
+        assert!(Sketch::decode(&enc).is_err());
+    }
+}

@@ -1,0 +1,92 @@
+//! Little-endian cursor shared by the shuffle wire decoders.
+//!
+//! The sketch and route payloads travel through windows / all-to-alls
+//! as raw bytes; both decoders read the same primitive shapes, so they
+//! share one reader — a format change fixed in one place cannot
+//! silently diverge in the other.
+
+use crate::error::{Error, Result};
+
+/// Bounds-checked little-endian reader over an encoded payload.
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+    what: &'static str,
+}
+
+impl<'a> Reader<'a> {
+    /// Read `buf` as a `what` payload (`what` labels decode errors).
+    pub fn new(buf: &'a [u8], what: &'static str) -> Reader<'a> {
+        Reader { buf, off: 0, what }
+    }
+
+    /// A decode error for this payload kind.
+    pub fn err(&self, detail: &str) -> Error {
+        Error::Config(format!("{} decode: {detail}", self.what))
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .off
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| self.err("truncated payload"))?;
+        let slice = &self.buf[self.off..end];
+        self.off = end;
+        Ok(slice)
+    }
+
+    /// Next u16.
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    /// Next u32.
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Next u64.
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Assert the payload was consumed exactly.
+    pub fn finish(self) -> Result<()> {
+        if self.off != self.buf.len() {
+            return Err(self.err("trailing bytes"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_in_order_and_checks_bounds() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&7u16.to_le_bytes());
+        buf.extend_from_slice(&9u32.to_le_bytes());
+        buf.extend_from_slice(&11u64.to_le_bytes());
+        let mut r = Reader::new(&buf, "test");
+        assert_eq!(r.u16().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 9);
+        assert_eq!(r.u64().unwrap(), 11);
+        assert!(r.finish().is_ok());
+
+        let mut r = Reader::new(&buf[..3], "test");
+        assert_eq!(r.u16().unwrap(), 7);
+        assert!(r.u32().is_err(), "truncated read must fail");
+    }
+
+    #[test]
+    fn finish_rejects_trailing_bytes() {
+        let buf = [0u8; 3];
+        let mut r = Reader::new(&buf, "test");
+        r.u16().unwrap();
+        let err = r.finish().unwrap_err().to_string();
+        assert!(err.contains("test decode"), "{err}");
+    }
+}

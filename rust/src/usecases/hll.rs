@@ -1,0 +1,175 @@
+//! Distinct-count sketches: per-token HyperLogLog over document shards.
+//!
+//! The ROADMAP's fourth reduce shape after integer folds (word-count),
+//! set unions (inverted index) and bounded sets (top-k): a *fixed-width
+//! mergeable sketch*.  For every token occurrence, Map emits a 64-lane
+//! HLL register set with the containing line's shard inserted; Reduce is
+//! a lane-wise `max` — associative, commutative and idempotent, so any
+//! merge order (Local Reduce, the Reduce windows, the Combine tree, and
+//! in particular the shuffle planner's *split-key* partial aggregates)
+//! yields bit-identical registers.  That makes `distinct` the natural
+//! stress test for split-key re-combination: the final registers answer
+//! "how many distinct shards mention this word?" without ever holding
+//! the shard set.
+//!
+//! Wire value: exactly [`DistinctShards::M`] register bytes.  Register
+//! updates use the same FNV hash as the record pipeline (over the shard
+//! id's LE bytes), so oracles can reproduce registers exactly.
+
+use crate::mapreduce::kv::{self, Value};
+use crate::mapreduce::{UseCase, ValueKind};
+
+use super::inverted_index::InvertedIndex;
+use super::wordcount::WordCount;
+
+/// The distinct-shards-per-token use-case.
+#[derive(Debug, Default)]
+pub struct DistinctShards;
+
+impl DistinctShards {
+    /// Number of HLL registers (one byte each).  m = 64 gives a ~13%
+    /// standard error in the harmonic regime and much better below the
+    /// linear-counting cutoff (2.5·m = 160 distinct), which covers most
+    /// tokens of the test corpora.
+    pub const M: usize = 64;
+
+    /// Bias-correction constant for m = 64 (Flajolet et al.).
+    const ALPHA: f64 = 0.709;
+
+    /// Insert `shard` into a register set.
+    pub fn insert(registers: &mut [u8], shard: u32) {
+        debug_assert_eq!(registers.len(), Self::M);
+        // FNV (the pipeline hash) then a splitmix64 finalizer: HLL rank
+        // statistics need well-avalanched low bits, which small-input
+        // FNV alone does not guarantee.
+        let mut z = kv::hash_key(&shard.to_le_bytes());
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        let h = z ^ (z >> 31);
+        let idx = (h & (Self::M as u64 - 1)) as usize;
+        // 58 significant bits remain; rank = trailing zeros + 1, capped.
+        let w = h >> 6;
+        let rho = (w.trailing_zeros().min(57) + 1) as u8;
+        if registers[idx] < rho {
+            registers[idx] = rho;
+        }
+    }
+
+    /// A register set containing exactly one shard (the Map emission).
+    pub fn registers_for(shard: u32) -> [u8; Self::M] {
+        let mut regs = [0u8; Self::M];
+        Self::insert(&mut regs, shard);
+        regs
+    }
+
+    /// Cardinality estimate of a register set (harmonic mean with
+    /// linear-counting small-range correction).
+    pub fn estimate(registers: &[u8]) -> f64 {
+        debug_assert_eq!(registers.len(), Self::M);
+        let m = Self::M as f64;
+        let sum: f64 = registers.iter().map(|&r| (-(f64::from(r))).exp2()).sum();
+        let e = Self::ALPHA * m * m / sum;
+        if e <= 2.5 * m {
+            let zeros = registers.iter().filter(|&&r| r == 0).count();
+            if zeros > 0 {
+                return m * (m / zeros as f64).ln();
+            }
+        }
+        e
+    }
+}
+
+impl UseCase for DistinctShards {
+    fn name(&self) -> &'static str {
+        "distinct"
+    }
+
+    fn value_kind(&self) -> ValueKind {
+        ValueKind::Variable
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        if record.is_empty() {
+            return;
+        }
+        let regs = Self::registers_for(InvertedIndex::shard(record));
+        let mut scratch = Vec::with_capacity(32);
+        WordCount::tokens_into(record, &mut scratch, &mut |tok| emit(tok, &regs));
+    }
+
+    fn reduce(&self, acc: &mut Vec<u8>, incoming: &[u8]) {
+        debug_assert_eq!(acc.len(), Self::M);
+        debug_assert_eq!(incoming.len(), Self::M);
+        for (a, &b) in acc.iter_mut().zip(incoming) {
+            if *a < b {
+                *a = b;
+            }
+        }
+    }
+
+    fn render_value(&self, value: &Value) -> String {
+        let Some(bytes) = value.as_bytes() else { return "?".into() };
+        format!("≈{:.0} distinct shards", Self::estimate(bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_fixed_width_registers_per_token() {
+        let mut out = Vec::new();
+        DistinctShards.map_record(b"alpha beta", &mut |k, v| {
+            out.push((k.to_vec(), v.to_vec()));
+        });
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|(_, v)| v.len() == DistinctShards::M));
+        assert_eq!(out[0].1, out[1].1, "same record, same shard registers");
+        assert!(out[0].1.iter().any(|&r| r > 0), "one register must be set");
+    }
+
+    #[test]
+    fn reduce_is_lanewise_max_and_idempotent() {
+        let a = DistinctShards::registers_for(3);
+        let b = DistinctShards::registers_for(900);
+        let mut acc = a.to_vec();
+        DistinctShards.reduce(&mut acc, &b);
+        let folded = acc.clone();
+        // Idempotent: re-merging either input changes nothing.
+        DistinctShards.reduce(&mut acc, &a);
+        DistinctShards.reduce(&mut acc, &b);
+        assert_eq!(acc, folded);
+        // Order-insensitive.
+        let mut rev = b.to_vec();
+        DistinctShards.reduce(&mut rev, &a);
+        assert_eq!(rev, folded);
+    }
+
+    #[test]
+    fn estimate_tracks_cardinality() {
+        let mut regs = vec![0u8; DistinctShards::M];
+        assert_eq!(DistinctShards::estimate(&regs), 0.0);
+        for shard in 0..100u32 {
+            DistinctShards::insert(&mut regs, shard);
+        }
+        let e = DistinctShards::estimate(&regs);
+        assert!((e - 100.0).abs() < 30.0, "estimate {e} for 100 distinct");
+        for shard in 100..2000u32 {
+            DistinctShards::insert(&mut regs, shard);
+        }
+        let e2 = DistinctShards::estimate(&regs);
+        assert!(e2 > e, "estimate must grow with cardinality");
+        assert!((e2 - 2000.0).abs() < 700.0, "estimate {e2} for 2000 distinct");
+    }
+
+    #[test]
+    fn duplicate_inserts_do_not_move_the_estimate() {
+        let mut regs = vec![0u8; DistinctShards::M];
+        for _ in 0..1000 {
+            DistinctShards::insert(&mut regs, 42);
+        }
+        let e = DistinctShards::estimate(&regs);
+        assert!((0.5..2.5).contains(&e), "1000 duplicates estimate {e}");
+    }
+}

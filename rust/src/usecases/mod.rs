@@ -17,6 +17,7 @@ use std::sync::Arc;
 use crate::mapreduce::UseCase;
 
 pub mod histogram;
+pub mod hll;
 pub mod inverted_index;
 pub mod join;
 pub mod meanlen;
@@ -25,6 +26,7 @@ pub mod topk;
 pub mod wordcount;
 
 pub use histogram::LengthHistogram;
+pub use hll::DistinctShards;
 pub use inverted_index::InvertedIndex;
 pub use join::EquiJoin;
 pub use meanlen::MeanLength;
@@ -76,6 +78,12 @@ pub static REGISTRY: &[UseCaseEntry] = &[
         aliases: &["topk"],
         summary: "K largest containing-line lengths per token (bounded sorted set)",
         make: || Arc::new(TopK),
+    },
+    UseCaseEntry {
+        name: "distinct",
+        aliases: &["hll", "distinct-count"],
+        summary: "distinct containing shards per token (HLL registers, lane-wise max)",
+        make: || Arc::new(DistinctShards),
     },
 ];
 

@@ -12,6 +12,7 @@ use mr1s::mapreduce::job::{
 };
 use mr1s::mapreduce::kv::{self, ConcatOps, Record, SumOps, Value, ValueKind};
 use mr1s::mapreduce::{BackendKind, Job, JobConfig};
+use mr1s::shuffle::{plan_route, Sketch};
 use mr1s::sim::{CostModel, StorageModel};
 use mr1s::storage::spill::{index_path, SpillFile, SpillWriter};
 use mr1s::testing::PropRunner;
@@ -158,6 +159,52 @@ fn prop_keytable_partition_is_exact() {
                 for rec in kv::RecordIter::new(buf) {
                     let rec = rec.map_err(|e| e.to_string())?;
                     if kv::owner_of(rec.hash, *nranks) != r {
+                        return Err(format!("record routed to wrong rank {r}"));
+                    }
+                    total += 1;
+                }
+            }
+            (total == unique).then_some(()).ok_or(format!("{total} != {unique}"))
+        },
+    );
+}
+
+#[test]
+fn prop_planned_route_partition_is_exact() {
+    // Any sketch-derived plan must stay a total, in-range routing: every
+    // record lands on exactly one rank, split keys land on the rank the
+    // route assigns *this source*, and nothing is lost or duplicated.
+    PropRunner::new(60).check(
+        "drain_routed partitions under a plan",
+        |rng| {
+            let n = 1 + rng.below(300) as usize;
+            let nranks = 1 + rng.below(12) as usize;
+            let split = 1 + rng.below(6) as usize;
+            let source = rng.below(12) as usize % nranks;
+            // Skewed draws so heavy hitters exist and sometimes split.
+            let keys: Vec<u64> =
+                (0..n).map(|_| if rng.below(3) == 0 { 7 } else { rng.below(5000) }).collect();
+            (keys, nranks, split, source)
+        },
+        |(keys, nranks, split, source)| {
+            let mut table = KeyTable::new();
+            for k in keys {
+                let key = k.to_le_bytes();
+                table.merge(kv::hash_key(&key), &key, &1u64.to_le_bytes(), &SumOps);
+            }
+            let unique = table.len();
+            let mut sketch = Sketch::new();
+            table.for_each_size(&mut |h, len| sketch.observe(h, len as u64));
+            let route = plan_route(&sketch, *nranks, *split);
+            let parts = table.drain_routed(&route, *source).map_err(|e| e.to_string())?;
+            if parts.len() != *nranks {
+                return Err(format!("{} part buffers for {nranks} ranks", parts.len()));
+            }
+            let mut total = 0usize;
+            for (r, buf) in parts.iter().enumerate() {
+                for rec in kv::RecordIter::new(buf) {
+                    let rec = rec.map_err(|e| e.to_string())?;
+                    if route.owner(rec.hash, *source) != r {
                         return Err(format!("record routed to wrong rank {r}"));
                     }
                     total += 1;
