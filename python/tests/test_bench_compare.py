@@ -1,0 +1,97 @@
+"""The perf-regression gate must catch injected regressions.
+
+Exercises ``scripts/bench_compare.py`` end-to-end through its ``main``:
+a fresh summary within the threshold passes, an injected >10% virtual-
+time regression fails with exit code 1, missing baselines fail unless
+``--allow-missing``, and ``--update`` writes new baselines.
+"""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SCRIPT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "scripts", "bench_compare.py")
+)
+
+
+@pytest.fixture(scope="module")
+def bench_compare():
+    spec = importlib.util.spec_from_file_location("bench_compare", _SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def write_summary(path, samples):
+    doc = {
+        "bench": "t",
+        "samples": [
+            {"name": n, "mean": m, "stddev": 0.0, "n": 1} for n, m in samples.items()
+        ],
+    }
+    path.write_text(json.dumps(doc))
+
+
+@pytest.fixture()
+def dirs(tmp_path):
+    base = tmp_path / "baselines"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    write_summary(base / "BENCH_t.json", {"run_elapsed_ns": 1e9, "run_bytes": 4e6})
+    return base, fresh
+
+
+def run(bench_compare, base, fresh, *extra):
+    argv = ["--fresh-dir", str(fresh), "--baseline-dir", str(base), *extra]
+    return bench_compare.main(argv)
+
+
+def test_within_threshold_passes(bench_compare, dirs):
+    base, fresh = dirs
+    write_summary(fresh / "BENCH_t.json", {"run_elapsed_ns": 1.05e9, "run_bytes": 9e6})
+    assert run(bench_compare, base, fresh) == 0
+
+
+def test_injected_regression_fails(bench_compare, dirs):
+    base, fresh = dirs
+    write_summary(fresh / "BENCH_t.json", {"run_elapsed_ns": 1.2e9})
+    assert run(bench_compare, base, fresh) == 1
+
+
+def test_non_time_samples_are_not_gated(bench_compare, dirs):
+    base, fresh = dirs
+    # Byte counts may move arbitrarily without tripping the gate.
+    write_summary(fresh / "BENCH_t.json", {"run_elapsed_ns": 1e9, "run_bytes": 4e9})
+    assert run(bench_compare, base, fresh) == 0
+
+
+def test_custom_threshold(bench_compare, dirs):
+    base, fresh = dirs
+    write_summary(fresh / "BENCH_t.json", {"run_elapsed_ns": 1.05e9})
+    assert run(bench_compare, base, fresh, "--threshold", "0.02") == 1
+
+
+def test_missing_baseline_needs_allow_missing(bench_compare, dirs):
+    base, fresh = dirs
+    write_summary(fresh / "BENCH_new.json", {"x_elapsed_ns": 1e9})
+    (base / "BENCH_t.json").unlink()
+    assert run(bench_compare, base, fresh) == 1
+    assert run(bench_compare, base, fresh, "--allow-missing") == 0
+
+
+def test_update_writes_baselines(bench_compare, dirs):
+    base, fresh = dirs
+    write_summary(fresh / "BENCH_t.json", {"run_elapsed_ns": 2e9})
+    assert run(bench_compare, base, fresh, "--update") == 0
+    doc = json.loads((base / "BENCH_t.json").read_text())
+    assert doc["samples"][0]["mean"] == 2e9
+    # The refreshed baseline accepts what previously regressed.
+    assert run(bench_compare, base, fresh) == 0
+
+
+def test_self_check_passes(bench_compare):
+    assert bench_compare.main(["--self-check"]) == 0

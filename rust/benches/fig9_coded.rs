@@ -1,0 +1,149 @@
+//! Bench: coded shuffle (new "figure 9" — beyond the paper).
+//!
+//! Reproduces the computation-vs-communication tradeoff curve of Coded
+//! MapReduce on a shuffle-bound Word-Count: sweeps the replication
+//! factor `r ∈ {1, 2, 3, 4}` × corpus size × both backends against the
+//! `planned` unicast baseline, reporting virtual makespan plus the
+//! on-wire vs. logical shuffle volume (`~r×` reduction is the headline).
+//!
+//! The cost model is re-weighted into the regime where coding pays:
+//! cheap map compute (scan-bound, 8 ns/B) over a slow fabric (150 MB/s),
+//! with local reduce off so shuffle volume tracks the emission count —
+//! the paper's overlap tricks cannot hide a wire this slow, so the only
+//! lever left is sending fewer bytes, which is exactly what the XOR
+//! multicast buys at the price of `r×` redundant map work.
+//!
+//! `cargo bench --bench fig9_coded` runs the smoke profile; `-- --full`
+//! the paper-scaled one.  Emits `BENCH_fig9_coded.json`.
+
+use std::sync::Arc;
+
+use mr1s::bench::{record, section, write_json, Sample};
+use mr1s::harness::Scenario;
+use mr1s::mapreduce::{BackendKind, Job, JobConfig, RouteConfig};
+use mr1s::sim::CostModel;
+use mr1s::usecases::WordCount;
+
+/// Eight ranks keeps `C(nranks, r)` batch counts small (C(8,4) = 70)
+/// while leaving real cliques at every swept `r`.
+const NRANKS: usize = 8;
+
+/// The shuffle-bound testbed (see module docs).
+fn shuffle_bound_cost() -> CostModel {
+    let mut cost = CostModel::default();
+    cost.compute.map_ns_per_byte = 8;
+    cost.net.bandwidth_bps = 150_000_000;
+    cost
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let base = if full { Scenario::default() } else { Scenario::smoke() };
+    // Zipf 1.2 gives the sketch real heavy hitters to route as coded
+    // segments; task_size keeps the task count well above C(8,4) = 70 so
+    // every batch receives work.
+    let scenario = Scenario { zipf_s: 1.2, task_size: 16 << 10, ..base };
+    let sizes: &[u64] = if full { &[8 << 20, 32 << 20] } else { &[2 << 20] };
+    println!(
+        "fig9 coded-shuffle bench ({} profile, {NRANKS} ranks)",
+        if full { "full" } else { "smoke" }
+    );
+
+    let mut samples: Vec<Sample> = Vec::new();
+    for &bytes in sizes {
+        let input = scenario.corpus(bytes).expect("corpus generates");
+        let mib = bytes >> 20;
+        section(&format!("corpus {mib} MiB"));
+        for backend in [BackendKind::TwoSided, BackendKind::OneSided] {
+            let run = |route: RouteConfig| {
+                let cfg = JobConfig {
+                    route,
+                    local_reduce: false,
+                    ..scenario.config(input.clone(), false)
+                };
+                Job::new(Arc::new(WordCount), cfg)
+                    .expect("config valid")
+                    .run(backend, NRANKS, shuffle_bound_cost())
+                    .expect("job runs")
+            };
+
+            let planned =
+                run(RouteConfig::Planned { split: RouteConfig::DEFAULT_SPLIT });
+            let base_tag = format!("c{mib}m_{}_planned", planned.report.backend);
+            println!(
+                "{base_tag:<28} elapsed={:>7.3}s wire={:>6}KiB",
+                planned.report.elapsed_secs(),
+                planned.report.shuffle_wire_bytes() >> 10,
+            );
+            record(
+                &mut samples,
+                Sample::from_measurements(
+                    format!("{base_tag}_elapsed_ns"),
+                    &[planned.report.elapsed_ns as f64],
+                ),
+            );
+            record(
+                &mut samples,
+                Sample::from_measurements(
+                    format!("{base_tag}_shuffle_wire_bytes"),
+                    &[planned.report.shuffle_wire_bytes() as f64],
+                ),
+            );
+
+            for r in 1..=4usize {
+                let out = run(RouteConfig::Coded { r });
+                let report = &out.report;
+                assert_eq!(
+                    report.unique_keys, planned.report.unique_keys,
+                    "coded r={r} must agree with planned on {base_tag}"
+                );
+                let tag = format!("c{mib}m_{}_coded_r{r}", report.backend);
+                let speedup = planned.report.elapsed_ns as f64 / report.elapsed_ns as f64;
+                println!(
+                    "{tag:<28} elapsed={:>7.3}s wire={:>6}KiB logical={:>6}KiB gain={:.2}x vs-planned={:.2}x",
+                    report.elapsed_secs(),
+                    report.shuffle_wire_bytes() >> 10,
+                    report.shuffle_logical_bytes() >> 10,
+                    report.shuffle_coding_gain(),
+                    speedup,
+                );
+                record(
+                    &mut samples,
+                    Sample::from_measurements(
+                        format!("{tag}_elapsed_ns"),
+                        &[report.elapsed_ns as f64],
+                    ),
+                );
+                record(
+                    &mut samples,
+                    Sample::from_measurements(
+                        format!("{tag}_shuffle_wire_bytes"),
+                        &[report.shuffle_wire_bytes() as f64],
+                    ),
+                );
+                record(
+                    &mut samples,
+                    Sample::from_measurements(
+                        format!("{tag}_shuffle_logical_bytes"),
+                        &[report.shuffle_logical_bytes() as f64],
+                    ),
+                );
+                record(
+                    &mut samples,
+                    Sample::from_measurements(
+                        format!("{tag}_coding_gain"),
+                        &[report.shuffle_coding_gain()],
+                    ),
+                );
+                record(
+                    &mut samples,
+                    Sample::from_measurements(
+                        format!("{tag}_speedup_vs_planned"),
+                        &[speedup],
+                    ),
+                );
+            }
+        }
+    }
+    write_json("fig9_coded", &samples).expect("json summary");
+}

@@ -5,7 +5,7 @@
 //! mr1s run --input corpus.txt [--backend 1s|2s] [--ranks 8]
 //!          [--usecase NAME]   (see `mr1s help` for the registry)
 //!          [--task-size 512K] [--win-size 1M] [--chunk-size 256K]
-//!          [--route modulo|planned[:split=K]]
+//!          [--route modulo|planned[:split=K]|coded[:r=R]]
 //!          [--unbalanced] [--checkpoints] [--flush-epochs] [--no-kernel]
 //!          [--top 20]
 //! mr1s compare --input corpus.txt [--ranks 8] [--unbalanced]
@@ -85,12 +85,12 @@ USAGE:
   mr1s gen --bytes <SIZE> --out <PATH> [--seed N] [--zipf-s S] [--vocab N]
   mr1s run --input <PATH> [--backend 1s|2s] [--ranks N] [--usecase NAME]
            [--task-size S] [--win-size S] [--chunk-size S] [--unbalanced]
-           [--route modulo|planned[:split=K]]
+           [--route modulo|planned[:split=K]|coded[:r=R]]
            [--checkpoints] [--flush-epochs] [--stealing] [--no-kernel]
            [--top N]
   mr1s pipeline --input <PATH> [--usecase tfidf|join] [--backend 1s|2s]
            [--ranks N] [--task-size S] [--win-size S] [--chunk-size S]
-           [--route modulo|planned[:split=K]] [--stealing]
+           [--route modulo|planned[:split=K]|coded[:r=R]] [--stealing]
            [--no-kernel] [--timeline] [--top N]
   mr1s compare --input <PATH> [--ranks N] [--unbalanced]
   mr1s figures --fig <ID|all> [--smoke]
@@ -101,6 +101,9 @@ section 6); outputs are verified against a single-threaded oracle.
 --route planned shuffles by the measured key distribution: sketches are
 exchanged one-sidedly, buckets are LPT bin-packed onto ranks, and the
 top heavy-hitter keys are split K ways (DESIGN.md section 7).
+--route coded:r=R replicates every map task onto R ranks and multicasts
+XOR-coded packets that serve R reducers at once, cutting on-wire
+shuffle volume ~Rx on shuffle-bound jobs (DESIGN.md section 8).
 Figures: 4a 4b 4c 4d 5a 5b 6a 6b 7a 7b (DESIGN.md section 4).
 Sizes accept K/M/G suffixes.";
 

@@ -48,11 +48,26 @@ pub enum RouteConfig {
         /// world size).
         split: usize,
     },
+    /// Replicate every map task onto `r` ranks and shuffle heavy buckets
+    /// as XOR-coded multicast packets (Coded MapReduce; see
+    /// `crate::shuffle::coding`): ~`r×` less shuffle volume on the wire
+    /// for `r×` redundant map compute.  Light buckets fall through to
+    /// the planned unicast path.
+    Coded {
+        /// Replication factor (1 = placement only, no coding gain).
+        r: usize,
+    },
 }
 
 impl RouteConfig {
     /// Default split width of `--route planned` without an argument.
     pub const DEFAULT_SPLIT: usize = 4;
+    /// Default replication of `--route coded` without an argument.
+    pub const DEFAULT_CODED_R: usize = 2;
+    /// Largest accepted replication factor: beyond this the redundant
+    /// map compute dwarfs any multicast saving, and `C(nranks, r)`
+    /// batch counts explode (see `shuffle::placement::MAX_BATCHES`).
+    pub const MAX_CODED_R: usize = 16;
 }
 
 impl std::str::FromStr for RouteConfig {
@@ -61,15 +76,31 @@ impl std::str::FromStr for RouteConfig {
         match s.to_ascii_lowercase().as_str() {
             "modulo" => Ok(RouteConfig::Modulo),
             "planned" => Ok(RouteConfig::Planned { split: Self::DEFAULT_SPLIT }),
-            other => match other.strip_prefix("planned:split=") {
-                Some(k) => match k.parse::<usize>() {
-                    Ok(split) if split >= 1 => Ok(RouteConfig::Planned { split }),
-                    _ => Err(Error::Config(format!("bad split width '{k}' (need >= 1)"))),
-                },
-                None => Err(Error::Config(format!(
-                    "unknown route '{other}' (use modulo | planned[:split=K])"
-                ))),
-            },
+            "coded" => Ok(RouteConfig::Coded { r: Self::DEFAULT_CODED_R }),
+            other => {
+                if let Some(k) = other.strip_prefix("planned:split=") {
+                    return match k.parse::<usize>() {
+                        Ok(split) if split >= 1 => Ok(RouteConfig::Planned { split }),
+                        _ => {
+                            Err(Error::Config(format!("bad split width '{k}' (need >= 1)")))
+                        }
+                    };
+                }
+                if let Some(k) = other.strip_prefix("coded:r=") {
+                    return match k.parse::<usize>() {
+                        Ok(r) if (1..=Self::MAX_CODED_R).contains(&r) => {
+                            Ok(RouteConfig::Coded { r })
+                        }
+                        _ => Err(Error::Config(format!(
+                            "bad replication factor '{k}' (need 1..={})",
+                            Self::MAX_CODED_R
+                        ))),
+                    };
+                }
+                Err(Error::Config(format!(
+                    "unknown route '{other}' (use modulo | planned[:split=K] | coded[:r=R])"
+                )))
+            }
         }
     }
 }
@@ -163,6 +194,22 @@ impl JobConfig {
                 return Err(Error::Config("route split width must be >= 1".into()));
             }
         }
+        if let RouteConfig::Coded { r } = self.route {
+            if r == 0 || r > RouteConfig::MAX_CODED_R {
+                return Err(Error::Config(format!(
+                    "coded replication factor must be in 1..={}",
+                    RouteConfig::MAX_CODED_R
+                )));
+            }
+            if self.job_stealing {
+                // Replicas of a batch must process identical task sets in
+                // identical order to stage byte-identical segments for the
+                // XOR stage; stealing breaks that determinism contract.
+                return Err(Error::Config(
+                    "job stealing is incompatible with the coded route".into(),
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -217,7 +264,29 @@ mod tests {
             RouteConfig::Planned { split: 2 }
         );
         assert!("planned:split=0".parse::<RouteConfig>().is_err());
+        assert_eq!(
+            "coded".parse::<RouteConfig>().unwrap(),
+            RouteConfig::Coded { r: RouteConfig::DEFAULT_CODED_R }
+        );
+        assert_eq!(
+            "coded:r=3".parse::<RouteConfig>().unwrap(),
+            RouteConfig::Coded { r: 3 }
+        );
+        assert!("coded:r=0".parse::<RouteConfig>().is_err());
+        assert!("coded:r=99".parse::<RouteConfig>().is_err());
         assert!("zigzag".parse::<RouteConfig>().is_err());
+    }
+
+    #[test]
+    fn coded_route_rejects_job_stealing() {
+        let cfg = JobConfig {
+            route: RouteConfig::Coded { r: 2 },
+            job_stealing: true,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        let cfg = JobConfig { route: RouteConfig::Coded { r: 2 }, ..Default::default() };
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -95,12 +95,17 @@ impl ValueOps for UseCaseOps<'_> {
 /// One Map task: a byte extent of the input.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TaskSpec {
-    /// Task id (skew factors are indexed by this).
+    /// Task id (placement and routing are indexed by this).
     pub id: usize,
     /// Byte offset of the extent.
     pub offset: u64,
     /// Extent length.
     pub len: usize,
+    /// Skew-profile index: equal to `id` for tasks cut directly by the
+    /// splitter, but sub-tasks carved out of an oversized task by
+    /// [`split_oversized_tasks`] keep the parent's index so they inherit
+    /// the parent's compute multiplier.
+    pub skew_id: usize,
 }
 
 /// Bytes read past a task extent to finish its last line, and the bound
@@ -191,6 +196,17 @@ pub struct RankOutcome {
     /// The shuffle planner's estimate of this rank's reduce bytes
     /// (None under the modulo route).
     pub planned_reduce_bytes: Option<u64>,
+    /// Shuffle payload bytes this rank physically transmitted: unicast
+    /// buffers appended to peers plus whole encoded multicast packets.
+    /// Under unicast routes this equals the logical volume; under the
+    /// coded route one XOR packet serves a whole clique, so wire bytes
+    /// shrink by roughly the replication factor.
+    pub shuffle_wire_bytes: u64,
+    /// Shuffle bytes this rank's transmissions delivered to reducers:
+    /// unicast payloads, the true (pre-padding) segment parts inside its
+    /// multicast packets, and replica-held records absorbed locally
+    /// without touching the network.
+    pub shuffle_logical_bytes: u64,
 }
 
 /// A MapReduce backend (the paper's *Back-end class*).
@@ -206,7 +222,7 @@ pub fn split_tasks(file_len: u64, task_size: usize) -> Vec<TaskSpec> {
     let mut id = 0usize;
     while offset < file_len {
         let len = task_size.min((file_len - offset) as usize);
-        tasks.push(TaskSpec { id, offset, len });
+        tasks.push(TaskSpec { id, offset, len, skew_id: id });
         offset += len as u64;
         id += 1;
     }
@@ -234,11 +250,58 @@ pub fn split_tasks_records(boundaries: &[u64], file_len: u64, task_size: usize) 
         }
         let end = if e < boundaries.len() { boundaries[e] } else { file_len };
         debug_assert!(end > start, "boundaries must be strictly increasing");
-        tasks.push(TaskSpec { id, offset: start, len: (end - start) as usize });
+        tasks.push(TaskSpec { id, offset: start, len: (end - start) as usize, skew_id: id });
         id += 1;
         b = e;
     }
     tasks
+}
+
+/// Most sub-tasks an oversized task is carved into.
+pub const MAX_TASK_SPLIT: usize = 8;
+
+/// Split oversized map tasks so no single extent dominates the map
+/// phase (the skew-aware map-task sizing the coded route depends on:
+/// repetition placement computes every task `r` times, so an oversized
+/// straggler would otherwise stall `r` ranks instead of one).
+///
+/// A task's cost weight is `len * skew`; any task heavier than 1.5x the
+/// mean is carved into up to [`MAX_TASK_SPLIT`] contiguous sub-extents,
+/// each inheriting the parent's `skew_id` (the compute multiplier models
+/// the *content* of the extent, which splitting does not change).  Task
+/// ids are reassigned sequentially so placement stays dense.  Only text
+/// inputs split: the skew profile repeats per [`JobConfig::skew_for_task`],
+/// and record-format extents cannot be cut off-boundary.
+pub fn split_oversized_tasks(tasks: Vec<TaskSpec>, config: &JobConfig) -> Vec<TaskSpec> {
+    if config.skew.is_empty() || tasks.is_empty() {
+        return tasks;
+    }
+    let weight = |t: &TaskSpec| t.len as f64 * config.skew_for_task(t.skew_id);
+    let mean = tasks.iter().map(weight).sum::<f64>() / tasks.len() as f64;
+    if mean <= 0.0 {
+        return tasks;
+    }
+    let mut out = Vec::with_capacity(tasks.len());
+    let mut id = 0usize;
+    for t in tasks {
+        let parts = ((weight(&t) / mean).round() as usize).clamp(1, MAX_TASK_SPLIT).min(t.len);
+        if weight(&t) <= mean * 1.5 || parts < 2 {
+            out.push(TaskSpec { id, ..t });
+            id += 1;
+            continue;
+        }
+        // Carve `parts` contiguous sub-extents tiling the parent extent.
+        let base = t.len / parts;
+        let rem = t.len % parts;
+        let mut offset = t.offset;
+        for p in 0..parts {
+            let len = base + usize::from(p < rem);
+            out.push(TaskSpec { id, offset, len, skew_id: t.skew_id });
+            offset += len as u64;
+            id += 1;
+        }
+    }
+    out
 }
 
 /// Extract the records (lines) a task owns from its raw read.
@@ -383,7 +446,7 @@ pub fn run_map_task(
     // Virtual compute cost: scan+hash+local-reduce over the extent,
     // multiplied by the task's imbalance factor (paper §3 footnote 5:
     // same task computed multiple times, input read once).
-    let skew = shared.config.skew_for_task(task.id);
+    let skew = shared.config.skew_for_task(task.skew_id);
     let cost = ctx.cost.compute.map_cost(task.len) as f64 * skew;
     ctx.clock.advance(cost as u64 + ctx.cost.compute.task_overhead_ns);
     Ok(emitted)
@@ -552,10 +615,18 @@ impl Job {
             Some(input) => (input.file, Some(input.boundaries)),
             None => (StripedFile::open(&self.config.input)?, None),
         };
-        let tasks = match &record_bounds {
+        let mut tasks = match &record_bounds {
             Some(bounds) => split_tasks_records(bounds, file.len(), self.config.task_size),
             None => split_tasks(file.len(), self.config.task_size),
         };
+        // Skew-aware map-task sizing: under the coded route every task is
+        // computed r times, so an oversized straggler extent would stall r
+        // ranks — carve such extents down before placement.
+        if matches!(self.config.route, super::config::RouteConfig::Coded { .. })
+            && record_bounds.is_none()
+        {
+            tasks = split_oversized_tasks(tasks, &self.config);
+        }
         if tasks.is_empty() {
             return Err(Error::Config("empty input".into()));
         }
@@ -593,6 +664,8 @@ impl Job {
         let mut reduce_bytes_per_rank = Vec::with_capacity(nranks);
         let mut reduce_keys_per_rank = Vec::with_capacity(nranks);
         let mut planned_reduce = Vec::with_capacity(nranks);
+        let mut shuffle_wire_bytes_per_rank = Vec::with_capacity(nranks);
+        let mut shuffle_logical_bytes_per_rank = Vec::with_capacity(nranks);
         let mut input_bytes = 0u64;
         let mut result_run = None;
         for outcome in outcomes {
@@ -604,6 +677,8 @@ impl Job {
             reduce_bytes_per_rank.push(o.reduce_bytes);
             reduce_keys_per_rank.push(o.reduce_keys);
             planned_reduce.push(o.planned_reduce_bytes);
+            shuffle_wire_bytes_per_rank.push(o.shuffle_wire_bytes);
+            shuffle_logical_bytes_per_rank.push(o.shuffle_logical_bytes);
             input_bytes += o.input_bytes;
             if let Some(run) = o.result {
                 result_run = Some(run);
@@ -643,6 +718,9 @@ impl Job {
             reduce_bytes_per_rank,
             reduce_keys_per_rank,
             planned_reduce_bytes_per_rank,
+            shuffle_wire_bytes_per_rank,
+            shuffle_logical_bytes_per_rank,
+            spill_bytes_saved: 0,
             peak_memory_bytes: shared.mem.peak(),
             memory_series: shared.mem.normalized_series(256),
             unique_keys,
@@ -723,6 +801,29 @@ mod tests {
         assert_eq!(tasks.len(), 2);
         assert_eq!((tasks[0].offset, tasks[0].len), (0, 1000));
         assert_eq!((tasks[1].offset, tasks[1].len), (1000, 100));
+    }
+
+    #[test]
+    fn oversized_tasks_split_and_inherit_skew_id() {
+        // Four 1000-byte tasks, task 1 carrying an 8x compute multiplier:
+        // its weight is ~8x the mean, so it splits; the others stay whole.
+        let cfg = JobConfig { skew: vec![1.0, 8.0, 1.0, 1.0], ..Default::default() };
+        let tasks = split_tasks(4000, 1000);
+        let out = split_oversized_tasks(tasks.clone(), &cfg);
+        assert!(out.len() > tasks.len());
+        // Ids are dense, extents tile the input exactly.
+        assert!(out.iter().enumerate().all(|(i, t)| t.id == i));
+        assert!(out.windows(2).all(|w| w[0].offset + w[0].len as u64 == w[1].offset));
+        assert_eq!(out.iter().map(|t| t.len as u64).sum::<u64>(), 4000);
+        // Every sub-task of the hot extent keeps the parent's skew index,
+        // so total modeled compute is unchanged.
+        let hot: Vec<_> = out.iter().filter(|t| t.skew_id == 1).collect();
+        assert!(hot.len() >= 2, "hot task must split, got {hot:?}");
+        assert_eq!(hot.iter().map(|t| t.len).sum::<usize>(), 1000);
+        assert!(hot.iter().all(|t| (1000..2000).contains(&t.offset)));
+        // No skew profile = nothing to resize on.
+        let plain = split_oversized_tasks(tasks.clone(), &JobConfig::default());
+        assert_eq!(plain, tasks);
     }
 
     #[test]

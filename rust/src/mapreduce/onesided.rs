@@ -32,7 +32,7 @@
 use crate::error::Result;
 use crate::metrics::{EventKind, Timeline};
 use crate::mpi::{LockKind, RankCtx, Window};
-use crate::shuffle::{exchange, Route, Sketch};
+use crate::shuffle::{coding, exchange, plan_coded_route, CodedPlacement, Route, Sketch};
 use crate::storage::{Prefetcher, StorageWindow};
 
 use super::bucket::{KeyTable, SortedRun};
@@ -193,6 +193,15 @@ impl Backend for Mr1s {
         let cfg = &shared.config;
         let ops = shared.ops();
 
+        // Coded route: derive the repetition placement up front — it is a
+        // pure function of (nranks, r), so every rank rejects bad
+        // parameters (r > nranks, batch explosion) identically, before
+        // any collective window creation.
+        let placement = match cfg.route {
+            RouteConfig::Coded { r } => Some(CodedPlacement::new(n, r)?),
+            _ => None,
+        };
+
         // ---- Window setup (collective) + init fence ------------------
         // Standalone jobs pay the collective creation + barrier (as
         // MPI_Win_create does).  Pipeline stages reuse the persistent
@@ -211,13 +220,14 @@ impl Backend for Mr1s {
         let ctrl = mk_win(ctrl_size(n));
         let kv_win = mk_win(0);
         let comb_win = mk_win(0);
-        // Planned routing needs a fourth window for the sketch/route
-        // exchange (creation is collective, so it must exist up front).
+        // Planned and coded routing need a fourth window for the
+        // sketch/route exchange (and, under coded, the packet blobs);
+        // creation is collective, so it must exist up front.
         let planned_split = match cfg.route {
             RouteConfig::Planned { split } => Some(split),
-            RouteConfig::Modulo => None,
+            RouteConfig::Modulo | RouteConfig::Coded { .. } => None,
         };
-        let plan_win = planned_split.map(|_| {
+        let plan_win = (planned_split.is_some() || placement.is_some()).then(|| {
             let w = mk_win(0);
             exchange::init_window(&w);
             w
@@ -248,9 +258,29 @@ impl Backend for Mr1s {
         // ---- Map + Local Reduce (self-managed, prefetched) -----------
         // Rank-strided queues; heads are atomic cells so idle ranks can
         // steal a straggler's tail (paper §6 future work) when enabled.
-        let queues: Vec<Vec<_>> = (0..n)
-            .map(|r| shared.tasks.iter().copied().filter(|t| t.id % n == r).collect())
-            .collect();
+        // Under the coded route every task is replicated onto the `r`
+        // members of its batch, each processing its queue in ascending
+        // task order (the placement's determinism contract; stealing is
+        // rejected by `JobConfig::validate`).
+        let queues: Vec<Vec<_>> = match &placement {
+            Some(p) => (0..n)
+                .map(|r| {
+                    shared
+                        .tasks
+                        .iter()
+                        .copied()
+                        .filter(|t| {
+                            p.members(p.batch_of_task(t.id))
+                                .binary_search(&(r as u16))
+                                .is_ok()
+                        })
+                        .collect()
+                })
+                .collect(),
+            None => (0..n)
+                .map(|r| shared.tasks.iter().copied().filter(|t| t.id % n == r).collect())
+                .collect(),
+        };
         let claimer = TaskClaimer {
             queues: &queues,
             stealing: cfg.job_stealing,
@@ -266,12 +296,25 @@ impl Backend for Mr1s {
         // are unknown until the sketch exchange), so the per-task bucket
         // flush is deferred to one routed flush after the plan arrives.
         let mut map_table = KeyTable::new();
+        // Coded routing stages per *batch* instead: replicas of a batch
+        // must drain byte-identical segments, so each batch gets its own
+        // table fed in ascending task order.
+        let mut batch_tables: Vec<KeyTable> = placement
+            .as_ref()
+            .map(|p| (0..p.nbatches()).map(|_| KeyTable::new()).collect())
+            .unwrap_or_default();
         // Measured reduce load: wire bytes this rank ingests as the
         // reduce side — its own bucket (counted at flush) plus every
         // peer bucket it pulls.  This is the quantity the shuffle
         // planner's sketch estimates, so planned-vs-actual compares
         // like with like.
         let mut reduce_ingest_bytes = 0u64;
+        // Shuffle ledger: bytes actually put on the wire vs. the
+        // unicast-equivalent volume delivered.  Identical for the modulo
+        // and planned routes; under coded, multicast packets and
+        // replica-local absorption pull the two apart by ~r×.
+        let mut shuffle_wire_bytes = 0u64;
+        let mut shuffle_logical_bytes = 0u64;
 
         while let Some((task, read)) = pending {
             let data = timed(ctx, &tl, EventKind::Io, || read.wait(ctx))?;
@@ -281,7 +324,20 @@ impl Backend for Mr1s {
             input_bytes += task.len as u64;
             let task = &task;
 
-            if planned_split.is_some() {
+            if let Some(p) = &placement {
+                // Coded: stage into the task's batch table (every batch
+                // member runs this identically — the r× redundant map
+                // compute the coding gain is paid for with).
+                let table = &mut batch_tables[p.batch_of_task(task.id)];
+                let before = table.bytes() as u64;
+                let range = shared.owned_range(task, &data);
+                timed(ctx, &tl, EventKind::Map, || {
+                    run_map_task(ctx, shared, task, &data[range], table)
+                })?;
+                shared
+                    .mem
+                    .alloc(ctx.clock.now(), (table.bytes() as u64).saturating_sub(before));
+            } else if planned_split.is_some() {
                 let before = map_table.bytes() as u64;
                 let range = shared.owned_range(task, &data);
                 timed(ctx, &tl, EventKind::Map, || {
@@ -312,6 +368,8 @@ impl Backend for Mr1s {
                         &mut retained,
                         &Route::modulo(n),
                         &mut reduce_ingest_bytes,
+                        &mut shuffle_wire_bytes,
+                        &mut shuffle_logical_bytes,
                     )
                 })?;
                 shared.mem.free(ctx.clock.now(), staged_bytes);
@@ -346,9 +404,100 @@ impl Backend for Mr1s {
         // sketches one-sidedly, then flush the whole Map output through
         // the published route (DESIGN.md §7).  The wait is a pairwise
         // data dependency on the planner's publication, not a barrier.
-        let route = match planned_split {
-            None => Route::modulo(n),
-            Some(split) => {
+        //
+        // Coded route (DESIGN.md §8): same exchange, but only each
+        // batch's *primary* replica observes its records into the sketch
+        // (so the merged sketch sees the true distribution, not r× of
+        // it); the resulting plan classifies records into local merges,
+        // light unicasts, and heavy XOR-coded multicast segments.  The
+        // segments double as side information for decoding peers'
+        // packets in the Reduce phase below.
+        let mut coded_segs: Option<coding::SegmentMap> = None;
+        let route = match (&placement, planned_split) {
+            (Some(p), _) => {
+                let plan_win = plan_win.as_ref().expect("created at window setup");
+                let mut sketch = Sketch::new();
+                for &b in p.batches_of(me) {
+                    if p.primary(b) == me {
+                        batch_tables[b]
+                            .for_each_size(&mut |h, len| sketch.observe(h, len as u64));
+                    }
+                }
+                let rep = p.r();
+                let route = timed(ctx, &tl, EventKind::Wait, || {
+                    exchange::exchange_and_plan_with(ctx, plan_win, &sketch, |merged| {
+                        plan_coded_route(merged, n, rep)
+                    })
+                })?;
+                let Route::Coded(coded) = &route else {
+                    unreachable!("coded planner published a coded route");
+                };
+                let staged_bytes: u64 =
+                    batch_tables.iter().map(|t| t.bytes() as u64).sum();
+                let shuffle = timed(ctx, &tl, EventKind::LocalReduce, || {
+                    coding::classify_batches(p, coded, me, &mut batch_tables)
+                })?;
+                // Records destined to this rank (own + replica-absorbed)
+                // merge straight into the reduce table.
+                reduce_ingest_bytes += shuffle.own.len() as u64;
+                shuffle_logical_bytes += shuffle.replica_local_bytes;
+                for rec in kv::RecordIter::new(&shuffle.own) {
+                    reduce_table.merge_record(rec?, &ops);
+                }
+                // Light records unicast through the planned bucket path,
+                // from each batch's primary replica only.
+                let mut light = shuffle.light;
+                let flushed = timed(ctx, &tl, EventKind::LocalReduce, || {
+                    self.flush_parts(
+                        ctx,
+                        shared,
+                        &ctrl,
+                        &kv_win,
+                        &mut out_buckets,
+                        &mut light,
+                        &mut reduce_table,
+                        &mut retained,
+                        &mut reduce_ingest_bytes,
+                        &mut shuffle_wire_bytes,
+                        &mut shuffle_logical_bytes,
+                    )
+                })?;
+                // Heavy segments: XOR-code per clique, charge each packet
+                // once as a multicast (cost-model substitution — this is
+                // where the ~r× wire saving lands), publish the blob for
+                // clique peers to pull at latency-only cost.
+                let blob = timed(ctx, &tl, EventKind::LocalReduce, || -> Result<Vec<u8>> {
+                    let mut blob = Vec::new();
+                    for packet in coding::build_rank_packets(p, me, &shuffle.segs) {
+                        packet.encode_into(&mut blob);
+                        shuffle_wire_bytes += packet.encoded_len() as u64;
+                        shuffle_logical_bytes += packet.logical_bytes();
+                        ctx.clock
+                            .advance(ctx.cost.net.multicast_cost(rep, packet.encoded_len()));
+                    }
+                    exchange::publish_coded(ctx, plan_win, &blob)?;
+                    Ok(blob)
+                })?;
+                coded_segs = Some(shuffle.segs);
+                shared.mem.free(ctx.clock.now(), staged_bytes);
+                if let Some(ckpt) = checkpoint.as_mut() {
+                    timed(ctx, &tl, EventKind::Checkpoint, || -> Result<()> {
+                        ctx.clock.advance(
+                            (flushed.len() + blob.len()) as u64
+                                + kv_win.attached_bytes(me) as u64 / 4,
+                        );
+                        ckpt.sync(ctx, ckpt_off, &flushed)?;
+                        ckpt_off += flushed.len() as u64;
+                        Ok(())
+                    })?;
+                }
+                // Same real-time visibility fence as the planned flush
+                // (see below): publications virtually precede any close.
+                ctx.rendezvous_real();
+                route
+            }
+            (None, None) => Route::modulo(n),
+            (None, Some(split)) => {
                 let plan_win = plan_win.as_ref().expect("created at window setup");
                 let mut sketch = Sketch::new();
                 map_table.for_each_size(&mut |h, len| sketch.observe(h, len as u64));
@@ -368,6 +517,8 @@ impl Backend for Mr1s {
                         &mut retained,
                         &route,
                         &mut reduce_ingest_bytes,
+                        &mut shuffle_wire_bytes,
+                        &mut shuffle_logical_bytes,
                     )
                 })?;
                 shared.mem.free(ctx.clock.now(), staged_bytes);
@@ -459,6 +610,38 @@ impl Backend for Mr1s {
             }
             Ok(())
         })?;
+
+        // ---- Coded Reduce: pull + decode every peer's packet blob ----
+        // Each packet a shared clique peer multicast yields one part of
+        // a segment destined to me once the locally-recomputed side
+        // parts are XORed out; parts reassemble into segments that merge
+        // like any pulled bucket.  The blob pull is latency-only — the
+        // payload bytes were charged at the sender's multicast.
+        if let (Some(p), Some(segs)) = (&placement, &coded_segs) {
+            let plan_win = plan_win.as_ref().expect("created at window setup");
+            timed(ctx, &tl, EventKind::Reduce, || -> Result<()> {
+                let mut parts = Vec::new();
+                for s in 0..n {
+                    if s == me {
+                        continue;
+                    }
+                    let blob = exchange::fetch_coded(ctx, plan_win, s)?;
+                    if blob.is_empty() {
+                        continue;
+                    }
+                    let packets = coding::decode_packets(&blob)?;
+                    parts.extend(coding::decode_rank_parts(p, me, s, &packets, segs)?);
+                }
+                for (_, seg) in coding::assemble_segments(parts) {
+                    reduce_ingest_bytes += seg.len() as u64;
+                    for rec in kv::RecordIter::new(&seg) {
+                        reduce_table.merge_record(rec?, &ops);
+                    }
+                    ctx.clock.advance(ctx.cost.compute.reduce_cost(seg.len()));
+                }
+                Ok(())
+            })?;
+        }
         shared.mem.alloc(ctx.clock.now(), reduce_table.bytes() as u64);
         if cfg.flush_epochs {
             ctrl.lock(&ctx.clock, LockKind::Shared, me);
@@ -573,6 +756,8 @@ impl Backend for Mr1s {
             reduce_bytes: reduce_ingest_bytes,
             reduce_keys,
             planned_reduce_bytes: route.planned_load(me),
+            shuffle_wire_bytes,
+            shuffle_logical_bytes,
         })
     }
 }
@@ -594,13 +779,51 @@ impl Mr1s {
         retained: &mut KeyTable,
         route: &Route,
         own_ingest_bytes: &mut u64,
+        wire_bytes: &mut u64,
+        logical_bytes: &mut u64,
+    ) -> Result<Vec<u8>> {
+        let mut parts = staging.drain_routed(route, ctx.rank())?;
+        self.flush_parts(
+            ctx,
+            shared,
+            ctrl,
+            kv_win,
+            out_buckets,
+            &mut parts,
+            reduce_table,
+            retained,
+            own_ingest_bytes,
+            wire_bytes,
+            logical_bytes,
+        )
+    }
+
+    /// Dispatch pre-encoded per-destination buffers (`parts[t]` goes to
+    /// rank `t`) into the outgoing buckets: own keys reduce in place,
+    /// closed targets retain (ownership transfer), the rest append to
+    /// the one-sided buckets.  Successfully shipped bytes are charged to
+    /// both sides of the shuffle ledger — a unicast's wire and logical
+    /// volumes are the same thing.
+    #[allow(clippy::too_many_arguments)]
+    fn flush_parts(
+        &self,
+        ctx: &RankCtx,
+        shared: &JobShared,
+        ctrl: &Window,
+        kv_win: &Window,
+        out_buckets: &mut [OutBucket],
+        parts: &mut [Vec<u8>],
+        reduce_table: &mut KeyTable,
+        retained: &mut KeyTable,
+        own_ingest_bytes: &mut u64,
+        wire_bytes: &mut u64,
+        logical_bytes: &mut u64,
     ) -> Result<Vec<u8>> {
         let me = ctx.rank();
         let ops = shared.ops();
         let mut appended = Vec::new();
 
-        let parts = staging.drain_routed(route, me)?;
-        for (t, buf) in parts.into_iter().enumerate() {
+        for (t, buf) in parts.iter_mut().map(|b| std::mem::take(b)).enumerate() {
             if buf.is_empty() {
                 continue;
             }
@@ -628,7 +851,11 @@ impl Mr1s {
                 continue;
             }
             match self.append_bucket(ctx, shared, ctrl, kv_win, &mut out_buckets[t], t, &buf)? {
-                true => appended.extend_from_slice(&buf),
+                true => {
+                    *wire_bytes += buf.len() as u64;
+                    *logical_bytes += buf.len() as u64;
+                    appended.extend_from_slice(&buf);
+                }
                 false => {
                     // Closed (or full) under us: ownership transfer
                     // (counted as this rank's load, as above).

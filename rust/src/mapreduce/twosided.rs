@@ -15,7 +15,7 @@
 use crate::error::Result;
 use crate::metrics::{EventKind, Timeline};
 use crate::mpi::RankCtx;
-use crate::shuffle::{exchange, plan_route, Route};
+use crate::shuffle::{coding, exchange, plan_coded_route, plan_route, CodedPlacement, Route};
 
 use super::bucket::{KeyTable, SortedRun};
 use super::config::RouteConfig;
@@ -37,8 +37,35 @@ impl Backend for Mr2s {
         let n = ctx.nranks();
         let ops = shared.ops();
 
+        // Coded route: the repetition placement is a pure function of
+        // (nranks, r) — every rank derives it and rejects bad parameters
+        // identically before the first collective.
+        let placement = match shared.config.route {
+            RouteConfig::Coded { r } => Some(CodedPlacement::new(n, r)?),
+            _ => None,
+        };
+
         // ---- Master-slave task distribution (MPI_Scatter) ------------
+        // Coded: the master scatters placement-derived task lists (each
+        // task to all `r` members of its batch, ascending — the replica
+        // determinism contract); otherwise contiguous chunks.
         let assignment: Option<Vec<Vec<TaskSpec>>> = (me == 0).then(|| {
+            if let Some(p) = &placement {
+                return (0..n)
+                    .map(|r| {
+                        shared
+                            .tasks
+                            .iter()
+                            .copied()
+                            .filter(|t| {
+                                p.members(p.batch_of_task(t.id))
+                                    .binary_search(&(r as u16))
+                                    .is_ok()
+                            })
+                            .collect()
+                    })
+                    .collect();
+            }
             let mut parts: Vec<Vec<TaskSpec>> = vec![Vec::new(); n];
             let per = shared.tasks.len().div_ceil(n);
             for (i, chunk) in shared.tasks.chunks(per.max(1)).enumerate() {
@@ -53,6 +80,12 @@ impl Backend for Mr2s {
 
         // ---- Map rounds under collective I/O --------------------------
         let mut all_staging = KeyTable::new();
+        // Coded: stage per batch so replicas drain byte-identical
+        // segments for the XOR stage.
+        let mut batch_tables: Vec<KeyTable> = placement
+            .as_ref()
+            .map(|p| (0..p.nbatches()).map(|_| KeyTable::new()).collect())
+            .unwrap_or_default();
         let mut input_bytes = 0u64;
         let mut first_read_issue_vt = None;
         for round in 0..rounds {
@@ -75,12 +108,17 @@ impl Backend for Mr2s {
             input_bytes += task.len as u64;
 
             let range = shared.owned_range(task, &data);
+            let table = match &placement {
+                Some(p) => &mut batch_tables[p.batch_of_task(task.id)],
+                None => &mut all_staging,
+            };
             timed(ctx, &tl, EventKind::Map, || {
-                run_map_task(ctx, shared, task, &data[range], &mut all_staging)
+                run_map_task(ctx, shared, task, &data[range], table)
             })?;
         }
-        shared.mem.alloc(ctx.clock.now(), all_staging.bytes() as u64);
-        let staging_bytes = all_staging.bytes() as u64;
+        let staging_bytes = all_staging.bytes() as u64
+            + batch_tables.iter().map(|t| t.bytes() as u64).sum::<u64>();
+        shared.mem.alloc(ctx.clock.now(), staging_bytes);
 
         // ---- Shuffle route ------------------------------------------
         // The collective backend stays collective: planned routing
@@ -99,16 +137,83 @@ impl Backend for Mr2s {
                 let merged = exchange::merge_encoded(&recv)?;
                 plan_route(&merged, n, split)
             }
+            RouteConfig::Coded { r } => {
+                // Only each batch's primary replica sketches its records,
+                // so the merged sketch measures the true distribution
+                // rather than r× of it; every rank then plans locally
+                // from identical inputs (deterministic planner).
+                let p = placement.as_ref().expect("placement derived above");
+                let mut sketch = crate::shuffle::Sketch::new();
+                for &b in p.batches_of(me) {
+                    if p.primary(b) == me {
+                        batch_tables[b]
+                            .for_each_size(&mut |h, len| sketch.observe(h, len as u64));
+                    }
+                }
+                let enc = sketch.encode();
+                let recv = timed(ctx, &tl, EventKind::Wait, || {
+                    ctx.alltoallv(vec![enc; n])
+                });
+                let merged = exchange::merge_encoded(&recv)?;
+                plan_coded_route(&merged, n, r)
+            }
         };
 
-        // ---- Shuffle: Alltoallv of per-owner buffers ------------------
-        let mut parts = all_staging.drain_routed(&route, me)?;
-        let own = std::mem::take(&mut parts[me]);
-        let sent_bytes: usize = parts.iter().map(Vec::len).sum();
-        let recv = timed(ctx, &tl, EventKind::Wait, || ctx.alltoallv(parts));
-        shared.mem.alloc(ctx.clock.now(), recv.iter().map(|b| b.len() as u64).sum());
+        // ---- Shuffle --------------------------------------------------
+        // Modulo/planned: Alltoallv of per-owner buffers.  Coded: light
+        // records Alltoallv as before, heavy segments XOR-code into one
+        // packet blob per rank exchanged via `multicast_round` (each
+        // rank pays to transmit its own blob once — the cost-model
+        // substitution for multicast); received packets decode against
+        // the locally-replicated segments.
+        let (own, recv, decoded_segs, shuffle_wire_bytes, shuffle_logical_bytes) =
+            if let (Some(p), Route::Coded(cr)) = (&placement, &route) {
+                let shuffle = timed(ctx, &tl, EventKind::LocalReduce, || {
+                    coding::classify_batches(p, cr, me, &mut batch_tables)
+                })?;
+                let light_sent: u64 =
+                    shuffle.light.iter().map(|b| b.len() as u64).sum();
+                let recv = timed(ctx, &tl, EventKind::Wait, || {
+                    ctx.alltoallv(shuffle.light)
+                });
+                let mut wire = light_sent;
+                let mut logical = light_sent + shuffle.replica_local_bytes;
+                let mut blob = Vec::new();
+                for packet in coding::build_rank_packets(p, me, &shuffle.segs) {
+                    packet.encode_into(&mut blob);
+                    wire += packet.encoded_len() as u64;
+                    logical += packet.logical_bytes();
+                }
+                let blobs =
+                    timed(ctx, &tl, EventKind::Wait, || ctx.multicast_round(blob));
+                let mut parts = Vec::new();
+                for (s, b) in blobs.iter().enumerate() {
+                    if s == me || b.is_empty() {
+                        continue;
+                    }
+                    let packets = coding::decode_packets(b)?;
+                    parts.extend(coding::decode_rank_parts(p, me, s, &packets, &shuffle.segs)?);
+                }
+                let decoded: Vec<Vec<u8>> = coding::assemble_segments(parts)
+                    .into_iter()
+                    .map(|(_, seg)| seg)
+                    .collect();
+                (shuffle.own, recv, decoded, wire, logical)
+            } else {
+                let mut parts = all_staging.drain_routed(&route, me)?;
+                let own = std::mem::take(&mut parts[me]);
+                let sent_bytes: u64 = parts.iter().map(|b| b.len() as u64).sum();
+                let recv = timed(ctx, &tl, EventKind::Wait, || ctx.alltoallv(parts));
+                // A unicast shuffle's wire and logical volumes coincide.
+                (own, recv, Vec::new(), sent_bytes, sent_bytes)
+            };
+        shared.mem.alloc(
+            ctx.clock.now(),
+            recv.iter().map(|b| b.len() as u64).sum::<u64>()
+                + decoded_segs.iter().map(|b| b.len() as u64).sum::<u64>(),
+        );
 
-        // ---- Reduce: merge own + received -----------------------------
+        // ---- Reduce: merge own + received + decoded -------------------
         let mut reduce_table = KeyTable::new();
         timed(ctx, &tl, EventKind::Reduce, || -> Result<()> {
             for rec in kv::RecordIter::new(&own) {
@@ -123,6 +228,12 @@ impl Backend for Mr2s {
                 }
                 ctx.clock.advance(ctx.cost.compute.reduce_cost(buf.len()));
             }
+            for seg in &decoded_segs {
+                for rec in kv::RecordIter::new(seg) {
+                    reduce_table.merge_record(rec?, &ops);
+                }
+                ctx.clock.advance(ctx.cost.compute.reduce_cost(seg.len()));
+            }
             ctx.clock.advance(ctx.cost.compute.reduce_cost(own.len()));
             Ok(())
         })?;
@@ -130,16 +241,17 @@ impl Backend for Mr2s {
         shared.mem.alloc(ctx.clock.now(), reduce_table.bytes() as u64);
         let reduce_table_bytes = reduce_table.bytes() as u64;
         // Measured reduce load: wire bytes ingested (own buffer + every
-        // received buffer) — the quantity the shuffle planner estimates.
+        // received buffer + decoded coded segments) — the quantity the
+        // shuffle planner estimates.
         let reduce_bytes = own.len() as u64
             + recv
                 .iter()
                 .enumerate()
                 .filter(|&(s, _)| s != me)
                 .map(|(_, b)| b.len() as u64)
-                .sum::<u64>();
+                .sum::<u64>()
+            + decoded_segs.iter().map(|b| b.len() as u64).sum::<u64>();
         let reduce_keys = reduce_table.len() as u64;
-        let _ = sent_bytes;
 
         // ---- Combine: same tree, point-to-point -----------------------
         let mut result: Option<SortedRun> = None;
@@ -190,6 +302,8 @@ impl Backend for Mr2s {
             reduce_bytes,
             reduce_keys,
             planned_reduce_bytes: route.planned_load(me),
+            shuffle_wire_bytes,
+            shuffle_logical_bytes,
         })
     }
 }

@@ -73,6 +73,20 @@ pub struct JobReport {
     /// estimate) — `None` under the modulo route, which plans nothing.
     /// Compare against `reduce_bytes_per_rank` for planned-vs-actual.
     pub planned_reduce_bytes_per_rank: Option<Vec<u64>>,
+    /// Per-rank shuffle bytes physically transmitted (unicast payloads
+    /// plus whole encoded multicast packets).  Unicast routes transmit
+    /// every delivered byte, so wire == logical there; the coded route's
+    /// XOR multicast serves a whole clique per packet, so wire shrinks
+    /// by roughly the replication factor.
+    pub shuffle_wire_bytes_per_rank: Vec<u64>,
+    /// Per-rank shuffle bytes logically delivered to reducers (unicast
+    /// payloads, true pre-padding multicast segment parts, and
+    /// replica-absorbed records that never touched the network).
+    pub shuffle_logical_bytes_per_rank: Vec<u64>,
+    /// Spill bytes the `.idx` varint-delta sidecar and payload block
+    /// codec saved versus the raw encoding (0 for non-pipeline jobs,
+    /// which spill nothing; filled in by the pipeline driver).
+    pub spill_bytes_saved: u64,
     /// Peak tracked memory over the node (bytes).
     pub peak_memory_bytes: u64,
     /// Normalized (t, bytes) memory series.
@@ -151,9 +165,29 @@ impl JobReport {
         self.planned_reduce_bytes_per_rank.as_ref().map(|xs| max_over_mean(xs))
     }
 
+    /// Total shuffle bytes physically transmitted across ranks.
+    pub fn shuffle_wire_bytes(&self) -> u64 {
+        self.shuffle_wire_bytes_per_rank.iter().sum()
+    }
+
+    /// Total shuffle bytes logically delivered across ranks.
+    pub fn shuffle_logical_bytes(&self) -> u64 {
+        self.shuffle_logical_bytes_per_rank.iter().sum()
+    }
+
+    /// Logical-over-wire shuffle gain (1.0 for unicast routes; ~r under
+    /// the coded route; 0.0 when nothing was shuffled).
+    pub fn shuffle_coding_gain(&self) -> f64 {
+        let wire = self.shuffle_wire_bytes();
+        if wire == 0 {
+            return 0.0;
+        }
+        self.shuffle_logical_bytes() as f64 / wire as f64
+    }
+
     /// One-line summary used by the CLI.
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "{}: ranks={} input={}MiB elapsed={:.3}s keys={} count={} peak_mem={}MiB wait={:.1}% red-imb={:.2}",
             self.backend,
             self.nranks,
@@ -164,7 +198,19 @@ impl JobReport {
             self.peak_memory_bytes >> 20,
             self.mean_wait_fraction() * 100.0,
             self.reduce_max_over_mean(),
-        )
+        );
+        let gain = self.shuffle_coding_gain();
+        if gain > 1.001 {
+            line.push_str(&format!(
+                " shuffle-wire={}KiB coding-gain={:.2}x",
+                self.shuffle_wire_bytes() >> 10,
+                gain
+            ));
+        }
+        if self.spill_bytes_saved > 0 {
+            line.push_str(&format!(" spill-saved={}KiB", self.spill_bytes_saved >> 10));
+        }
+        line
     }
 }
 
@@ -214,6 +260,9 @@ mod tests {
             reduce_bytes_per_rank: vec![300, 100],
             reduce_keys_per_rank: vec![3, 1],
             planned_reduce_bytes_per_rank: None,
+            shuffle_wire_bytes_per_rank: vec![100, 100],
+            shuffle_logical_bytes_per_rank: vec![250, 250],
+            spill_bytes_saved: 0,
             peak_memory_bytes: 0,
             memory_series: vec![],
             unique_keys: 0,
@@ -223,5 +272,7 @@ mod tests {
         assert!((r.reduce_max_over_mean() - 1.5).abs() < 1e-9);
         assert!((r.reduce_cov() - 0.5).abs() < 1e-9);
         assert_eq!(r.planned_reduce_max_over_mean(), None);
+        assert_eq!(r.shuffle_wire_bytes(), 200);
+        assert!((r.shuffle_coding_gain() - 2.5).abs() < 1e-9);
     }
 }

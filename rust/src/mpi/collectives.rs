@@ -104,6 +104,27 @@ impl RankCtx {
         recv
     }
 
+    /// One round of multicasts: every rank publishes `blob` to all peers
+    /// and returns the full set, indexed by source (allgather-shaped).
+    ///
+    /// Virtual-time semantics follow the coded shuffle's cost-model
+    /// substitution (`NetModel::multicast_cost`): each rank pays to put
+    /// its *own* payload on the wire once — receiving peers' blobs is
+    /// free because one multicast transmission serves every receiver, so
+    /// unlike [`RankCtx::alltoallv`] the received volume is not charged.
+    pub fn multicast_round(&self, blob: Vec<u8>) -> Vec<Vec<u8>> {
+        let me = self.rank();
+        let sent = blob.len();
+        let (all, max_vt): (Arc<Vec<Vec<u8>>>, u64) =
+            self.comm
+                .shared
+                .rendezvous
+                .run(me, self.clock.now(), blob, |inputs| inputs);
+        self.clock.sync_to(max_vt);
+        self.clock.advance(self.cost.net.collective_cost(self.nranks(), sent));
+        (*all).clone()
+    }
+
     /// All-reduce of a u64 with `op` (associative + commutative).
     pub fn allreduce_u64(&self, value: u64, op: impl Fn(u64, u64) -> u64 + Send + 'static) -> u64 {
         let (out, max_vt): (Arc<u64>, u64) = self.comm.shared.rendezvous.run(
@@ -187,6 +208,24 @@ mod tests {
         assert_eq!(outs[0][0], Vec::<u8>::new());
         assert_eq!(outs[1][0], vec![1, 2, 3]);
         assert_eq!(outs[1][1], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn multicast_round_delivers_every_blob_and_charges_send_only() {
+        let outs = Universe::new(3, CostModel::default()).run(|ctx| {
+            let big = 1 << 20;
+            let blob = if ctx.rank() == 0 { vec![7u8; big] } else { vec![ctx.rank() as u8] };
+            let before = ctx.clock.now();
+            let all = ctx.multicast_round(blob);
+            (all, ctx.clock.now() - before)
+        });
+        for (all, _) in &outs {
+            assert_eq!(all[0].len(), 1 << 20);
+            assert_eq!(all[1], vec![1u8]);
+            assert_eq!(all[2], vec![2u8]);
+        }
+        // Rank 0 paid for its megabyte; rank 1 received it near-free.
+        assert!(outs[0].1 > outs[1].1 * 4, "{:?}", outs.iter().map(|o| o.1).collect::<Vec<_>>());
     }
 
     #[test]

@@ -247,6 +247,24 @@ impl Window {
         self.with_segment(target, disp, out.len(), |buf, off| buf.read(off, out))
     }
 
+    /// Read a payload the publisher already charged as a *multicast*
+    /// (`NetModel::multicast_cost`): the bytes crossed the wire once at
+    /// publication, every clique member receives them, so the reader
+    /// pays only the one-sided initiation latency — the broadcast-window
+    /// semantics of the coded shuffle.
+    pub fn get_multicast(
+        &self,
+        clock: &Clock,
+        target: usize,
+        disp: u64,
+        out: &mut [u8],
+    ) -> Result<()> {
+        if target != self.my_rank {
+            clock.advance(self.shared.net.rma_latency_ns);
+        }
+        self.with_segment(target, disp, out.len(), |buf, off| buf.read(off, out))
+    }
+
     fn check_aligned(disp: u64) -> Result<()> {
         if disp % 8 != 0 {
             return Err(Error::UnalignedAtomic(disp));

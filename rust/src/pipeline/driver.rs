@@ -145,8 +145,8 @@ impl Pipeline {
         let mut stages: Vec<StageReport> = Vec::new();
 
         for (i, stage) in self.plan.stages.iter().enumerate() {
-            let (input_path, staged, input_ready_vt) = match &stage.sources[0] {
-                StageSource::Corpus(path) => (path.clone(), None, 0u64),
+            let (input_path, staged, input_ready_vt, spill_saved) = match &stage.sources[0] {
+                StageSource::Corpus(path) => (path.clone(), None, 0u64, 0u64),
                 StageSource::Stage { .. } => {
                     // Each consumer materializes its own input file: a
                     // multi-consumer producer is re-encoded per consumer
@@ -174,14 +174,15 @@ impl Pipeline {
                     }
                     let spill = writer.finish()?;
                     let ready = spill.availability.last_vt();
+                    let saved = spill.bytes_saved;
                     let staged =
                         StagedInput { file: spill.file, boundaries: spill.boundaries };
-                    (path, Some(staged), ready)
+                    (path, Some(staged), ready, saved)
                 }
             };
 
             let config = JobConfig { input: input_path, skew: Vec::new(), ..self.base.clone() };
-            let JobOutput { report, result } = Job::new(stage.usecase.clone(), config)?
+            let JobOutput { mut report, result } = Job::new(stage.usecase.clone(), config)?
                 .run_staged(
                     stage.backend,
                     self.nranks,
@@ -189,6 +190,9 @@ impl Pipeline {
                     StageExec { start_vts: start_vts.clone(), input: staged, pipelined: true },
                 )?;
 
+            // The stage consuming a spilled input carries the spill's
+            // compression savings (the write happened on its behalf).
+            report.spill_bytes_saved = spill_saved;
             start_vts = report.rank_elapsed_ns.clone();
             ready_vts.push(report.rank_elapsed_ns.first().copied().unwrap_or(0));
             stages.push(StageReport {

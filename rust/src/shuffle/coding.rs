@@ -1,0 +1,660 @@
+//! XOR packet coding for the coded shuffle (Coded MapReduce, after Li
+//! et al., arXiv 1512.01625).
+//!
+//! Under the repetition placement ([`super::placement`]), every member
+//! of a multicast clique `C` (an `(r+1)`-subset of ranks) holds `r` of
+//! the `r+1` segments exchanged inside the clique: for each `k ∈ C` the
+//! segment destined to `k` comes from batch `C \ {k}`, and every member
+//! but `k` mapped that batch.  Each segment is split into `r` contiguous
+//! *parts*, one per batch member (ordered by the member's position in
+//! the batch), and each clique member multicasts **one packet**: the XOR
+//! of its own part of every segment it holds, zero-padded to the longest
+//! part.  A receiver `k` recomputes every side part locally (it holds
+//! all the other batches), XORs them out, and is left with its own part
+//! — so one transmission serves `r` receivers and the heavy shuffle
+//! volume shrinks by `~r×` on the wire.
+//!
+//! Segments are concatenations of the standard
+//! `| hash | klen | vlen | key | value |` wire records, sorted by
+//! `(hash, key)`; parts split at raw byte offsets (only the reassembled
+//! segment must decode).  Correctness rests on the placement's
+//! determinism contract: all replicas of a batch stage byte-identical
+//! segments, which the decoder verifies via the per-part length headers.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::mapreduce::bucket::OwnedRecord;
+
+use super::placement::CodedPlacement;
+use super::plan::CodedRoute;
+use super::wire::Reader;
+
+/// Segment map a rank builds while draining its batches: encoded heavy
+/// records per `(batch id, destination rank)` — both the source of its
+/// own packets and the side information for decoding its peers'.
+pub type SegmentMap = std::collections::HashMap<(usize, usize), Vec<u8>>;
+
+/// One multicast packet: the XOR of this sender's part of every segment
+/// exchanged in one clique.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Packet {
+    /// Clique members, ascending (`r + 1` ranks).
+    pub clique: Vec<u16>,
+    /// The multicasting member.
+    pub sender: u16,
+    /// `(destination, true part length)` per clique member except the
+    /// sender, ascending by destination.  The length header is what lets
+    /// a receiver truncate the zero-padding off its recovered part.
+    pub parts: Vec<(u16, u32)>,
+    /// XOR of the zero-padded parts (length = longest part).
+    pub payload: Vec<u8>,
+}
+
+/// Byte range of part `i` of an `len`-byte segment split `r` ways
+/// (contiguous, balanced: the first `len % r` parts get the extra byte).
+pub fn part_span(len: usize, r: usize, i: usize) -> std::ops::Range<usize> {
+    debug_assert!(i < r);
+    let base = len / r;
+    let rem = len % r;
+    let start = i * base + i.min(rem);
+    start..start + base + usize::from(i < rem)
+}
+
+/// Position of `rank` in the ascending member list, if present.
+fn member_index(members: &[u16], rank: u16) -> Option<usize> {
+    members.binary_search(&rank).ok()
+}
+
+fn packet_err(detail: &str) -> Error {
+    Error::KvDecode(format!("coded packet: {detail}"))
+}
+
+impl Packet {
+    /// Build the packet `sender` multicasts into its clique from the
+    /// `(destination, part bytes)` list (one entry per other member).
+    pub fn build(clique: Vec<u16>, sender: u16, parts: Vec<(u16, &[u8])>) -> Packet {
+        let max = parts.iter().map(|(_, p)| p.len()).max().unwrap_or(0);
+        let mut payload = vec![0u8; max];
+        for (_, part) in &parts {
+            for (dst, &src) in payload.iter_mut().zip(part.iter()) {
+                *dst ^= src;
+            }
+        }
+        let parts = parts.into_iter().map(|(d, p)| (d, p.len() as u32)).collect();
+        Packet { clique, sender, parts, payload }
+    }
+
+    /// Unicast-equivalent bytes this packet carries (sum of true part
+    /// lengths — the "shuffle-bytes-logical" side of the ledger).
+    pub fn logical_bytes(&self) -> u64 {
+        self.parts.iter().map(|&(_, len)| u64::from(len)).sum()
+    }
+
+    /// Append the length-prefixed wire encoding to `out`:
+    /// `| body_len u32 | nmembers u16 | members… | sender u16 |
+    ///  nparts u16 | (dest u16, len u32)… | payload |`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let body = 2 + self.clique.len() * 2 + 2 + 2 + self.parts.len() * 6
+            + self.payload.len();
+        out.reserve(4 + body);
+        out.extend_from_slice(&(body as u32).to_le_bytes());
+        out.extend_from_slice(&(self.clique.len() as u16).to_le_bytes());
+        for &m in &self.clique {
+            out.extend_from_slice(&m.to_le_bytes());
+        }
+        out.extend_from_slice(&self.sender.to_le_bytes());
+        out.extend_from_slice(&(self.parts.len() as u16).to_le_bytes());
+        for &(dest, len) in &self.parts {
+            out.extend_from_slice(&dest.to_le_bytes());
+            out.extend_from_slice(&len.to_le_bytes());
+        }
+        out.extend_from_slice(&self.payload);
+    }
+
+    /// Total encoded length (the "shuffle-bytes-on-wire" side).
+    pub fn encoded_len(&self) -> usize {
+        4 + 2 + self.clique.len() * 2 + 2 + 2 + self.parts.len() * 6 + self.payload.len()
+    }
+
+    /// Decode one packet body (without the length prefix).
+    fn decode_body(buf: &[u8]) -> Result<Packet> {
+        let mut r = Reader::new(buf, "coded packet");
+        let nmembers = r.u16()? as usize;
+        if nmembers < 2 {
+            return Err(packet_err("clique smaller than a pair"));
+        }
+        let mut clique = Vec::with_capacity(nmembers);
+        for _ in 0..nmembers {
+            clique.push(r.u16()?);
+        }
+        if !clique.windows(2).all(|w| w[0] < w[1]) {
+            return Err(packet_err("clique members not ascending"));
+        }
+        let sender = r.u16()?;
+        if member_index(&clique, sender).is_none() {
+            return Err(packet_err("sender outside its clique"));
+        }
+        let nparts = r.u16()? as usize;
+        if nparts != nmembers - 1 {
+            return Err(packet_err("part count != clique size - 1"));
+        }
+        let mut parts = Vec::with_capacity(nparts);
+        let mut max_len = 0u32;
+        for _ in 0..nparts {
+            let dest = r.u16()?;
+            if dest == sender || member_index(&clique, dest).is_none() {
+                return Err(packet_err("part destination outside the clique"));
+            }
+            let len = r.u32()?;
+            max_len = max_len.max(len);
+            parts.push((dest, len));
+        }
+        if !parts.windows(2).all(|w| w[0].0 < w[1].0) {
+            return Err(packet_err("part destinations not ascending"));
+        }
+        let payload = r.bytes(max_len as usize)?.to_vec();
+        r.finish()?; // payload length must equal the longest part
+        Ok(Packet { clique, sender, parts, payload })
+    }
+
+    /// Recover this rank's part from the packet: XOR out every side part
+    /// (recomputed locally by the caller) and truncate the padding.
+    ///
+    /// `side(dest)` must return the caller's locally-built part of the
+    /// segment destined to `dest` — byte-identical to the sender's, which
+    /// the length headers verify (a mismatch means the replicas diverged).
+    pub fn recover(
+        &self,
+        me: u16,
+        side: &mut dyn FnMut(u16) -> Vec<u8>,
+    ) -> Result<Vec<u8>> {
+        let &(_, my_len) = self
+            .parts
+            .iter()
+            .find(|&&(dest, _)| dest == me)
+            .ok_or_else(|| packet_err("no part destined to this rank"))?;
+        if my_len as usize > self.payload.len() {
+            return Err(packet_err("part length exceeds payload"));
+        }
+        let mut buf = self.payload.clone();
+        for &(dest, len) in &self.parts {
+            if dest == me {
+                continue;
+            }
+            let part = side(dest);
+            if part.len() != len as usize {
+                return Err(packet_err(&format!(
+                    "side part for rank {dest} is {} bytes, header says {len} \
+                     (replica divergence)",
+                    part.len()
+                )));
+            }
+            for (dst, &src) in buf.iter_mut().zip(part.iter()) {
+                *dst ^= src;
+            }
+        }
+        buf.truncate(my_len as usize);
+        Ok(buf)
+    }
+}
+
+/// Encode a batch's records destined to one rank as a segment: sorted by
+/// `(hash, key)` so every replica serializes identical bytes.
+pub fn encode_segment(mut records: Vec<OwnedRecord>) -> Result<Vec<u8>> {
+    records.sort_unstable_by(OwnedRecord::run_cmp);
+    let mut out = Vec::with_capacity(records.iter().map(OwnedRecord::encoded_len).sum());
+    for rec in &records {
+        rec.encode_into(&mut out)?;
+    }
+    Ok(out)
+}
+
+/// Parse a rank's published blob (concatenated encoded packets).
+pub fn decode_packets(blob: &[u8]) -> Result<Vec<Packet>> {
+    let mut out = Vec::new();
+    let mut off = 0usize;
+    while off < blob.len() {
+        if off + 4 > blob.len() {
+            return Err(packet_err("truncated packet length prefix"));
+        }
+        let body_len =
+            u32::from_le_bytes(blob[off..off + 4].try_into().unwrap()) as usize;
+        off += 4;
+        let end = off
+            .checked_add(body_len)
+            .filter(|&e| e <= blob.len())
+            .ok_or_else(|| packet_err("packet body overruns blob"))?;
+        out.push(Packet::decode_body(&blob[off..end])?);
+        off = end;
+    }
+    Ok(out)
+}
+
+/// Build every packet rank `me` must multicast, one per clique with data
+/// (cliques whose segments are all empty are skipped on both sides).
+pub fn build_rank_packets(
+    placement: &CodedPlacement,
+    me: usize,
+    segs: &SegmentMap,
+) -> Vec<Packet> {
+    let r = placement.r();
+    let empty: Vec<u8> = Vec::new();
+    let mut packets = Vec::new();
+    for clique in placement.cliques_of(me) {
+        let mut parts: Vec<(u16, &[u8])> = Vec::with_capacity(r);
+        for &k in clique.iter().filter(|&&k| k as usize != me) {
+            let batch: Vec<u16> = clique.iter().copied().filter(|&x| x != k).collect();
+            let bid = placement.batch_id(&batch).expect("clique minus member is a batch");
+            let seg = segs.get(&(bid, k as usize)).unwrap_or(&empty);
+            let idx = member_index(&batch, me as u16).expect("sender maps this batch");
+            parts.push((k, &seg[part_span(seg.len(), r, idx)]));
+        }
+        if parts.iter().all(|(_, p)| p.is_empty()) {
+            continue;
+        }
+        packets.push(Packet::build(clique, me as u16, parts));
+    }
+    packets
+}
+
+/// Decode everything rank `me` is owed from one peer's packets: for each
+/// shared clique, recover the sender's part of the segment destined to
+/// `me`, using `me`'s own segment map for the side parts.  Returns
+/// `(batch id, part index, bytes)` triples for [`assemble_segments`].
+pub fn decode_rank_parts(
+    placement: &CodedPlacement,
+    me: usize,
+    sender: usize,
+    packets: &[Packet],
+    segs: &SegmentMap,
+) -> Result<Vec<(usize, usize, Vec<u8>)>> {
+    let r = placement.r();
+    let empty: Vec<u8> = Vec::new();
+    let mut out = Vec::new();
+    for packet in packets {
+        if packet.sender as usize != sender {
+            return Err(packet_err("packet sender != publishing rank"));
+        }
+        if member_index(&packet.clique, me as u16).is_none() {
+            continue; // a clique this rank is not part of
+        }
+        if packet.clique.len() != r + 1 {
+            return Err(packet_err("clique size != r + 1"));
+        }
+        // The batch whose segment is destined to me.
+        let my_batch: Vec<u16> =
+            packet.clique.iter().copied().filter(|&x| x as usize != me).collect();
+        let my_bid = placement
+            .batch_id(&my_batch)
+            .ok_or_else(|| packet_err("clique minus receiver is not a batch"))?;
+        let part_idx = member_index(&my_batch, packet.sender)
+            .ok_or_else(|| packet_err("sender not in the receiver's batch"))?;
+        let bytes = packet.recover(me as u16, &mut |dest| {
+            let batch: Vec<u16> =
+                packet.clique.iter().copied().filter(|&x| x != dest).collect();
+            let Some(bid) = placement.batch_id(&batch) else {
+                return Vec::new(); // recover() rejects via the length check
+            };
+            let Some(idx) = member_index(&batch, packet.sender) else {
+                return Vec::new();
+            };
+            let seg = segs.get(&(bid, dest as usize)).unwrap_or(&empty);
+            seg[part_span(seg.len(), r, idx)].to_vec()
+        })?;
+        out.push((my_bid, part_idx, bytes));
+    }
+    Ok(out)
+}
+
+/// Reassemble segments from recovered parts: group by batch, order by
+/// part index, concatenate.  The result decodes with `kv::RecordIter`.
+pub fn assemble_segments(parts: Vec<(usize, usize, Vec<u8>)>) -> Vec<(usize, Vec<u8>)> {
+    let mut by_batch: BTreeMap<usize, Vec<(usize, Vec<u8>)>> = BTreeMap::new();
+    for (bid, idx, bytes) in parts {
+        by_batch.entry(bid).or_default().push((idx, bytes));
+    }
+    by_batch
+        .into_iter()
+        .map(|(bid, mut chunks)| {
+            chunks.sort_by_key(|&(idx, _)| idx);
+            let mut seg = Vec::with_capacity(chunks.iter().map(|(_, b)| b.len()).sum());
+            for (_, bytes) in chunks {
+                seg.extend_from_slice(&bytes);
+            }
+            (bid, seg)
+        })
+        .collect()
+}
+
+/// What one rank's batch drain classifies into (see
+/// [`classify_batches`]): local merges, unicast light parts, and coded
+/// heavy segments, plus the byte ledger entries the shuffle metrics need.
+#[derive(Debug, Default)]
+pub struct CodedShuffle {
+    /// Encoded records destined to this rank (merge straight into the
+    /// reduce table).
+    pub own: Vec<u8>,
+    /// Per-destination encoded light records — only batches where this
+    /// rank holds primary duty contribute (other replicas drop them).
+    pub light: Vec<Vec<u8>>,
+    /// Heavy segments per `(batch id, destination)`, for the coding
+    /// stage *and* as side information when decoding peers' packets.
+    pub segs: SegmentMap,
+    /// Logical bytes absorbed via replication: records this rank merged
+    /// from its own replica that a single-mapping shuffle would have had
+    /// to send it (destination = me ∈ batch, but primary ≠ me).
+    pub replica_local_bytes: u64,
+}
+
+/// Drain this rank's per-batch staging tables and classify every record
+/// by the exactly-once delivery rules of the coded shuffle:
+///
+/// * destination **is this rank** → merge locally (`own`);
+/// * destination is **another batch member** → drop (that member holds
+///   the same replica and merges it itself);
+/// * destination outside the batch, **heavy** bucket → coded segment;
+/// * destination outside the batch, light → unicast, but only from the
+///   batch's primary replica (the others drop it).
+///
+/// Records are sorted by `(hash, key)` before encoding so all replicas
+/// of a batch produce byte-identical segments.
+pub fn classify_batches(
+    placement: &CodedPlacement,
+    route: &CodedRoute,
+    me: usize,
+    tables: &mut [KeyTableSlot],
+) -> Result<CodedShuffle> {
+    let mut out =
+        CodedShuffle { light: vec![Vec::new(); placement.nranks()], ..Default::default() };
+    for &b in placement.batches_of(me) {
+        let members = placement.members(b);
+        let primary = placement.primary(b);
+        let mut records = tables[b].drain_records();
+        records.sort_unstable_by(OwnedRecord::run_cmp);
+        for rec in records {
+            let dest = route.owner(rec.hash, primary);
+            if dest == me {
+                let before = out.own.len();
+                rec.encode_into(&mut out.own)?;
+                if me != primary {
+                    out.replica_local_bytes += (out.own.len() - before) as u64;
+                }
+            } else if members.binary_search(&(dest as u16)).is_ok() {
+                // The destination replica merges it locally.
+            } else if route.is_heavy(rec.hash) {
+                rec.encode_into(out.segs.entry((b, dest)).or_default())?;
+            } else if me == primary {
+                rec.encode_into(&mut out.light[dest])?;
+            }
+        }
+    }
+    // Segment record order follows the (hash, key) sort above, so every
+    // replica's `segs` entries are byte-identical.
+    Ok(out)
+}
+
+/// Alias so `classify_batches` can take the staging tables by slice.
+pub type KeyTableSlot = crate::mapreduce::bucket::KeyTable;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::kv;
+    use crate::shuffle::plan::plan_coded_route;
+    use crate::shuffle::{Route, Sketch};
+
+    fn packet_roundtrip(p: &Packet) -> Packet {
+        let mut blob = Vec::new();
+        p.encode_into(&mut blob);
+        assert_eq!(blob.len(), p.encoded_len());
+        let packets = decode_packets(&blob).unwrap();
+        assert_eq!(packets.len(), 1);
+        packets.into_iter().next().unwrap()
+    }
+
+    #[test]
+    fn part_span_tiles_the_segment() {
+        for len in [0usize, 1, 7, 8, 100, 101] {
+            for r in 1..6 {
+                let mut covered = 0usize;
+                for i in 0..r {
+                    let span = part_span(len, r, i);
+                    assert_eq!(span.start, covered);
+                    covered = span.end;
+                }
+                assert_eq!(covered, len, "len={len} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let p = Packet::build(
+            vec![0, 2, 5],
+            2,
+            vec![(0, b"abcde".as_slice()), (5, b"xy".as_slice())],
+        );
+        assert_eq!(p.payload.len(), 5);
+        assert_eq!(p.logical_bytes(), 7);
+        assert_eq!(packet_roundtrip(&p), p);
+    }
+
+    #[test]
+    fn recover_with_uneven_padding() {
+        // Clique {0,1,2}, r=2.  Sender 1 XORs the part for 0 (5 bytes)
+        // with the part for 2 (2 bytes, zero-padded).
+        let part0 = b"abcde";
+        let part2 = b"xy";
+        let p = Packet::build(vec![0, 1, 2], 1, vec![(0, part0), (2, part2)]);
+        // Receiver 0 knows part2 locally, recovers part0.
+        let got0 = p.recover(0, &mut |d| {
+            assert_eq!(d, 2);
+            part2.to_vec()
+        });
+        assert_eq!(got0.unwrap(), part0);
+        // Receiver 2 knows part0 locally, recovers part2 (truncated).
+        let got2 = p.recover(2, &mut |_| part0.to_vec());
+        assert_eq!(got2.unwrap(), part2);
+    }
+
+    #[test]
+    fn recover_detects_replica_divergence() {
+        let p = Packet::build(vec![0, 1, 2], 1, vec![(0, b"abcde"), (2, b"xy")]);
+        let err = p.recover(0, &mut |_| b"x".to_vec()).unwrap_err();
+        assert!(err.to_string().contains("replica divergence"), "{err}");
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let p = Packet::build(vec![0, 1], 0, vec![(1, b"hello")]);
+        let mut blob = Vec::new();
+        p.encode_into(&mut blob);
+        // Truncated blob.
+        assert!(decode_packets(&blob[..blob.len() - 1]).is_err());
+        // Sender outside the clique.
+        let mut bad = blob.clone();
+        bad[4 + 2 + 4] = 9; // sender field
+        assert!(decode_packets(&bad).is_err());
+        assert!(decode_packets(&[1, 2, 3]).is_err());
+    }
+
+    fn mk_records(tag: u64, n: usize) -> Vec<OwnedRecord> {
+        (0..n as u64)
+            .map(|i| OwnedRecord {
+                hash: tag * 1000 + i,
+                key: format!("k{tag}-{i}").into_bytes().into(),
+                value: crate::mapreduce::kv::Value::U64(i + 1),
+            })
+            .collect()
+    }
+
+    /// End-to-end: every rank builds segments + packets; every rank
+    /// decodes every peer's packets; reassembled segments match the
+    /// originals byte for byte.
+    #[test]
+    fn clique_exchange_roundtrip() {
+        let n = 4;
+        let r = 2;
+        let p = CodedPlacement::new(n, r).unwrap();
+        // One segment per (batch, dest ∉ batch), deterministic content —
+        // every rank derives the same map (replica determinism).
+        let seg_map = || -> SegmentMap {
+            let mut m = SegmentMap::new();
+            for b in 0..p.nbatches() {
+                for dest in 0..n {
+                    if p.members(b).binary_search(&(dest as u16)).is_err() {
+                        // Uneven lengths across batches exercise padding.
+                        let recs = mk_records((b * n + dest) as u64, 1 + (b + dest) % 3);
+                        m.insert((b, dest), encode_segment(recs).unwrap());
+                    }
+                }
+            }
+            m
+        };
+        let full = seg_map();
+        // Rank views: only batches the rank belongs to.
+        let view = |rank: usize| -> SegmentMap {
+            full.iter()
+                .filter(|((b, _), _)| p.members(*b).binary_search(&(rank as u16)).is_ok())
+                .map(|(k, v)| (*k, v.clone()))
+                .collect()
+        };
+        let packets: Vec<Vec<Packet>> =
+            (0..n).map(|rank| build_rank_packets(&p, rank, &view(rank))).collect();
+        for me in 0..n {
+            let mine = view(me);
+            let mut parts = Vec::new();
+            for s in 0..n {
+                if s == me {
+                    continue;
+                }
+                parts.extend(decode_rank_parts(&p, me, s, &packets[s], &mine).unwrap());
+            }
+            let segments = assemble_segments(parts);
+            // Every segment destined to me must arrive byte-identical.
+            let expected: Vec<(usize, &Vec<u8>)> = (0..p.nbatches())
+                .filter_map(|b| full.get(&(b, me)).map(|s| (b, s)))
+                .collect();
+            assert_eq!(segments.len(), expected.len(), "rank {me}");
+            for ((gb, got), (eb, want)) in segments.iter().zip(&expected) {
+                assert_eq!((gb, &got), (eb, want), "rank {me} batch {gb}");
+                // And it decodes as records.
+                assert!(kv::RecordIter::new(got).all(|r| r.is_ok()));
+            }
+        }
+    }
+
+    /// Wire savings on the heavy path: total packet payload bytes must be
+    /// well under the unicast-equivalent segment bytes (~r× smaller).
+    #[test]
+    fn coded_wire_bytes_shrink_versus_unicast() {
+        let n = 6;
+        let r = 3;
+        let p = CodedPlacement::new(n, r).unwrap();
+        let mut full = SegmentMap::new();
+        for b in 0..p.nbatches() {
+            for dest in 0..n {
+                if p.members(b).binary_search(&(dest as u16)).is_err() {
+                    full.insert((b, dest), vec![0xAB; 3000 + (b * 7 + dest) % 90]);
+                }
+            }
+        }
+        let mut wire = 0u64;
+        let mut logical = 0u64;
+        for rank in 0..n {
+            let view: SegmentMap = full
+                .iter()
+                .filter(|((b, _), _)| p.members(*b).binary_search(&(rank as u16)).is_ok())
+                .map(|(k, v)| (*k, v.clone()))
+                .collect();
+            for packet in build_rank_packets(&p, rank, &view) {
+                wire += packet.payload.len() as u64;
+                logical += packet.logical_bytes();
+            }
+        }
+        let unicast: u64 = full.values().map(|s| s.len() as u64).sum();
+        assert_eq!(logical, unicast, "every segment byte is carried exactly once");
+        let gain = unicast as f64 / wire as f64;
+        assert!(gain > (r as f64) * 0.95, "gain {gain:.2} at r={r}");
+    }
+
+    #[test]
+    fn classify_routes_exactly_once() {
+        let n = 4;
+        let r = 2;
+        let p = CodedPlacement::new(n, r).unwrap();
+        // A sketch where every bucket is heavy (all mass in few buckets).
+        let mut sketch = Sketch::new();
+        for h in 0..64u64 {
+            sketch.observe(h, 1000);
+        }
+        let Route::Coded(cr) = plan_coded_route(&sketch, n, r) else { panic!() };
+        // Fill batch tables identically on two member ranks.
+        let fill = |tables: &mut Vec<KeyTableSlot>| {
+            for b in 0..p.nbatches() {
+                for i in 0..40u64 {
+                    let h = b as u64 * 64 + i;
+                    tables[b].merge(
+                        h,
+                        format!("w{h}").as_bytes(),
+                        &1u64.to_le_bytes(),
+                        &crate::mapreduce::kv::SumOps,
+                    );
+                }
+            }
+        };
+        let mut shuffles = Vec::new();
+        for me in 0..n {
+            let mut tables: Vec<KeyTableSlot> =
+                (0..p.nbatches()).map(|_| KeyTableSlot::new()).collect();
+            fill(&mut tables);
+            shuffles.push(classify_batches(&p, &cr, me, &mut tables).unwrap());
+        }
+        // Replica determinism: members of a batch built identical segments.
+        for b in 0..p.nbatches() {
+            for dest in 0..n {
+                let views: Vec<_> = p
+                    .members(b)
+                    .iter()
+                    .map(|&m| shuffles[m as usize].segs.get(&(b, dest)))
+                    .collect();
+                assert!(views.windows(2).all(|w| w[0] == w[1]), "batch {b} dest {dest}");
+            }
+        }
+        // Exactly-once: per destination, own + decoded segments must hold
+        // each key exactly once (each batch's copy counted once).
+        for me in 0..n {
+            let mine = &shuffles[me].segs;
+            let packets: Vec<Vec<Packet>> = (0..n)
+                .map(|s| build_rank_packets(&p, s, &shuffles[s].segs))
+                .collect();
+            let mut parts = Vec::new();
+            for s in 0..n {
+                if s != me {
+                    parts.extend(decode_rank_parts(&p, me, s, &packets[s], mine).unwrap());
+                }
+            }
+            let mut hashes: Vec<u64> = kv::RecordIter::new(&shuffles[me].own)
+                .map(|r| r.unwrap().hash)
+                .collect();
+            for (_, seg) in assemble_segments(parts) {
+                hashes.extend(kv::RecordIter::new(&seg).map(|r| r.unwrap().hash));
+            }
+            // Every key of every batch routed to me arrives exactly once
+            // per batch that produced it.
+            let mut expected = Vec::new();
+            for b in 0..p.nbatches() {
+                for i in 0..40u64 {
+                    let h = b as u64 * 64 + i;
+                    if cr.owner(h, p.primary(b)) == me {
+                        expected.push(h);
+                    }
+                }
+            }
+            hashes.sort_unstable();
+            expected.sort_unstable();
+            assert_eq!(hashes, expected, "rank {me}");
+        }
+    }
+}

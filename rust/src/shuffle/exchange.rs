@@ -37,9 +37,11 @@ const C_SKETCH_DISP: u64 = 0;
 const C_SKETCH_LEN: u64 = 8; // stored as len + 1; 0 = unpublished
 const C_ROUTE_DISP: u64 = 16;
 const C_ROUTE_LEN: u64 = 24; // stored as len + 1; 0 = unpublished
+const C_CODED_DISP: u64 = 32; // coded-packet blob (coded route only)
+const C_CODED_LEN: u64 = 40; // stored as len + 1; 0 = unpublished
 
 /// Pad attached at displacement 0 of every region (see above).
-pub const CELLS_PAD: usize = 32;
+pub const CELLS_PAD: usize = 48;
 
 /// The planning rank.
 pub const PLANNER: usize = 0;
@@ -95,6 +97,19 @@ pub fn exchange_and_plan(
     sketch: &Sketch,
     split_ways: usize,
 ) -> Result<Route> {
+    let n = ctx.nranks();
+    exchange_and_plan_with(ctx, win, sketch, |merged| plan_route(merged, n, split_ways))
+}
+
+/// [`exchange_and_plan`] generalized over the planner: the coded route
+/// shares the whole exchange protocol and differs only in the pure
+/// function rank [`PLANNER`] runs over the merged sketch.
+pub fn exchange_and_plan_with(
+    ctx: &RankCtx,
+    win: &Window,
+    sketch: &Sketch,
+    planner: impl FnOnce(&Sketch) -> Route,
+) -> Result<Route> {
     let me = ctx.rank();
     let n = ctx.nranks();
     publish(ctx, win, C_SKETCH_DISP, C_SKETCH_LEN, &sketch.encode())?;
@@ -107,12 +122,36 @@ pub fn exchange_and_plan(
                 merged.merge(&Sketch::decode(&fetch(ctx, win, s, C_SKETCH_DISP, C_SKETCH_LEN)?)?);
             }
         }
-        let route = plan_route(&merged, n, split_ways);
+        let route = planner(&merged);
         publish(ctx, win, C_ROUTE_DISP, C_ROUTE_LEN, &route.encode())?;
         Ok(route)
     } else {
         Route::decode(&fetch(ctx, win, PLANNER, C_ROUTE_DISP, C_ROUTE_LEN)?)
     }
+}
+
+/// Publish this rank's coded-packet blob (may be empty — receivers treat
+/// a zero-length blob as "no packets from this sender").  The multicast
+/// transmission cost is charged by the caller per packet
+/// (`NetModel::multicast_cost`); the publication itself is a local
+/// attach + put plus the two atomic flag stores.
+pub fn publish_coded(ctx: &RankCtx, win: &Window, blob: &[u8]) -> Result<()> {
+    publish(ctx, win, C_CODED_DISP, C_CODED_LEN, blob)
+}
+
+/// Wait for `target`'s coded blob and pull it at multicast cost: the
+/// payload bytes were charged once at the sender, so the reader pays
+/// only initiation latency (`Window::get_multicast`).  `wait_atomic`
+/// still carries the publisher's clock — a receiver cannot decode
+/// packets before they causally exist.
+pub fn fetch_coded(ctx: &RankCtx, win: &Window, target: usize) -> Result<Vec<u8>> {
+    let len = win.wait_atomic(&ctx.clock, target, C_CODED_LEN, |v| v > 0)? - 1;
+    let disp = win.atomic_load(&ctx.clock, target, C_CODED_DISP)?;
+    let mut buf = vec![0u8; len as usize];
+    if !buf.is_empty() {
+        win.get_multicast(&ctx.clock, target, disp, &mut buf)?;
+    }
+    Ok(buf)
 }
 
 /// Merge a set of encoded sketches (rank order) into one view — the
@@ -171,6 +210,25 @@ mod tests {
         // The planner (and therefore everyone) is causally after the
         // straggler's publication.
         assert!(outs.iter().all(|&t| t >= 5_000_000), "clocks {outs:?}");
+    }
+
+    #[test]
+    fn coded_blob_roundtrips_including_empty() {
+        let outs = Universe::new(3, CostModel::default()).run(|ctx| {
+            let win = Window::create(ctx, 0);
+            init_window(&win);
+            ctx.barrier();
+            // Rank 1 has nothing to multicast.
+            let blob: Vec<u8> =
+                if ctx.rank() == 1 { Vec::new() } else { vec![ctx.rank() as u8; 100] };
+            publish_coded(ctx, &win, &blob).unwrap();
+            (0..3).map(|s| fetch_coded(ctx, &win, s).unwrap()).collect::<Vec<_>>()
+        });
+        for got in &outs {
+            assert_eq!(got[0], vec![0u8; 100]);
+            assert_eq!(got[1], Vec::<u8>::new());
+            assert_eq!(got[2], vec![2u8; 100]);
+        }
     }
 
     #[test]

@@ -25,11 +25,32 @@
 //! Both backends consume the resulting [`plan::Route`] through
 //! `KeyTable::drain_routed`; `--route modulo` (the default) short-
 //! circuits to the legacy behavior bit-for-bit.  See DESIGN.md §7.
+//!
+//! The **coded** route (`--route coded[:r=R]`) layers Coded MapReduce
+//! (Li et al., 1512.01625) on top of the same machinery:
+//!
+//! * [`placement`] — replicates every map task onto `r` ranks (one batch
+//!   per `r`-subset of ranks) so shuffle segments are known to whole
+//!   multicast cliques;
+//! * [`coding`] — XOR-codes the heavy-bucket segments into per-clique
+//!   packets, each serving `r` receivers at once (~`r×` less shuffle
+//!   volume on the wire); light buckets unicast from each batch's
+//!   primary replica through the planned path.  See DESIGN.md §8.
 
+pub mod coding;
 pub mod exchange;
+pub mod placement;
 pub mod plan;
 pub mod sketch;
 pub(crate) mod wire;
 
-pub use plan::{plan_route, route_bucket_of, PlannedRoute, Route, ROUTE_BUCKETS};
+pub use coding::{
+    assemble_segments, build_rank_packets, classify_batches, decode_packets,
+    decode_rank_parts, encode_segment, CodedShuffle, Packet,
+};
+pub use placement::CodedPlacement;
+pub use plan::{
+    plan_coded_route, plan_route, route_bucket_of, CodedRoute, PlannedRoute, Route,
+    ROUTE_BUCKETS,
+};
 pub use sketch::{Sketch, SKETCH_CAPACITY};

@@ -1,0 +1,311 @@
+//! Repetition placement for the coded shuffle (Coded MapReduce, after
+//! Li et al., arXiv 1512.01625).
+//!
+//! The placement replicates map work so the shuffle can be coded: map
+//! tasks are grouped into *batches*, one batch per `r`-subset of ranks
+//! (every subset, in lexicographic order), and task `t` belongs to batch
+//! `t % nbatches`.  Every member of a batch maps all of the batch's
+//! tasks — `r×` redundant compute — which buys two things:
+//!
+//! * any record whose reduce destination happens to be a batch member is
+//!   delivered for free (the destination mapped it itself), and
+//! * for every other destination `k`, the segment of batch `S` destined
+//!   to `k` is known to *all* `r` members of `S`, so the multicast clique
+//!   `S ∪ {k}` can exchange XOR-coded packets (see [`super::coding`])
+//!   where one transmission serves `r` receivers at once.
+//!
+//! Cliques are exactly the `(r+1)`-subsets of ranks: inside clique `C`,
+//! each member `k` is owed one segment (from batch `C \ {k}`), and each
+//! member sends one packet combining `1/r`-th of every segment it helped
+//! map.  The structure is fully determined by `(nranks, r)`, so every
+//! rank derives the same placement with no coordination.
+//!
+//! Determinism contract: replicas of a batch must stage *byte-identical*
+//! output for the coding stage to XOR correctly, so batch members
+//! process the batch's tasks in ascending task order and job stealing is
+//! rejected under the coded route (see `JobConfig::validate`).
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Upper bound on `C(nranks, r)`: the placement materializes every batch
+/// and task ids spread over batches by modulo, so an astronomically fine
+/// placement would only fragment tasks.  4096 matches `ROUTE_BUCKETS`.
+pub const MAX_BATCHES: usize = 4096;
+
+/// The repetition placement: batches, their members, and clique lookup.
+#[derive(Debug, Clone)]
+pub struct CodedPlacement {
+    nranks: usize,
+    r: usize,
+    /// All `r`-subsets of `0..nranks`, lexicographic, members ascending.
+    batches: Vec<Vec<u16>>,
+    /// Batch members → batch id (clique decode looks up `C \ {k}`).
+    index: HashMap<Vec<u16>, usize>,
+    /// Batch ids containing each rank, ascending.
+    rank_batches: Vec<Vec<usize>>,
+}
+
+/// `C(n, k)` saturating at `usize::MAX` (guard arithmetic only).
+fn binomial(n: usize, k: usize) -> usize {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut acc: usize = 1;
+    for i in 0..k {
+        acc = match acc.checked_mul(n - i) {
+            Some(v) => v / (i + 1),
+            None => return usize::MAX,
+        };
+    }
+    acc
+}
+
+/// All `k`-subsets of `0..n` in lexicographic order, members ascending.
+fn subsets(n: usize, k: usize) -> Vec<Vec<u16>> {
+    let mut out = Vec::new();
+    if k == 0 || k > n {
+        return out;
+    }
+    let mut cur: Vec<u16> = (0..k as u16).collect();
+    loop {
+        out.push(cur.clone());
+        // Advance to the next combination.
+        let mut i = k;
+        loop {
+            if i == 0 {
+                return out;
+            }
+            i -= 1;
+            if cur[i] < (n - k + i) as u16 {
+                break;
+            }
+        }
+        cur[i] += 1;
+        for j in i + 1..k {
+            cur[j] = cur[j - 1] + 1;
+        }
+    }
+}
+
+impl CodedPlacement {
+    /// Build the placement for `nranks` with replication factor `r`.
+    pub fn new(nranks: usize, r: usize) -> Result<CodedPlacement> {
+        if r == 0 {
+            return Err(Error::Config("coded route needs r >= 1".into()));
+        }
+        if r > nranks {
+            return Err(Error::Config(format!(
+                "coded replication r={r} exceeds world size {nranks}"
+            )));
+        }
+        let nbatches = binomial(nranks, r);
+        if nbatches > MAX_BATCHES {
+            return Err(Error::Config(format!(
+                "coded placement C({nranks},{r}) = {nbatches} batches exceeds {MAX_BATCHES}; \
+                 lower r or the rank count"
+            )));
+        }
+        let batches = subsets(nranks, r);
+        let mut index = HashMap::with_capacity(batches.len());
+        let mut rank_batches = vec![Vec::new(); nranks];
+        for (b, members) in batches.iter().enumerate() {
+            index.insert(members.clone(), b);
+            for &m in members {
+                rank_batches[m as usize].push(b);
+            }
+        }
+        Ok(CodedPlacement { nranks, r, batches, index, rank_batches })
+    }
+
+    /// World size.
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    /// Replication factor.
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    /// Number of batches (`C(nranks, r)`).
+    pub fn nbatches(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Batch a task belongs to.
+    #[inline]
+    pub fn batch_of_task(&self, task_id: usize) -> usize {
+        task_id % self.batches.len()
+    }
+
+    /// Members of batch `b`, ascending.
+    pub fn members(&self, b: usize) -> &[u16] {
+        &self.batches[b]
+    }
+
+    /// The batch member responsible for this batch's *unicast* output
+    /// (light records and the shuffle sketch): rotates with the batch id
+    /// so primary duty spreads evenly over members.
+    pub fn primary(&self, b: usize) -> usize {
+        self.batches[b][b % self.r] as usize
+    }
+
+    /// Batch ids `rank` is a member of, ascending.
+    pub fn batches_of(&self, rank: usize) -> &[usize] {
+        &self.rank_batches[rank]
+    }
+
+    /// Batch id of an exact member set (ascending), if it is a batch.
+    pub fn batch_id(&self, members: &[u16]) -> Option<usize> {
+        self.index.get(members).copied()
+    }
+
+    /// All multicast cliques containing `rank`: the `(r+1)`-subsets of
+    /// ranks that include it, lexicographic.  Empty when `r = nranks`
+    /// (every rank already maps everything — nothing to shuffle).
+    pub fn cliques_of(&self, rank: usize) -> Vec<Vec<u16>> {
+        let k = self.r + 1;
+        if k > self.nranks {
+            return Vec::new();
+        }
+        // Choose the other r members among the remaining ranks, then
+        // insert `rank` in sorted position.
+        let others: Vec<u16> =
+            (0..self.nranks as u16).filter(|&x| x as usize != rank).collect();
+        subsets(others.len(), self.r)
+            .into_iter()
+            .map(|pick| {
+                let mut clique: Vec<u16> =
+                    pick.into_iter().map(|i| others[i as usize]).collect();
+                let pos = clique.partition_point(|&x| (x as usize) < rank);
+                clique.insert(pos, rank as u16);
+                clique
+            })
+            .collect()
+    }
+
+    /// Task ids in `0..ntasks` that `rank` must map, ascending — the
+    /// replica processing order every batch member shares (determinism
+    /// contract above).
+    pub fn tasks_of(&self, rank: usize, ntasks: usize) -> Vec<usize> {
+        (0..ntasks)
+            .filter(|&t| {
+                self.batches[self.batch_of_task(t)].binary_search(&(rank as u16)).is_ok()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_are_all_r_subsets() {
+        let p = CodedPlacement::new(5, 2).unwrap();
+        assert_eq!(p.nbatches(), 10); // C(5,2)
+        // Lexicographic, ascending members, all distinct.
+        for b in 0..p.nbatches() {
+            let m = p.members(b);
+            assert_eq!(m.len(), 2);
+            assert!(m[0] < m[1]);
+        }
+        assert_eq!(p.members(0), &[0, 1]);
+        assert_eq!(p.members(9), &[3, 4]);
+    }
+
+    #[test]
+    fn every_rank_maps_its_share_of_batches() {
+        let p = CodedPlacement::new(6, 3).unwrap();
+        // Each rank belongs to C(5,2) = 10 of the C(6,3) = 20 batches.
+        for rank in 0..6 {
+            assert_eq!(p.batches_of(rank).len(), 10);
+            for &b in p.batches_of(rank) {
+                assert!(p.members(b).contains(&(rank as u16)));
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_cover_every_task_r_times() {
+        let p = CodedPlacement::new(4, 2).unwrap();
+        let ntasks = 23;
+        let mut coverage = vec![0usize; ntasks];
+        for rank in 0..4 {
+            for t in p.tasks_of(rank, ntasks) {
+                coverage[t] += 1;
+            }
+        }
+        assert!(coverage.iter().all(|&c| c == 2), "{coverage:?}");
+    }
+
+    #[test]
+    fn primary_is_a_member_and_rotates() {
+        let p = CodedPlacement::new(5, 2).unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for b in 0..p.nbatches() {
+            let pr = p.primary(b);
+            assert!(p.members(b).contains(&(pr as u16)));
+            seen.insert(pr);
+        }
+        assert!(seen.len() > 1, "primary duty must not pile on one rank");
+    }
+
+    #[test]
+    fn cliques_contain_rank_and_match_batches() {
+        let p = CodedPlacement::new(5, 2).unwrap();
+        let cliques = p.cliques_of(3);
+        assert_eq!(cliques.len(), 6); // C(4,2)
+        for c in &cliques {
+            assert_eq!(c.len(), 3);
+            assert!(c.contains(&3));
+            assert!(c.windows(2).all(|w| w[0] < w[1]));
+            // Removing any member leaves a valid batch.
+            for &k in c {
+                let rest: Vec<u16> = c.iter().copied().filter(|&x| x != k).collect();
+                assert!(p.batch_id(&rest).is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn r_equal_nranks_has_no_cliques() {
+        let p = CodedPlacement::new(3, 3).unwrap();
+        assert_eq!(p.nbatches(), 1);
+        assert!(p.cliques_of(0).is_empty());
+    }
+
+    #[test]
+    fn r_one_degenerates_to_modulo_task_striping() {
+        let p = CodedPlacement::new(4, 1).unwrap();
+        assert_eq!(p.nbatches(), 4);
+        for t in 0..12 {
+            let b = p.batch_of_task(t);
+            assert_eq!(p.members(b), &[(t % 4) as u16]);
+            assert_eq!(p.primary(b), t % 4);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_parameters() {
+        assert!(CodedPlacement::new(4, 0).is_err());
+        assert!(CodedPlacement::new(4, 5).is_err());
+        // C(40, 10) >> MAX_BATCHES.
+        assert!(CodedPlacement::new(40, 10).is_err());
+    }
+
+    #[test]
+    fn binomial_matches_pascal() {
+        assert_eq!(binomial(8, 4), 70);
+        assert_eq!(binomial(8, 0), 1);
+        assert_eq!(binomial(3, 5), 0);
+        for n in 1..12usize {
+            for k in 1..n {
+                assert_eq!(binomial(n, k), binomial(n - 1, k - 1) + binomial(n - 1, k));
+            }
+        }
+    }
+}

@@ -47,6 +47,17 @@ pub fn route_bucket_of(hash: u64) -> usize {
 /// Most heavy-hitter keys a plan will split.
 pub const MAX_SPLITS: usize = 16;
 
+/// Leading-u16 marker distinguishing a coded route encoding from a
+/// planned one (a planned encoding starts with `nranks`, which the
+/// planner caps below `u16::MAX`).
+const CODED_MARKER: u16 = 0xFFFF;
+
+/// Fraction of total sketch mass routed through the coded (multicast)
+/// path: buckets are taken heaviest-first until they cover 9/10 of the
+/// observed weight; the light tail falls through to unicast routing.
+const HEAVY_MASS_NUM: u128 = 9;
+const HEAVY_MASS_DEN: u128 = 10;
+
 /// A bucket→rank routing decision, consumed by both backends' shuffles.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Route {
@@ -58,6 +69,40 @@ pub enum Route {
     },
     /// A planned route (bin-packed table + split heavy hitters).
     Planned(PlannedRoute),
+    /// A coded route: planned bucket table plus the heavy-bucket set
+    /// whose records travel as XOR-coded multicast packets (see
+    /// [`super::coding`]); light buckets fall through to unicast.
+    Coded(CodedRoute),
+}
+
+/// The coded planner's output: an LPT-balanced bucket table (never
+/// split — the coded delivery rules need `owner` to be a pure function
+/// of the hash) plus the heavy-bucket bitmap and replication factor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodedRoute {
+    /// The underlying planned route; `splits` is always empty.
+    pub base: PlannedRoute,
+    /// Replication factor of the map placement.
+    pub r: usize,
+    /// Heavy-bucket bitmap, one bit per route bucket
+    /// (`ROUTE_BUCKETS / 64` words).
+    pub heavy: Vec<u64>,
+}
+
+impl CodedRoute {
+    /// Owning rank for a record of `hash` (source-independent: coded
+    /// routes never split keys, so every replica routes identically).
+    #[inline]
+    pub fn owner(&self, hash: u64, _source: usize) -> usize {
+        self.base.table[route_bucket_of(hash)] as usize
+    }
+
+    /// Whether this hash's bucket shuffles through the coded path.
+    #[inline]
+    pub fn is_heavy(&self, hash: u64) -> bool {
+        let b = route_bucket_of(hash);
+        self.heavy[b / 64] >> (b % 64) & 1 != 0
+    }
 }
 
 /// The planner's output.
@@ -84,6 +129,7 @@ impl Route {
         match self {
             Route::Modulo { nranks } => *nranks,
             Route::Planned(p) => p.planned_loads.len(),
+            Route::Coded(c) => c.base.planned_loads.len(),
         }
     }
 
@@ -105,6 +151,7 @@ impl Route {
                 }
                 p.table[route_bucket_of(hash)] as usize
             }
+            Route::Coded(c) => c.owner(hash, source),
         }
     }
 
@@ -114,19 +161,32 @@ impl Route {
         match self {
             Route::Modulo { .. } => None,
             Route::Planned(p) => p.planned_loads.get(rank).copied(),
+            Route::Coded(c) => c.base.planned_loads.get(rank).copied(),
         }
     }
 
-    /// Wire encoding (window publication):
+    /// Wire encoding (window publication).  Planned routes:
     /// `| nranks: u16 | nsplits: u16 | table: ROUTE_BUCKETS * u16 |
     ///  loads: nranks * u64 | nsplits * (hash u64, ways u16, ways * u16) |`.
-    /// Only planned routes are published; encoding a modulo route is a
-    /// caller bug.
+    /// Coded routes prefix the same body with
+    /// `| 0xFFFF: u16 | r: u16 | heavy: (ROUTE_BUCKETS/64) * u64 |`.
+    /// Only planned/coded routes are published; encoding a modulo route
+    /// is a caller bug.
     pub fn encode(&self) -> Vec<u8> {
-        let Route::Planned(p) = self else {
-            unreachable!("only planned routes are published");
+        let mut out = Vec::new();
+        let p = match self {
+            Route::Modulo { .. } => unreachable!("only planned routes are published"),
+            Route::Planned(p) => p,
+            Route::Coded(c) => {
+                out.extend_from_slice(&CODED_MARKER.to_le_bytes());
+                out.extend_from_slice(&(c.r as u16).to_le_bytes());
+                for &w in &c.heavy {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+                &c.base
+            }
         };
-        let mut out = Vec::with_capacity(4 + ROUTE_BUCKETS * 2 + p.planned_loads.len() * 8);
+        out.reserve(4 + ROUTE_BUCKETS * 2 + p.planned_loads.len() * 8);
         out.extend_from_slice(&(p.planned_loads.len() as u16).to_le_bytes());
         out.extend_from_slice(&(p.splits.len() as u16).to_le_bytes());
         for &r in &p.table {
@@ -148,46 +208,73 @@ impl Route {
     /// Decode a route published by [`Route::encode`].
     pub fn decode(buf: &[u8]) -> Result<Route> {
         let mut r = Reader::new(buf, "route");
+        let first = r.u16()?;
+        if first != CODED_MARKER {
+            let p = decode_planned(&mut r, first as usize)?;
+            r.finish()?;
+            return Ok(Route::Planned(p));
+        }
+        let rep = r.u16()? as usize;
+        if rep == 0 {
+            return Err(r.err("coded route with r = 0"));
+        }
+        let mut heavy = Vec::with_capacity(ROUTE_BUCKETS / 64);
+        for _ in 0..ROUTE_BUCKETS / 64 {
+            heavy.push(r.u64()?);
+        }
         let nranks = r.u16()? as usize;
-        let nsplits = r.u16()? as usize;
-        if nranks == 0 {
-            return Err(r.err("zero ranks"));
+        let base = decode_planned(&mut r, nranks)?;
+        if rep > base.planned_loads.len() {
+            return Err(r.err("coded route r exceeds world size"));
         }
-        let mut table = Vec::with_capacity(ROUTE_BUCKETS);
-        for _ in 0..ROUTE_BUCKETS {
-            let owner = r.u16()?;
-            if owner as usize >= nranks {
-                return Err(r.err(&format!("bucket owner {owner} >= {nranks}")));
-            }
-            table.push(owner);
-        }
-        let mut planned_loads = Vec::with_capacity(nranks);
-        for _ in 0..nranks {
-            planned_loads.push(r.u64()?);
-        }
-        let mut splits = Vec::with_capacity(nsplits);
-        for _ in 0..nsplits {
-            let hash = r.u64()?;
-            let ways = r.u16()? as usize;
-            if ways == 0 {
-                return Err(r.err("zero-way split"));
-            }
-            let mut targets = Vec::with_capacity(ways);
-            for _ in 0..ways {
-                let t = r.u16()?;
-                if t as usize >= nranks {
-                    return Err(r.err(&format!("split target {t} >= {nranks}")));
-                }
-                targets.push(t);
-            }
-            splits.push((hash, targets));
-        }
-        if !splits.windows(2).all(|w| w[0].0 < w[1].0) {
-            return Err(r.err("splits not sorted by hash"));
+        if !base.splits.is_empty() {
+            return Err(r.err("coded route must not split keys"));
         }
         r.finish()?;
-        Ok(Route::Planned(PlannedRoute { table, splits, planned_loads }))
+        Ok(Route::Coded(CodedRoute { base, r: rep, heavy }))
     }
+}
+
+/// Decode a planned-route body whose leading `nranks` field has already
+/// been consumed (shared by the planned and coded framings).
+fn decode_planned(r: &mut Reader<'_>, nranks: usize) -> Result<PlannedRoute> {
+    let nsplits = r.u16()? as usize;
+    if nranks == 0 {
+        return Err(r.err("zero ranks"));
+    }
+    let mut table = Vec::with_capacity(ROUTE_BUCKETS);
+    for _ in 0..ROUTE_BUCKETS {
+        let owner = r.u16()?;
+        if owner as usize >= nranks {
+            return Err(r.err(&format!("bucket owner {owner} >= {nranks}")));
+        }
+        table.push(owner);
+    }
+    let mut planned_loads = Vec::with_capacity(nranks);
+    for _ in 0..nranks {
+        planned_loads.push(r.u64()?);
+    }
+    let mut splits = Vec::with_capacity(nsplits);
+    for _ in 0..nsplits {
+        let hash = r.u64()?;
+        let ways = r.u16()? as usize;
+        if ways == 0 {
+            return Err(r.err("zero-way split"));
+        }
+        let mut targets = Vec::with_capacity(ways);
+        for _ in 0..ways {
+            let t = r.u16()?;
+            if t as usize >= nranks {
+                return Err(r.err(&format!("split target {t} >= {nranks}")));
+            }
+            targets.push(t);
+        }
+        splits.push((hash, targets));
+    }
+    if !splits.windows(2).all(|w| w[0].0 < w[1].0) {
+        return Err(r.err("splits not sorted by hash"));
+    }
+    Ok(PlannedRoute { table, splits, planned_loads })
 }
 
 /// Plan a route for `nranks` from a merged sketch, splitting heavy
@@ -244,6 +331,33 @@ pub fn plan_route(sketch: &Sketch, nranks: usize, split_ways: usize) -> Route {
     splits.sort_by_key(|s| s.0);
 
     Route::Planned(PlannedRoute { table, splits, planned_loads: loads })
+}
+
+/// Plan a coded route for `nranks` with replication factor `r` from a
+/// merged sketch.  The bucket table is the `split_ways = 1` LPT plan
+/// (coded delivery needs `owner` to be source-independent); the heavy
+/// bitmap marks the buckets that cover [`HEAVY_MASS_NUM`]/[`HEAVY_MASS_DEN`]
+/// of the observed mass, heaviest first — those shuffle as XOR-coded
+/// multicast packets, the light tail unicasts from each batch's primary
+/// replica.  Deterministic, like [`plan_route`].
+pub fn plan_coded_route(sketch: &Sketch, nranks: usize, r: usize) -> Route {
+    let Route::Planned(base) = plan_route(sketch, nranks, 1) else {
+        unreachable!("plan_route returns a planned route");
+    };
+    let weights = sketch.buckets();
+    let total = sketch.total() as u128;
+    let mut order: Vec<usize> = (0..ROUTE_BUCKETS).collect();
+    order.sort_by(|&a, &b| weights[b].cmp(&weights[a]).then_with(|| a.cmp(&b)));
+    let mut heavy = vec![0u64; ROUTE_BUCKETS / 64];
+    let mut cum = 0u128;
+    for b in order {
+        if weights[b] == 0 || cum * HEAVY_MASS_DEN >= total * HEAVY_MASS_NUM {
+            break;
+        }
+        cum += weights[b] as u128;
+        heavy[b / 64] |= 1 << (b % 64);
+    }
+    Route::Coded(CodedRoute { base, r, heavy })
 }
 
 #[inline]
@@ -353,6 +467,65 @@ mod tests {
         enc[5] = 0x00;
         assert!(Route::decode(&enc).is_err());
         assert!(Route::decode(&[0, 0]).is_err());
+    }
+
+    #[test]
+    fn coded_route_marks_heavy_mass_and_never_splits() {
+        let mut s = Sketch::new();
+        // 9 heavy buckets carry ~90% of the mass, a long light tail the rest.
+        for b in 0..9u64 {
+            s.observe(b, 10_000);
+        }
+        for i in 0..1000u64 {
+            s.observe(0x1000 + i.wrapping_mul(0x9E3779B97F4A7C15), 10);
+        }
+        let route = plan_coded_route(&s, 4, 2);
+        let Route::Coded(c) = &route else { panic!("coded") };
+        assert!(c.base.splits.is_empty());
+        assert_eq!(c.r, 2);
+        for b in 0..9u64 {
+            assert!(c.is_heavy(b), "dominant bucket {b} must be coded");
+        }
+        let nheavy: u32 = c.heavy.iter().map(|w| w.count_ones()).sum();
+        assert!(nheavy < ROUTE_BUCKETS as u32 / 2, "light tail must stay unicast");
+        // Owner is source-independent.
+        for h in (0..200u64).map(|i| i.wrapping_mul(0x12345679)) {
+            let o0 = route.owner(h, 0);
+            assert!((1..4).all(|src| route.owner(h, src) == o0));
+        }
+    }
+
+    #[test]
+    fn coded_encode_decode_roundtrip() {
+        let mut s = skewed_sketch(42, 100_000);
+        s.observe(7, 5_000);
+        let route = plan_coded_route(&s, 6, 3);
+        let dec = Route::decode(&route.encode()).unwrap();
+        assert_eq!(dec, route);
+    }
+
+    #[test]
+    fn coded_decode_rejects_bad_parameters() {
+        let route = plan_coded_route(&skewed_sketch(42, 100_000), 3, 2);
+        let enc = route.encode();
+        // r = 0.
+        let mut bad = enc.clone();
+        bad[2] = 0;
+        bad[3] = 0;
+        assert!(Route::decode(&bad).is_err());
+        // r > nranks.
+        let mut bad = enc.clone();
+        bad[2] = 9;
+        assert!(Route::decode(&bad).is_err());
+        // Truncated bitmap.
+        assert!(Route::decode(&enc[..enc.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn empty_sketch_yields_no_heavy_buckets() {
+        let route = plan_coded_route(&Sketch::new(), 4, 2);
+        let Route::Coded(c) = &route else { panic!("coded") };
+        assert!(c.heavy.iter().all(|&w| w == 0));
     }
 
     #[test]

@@ -51,6 +51,11 @@ impl<'a> Reader<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// Next `n` raw bytes (coded-packet payloads).
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
     /// Assert the payload was consumed exactly.
     pub fn finish(self) -> Result<()> {
         if self.off != self.buf.len() {

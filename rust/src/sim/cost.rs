@@ -77,6 +77,19 @@ impl NetModel {
     pub fn xfer(&self, bytes: usize) -> u64 {
         (bytes as u128 * 1_000_000_000u128 / self.bandwidth_bps as u128) as u64
     }
+
+    /// Cost of multicasting `bytes` to `fanout` receivers, charged once
+    /// at the sender — the coded shuffle's substitution for `fanout`
+    /// unicast transmissions.  Setup follows the dissemination-stage
+    /// shape over the clique (sender + receivers); the payload crosses
+    /// the wire once, which is the entire point of coding.  Receivers
+    /// pull the already-transmitted payload at latency-only cost
+    /// (`Window::get_multicast` / `Comm::multicast_round`).
+    pub fn multicast_cost(&self, fanout: usize, bytes: usize) -> u64 {
+        let group = (fanout + 1).next_power_of_two();
+        let stages = usize::BITS - group.leading_zeros();
+        self.collective_stage_ns * u64::from(stages) + self.xfer(bytes)
+    }
 }
 
 /// Storage cost model (Lustre-like parallel file system).
@@ -199,6 +212,18 @@ mod tests {
     fn collective_grows_with_ranks() {
         let n = NetModel::default();
         assert!(n.collective_cost(64, 0) > n.collective_cost(4, 0));
+    }
+
+    #[test]
+    fn multicast_beats_repeated_unicast() {
+        let n = NetModel::default();
+        let bytes = 1 << 20;
+        // One multicast to r receivers vs r separate transmissions.
+        for r in 2..5 {
+            assert!(n.multicast_cost(r, bytes) < r as u64 * n.rma_cost(bytes));
+        }
+        // Setup grows with the clique size.
+        assert!(n.multicast_cost(15, 0) > n.multicast_cost(1, 0));
     }
 
     #[test]

@@ -16,5 +16,5 @@ pub mod storage_window;
 
 pub use layout::StripedFile;
 pub use prefetch::{PendingRead, Prefetcher};
-pub use spill::{Availability, SpillFile, SpillWriter};
+pub use spill::{rle_compress, rle_decompress, Availability, SpillFile, SpillWriter};
 pub use storage_window::StorageWindow;

@@ -448,7 +448,10 @@ fn every_usecase_is_oracle_equal_across_routes_and_backends() {
     // use-case (including the distinct HLL sketch, whose lane-wise max
     // is the split-key stress test) the planned route — with splitting
     // forced on — produces exactly the modulo route's output on both
-    // backends.
+    // backends.  The coded route raises the stakes further: every map
+    // task runs on r ranks and heavy buckets cross the wire as XOR
+    // packets, yet after decode + Combine the output must still be
+    // byte-identical for every replication factor.
     let p = corpus("route-usecases", 60_000, 33);
     for entry in usecases::REGISTRY {
         for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
@@ -467,6 +470,73 @@ fn every_usecase_is_oracle_equal_across_routes_and_backends() {
                 entry.name,
                 backend.name()
             );
+            for r in 2..=4 {
+                let coded = value_map(run(RouteConfig::Coded { r }).result);
+                assert_eq!(
+                    modulo,
+                    coded,
+                    "{} on {}: coded route r={r} changed the result",
+                    entry.name,
+                    backend.name()
+                );
+            }
+        }
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn coded_route_cuts_wire_bytes_on_shuffle_bound_zipf() {
+    // The tentpole claim at integration scale: with local reduce off so
+    // every occurrence crosses the shuffle, the coded route must move
+    // measurably fewer bytes on the wire than its own logical shuffle
+    // volume while staying oracle-exact.
+    let p = tmppath("coded-zipf");
+    generate_corpus(&p, &CorpusSpec { bytes: 400_000, zipf_s: 1.2, seed: 37, ..Default::default() })
+        .unwrap();
+    let oracle = oracle_wordcount(&p);
+    let base = JobConfig { local_reduce: false, ..small_config(p.clone()) };
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        let out = Job::new(
+            Arc::new(WordCount),
+            JobConfig { route: RouteConfig::Coded { r: 2 }, ..base.clone() },
+        )
+        .unwrap()
+        .run(backend, 8, CostModel::default())
+        .unwrap();
+        assert_eq!(counts_map(out.result), oracle, "{}", backend.name());
+        let wire = out.report.shuffle_wire_bytes();
+        let logical = out.report.shuffle_logical_bytes();
+        assert!(wire > 0, "{}: no wire bytes recorded", backend.name());
+        assert!(
+            out.report.shuffle_coding_gain() > 1.2,
+            "{}: coding gain {:.2} (wire {wire}, logical {logical})",
+            backend.name(),
+            out.report.shuffle_coding_gain()
+        );
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn coded_replication_beyond_world_size_is_typed_error() {
+    let p = corpus("coded-reject", 30_000, 35);
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        let job = Job::new(
+            Arc::new(WordCount),
+            JobConfig { route: RouteConfig::Coded { r: 5 }, ..small_config(p.clone()) },
+        )
+        .unwrap();
+        let err = job.run(backend, 4, CostModel::default()).unwrap_err();
+        match err {
+            Error::Config(msg) => {
+                assert!(
+                    msg.contains("exceeds world size"),
+                    "{}: unexpected message {msg:?}",
+                    backend.name()
+                );
+            }
+            other => panic!("{}: expected Error::Config, got {other}", backend.name()),
         }
     }
     std::fs::remove_file(&p).ok();

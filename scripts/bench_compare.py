@@ -1,0 +1,233 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the bench JSON summaries.
+
+Every bench binary writes a ``BENCH_<name>.json`` summary (see
+``rust/src/bench.rs``): ``{"bench": .., "samples": [{"name", "mean",
+"stddev", "n"}, ..]}`` with means in virtual nanoseconds for whole-job
+benches.  Virtual time is simulated, so run-to-run noise is tiny and a
+tight threshold is meaningful — the default fails on >10% growth of any
+``*_elapsed_ns`` sample versus the committed baseline in
+``rust/benches/baselines/``.
+
+Usage (CI runs this right after the smoke benches)::
+
+    python3 scripts/bench_compare.py \
+        [--fresh-dir .] [--baseline-dir rust/benches/baselines] \
+        [--threshold 0.10] [--allow-missing] [--update]
+
+Exit codes: 0 = no regression, 1 = regression (or missing baseline
+without ``--allow-missing``), 2 = usage/IO error.
+
+``--allow-missing`` keeps the gate green while a bench has no committed
+baseline yet (the bootstrap state: baselines are produced by a
+toolchain-equipped run and committed from its artifacts; see
+``rust/benches/baselines/README.md``).  ``--update`` copies the fresh
+summaries over the baselines instead of comparing — the refresh path.
+
+``--self-check`` ignores the directories, synthesizes a baseline and a
+regressed fresh summary in a temp dir, and exits 0 only if the gate
+catches the injected regression — CI runs it so the gate's failure mode
+is itself tested on every push.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+# Samples whose mean is a virtual duration: the regression axis.  Other
+# samples (byte counts, ratios) are informational and not gated — byte
+# accounting changes legitimately when a bench's sweep changes.
+TIME_SUFFIXES = ("_elapsed_ns",)
+
+
+def load_summary(path):
+    """Parse one BENCH_*.json into {sample_name: mean}."""
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    samples = {}
+    for s in doc.get("samples", []):
+        samples[s["name"]] = float(s["mean"])
+    return doc.get("bench", os.path.basename(path)), samples
+
+
+def bench_files(directory):
+    """BENCH_*.json files directly inside ``directory``, sorted."""
+    try:
+        names = sorted(os.listdir(directory))
+    except OSError:
+        return []
+    return [
+        os.path.join(directory, n)
+        for n in names
+        if n.startswith("BENCH_") and n.endswith(".json")
+    ]
+
+
+def compare(baseline, fresh, threshold):
+    """Compare two {name: mean} maps.
+
+    Returns (regressions, improvements, notes): regressions are
+    ``(name, base, new, ratio)`` for time samples growing beyond the
+    threshold; improvements mirror them for shrinkage; notes flag
+    samples present on one side only.
+    """
+    regressions, improvements, notes = [], [], []
+    for name, base in sorted(baseline.items()):
+        if not name.endswith(TIME_SUFFIXES):
+            continue
+        if name not in fresh:
+            notes.append(f"sample '{name}' missing from fresh run")
+            continue
+        new = fresh[name]
+        if base <= 0:
+            notes.append(f"sample '{name}' has non-positive baseline {base}")
+            continue
+        ratio = new / base
+        if ratio > 1.0 + threshold:
+            regressions.append((name, base, new, ratio))
+        elif ratio < 1.0 - threshold:
+            improvements.append((name, base, new, ratio))
+    for name in sorted(set(fresh) - set(baseline)):
+        if name.endswith(TIME_SUFFIXES):
+            notes.append(f"sample '{name}' is new (no baseline)")
+    return regressions, improvements, notes
+
+
+def run_compare(fresh_dir, baseline_dir, threshold, allow_missing):
+    """Compare every fresh summary against its baseline; return exit code."""
+    fresh_paths = bench_files(fresh_dir)
+    if not fresh_paths:
+        print(f"error: no BENCH_*.json under '{fresh_dir}'", file=sys.stderr)
+        return 2
+    failed = False
+    for fresh_path in fresh_paths:
+        base_path = os.path.join(baseline_dir, os.path.basename(fresh_path))
+        bench, fresh = load_summary(fresh_path)
+        if not os.path.exists(base_path):
+            msg = f"{bench}: no baseline at {base_path}"
+            if allow_missing:
+                print(f"SKIP  {msg} (--allow-missing)")
+                continue
+            print(f"FAIL  {msg}", file=sys.stderr)
+            failed = True
+            continue
+        _, baseline = load_summary(base_path)
+        regressions, improvements, notes = compare(baseline, fresh, threshold)
+        for note in notes:
+            print(f"note  {bench}: {note}")
+        for name, base, new, ratio in improvements:
+            print(
+                f"ok    {bench}: {name} improved "
+                f"{base / 1e6:.3f} -> {new / 1e6:.3f} ms ({(1 - ratio) * 100:.1f}% faster)"
+            )
+        for name, base, new, ratio in regressions:
+            print(
+                f"FAIL  {bench}: {name} regressed "
+                f"{base / 1e6:.3f} -> {new / 1e6:.3f} ms "
+                f"(+{(ratio - 1) * 100:.1f}% > {threshold * 100:.0f}% threshold)",
+                file=sys.stderr,
+            )
+        if regressions:
+            failed = True
+        else:
+            gated = sum(1 for n in baseline if n.endswith(TIME_SUFFIXES))
+            print(f"ok    {bench}: {gated} time samples within {threshold * 100:.0f}%")
+    return 1 if failed else 0
+
+
+def run_update(fresh_dir, baseline_dir):
+    """Copy fresh summaries over the committed baselines."""
+    fresh_paths = bench_files(fresh_dir)
+    if not fresh_paths:
+        print(f"error: no BENCH_*.json under '{fresh_dir}'", file=sys.stderr)
+        return 2
+    os.makedirs(baseline_dir, exist_ok=True)
+    for path in fresh_paths:
+        dest = os.path.join(baseline_dir, os.path.basename(path))
+        shutil.copyfile(path, dest)
+        print(f"updated {dest}")
+    return 0
+
+
+def write_summary(path, bench, samples):
+    doc = {
+        "bench": bench,
+        "samples": [
+            {"name": n, "mean": m, "stddev": 0.0, "n": 1} for n, m in samples.items()
+        ],
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f)
+
+
+def run_self_check(threshold):
+    """Prove the gate trips on an injected regression (and only then)."""
+    with tempfile.TemporaryDirectory(prefix="bench-compare-") as tmp:
+        base_dir = os.path.join(tmp, "baselines")
+        fresh_dir = os.path.join(tmp, "fresh")
+        os.makedirs(base_dir)
+        os.makedirs(fresh_dir)
+        base = {"job_elapsed_ns": 1e9, "job_bytes": 5e6}
+        write_summary(os.path.join(base_dir, "BENCH_selfcheck.json"), "selfcheck", base)
+
+        # A clean run well inside the threshold must pass...
+        ok = dict(base, job_elapsed_ns=base["job_elapsed_ns"] * (1 + threshold / 2))
+        write_summary(os.path.join(fresh_dir, "BENCH_selfcheck.json"), "selfcheck", ok)
+        if run_compare(fresh_dir, base_dir, threshold, False) != 0:
+            print("self-check: clean run was rejected", file=sys.stderr)
+            return 1
+
+        # ...and an injected regression just past it must fail.
+        bad = dict(base, job_elapsed_ns=base["job_elapsed_ns"] * (1 + threshold * 2))
+        write_summary(os.path.join(fresh_dir, "BENCH_selfcheck.json"), "selfcheck", bad)
+        if run_compare(fresh_dir, base_dir, threshold, False) != 1:
+            print("self-check: injected regression was NOT caught", file=sys.stderr)
+            return 1
+    print("self-check: gate passes clean runs and catches injected regressions")
+    return 0
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--fresh-dir", default=".", help="directory with fresh BENCH_*.json")
+    parser.add_argument(
+        "--baseline-dir",
+        default="rust/benches/baselines",
+        help="directory with committed baseline BENCH_*.json",
+    )
+    parser.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="fractional virtual-time growth that counts as a regression",
+    )
+    parser.add_argument(
+        "--allow-missing",
+        action="store_true",
+        help="skip benches with no committed baseline instead of failing",
+    )
+    parser.add_argument(
+        "--update",
+        action="store_true",
+        help="overwrite the baselines with the fresh summaries",
+    )
+    parser.add_argument(
+        "--self-check",
+        action="store_true",
+        help="verify the gate catches a synthetic injected regression",
+    )
+    args = parser.parse_args(argv)
+    if args.threshold <= 0:
+        parser.error("--threshold must be positive")
+    if args.self_check:
+        return run_self_check(args.threshold)
+    if args.update:
+        return run_update(args.fresh_dir, args.baseline_dir)
+    return run_compare(args.fresh_dir, args.baseline_dir, args.threshold, args.allow_missing)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
