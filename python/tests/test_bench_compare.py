@@ -25,13 +25,14 @@ def bench_compare():
     return mod
 
 
-def write_summary(path, samples):
+def write_summary(path, samples, meta=None):
     doc = {
         "bench": "t",
         "samples": [
             {"name": n, "mean": m, "stddev": 0.0, "n": 1} for n, m in samples.items()
         ],
     }
+    doc.update(meta or {})
     path.write_text(json.dumps(doc))
 
 
@@ -95,3 +96,33 @@ def test_update_writes_baselines(bench_compare, dirs):
 
 def test_self_check_passes(bench_compare):
     assert bench_compare.main(["--self-check"]) == 0
+
+
+def test_v2_metadata_is_ignored_in_regression_math(bench_compare, dirs, capsys):
+    # A schema-v2 fresh summary (git_sha/config stamped) against a v1
+    # baseline compares on samples alone; the metadata is only printed.
+    base, fresh = dirs
+    meta = {"schema": 2, "git_sha": "abc1234", "config": "backend=1s"}
+    write_summary(fresh / "BENCH_t.json", {"run_elapsed_ns": 1.05e9}, meta)
+    assert run(bench_compare, base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "git_sha=abc1234" in out
+    assert "config=backend=1s" in out
+
+
+def test_v2_metadata_does_not_mask_regressions(bench_compare, dirs):
+    base, fresh = dirs
+    meta = {"schema": 2, "git_sha": "abc1234", "config": "backend=1s"}
+    write_summary(fresh / "BENCH_t.json", {"run_elapsed_ns": 1.2e9}, meta)
+    assert run(bench_compare, base, fresh) == 1
+
+
+def test_v2_metadata_round_trips_through_update(bench_compare, dirs):
+    base, fresh = dirs
+    meta = {"schema": 2, "git_sha": "abc1234", "config": "smoke"}
+    write_summary(fresh / "BENCH_t.json", {"run_elapsed_ns": 1e9}, meta)
+    assert run(bench_compare, base, fresh, "--update") == 0
+    doc = json.loads((base / "BENCH_t.json").read_text())
+    assert doc["schema"] == 2
+    assert doc["git_sha"] == "abc1234"
+    assert doc["config"] == "smoke"

@@ -1,0 +1,164 @@
+"""Chrome-trace-event schema validation for ``--trace-out`` artifacts.
+
+The Rust tracer exports Chrome trace-event JSON (JSON Object Format;
+see ``rust/src/metrics/tracer.rs::chrome_trace_json`` and DESIGN.md
+section 9).  These tests pin the exporter's contract from the consumer
+side — what Perfetto / chrome://tracing actually require — against a
+synthetic trace shaped exactly like the exporter's output, and, when
+``MR1S_TRACE_JSON`` points at a real artifact (CI sets it to the fig8
+smoke bench's ``trace.json``), against that artifact too.
+"""
+
+import json
+import os
+
+import pytest
+
+# The exporter's vocabulary (mirrors rust/src/metrics/tracer.rs).
+PHASE_NAMES = {"io", "map", "lreduce", "reduce", "combine", "wait", "ckpt"}
+WAIT_CAUSES = {
+    "barrier",
+    "window-lock",
+    "status-wait",
+    "spill-durability",
+    "steal-gate",
+    "unattributed",
+}
+SLICE_CATS = {"phase", "op", "wait"}
+
+
+def validate_trace(doc):
+    """Assert ``doc`` is a loadable Chrome trace of the mr1s shape."""
+    assert isinstance(doc, dict), "JSON Object Format: top level is an object"
+    events = doc["traceEvents"]
+    assert isinstance(events, list) and events, "traceEvents must be a non-empty list"
+
+    named_tids = set()
+    flow_starts = {}
+    flow_finishes = {}
+    slices_per_tid = {}
+
+    for ev in events:
+        assert isinstance(ev, dict)
+        ph = ev["ph"]
+        assert ph in {"M", "X", "s", "f"}, f"unexpected phase type {ph!r}"
+        assert ev["pid"] == 0, "single-process trace"
+
+        if ph == "M":
+            assert ev["name"] in {"process_name", "thread_name"}
+            assert isinstance(ev["args"]["name"], str)
+            if ev["name"] == "thread_name":
+                assert ev["args"]["name"] == f"rank {ev['tid']}"
+                named_tids.add(ev["tid"])
+            continue
+
+        # Timed events: ts in microseconds, non-negative.
+        assert isinstance(ev["ts"], (int, float)) and ev["ts"] >= 0
+        assert isinstance(ev["tid"], int) and ev["tid"] >= 0
+
+        if ph == "X":
+            assert isinstance(ev["dur"], (int, float)) and ev["dur"] >= 0
+            cat = ev["cat"]
+            assert cat in SLICE_CATS, f"unexpected slice cat {cat!r}"
+            args = ev["args"]
+            assert isinstance(args["stage"], int) and args["stage"] >= 0
+            if cat == "phase":
+                assert ev["name"] in PHASE_NAMES
+            else:
+                assert args["bytes"] >= 0
+                if "peer" in args:
+                    assert isinstance(args["peer"], int) and args["peer"] >= 0
+                if cat == "wait":
+                    assert args["cause"] in WAIT_CAUSES
+                elif "cause" in args:
+                    assert args["cause"] in WAIT_CAUSES
+            slices_per_tid.setdefault(ev["tid"], []).append(ev)
+        else:
+            # Flow arrows: each id has exactly one start and one finish.
+            assert ev["cat"] == "dep" and ev["name"] == "dep"
+            side = flow_starts if ph == "s" else flow_finishes
+            assert ev["id"] not in side, f"duplicate flow {ph} id {ev['id']}"
+            side[ev["id"]] = ev
+            if ph == "f":
+                assert ev["bp"] == "e", "finish must bind to the enclosing slice end"
+
+    assert set(flow_starts) == set(flow_finishes), "every flow must be a complete s->f pair"
+    assert slices_per_tid, "a trace with no slices renders empty"
+    for tid in slices_per_tid:
+        assert tid in named_tids, f"tid {tid} has slices but no thread_name metadata"
+
+    # Per-track sanity: phase slices are emitted in recording order,
+    # which on a virtual-clock rank means t0-monotonic.  (Op/wait slices
+    # may interleave out of ts order in merged pipeline traces — e.g.
+    # synthesized spill-write spans — which the format permits.)
+    for tid, evs in slices_per_tid.items():
+        ts = [e["ts"] for e in evs if e["cat"] == "phase"]
+        assert ts == sorted(ts), f"tid {tid} phase slices out of order"
+    return True
+
+
+# Shaped exactly like chrome_trace_json's output: metadata first, phase
+# slices, op/wait slices with stage/bytes/cause args, one flow pair.
+SYNTHETIC = {
+    "traceEvents": [
+        {"ph": "M", "name": "process_name", "pid": 0, "args": {"name": "mr1s"}},
+        {"ph": "M", "name": "thread_name", "pid": 0, "tid": 0, "args": {"name": "rank 0"}},
+        {"ph": "M", "name": "thread_name", "pid": 0, "tid": 1, "args": {"name": "rank 1"}},
+        {"ph": "X", "name": "map", "cat": "phase", "pid": 0, "tid": 0, "ts": 0.0,
+         "dur": 1.5, "args": {"stage": 0}},
+        {"ph": "X", "name": "wait", "cat": "phase", "pid": 0, "tid": 1, "ts": 0.0,
+         "dur": 0.2, "args": {"stage": 0}},
+        {"ph": "X", "name": "put", "cat": "op", "pid": 0, "tid": 0, "ts": 0.01,
+         "dur": 0.064, "args": {"stage": 0, "bytes": 64, "peer": 1}},
+        {"ph": "X", "name": "barrier", "cat": "wait", "pid": 0, "tid": 1, "ts": 0.2,
+         "dur": 1.3, "args": {"stage": 0, "bytes": 0, "cause": "barrier",
+                              "edge_slack_ns": 100}},
+        {"ph": "s", "name": "dep", "cat": "dep", "pid": 0, "tid": 0, "ts": 1.4, "id": 1},
+        {"ph": "f", "name": "dep", "cat": "dep", "pid": 0, "tid": 1, "ts": 1.5,
+         "bp": "e", "id": 1},
+    ],
+    "displayTimeUnit": "ms",
+}
+
+
+def test_synthetic_trace_validates():
+    assert validate_trace(json.loads(json.dumps(SYNTHETIC)))
+
+
+def test_validator_rejects_dangling_flow():
+    doc = json.loads(json.dumps(SYNTHETIC))
+    doc["traceEvents"] = [e for e in doc["traceEvents"] if e["ph"] != "f"]
+    with pytest.raises(AssertionError, match="complete s->f pair"):
+        validate_trace(doc)
+
+
+def test_validator_rejects_unknown_wait_cause():
+    doc = json.loads(json.dumps(SYNTHETIC))
+    for ev in doc["traceEvents"]:
+        if ev.get("cat") == "wait":
+            ev["args"]["cause"] = "cosmic-rays"
+    with pytest.raises(AssertionError):
+        validate_trace(doc)
+
+
+def test_validator_rejects_unnamed_track():
+    doc = json.loads(json.dumps(SYNTHETIC))
+    doc["traceEvents"] = [
+        e for e in doc["traceEvents"] if not (e["ph"] == "M" and e.get("tid") == 1)
+    ]
+    with pytest.raises(AssertionError, match="thread_name"):
+        validate_trace(doc)
+
+
+def test_real_artifact_when_provided():
+    """CI exports the fig8 smoke trace and points MR1S_TRACE_JSON at it."""
+    path = os.environ.get("MR1S_TRACE_JSON")
+    if not path:
+        pytest.skip("MR1S_TRACE_JSON not set (no trace artifact to validate)")
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    assert validate_trace(doc)
+    # A real job always records phase slices and at least one op span on
+    # every rank track it names.
+    cats = {e.get("cat") for e in doc["traceEvents"]}
+    assert {"phase", "op"} <= cats

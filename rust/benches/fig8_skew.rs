@@ -7,18 +7,27 @@
 //! per-rank reduce-load imbalance the shuffle planner removes.
 //!
 //! `cargo bench --bench fig8_skew` runs the smoke profile; `-- --full`
-//! the paper-scaled one.  Emits `BENCH_fig8_skew.json`.
+//! the paper-scaled one.  Emits `BENCH_fig8_skew.json`, and with
+//! `-- --trace-out PATH` also a Chrome-trace JSON of the most skewed
+//! MR-1S planned run (load in Perfetto; DESIGN.md §9).
 
 use std::sync::Arc;
 
-use mr1s::bench::{imbalance_samples, record, section, write_json, Sample};
+use mr1s::bench::{imbalance_samples, record, section, trace_samples, write_json_with_config, Sample};
 use mr1s::harness::Scenario;
 use mr1s::mapreduce::{BackendKind, Job, JobConfig, RouteConfig};
+use mr1s::metrics::tracer;
 use mr1s::sim::CostModel;
 use mr1s::usecases::InvertedIndex;
 
 fn main() {
-    let full = std::env::args().any(|a| a == "--full");
+    let args: Vec<String> = std::env::args().collect();
+    let full = args.iter().any(|a| a == "--full");
+    let trace_out = args
+        .iter()
+        .position(|a| a == "--trace-out")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let base = if full { Scenario::default() } else { Scenario::smoke() };
     let nranks = *base.ranks.last().expect("scenario has rank counts");
     println!("fig8 skew bench ({} profile, {nranks} ranks)", if full { "full" } else { "smoke" });
@@ -56,8 +65,25 @@ fn main() {
                 for sample in imbalance_samples(&tag, &out.report) {
                     record(&mut samples, sample);
                 }
+                for sample in trace_samples(&tag, &out.report) {
+                    record(&mut samples, sample);
+                }
+                // Export the most skewed MR-1S planned run as the
+                // representative trace artifact.
+                if s == 1.4 && backend == BackendKind::OneSided && route_name == "planned" {
+                    if let Some(path) = &trace_out {
+                        let json =
+                            tracer::chrome_trace_json(&out.report.timelines, &out.report.spans);
+                        std::fs::write(path, json).expect("trace writes");
+                        println!("trace: wrote {path} ({tag})");
+                    }
+                }
             }
         }
     }
-    write_json("fig8_skew", &samples).expect("json summary");
+    let config = format!(
+        "profile={} ranks={nranks} usecase=inverted-index routes=modulo,planned zipf_s=0.8,1.1,1.4",
+        if full { "full" } else { "smoke" }
+    );
+    write_json_with_config("fig8_skew", &config, &samples).expect("json summary");
 }

@@ -123,6 +123,55 @@ pub fn imbalance_samples(tag: &str, report: &crate::metrics::JobReport) -> Vec<S
     out
 }
 
+/// Trace-derived samples of a job report: the wait-by-cause
+/// decomposition (ns per cause, zero-filled so regression baselines
+/// stay aligned) and the cross-rank critical path (total ns and edge
+/// count) — recorded under `<tag>_...` next to [`imbalance_samples`].
+pub fn trace_samples(tag: &str, report: &crate::metrics::JobReport) -> Vec<Sample> {
+    let stats = report.trace_stats();
+    let mut out: Vec<Sample> = crate::metrics::WaitCause::ALL
+        .iter()
+        .map(|cause| {
+            let ns = stats.wait_by_cause.get(cause.label()).map_or(0, |w| w.total_ns);
+            Sample::from_measurements(
+                format!("{tag}_wait_{}_ns", cause.label()),
+                &[ns as f64],
+            )
+        })
+        .collect();
+    let crit = report.crit_path();
+    out.push(Sample::from_measurements(format!("{tag}_crit_total_ns"), &[crit.total_ns() as f64]));
+    out.push(Sample::from_measurements(format!("{tag}_crit_edges"), &[crit.edge_count() as f64]));
+    out
+}
+
+/// JSON-summary schema version.  Bumped to 2 when run metadata
+/// (`git_sha`, `config`) joined the top level; consumers must ignore
+/// unknown top-level keys.
+pub const JSON_SCHEMA_VERSION: u32 = 2;
+
+/// Best-effort build identifier for run metadata: `$GITHUB_SHA` (CI),
+/// then `$MR1S_GIT_SHA`, then `git rev-parse --short HEAD`, else
+/// "unknown".  Never fails.
+pub fn git_sha() -> String {
+    for var in ["GITHUB_SHA", "MR1S_GIT_SHA"] {
+        if let Some(sha) = std::env::var_os(var) {
+            let sha = sha.to_string_lossy().trim().to_string();
+            if !sha.is_empty() {
+                return sha;
+            }
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
 /// Minimal JSON string escaping (names are code-controlled, but keep
 /// the output well-formed regardless).
 fn json_escape(s: &str) -> String {
@@ -143,15 +192,28 @@ fn json_escape(s: &str) -> String {
 /// Write a machine-readable `BENCH_<name>.json` summary of `samples`.
 ///
 /// Directory: `$MR1S_BENCH_DIR` or the current working directory.
-/// Schema: `{"bench": .., "samples": [{"name", "mean", "stddev", "n"},
-/// ..]}` — `mean`/`stddev` are in the bench's native unit (ns for wall
-/// benches, virtual ns for job benches, percent for figure aggregates;
-/// the sample name says which).  Returns the written path.
+/// Schema v2: `{"bench": .., "schema": 2, "git_sha": .., "config": ..,
+/// "samples": [{"name", "mean", "stddev", "n"}, ..]}` — `mean`/`stddev`
+/// are in the bench's native unit (ns for wall benches, virtual ns for
+/// job benches, percent for figure aggregates; the sample name says
+/// which).  The metadata keys identify the run; regression tooling
+/// carries them through and excludes them from comparison math.
+/// Returns the written path.
 pub fn write_json(bench: &str, samples: &[Sample]) -> std::io::Result<std::path::PathBuf> {
+    write_json_with_config(bench, "", samples)
+}
+
+/// [`write_json`] stamping a backend/route/size configuration string
+/// into the run metadata.
+pub fn write_json_with_config(
+    bench: &str,
+    config: &str,
+    samples: &[Sample],
+) -> std::io::Result<std::path::PathBuf> {
     let dir = std::env::var_os("MR1S_BENCH_DIR")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|| std::path::PathBuf::from("."));
-    write_json_to(&dir, bench, samples)
+    write_json_to_with_config(&dir, bench, config, samples)
 }
 
 /// [`write_json`] with an explicit output directory (no env lookup).
@@ -160,9 +222,24 @@ pub fn write_json_to(
     bench: &str,
     samples: &[Sample],
 ) -> std::io::Result<std::path::PathBuf> {
+    write_json_to_with_config(dir, bench, "", samples)
+}
+
+/// Full-control variant: explicit directory and config string.
+pub fn write_json_to_with_config(
+    dir: &std::path::Path,
+    bench: &str,
+    config: &str,
+    samples: &[Sample],
+) -> std::io::Result<std::path::PathBuf> {
     let path = dir.join(format!("BENCH_{bench}.json"));
     let mut out = String::new();
-    out.push_str(&format!("{{\"bench\":\"{}\",\"samples\":[", json_escape(bench)));
+    out.push_str(&format!(
+        "{{\"bench\":\"{}\",\"schema\":{JSON_SCHEMA_VERSION},\"git_sha\":\"{}\",\"config\":\"{}\",\"samples\":[",
+        json_escape(bench),
+        json_escape(&git_sha()),
+        json_escape(config)
+    ));
     for (i, s) in samples.iter().enumerate() {
         if i > 0 {
             out.push(',');
@@ -220,10 +297,29 @@ mod tests {
         ];
         let path = write_json_to(&dir, "unit_test", &samples).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(text.starts_with("{\"bench\":\"unit_test\""));
+        assert!(text.starts_with("{\"bench\":\"unit_test\",\"schema\":2,\"git_sha\":\""));
+        assert!(text.contains("\"config\":\"\""));
         assert!(text.contains("\"name\":\"alpha\",\"mean\":2.000"));
         assert!(text.contains("with\\\"quote"));
         assert!(text.trim_end().ends_with("]}"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn config_metadata_is_stamped_and_escaped() {
+        let dir = std::env::temp_dir().join(format!("mr1s-benchmeta-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let samples = vec![Sample::from_measurements("x", &[1.0])];
+        let path =
+            write_json_to_with_config(&dir, "meta_test", "backend=1s route=\"coded\"", &samples)
+                .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"config\":\"backend=1s route=\\\"coded\\\"\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn git_sha_is_nonempty() {
+        assert!(!git_sha().is_empty());
     }
 }

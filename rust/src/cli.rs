@@ -19,7 +19,7 @@ use crate::error::{Error, Result};
 use crate::harness::figures::{run_figure, FigureId};
 use crate::harness::Scenario;
 use crate::mapreduce::{BackendKind, Job, JobConfig, RouteConfig, UseCase};
-use crate::metrics::timeline;
+use crate::metrics::{timeline, tracer};
 use crate::pipeline::{oracle, plans, Pipeline};
 use crate::sim::CostModel;
 use crate::usecases::{self, EquiJoin, MeanLength, TfIdfScore, WordCount};
@@ -87,11 +87,11 @@ USAGE:
            [--task-size S] [--win-size S] [--chunk-size S] [--unbalanced]
            [--route modulo|planned[:split=K]|coded[:r=R]]
            [--checkpoints] [--flush-epochs] [--stealing] [--no-kernel]
-           [--top N]
+           [--top N] [--trace-out PATH]
   mr1s pipeline --input <PATH> [--usecase tfidf|join] [--backend 1s|2s]
            [--ranks N] [--task-size S] [--win-size S] [--chunk-size S]
            [--route modulo|planned[:split=K]|coded[:r=R]] [--stealing]
-           [--no-kernel] [--timeline] [--top N]
+           [--no-kernel] [--timeline] [--top N] [--trace-out PATH]
   mr1s compare --input <PATH> [--ranks N] [--unbalanced]
   mr1s figures --fig <ID|all> [--smoke]
   mr1s help
@@ -104,6 +104,10 @@ top heavy-hitter keys are split K ways (DESIGN.md section 7).
 --route coded:r=R replicates every map task onto R ranks and multicasts
 XOR-coded packets that serve R reducers at once, cutting on-wire
 shuffle volume ~Rx on shuffle-bound jobs (DESIGN.md section 8).
+--trace-out writes a Chrome-trace-event JSON (load in Perfetto or
+chrome://tracing): one track per rank with phase intervals, protocol-op
+and cause-attributed wait slices, and flow arrows on cross-rank
+dependency edges (DESIGN.md section 9).
 Figures: 4a 4b 4c 4d 5a 5b 6a 6b 7a 7b (DESIGN.md section 4).
 Sizes accept K/M/G suffixes.";
 
@@ -211,6 +215,11 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
 
     let out = Job::new(usecase.clone(), cfg)?.run(backend, nranks, CostModel::default())?;
     println!("{}", out.report.summary());
+    if let Some(path) = flags.get("trace-out") {
+        let json = tracer::chrome_trace_json(&out.report.timelines, &out.report.spans);
+        std::fs::write(path, json)?;
+        println!("trace: wrote {path}");
+    }
     if std::env::var_os("MR1S_DEBUG_PHASES").is_some() {
         for (r, b) in out.report.breakdowns.iter().enumerate() {
             println!(
@@ -349,6 +358,11 @@ fn cmd_pipeline(flags: &Flags) -> Result<i32> {
     println!("pipeline elapsed: {:.3}s (virtual)", out.elapsed_ns as f64 / 1e9);
     if flags.has("timeline") {
         println!("{}", timeline::render_ascii(&out.merged_timelines(), 100));
+    }
+    if let Some(path) = flags.get("trace-out") {
+        let json = tracer::chrome_trace_json(&out.merged_timelines(), &out.merged_spans());
+        std::fs::write(path, json)?;
+        println!("trace: wrote {path}");
     }
 
     // Intermediate spills are only needed while stages run.

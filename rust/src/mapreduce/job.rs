@@ -6,6 +6,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
+use crate::metrics::tracer::{self, Span, WaitCause};
 use crate::metrics::{JobReport, MemoryTracker, PhaseBreakdown, Timeline};
 use crate::mpi::{RankCtx, Universe};
 use crate::runtime::Engine;
@@ -137,6 +138,10 @@ pub struct JobShared {
     /// entry synchronizes rank threads in real time only (no virtual
     /// clock coupling — the decoupling lifted to stage boundaries).
     pub pipelined: bool,
+    /// Stage index within a pipeline (0 standalone): backends build
+    /// their timelines with `Timeline::for_stage(shared.stage)` so every
+    /// event and span carries the stage tag.
+    pub stage: u32,
 }
 
 impl JobShared {
@@ -570,6 +575,10 @@ pub struct StageExec {
     /// Pipeline mode: stage entry synchronizes rank threads in real
     /// time only (windows are modeled as pre-allocated).
     pub pipelined: bool,
+    /// Stage index within the pipeline (0 for standalone jobs); stamps
+    /// timeline events and trace spans so merged multi-stage views keep
+    /// their boundaries.
+    pub stage: u32,
 }
 
 impl Job {
@@ -641,6 +650,7 @@ impl Job {
             record_bounds,
             start_vts: stage.start_vts,
             pipelined: stage.pipelined,
+            stage: stage.stage,
         });
 
         let backend_impl: Arc<dyn Backend> = match backend {
@@ -649,13 +659,20 @@ impl Job {
         };
 
         let shared2 = shared.clone();
-        let outcomes: Vec<Result<RankOutcome>> = Universe::new(nranks, cost).run(move |ctx| {
-            // Stage handoff: this rank's thread becomes free when it
-            // finished the previous stage, not when the stage barrier
-            // would have let it go.
-            ctx.clock.sync_to(shared2.start_vts.get(ctx.rank()).copied().unwrap_or(0));
-            backend_impl.execute(ctx, &shared2)
-        });
+        let outcomes: Vec<Result<(RankOutcome, Vec<Span>)>> =
+            Universe::new(nranks, cost).run(move |ctx| {
+                // Arm the thread-local span recorder for this rank thread;
+                // substrate code (windows, collectives, prefetch) records
+                // into it without signature changes.
+                tracer::install(ctx.rank(), shared2.stage);
+                // Stage handoff: this rank's thread becomes free when it
+                // finished the previous stage, not when the stage barrier
+                // would have let it go.
+                ctx.clock.sync_to(shared2.start_vts.get(ctx.rank()).copied().unwrap_or(0));
+                let out = backend_impl.execute(ctx, &shared2);
+                let spans = tracer::take();
+                out.map(|o| (o, spans))
+            });
 
         let mut rank_elapsed = Vec::with_capacity(nranks);
         let mut breakdowns = Vec::with_capacity(nranks);
@@ -666,10 +683,12 @@ impl Job {
         let mut planned_reduce = Vec::with_capacity(nranks);
         let mut shuffle_wire_bytes_per_rank = Vec::with_capacity(nranks);
         let mut shuffle_logical_bytes_per_rank = Vec::with_capacity(nranks);
+        let mut spans_per_rank = Vec::with_capacity(nranks);
         let mut input_bytes = 0u64;
         let mut result_run = None;
         for outcome in outcomes {
-            let o = outcome?;
+            let (o, spans) = outcome?;
+            spans_per_rank.push(spans);
             rank_elapsed.push(o.elapsed_ns);
             breakdowns.push(PhaseBreakdown::from_events(&o.events));
             timelines.push(o.events);
@@ -722,7 +741,9 @@ impl Job {
             shuffle_logical_bytes_per_rank,
             spill_bytes_saved: 0,
             peak_memory_bytes: shared.mem.peak(),
+            mem_hwm_vt_ns: shared.mem.peak_sample().0,
             memory_series: shared.mem.normalized_series(256),
+            spans: spans_per_rank,
             unique_keys,
             total_count,
         };
@@ -760,6 +781,25 @@ pub fn timed<T>(
     let t0 = ctx.clock.now();
     let out = f();
     timeline.record(t0, ctx.clock.now(), kind);
+    out
+}
+
+/// Record a wait interval with an attributed cause: the legacy
+/// `EventKind::Wait` timeline event and a `wait` trace span cover the
+/// *identical* interval (and both drop empty ones), so the per-rank sum
+/// of cause-attributed wait spans equals `PhaseBreakdown::wait_ns`
+/// exactly — the back-compat invariant the integration tests assert.
+pub fn timed_wait<T>(
+    ctx: &RankCtx,
+    timeline: &Timeline,
+    cause: WaitCause,
+    f: impl FnOnce() -> T,
+) -> T {
+    let t0 = ctx.clock.now();
+    let out = f();
+    let t1 = ctx.clock.now();
+    timeline.record(t0, t1, crate::metrics::EventKind::Wait);
+    tracer::wait(cause, t0, t1, None);
     out
 }
 

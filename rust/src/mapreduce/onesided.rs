@@ -30,6 +30,7 @@
 //!   child's exclusive lock is released.
 
 use crate::error::Result;
+use crate::metrics::tracer::{self, op, WaitCause};
 use crate::metrics::{EventKind, Timeline};
 use crate::mpi::{LockKind, RankCtx, Window};
 use crate::shuffle::{coding, exchange, plan_coded_route, CodedPlacement, Route, Sketch};
@@ -37,7 +38,9 @@ use crate::storage::{Prefetcher, StorageWindow};
 
 use super::bucket::{KeyTable, SortedRun};
 use super::config::RouteConfig;
-use super::job::{build_local_run, run_map_task, timed, Backend, JobShared, RankOutcome};
+use super::job::{
+    build_local_run, run_map_task, timed, timed_wait, Backend, JobShared, RankOutcome,
+};
 use super::kv::{self, ValueOps};
 
 /// Rank status values published through the Status window.
@@ -132,7 +135,9 @@ impl TaskClaimer<'_> {
             ctx.gate_to_virtual_since(self.gate_base_vt);
         }
         // Own queue first (local atomic: free).
+        let t0 = ctx.clock.now();
         let idx = ctrl.fetch_add(&ctx.clock, me, C_TASK_NEXT, 1)? as usize;
+        tracer::record(op::TASK_CLAIM, t0, ctx.clock.now(), 0, None, None);
         if let Some(task) = self.queues[me].get(idx) {
             let (off, len) = self.shared.read_span(task);
             return Ok(Some((*task, prefetcher.issue(ctx, off, len))));
@@ -143,6 +148,7 @@ impl TaskClaimer<'_> {
         // Steal: victim with the most remaining work.  Counters only
         // grow, so the loop terminates once every queue is drained.
         loop {
+            let t0 = ctx.clock.now();
             let mut best: Option<(usize, usize)> = None;
             for v in 0..ctx.nranks() {
                 if v == me {
@@ -156,6 +162,7 @@ impl TaskClaimer<'_> {
                     best = Some((v, remaining));
                 }
             }
+            tracer::record(op::STEAL_ATTEMPT, t0, ctx.clock.now(), 0, None, None);
             let Some((victim, _)) = best else {
                 if std::env::var_os("MR1S_DEBUG_STEAL").is_some() {
                     eprintln!(
@@ -165,7 +172,17 @@ impl TaskClaimer<'_> {
                 }
                 return Ok(None);
             };
+            let t0 = ctx.clock.now();
             let idx = ctrl.fetch_add(&ctx.clock, victim, C_TASK_NEXT, 1)? as usize;
+            tracer::record_cause(
+                op::STEAL_CLAIM,
+                WaitCause::StealGate,
+                t0,
+                ctx.clock.now(),
+                0,
+                Some(victim),
+                None,
+            );
             if std::env::var_os("MR1S_DEBUG_STEAL").is_some() {
                 eprintln!(
                     "rank {me} vt={:.1}ms: stole {victim}/{idx} ({})",
@@ -187,7 +204,7 @@ pub struct Mr1s;
 
 impl Backend for Mr1s {
     fn execute(&self, ctx: &RankCtx, shared: &JobShared) -> Result<RankOutcome> {
-        let tl = Timeline::new();
+        let tl = Timeline::for_stage(shared.stage);
         let me = ctx.rank();
         let n = ctx.nranks();
         let cfg = &shared.config;
@@ -235,13 +252,13 @@ impl Backend for Mr1s {
         // Paper: each process acquires the exclusive lock over its own
         // Combine window during initialization.
         comb_win.lock(&ctx.clock, LockKind::Exclusive, me);
-        let t0 = ctx.clock.now();
-        if pipelined {
-            ctx.rendezvous_real();
-        } else {
-            ctx.barrier();
-        }
-        tl.record(t0, ctx.clock.now(), EventKind::Wait);
+        timed_wait(ctx, &tl, WaitCause::Barrier, || {
+            if pipelined {
+                ctx.rendezvous_real();
+            } else {
+                ctx.barrier();
+            }
+        });
 
         let mut out_buckets = vec![OutBucket::default(); n];
         let mut reduce_table = KeyTable::new();
@@ -424,7 +441,7 @@ impl Backend for Mr1s {
                     }
                 }
                 let rep = p.r();
-                let route = timed(ctx, &tl, EventKind::Wait, || {
+                let route = timed_wait(ctx, &tl, WaitCause::StatusWait, || {
                     exchange::exchange_and_plan_with(ctx, plan_win, &sketch, |merged| {
                         plan_coded_route(merged, n, rep)
                     })
@@ -501,7 +518,7 @@ impl Backend for Mr1s {
                 let plan_win = plan_win.as_ref().expect("created at window setup");
                 let mut sketch = Sketch::new();
                 map_table.for_each_size(&mut |h, len| sketch.observe(h, len as u64));
-                let route = timed(ctx, &tl, EventKind::Wait, || {
+                let route = timed_wait(ctx, &tl, WaitCause::StatusWait, || {
                     exchange::exchange_and_plan(ctx, plan_win, &sketch, split)
                 })?;
                 let staged_bytes = map_table.bytes() as u64;

@@ -13,6 +13,7 @@
 //! are shared with MR-1S (the paper keeps them identical on purpose).
 
 use crate::error::Result;
+use crate::metrics::tracer::WaitCause;
 use crate::metrics::{EventKind, Timeline};
 use crate::mpi::RankCtx;
 use crate::shuffle::{coding, exchange, plan_coded_route, plan_route, CodedPlacement, Route};
@@ -20,7 +21,7 @@ use crate::shuffle::{coding, exchange, plan_coded_route, plan_route, CodedPlacem
 use super::bucket::{KeyTable, SortedRun};
 use super::config::RouteConfig;
 use super::job::{
-    build_local_run, run_map_task, timed, Backend, JobShared, RankOutcome, TaskSpec,
+    build_local_run, run_map_task, timed, timed_wait, Backend, JobShared, RankOutcome, TaskSpec,
 };
 use super::kv::{self, ValueOps};
 
@@ -32,7 +33,7 @@ pub struct Mr2s;
 
 impl Backend for Mr2s {
     fn execute(&self, ctx: &RankCtx, shared: &JobShared) -> Result<RankOutcome> {
-        let tl = Timeline::new();
+        let tl = Timeline::for_stage(shared.stage);
         let me = ctx.rank();
         let n = ctx.nranks();
         let ops = shared.ops();
@@ -73,7 +74,7 @@ impl Backend for Mr2s {
             }
             parts
         });
-        let my_tasks: Vec<TaskSpec> = timed(ctx, &tl, EventKind::Wait, || {
+        let my_tasks: Vec<TaskSpec> = timed_wait(ctx, &tl, WaitCause::Barrier, || {
             ctx.scatter(0, assignment)
         });
         let rounds = ctx.allreduce_u64(my_tasks.len() as u64, u64::max) as usize;
@@ -131,7 +132,7 @@ impl Backend for Mr2s {
                 let mut sketch = crate::shuffle::Sketch::new();
                 all_staging.for_each_size(&mut |h, len| sketch.observe(h, len as u64));
                 let enc = sketch.encode();
-                let recv = timed(ctx, &tl, EventKind::Wait, || {
+                let recv = timed_wait(ctx, &tl, WaitCause::Barrier, || {
                     ctx.alltoallv(vec![enc; n])
                 });
                 let merged = exchange::merge_encoded(&recv)?;
@@ -151,7 +152,7 @@ impl Backend for Mr2s {
                     }
                 }
                 let enc = sketch.encode();
-                let recv = timed(ctx, &tl, EventKind::Wait, || {
+                let recv = timed_wait(ctx, &tl, WaitCause::Barrier, || {
                     ctx.alltoallv(vec![enc; n])
                 });
                 let merged = exchange::merge_encoded(&recv)?;
@@ -173,7 +174,7 @@ impl Backend for Mr2s {
                 })?;
                 let light_sent: u64 =
                     shuffle.light.iter().map(|b| b.len() as u64).sum();
-                let recv = timed(ctx, &tl, EventKind::Wait, || {
+                let recv = timed_wait(ctx, &tl, WaitCause::Barrier, || {
                     ctx.alltoallv(shuffle.light)
                 });
                 let mut wire = light_sent;
@@ -185,7 +186,7 @@ impl Backend for Mr2s {
                     logical += packet.logical_bytes();
                 }
                 let blobs =
-                    timed(ctx, &tl, EventKind::Wait, || ctx.multicast_round(blob));
+                    timed_wait(ctx, &tl, WaitCause::Barrier, || ctx.multicast_round(blob));
                 let mut parts = Vec::new();
                 for (s, b) in blobs.iter().enumerate() {
                     if s == me || b.is_empty() {
@@ -203,7 +204,7 @@ impl Backend for Mr2s {
                 let mut parts = all_staging.drain_routed(&route, me)?;
                 let own = std::mem::take(&mut parts[me]);
                 let sent_bytes: u64 = parts.iter().map(|b| b.len() as u64).sum();
-                let recv = timed(ctx, &tl, EventKind::Wait, || ctx.alltoallv(parts));
+                let recv = timed_wait(ctx, &tl, WaitCause::Barrier, || ctx.alltoallv(parts));
                 // A unicast shuffle's wire and logical volumes coincide.
                 (own, recv, Vec::new(), sent_bytes, sent_bytes)
             };

@@ -1,0 +1,256 @@
+//! Cross-rank critical-path analysis over the recorded span graph.
+//!
+//! The makespan of a run is set by one chain of dependencies: some rank
+//! finishes last, its final stretch of work was unblocked by some
+//! cross-rank event (a route-table publication, a multicast send, a
+//! barrier's slowest entrant, a spill chunk turning durable), that event
+//! sits at the end of *its* producer's chain, and so on back to t = 0.
+//! [`CritPath::analyze`] extracts that chain by walking backward from
+//! the makespan over the [`SpanEdge`]s recorded in the trace
+//! (`metrics::tracer`):
+//!
+//! * from `(rank, t)`, find the latest span on `rank` ending at or
+//!   before `t` whose edge was *binding* — the dependency became
+//!   available only after the rank arrived (`src_vt > t0`, zero slack);
+//! * everything between that span's end and `t` is on-rank time (a
+//!   `work` segment: compute, local I/O, non-critical ops);
+//! * the span's own tail `[src_vt, t1]` is a critical segment labelled
+//!   by the operation (or wait cause) that blocked;
+//! * the walk jumps to `(edge.src_rank, src_vt)` and repeats; with no
+//!   binding edge left, `[0, t]` closes the chain as on-rank time.
+//!
+//! Segments tile `[0, makespan]` contiguously by construction, so
+//! [`CritPath::total_ns`] equals the job's `elapsed_ns` exactly —
+//! asserted in the integration tests for both backends and all three
+//! routes.  Per-edge slack (how harmless a non-binding edge was) is
+//! exposed via `Span::edge_slack`.
+
+use super::tracer::Span;
+
+/// Label of on-rank segments (no specific blocking operation).
+pub const WORK: &str = "work";
+
+/// One contiguous piece of the critical path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CritSegment {
+    /// Rank the critical chain ran on during this interval.
+    pub rank: usize,
+    /// Segment start, virtual ns.
+    pub t0: u64,
+    /// Segment end, virtual ns.
+    pub t1: u64,
+    /// What the chain was doing: [`WORK`], an op name, or a wait cause.
+    pub label: &'static str,
+}
+
+impl CritSegment {
+    /// Segment length in virtual ns.
+    pub fn dur_ns(&self) -> u64 {
+        self.t1 - self.t0
+    }
+}
+
+/// The makespan-critical chain, ordered from t = 0 to the makespan.
+#[derive(Debug, Clone, Default)]
+pub struct CritPath {
+    /// Contiguous segments tiling `[0, makespan]`.
+    pub segments: Vec<CritSegment>,
+}
+
+impl CritPath {
+    /// Walk the span graph backward from the last-finishing rank.
+    /// `rank_end_ns` are per-rank completion times (the makespan is
+    /// their max); `spans` is the per-rank trace.
+    pub fn analyze(spans: &[Vec<Span>], rank_end_ns: &[u64]) -> CritPath {
+        let Some((start_rank, &makespan)) =
+            rank_end_ns.iter().enumerate().max_by_key(|&(_, &e)| e)
+        else {
+            return CritPath::default();
+        };
+
+        // Per-rank binding-edge spans, sorted by end time for the
+        // latest-before-t lookups.
+        let mut edged: Vec<Vec<&Span>> = spans
+            .iter()
+            .map(|tl| {
+                tl.iter()
+                    .filter(|s| {
+                        s.edge.is_some_and(|e| e.src_vt > s.t0 && e.src_rank < rank_end_ns.len())
+                    })
+                    .collect()
+            })
+            .collect();
+        for tl in &mut edged {
+            tl.sort_by_key(|s| s.t1);
+        }
+
+        let mut segments = Vec::new();
+        let (mut rank, mut t) = (start_rank, makespan);
+        while t > 0 {
+            // Latest binding edge on this rank resolving strictly below t.
+            let hit = edged
+                .get(rank)
+                .into_iter()
+                .flatten()
+                .rev()
+                .find(|s| s.t1 <= t && s.edge.expect("filtered").src_vt < t);
+            match hit {
+                None => {
+                    segments.push(CritSegment { rank, t0: 0, t1: t, label: WORK });
+                    break;
+                }
+                Some(s) => {
+                    let edge = s.edge.expect("filtered");
+                    if s.t1 < t {
+                        segments.push(CritSegment { rank, t0: s.t1, t1: t, label: WORK });
+                    }
+                    let jump = edge.src_vt.min(s.t1);
+                    if jump < s.t1 {
+                        segments.push(CritSegment { rank, t0: jump, t1: s.t1, label: s.label() });
+                    }
+                    rank = edge.src_rank;
+                    t = jump;
+                }
+            }
+        }
+        segments.reverse();
+        CritPath { segments }
+    }
+
+    /// Total chain length — equals the makespan by construction.
+    pub fn total_ns(&self) -> u64 {
+        self.segments.iter().map(CritSegment::dur_ns).sum()
+    }
+
+    /// Cross-rank jumps in the chain.
+    pub fn edge_count(&self) -> usize {
+        self.segments.windows(2).filter(|w| w[0].rank != w[1].rank).count()
+    }
+
+    /// Aggregate chain time per label, heaviest first.
+    pub fn top_contributors(&self, k: usize) -> Vec<(&'static str, u64)> {
+        let mut by_label: Vec<(&'static str, u64)> = Vec::new();
+        for seg in &self.segments {
+            match by_label.iter_mut().find(|(l, _)| *l == seg.label) {
+                Some((_, ns)) => *ns += seg.dur_ns(),
+                None => by_label.push((seg.label, seg.dur_ns())),
+            }
+        }
+        by_label.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        by_label.truncate(k);
+        by_label
+    }
+
+    /// Render the top contributors as the `crit-path=` summary field:
+    /// `label:share%` joined with `+`, e.g. `work:71%+barrier:23%+get:6%`.
+    pub fn render_top(&self, k: usize) -> String {
+        let total = self.total_ns().max(1);
+        self.top_contributors(k)
+            .iter()
+            .map(|(label, ns)| format!("{label}:{:.0}%", *ns as f64 * 100.0 / total as f64))
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::tracer::{op, SpanEdge, WaitCause};
+
+    fn span(rank: usize, t0: u64, t1: u64, op_name: &'static str, edge: Option<(usize, u64)>) -> Span {
+        Span {
+            rank,
+            stage: 0,
+            t0,
+            t1,
+            op: op_name,
+            cause: (op_name == op::WAIT).then_some(WaitCause::Barrier),
+            bytes: 0,
+            peer: None,
+            edge: edge.map(|(src_rank, src_vt)| SpanEdge { src_rank, src_vt }),
+        }
+    }
+
+    #[test]
+    fn no_edges_is_one_work_segment() {
+        let spans = vec![vec![span(0, 0, 50, op::PUT, None)], vec![]];
+        let path = CritPath::analyze(&spans, &[80, 100]);
+        assert_eq!(path.segments.len(), 1);
+        assert_eq!(path.segments[0], CritSegment { rank: 1, t0: 0, t1: 100, label: WORK });
+        assert_eq!(path.total_ns(), 100);
+        assert_eq!(path.edge_count(), 0);
+    }
+
+    #[test]
+    fn binding_edge_jumps_ranks_and_total_matches_makespan() {
+        // Rank 1 waits at a barrier [40, 100] bound by rank 0's arrival
+        // at vt 90, then works to 160.  Rank 0 worked 0..90.
+        let spans = vec![
+            Vec::new(),
+            vec![span(1, 40, 100, op::WAIT, Some((0, 90)))],
+        ];
+        let path = CritPath::analyze(&spans, &[90, 160]);
+        assert_eq!(path.total_ns(), 160);
+        assert_eq!(path.edge_count(), 1);
+        assert_eq!(
+            path.segments,
+            vec![
+                CritSegment { rank: 0, t0: 0, t1: 90, label: WORK },
+                CritSegment { rank: 1, t0: 90, t1: 100, label: "barrier" },
+                CritSegment { rank: 1, t0: 100, t1: 160, label: WORK },
+            ]
+        );
+    }
+
+    #[test]
+    fn slack_edges_are_not_critical() {
+        // The dependency was ready (vt 10) long before rank 1 arrived
+        // (t0 = 40): positive slack, so the chain must not jump.
+        let spans = vec![Vec::new(), vec![span(1, 40, 50, op::WAIT_ATOMIC, Some((0, 10)))]];
+        let path = CritPath::analyze(&spans, &[10, 100]);
+        assert_eq!(path.segments.len(), 1);
+        assert_eq!(path.segments[0].rank, 1);
+        assert_eq!(path.total_ns(), 100);
+    }
+
+    #[test]
+    fn chained_edges_telescope_to_zero() {
+        // 2 <- 1 <- 0: each rank's finish feeds the next's wait.
+        let spans = vec![
+            Vec::new(),
+            vec![span(1, 10, 60, op::WAIT, Some((0, 50)))],
+            vec![span(2, 20, 120, op::GET, Some((1, 110)))],
+        ];
+        let path = CritPath::analyze(&spans, &[50, 110, 200]);
+        assert_eq!(path.total_ns(), 200);
+        assert_eq!(path.edge_count(), 2);
+        assert_eq!(path.segments.first().unwrap().rank, 0);
+        // Segments tile contiguously.
+        for w in path.segments.windows(2) {
+            assert_eq!(w[0].t1, w[1].t0);
+        }
+    }
+
+    #[test]
+    fn top_contributors_rank_by_duration() {
+        let spans = vec![
+            Vec::new(),
+            vec![span(1, 0, 80, op::WAIT, Some((0, 75)))],
+        ];
+        let path = CritPath::analyze(&spans, &[75, 100]);
+        let top = path.top_contributors(2);
+        assert_eq!(top[0], (WORK, 95)); // 75 on rank 0 + 20 on rank 1
+        assert_eq!(top[1], ("barrier", 5));
+        let rendered = path.render_top(2);
+        assert!(rendered.starts_with("work:95%"), "{rendered}");
+        assert!(rendered.contains("barrier:5%"), "{rendered}");
+    }
+
+    #[test]
+    fn empty_inputs_are_empty_paths() {
+        assert_eq!(CritPath::analyze(&[], &[]).total_ns(), 0);
+        assert_eq!(CritPath::analyze(&[vec![]], &[0]).total_ns(), 0);
+        assert_eq!(CritPath::default().render_top(3), "");
+    }
+}

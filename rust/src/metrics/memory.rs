@@ -49,6 +49,18 @@ impl MemoryTracker {
         self.peak.load(Ordering::Relaxed)
     }
 
+    /// The high-water-mark sample: (virtual ns, bytes) of the first
+    /// sample reaching the peak.  (0, 0) when nothing was recorded.
+    pub fn peak_sample(&self) -> (u64, u64) {
+        let samples = self.samples();
+        let peak = samples.iter().map(|&(_, b)| b).max().unwrap_or(0);
+        samples
+            .iter()
+            .find(|&&(_, b)| b == peak)
+            .copied()
+            .unwrap_or((0, 0))
+    }
+
     /// (virtual ns, bytes) samples ordered by insertion.  Cross-rank
     /// interleaving is unordered in virtual time; callers sort.
     pub fn samples(&self) -> Vec<(u64, u64)> {
@@ -91,6 +103,16 @@ mod tests {
         m.alloc(3, 10);
         assert_eq!(m.current(), 60);
         assert_eq!(m.peak(), 300);
+    }
+
+    #[test]
+    fn peak_sample_reports_time_of_high_water_mark() {
+        let m = MemoryTracker::new();
+        m.alloc(10, 100);
+        m.alloc(20, 200);
+        m.free(30, 250);
+        assert_eq!(m.peak_sample(), (20, 300));
+        assert_eq!(MemoryTracker::new().peak_sample(), (0, 0));
     }
 
     #[test]

@@ -1,13 +1,21 @@
-//! Metrics: per-rank phase timelines, memory accounting and run reports.
+//! Metrics: per-rank phase timelines, op-level structured tracing,
+//! memory accounting and run reports.
 //!
 //! Figures 6 (memory) and 7 (execution timelines) of the paper are pure
 //! observability artifacts; this module is the substrate that records
-//! them during a job and renders the series the harness prints.
+//! them during a job and renders the series the harness prints.  On top
+//! of the coarse phase timelines, `tracer` records cause-tagged spans
+//! for every protocol-level operation (exported as Chrome-trace JSON)
+//! and `crit` extracts the cross-rank critical path (DESIGN.md §9).
 
+pub mod crit;
 pub mod memory;
 pub mod report;
 pub mod timeline;
+pub mod tracer;
 
+pub use crit::{CritPath, CritSegment};
 pub use memory::MemoryTracker;
 pub use report::{JobReport, PhaseBreakdown};
 pub use timeline::{Event, EventKind, Timeline};
+pub use tracer::{Span, SpanEdge, TraceStats, WaitCause};

@@ -1,6 +1,8 @@
 //! Job reports: the numbers every figure is derived from.
 
+use super::crit::CritPath;
 use super::timeline::{Event, EventKind};
+use super::tracer::{Span, TraceStats};
 
 /// Virtual-time breakdown of one rank's run.
 #[derive(Debug, Clone, Default)]
@@ -89,6 +91,9 @@ pub struct JobReport {
     pub spill_bytes_saved: u64,
     /// Peak tracked memory over the node (bytes).
     pub peak_memory_bytes: u64,
+    /// Virtual time (ns) at which the memory high-water mark was first
+    /// reached (0 when nothing was tracked).
+    pub mem_hwm_vt_ns: u64,
     /// Normalized (t, bytes) memory series.
     pub memory_series: Vec<(f64, u64)>,
     /// Number of unique output keys.
@@ -97,6 +102,12 @@ pub struct JobReport {
     /// contribute their values (e.g. total word occurrences),
     /// variable-width use-cases their payload byte lengths.
     pub total_count: u64,
+    /// Per-rank structured trace spans (protocol-level ops and
+    /// cause-attributed waits).  The per-rank sum of `op == "wait"`
+    /// span durations equals that rank's `PhaseBreakdown::wait_ns`
+    /// exactly — both are recorded by the same `timed_wait` call over
+    /// the same interval.
+    pub spans: Vec<Vec<Span>>,
 }
 
 impl JobReport {
@@ -185,6 +196,20 @@ impl JobReport {
         self.shuffle_logical_bytes() as f64 / wire as f64
     }
 
+    /// Aggregate op-level trace statistics (per-op counts/bytes/ns and
+    /// wait-by-cause totals) over all ranks' spans.
+    pub fn trace_stats(&self) -> TraceStats {
+        TraceStats::from_spans(&self.spans)
+    }
+
+    /// Cross-rank critical path through the span graph: the chain of
+    /// segments that determines the makespan.  Its `total_ns()` equals
+    /// `elapsed_ns` by construction (segments tile `[0, makespan]` on
+    /// the binding ranks).
+    pub fn crit_path(&self) -> CritPath {
+        CritPath::analyze(&self.spans, &self.rank_elapsed_ns)
+    }
+
     /// One-line summary used by the CLI.
     pub fn summary(&self) -> String {
         let mut line = format!(
@@ -210,6 +235,17 @@ impl JobReport {
         if self.spill_bytes_saved > 0 {
             line.push_str(&format!(" spill-saved={}KiB", self.spill_bytes_saved >> 10));
         }
+        if self.peak_memory_bytes > 0 {
+            line.push_str(&format!(
+                " mem-hwm={}MiB@{:.3}s",
+                self.peak_memory_bytes >> 20,
+                self.mem_hwm_vt_ns as f64 / 1e9
+            ));
+        }
+        let crit = self.crit_path();
+        if !crit.segments.is_empty() {
+            line.push_str(&format!(" crit-path={}", crit.render_top(3)));
+        }
         line
     }
 }
@@ -233,9 +269,9 @@ mod tests {
     #[test]
     fn breakdown_from_events_sums_by_kind() {
         let events = vec![
-            Event { t0: 0, t1: 5, kind: EventKind::Map },
-            Event { t0: 5, t1: 6, kind: EventKind::Wait },
-            Event { t0: 6, t1: 16, kind: EventKind::Map },
+            Event { t0: 0, t1: 5, kind: EventKind::Map, stage: 0 },
+            Event { t0: 5, t1: 6, kind: EventKind::Wait, stage: 0 },
+            Event { t0: 6, t1: 16, kind: EventKind::Map, stage: 0 },
         ];
         let b = PhaseBreakdown::from_events(&events);
         assert_eq!(b.map_ns, 15);
@@ -264,9 +300,11 @@ mod tests {
             shuffle_logical_bytes_per_rank: vec![250, 250],
             spill_bytes_saved: 0,
             peak_memory_bytes: 0,
+            mem_hwm_vt_ns: 0,
             memory_series: vec![],
             unique_keys: 0,
             total_count: 0,
+            spans: vec![vec![], vec![]],
         };
         assert!((r.mean_wait_fraction() - 0.25).abs() < 1e-9);
         assert!((r.reduce_max_over_mean() - 1.5).abs() < 1e-9);

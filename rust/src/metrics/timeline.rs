@@ -45,6 +45,10 @@ pub struct Event {
     pub t1: u64,
     /// Activity.
     pub kind: EventKind,
+    /// Pipeline stage the interval belongs to (0 outside pipelines);
+    /// merged multi-stage timelines keep each stage's tag, so renderers
+    /// can draw stage boundaries.
+    pub stage: u32,
 }
 
 /// A rank-local event recorder.
@@ -53,18 +57,24 @@ pub struct Event {
 #[derive(Debug, Default)]
 pub struct Timeline {
     events: RefCell<Vec<Event>>,
+    stage: u32,
 }
 
 impl Timeline {
-    /// Empty timeline.
+    /// Empty timeline (stage 0).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Empty timeline whose events are tagged with a pipeline stage id.
+    pub fn for_stage(stage: u32) -> Self {
+        Timeline { events: RefCell::new(Vec::new()), stage }
     }
 
     /// Record an interval (ignored if empty).
     pub fn record(&self, t0: u64, t1: u64, kind: EventKind) {
         if t1 > t0 {
-            self.events.borrow_mut().push(Event { t0, t1, kind });
+            self.events.borrow_mut().push(Event { t0, t1, kind, stage: self.stage });
         }
     }
 
@@ -92,7 +102,8 @@ impl Timeline {
 
 /// Render per-rank timelines as an ASCII chart, `width` chars wide
 /// (Fig. 7's visual).  Each row is one rank; each column a time slice
-/// labelled by the activity that dominated it.
+/// labelled by the activity that dominated it.  Columns where a later
+/// pipeline stage begins are drawn as `|` stage separators.
 pub fn render_ascii(timelines: &[Vec<Event>], width: usize) -> String {
     let t_end = timelines
         .iter()
@@ -100,6 +111,7 @@ pub fn render_ascii(timelines: &[Vec<Event>], width: usize) -> String {
         .max()
         .unwrap_or(0)
         .max(1);
+    let slot_of = |t: u64| (t * width as u64 / t_end).min(width as u64 - 1) as usize;
     let mut out = String::new();
     for (rank, tl) in timelines.iter().enumerate() {
         let mut row = vec![' '; width];
@@ -125,18 +137,33 @@ pub fn render_ascii(timelines: &[Vec<Event>], width: usize) -> String {
                 None => ' ',
             };
         }
+        // Stage boundaries: the first event of each stage > 0 marks
+        // where that stage began on this rank.
+        let mut seen_stage = 0u32;
+        for e in tl {
+            if e.stage > seen_stage {
+                seen_stage = e.stage;
+                row[slot_of(e.t0)] = '|';
+            }
+        }
         out.push_str(&format!("rank {rank:>3} |{}|\n", row.iter().collect::<String>()));
     }
-    out.push_str("legend: M=map R=reduce C=combine i=io l=local-reduce k=ckpt .=wait\n");
+    out.push_str("legend: M=map R=reduce C=combine i=io l=local-reduce k=ckpt .=wait |=stage\n");
     out
 }
 
-/// Render timelines as CSV rows: `rank,t0_ns,t1_ns,kind`.
+/// Render timelines as CSV rows: `rank,stage,t0_ns,t1_ns,kind`.
 pub fn render_csv(timelines: &[Vec<Event>]) -> String {
-    let mut out = String::from("rank,t0_ns,t1_ns,kind\n");
+    let mut out = String::from("rank,stage,t0_ns,t1_ns,kind\n");
     for (rank, tl) in timelines.iter().enumerate() {
         for e in tl {
-            out.push_str(&format!("{rank},{},{},{}\n", e.t0, e.t1, e.kind.label()));
+            out.push_str(&format!(
+                "{rank},{},{},{},{}\n",
+                e.stage,
+                e.t0,
+                e.t1,
+                e.kind.label()
+            ));
         }
     }
     out
@@ -165,10 +192,18 @@ mod tests {
     }
 
     #[test]
+    fn stage_tag_stamps_events() {
+        let tl = Timeline::for_stage(3);
+        tl.record(0, 10, EventKind::Map);
+        assert_eq!(tl.events()[0].stage, 3);
+        assert_eq!(Timeline::new().stage, 0);
+    }
+
+    #[test]
     fn ascii_render_shows_dominant_activity() {
         let tls = vec![
-            vec![Event { t0: 0, t1: 50, kind: EventKind::Map }],
-            vec![Event { t0: 0, t1: 50, kind: EventKind::Wait }],
+            vec![Event { t0: 0, t1: 50, kind: EventKind::Map, stage: 0 }],
+            vec![Event { t0: 0, t1: 50, kind: EventKind::Wait, stage: 0 }],
         ];
         let s = render_ascii(&tls, 10);
         assert!(s.contains("rank   0 |MMMMMMMMMM|"));
@@ -176,10 +211,25 @@ mod tests {
     }
 
     #[test]
+    fn ascii_render_marks_stage_boundaries() {
+        let tls = vec![vec![
+            Event { t0: 0, t1: 50, kind: EventKind::Map, stage: 0 },
+            Event { t0: 50, t1: 100, kind: EventKind::Reduce, stage: 1 },
+        ]];
+        let s = render_ascii(&tls, 10);
+        assert!(s.contains("rank   0 |MMMMM|RRRR|"), "{s}");
+        assert!(s.contains("|=stage"));
+    }
+
+    #[test]
     fn csv_render_has_header_and_rows() {
-        let tls = vec![vec![Event { t0: 1, t1: 2, kind: EventKind::Reduce }]];
+        let tls = vec![vec![
+            Event { t0: 1, t1: 2, kind: EventKind::Reduce, stage: 0 },
+            Event { t0: 2, t1: 3, kind: EventKind::Map, stage: 2 },
+        ]];
         let s = render_csv(&tls);
-        assert!(s.starts_with("rank,t0_ns,t1_ns,kind\n"));
-        assert!(s.contains("0,1,2,reduce"));
+        assert!(s.starts_with("rank,stage,t0_ns,t1_ns,kind\n"));
+        assert!(s.contains("0,0,1,2,reduce"));
+        assert!(s.contains("0,2,2,3,map"));
     }
 }

@@ -1,0 +1,487 @@
+//! Op-level structured tracing (DESIGN.md §9).
+//!
+//! Every protocol-level operation — window put/get/atomics/locks/flush,
+//! collectives, the sketch/route-table exchange, spill writes, prefetch
+//! issue/wait, steal claims — records a [`Span`] tagged with what it was
+//! (`op`), why the rank stalled (`cause`, for waits), how many bytes
+//! moved, which peer was involved, and which pipeline stage it belongs
+//! to.  Spans feed three consumers:
+//!
+//! * the Chrome-trace exporter ([`chrome_trace_json`]): one track per
+//!   rank, flow arrows on cross-rank dependency edges, loadable in
+//!   Perfetto or `chrome://tracing`;
+//! * the aggregate registry ([`TraceStats`]): per-op counters, byte
+//!   totals and wait-by-cause totals surfaced through `JobReport` and
+//!   the `BENCH_*.json` summaries;
+//! * the critical-path analyzer (`crate::metrics::crit`): walks the
+//!   recorded cross-rank edges backward from the makespan.
+//!
+//! Recording is thread-local: ranks are dedicated OS threads (see
+//! `mpi::Universe`), so the job driver installs a recorder at rank entry
+//! ([`install`]) and drains it at exit ([`take`]).  Substrate code
+//! (windows, collectives, storage) records spans without threading a
+//! handle through every signature; with no recorder installed (unit
+//! tests driving a window directly) recording is a no-op.
+//!
+//! **Wait-sum invariant:** spans with `op == op::WAIT` are recorded only
+//! by `mapreduce::job::timed_wait` (and its explicit-pair equivalents),
+//! which stamps the *same* interval into the legacy timeline as an
+//! `EventKind::Wait` event.  Both sides drop empty intervals, so per
+//! rank the cause-attributed wait spans sum exactly to the legacy
+//! `PhaseBreakdown::wait_ns` — asserted in the integration tests.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use super::timeline::Event;
+
+/// Why a rank was blocked (the decomposition of `EventKind::Wait`).
+///
+/// The taxonomy covers every blocking mechanism in the protocol; causes
+/// that a given configuration never exercises (e.g. `WindowLock` waits
+/// surface inside Combine intervals, not Wait intervals) simply report
+/// zero attributed nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum WaitCause {
+    /// Barrier / collective rendezvous: leave at the max entry clock.
+    Barrier,
+    /// Blocking window lock acquisition (Combine tree, flush epochs).
+    WindowLock,
+    /// `wait_atomic` on a status or publication cell (sketch/route
+    /// exchange, bucket close protocol).
+    StatusWait,
+    /// Read completion floored by spill-file durability (stage-boundary
+    /// prefetch waiting on the producer's background flusher).
+    SpillDurability,
+    /// Job-stealing claim gate pacing a thief against victim progress.
+    StealGate,
+}
+
+impl WaitCause {
+    /// Stable label used in trace JSON, summaries, and bench samples.
+    pub fn label(self) -> &'static str {
+        match self {
+            WaitCause::Barrier => "barrier",
+            WaitCause::WindowLock => "window-lock",
+            WaitCause::StatusWait => "status-wait",
+            WaitCause::SpillDurability => "spill-durability",
+            WaitCause::StealGate => "steal-gate",
+        }
+    }
+
+    /// Every cause, in label order (taxonomy enumeration for reports).
+    pub const ALL: [WaitCause; 5] = [
+        WaitCause::Barrier,
+        WaitCause::WindowLock,
+        WaitCause::StatusWait,
+        WaitCause::SpillDurability,
+        WaitCause::StealGate,
+    ];
+}
+
+/// Operation names (the `op` field of every [`Span`]).  Static strings
+/// so spans stay `Copy`-cheap and aggregation can key on pointers.
+pub mod op {
+    pub const PUT: &str = "put";
+    pub const GET: &str = "get";
+    pub const GET_MULTICAST: &str = "get-multicast";
+    pub const ATOMIC_STORE: &str = "atomic-store";
+    pub const ATOMIC_LOAD: &str = "atomic-load";
+    pub const CAS: &str = "cas";
+    pub const FETCH_ADD: &str = "fetch-add";
+    pub const WAIT_ATOMIC: &str = "wait-atomic";
+    pub const LOCK: &str = "lock";
+    pub const UNLOCK: &str = "unlock";
+    pub const FLUSH: &str = "flush";
+    pub const BARRIER: &str = "barrier";
+    pub const BCAST: &str = "bcast";
+    pub const SCATTER: &str = "scatter";
+    pub const GATHER: &str = "gather";
+    pub const ALLTOALLV: &str = "alltoallv";
+    pub const MULTICAST_ROUND: &str = "multicast-round";
+    pub const ALLREDUCE: &str = "allreduce";
+    pub const SKETCH_PUBLISH: &str = "sketch-publish";
+    pub const SKETCH_FETCH: &str = "sketch-fetch";
+    pub const ROUTE_PUBLISH: &str = "route-publish";
+    pub const ROUTE_FETCH: &str = "route-fetch";
+    pub const CODED_PUBLISH: &str = "coded-publish";
+    pub const CODED_FETCH: &str = "coded-fetch";
+    pub const SPILL_WRITE: &str = "spill-write";
+    pub const PREFETCH_ISSUE: &str = "prefetch-issue";
+    pub const PREFETCH_WAIT: &str = "prefetch-wait";
+    pub const TASK_CLAIM: &str = "task-claim";
+    pub const STEAL_ATTEMPT: &str = "steal-attempt";
+    pub const STEAL_CLAIM: &str = "steal-claim";
+    pub const WAIT: &str = "wait";
+}
+
+/// A cross-rank dependency edge attached to the consuming span: the
+/// consumer's virtual time could not pass `src_vt`, which was produced
+/// on `src_rank` (publication, multicast send, flush durability,
+/// slowest rendezvous entrant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEdge {
+    /// Rank whose clock the dependency carried.
+    pub src_rank: usize,
+    /// Virtual time the dependency became available.
+    pub src_vt: u64,
+}
+
+/// One recorded operation interval.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Rank that executed the operation.
+    pub rank: usize,
+    /// Pipeline stage the operation belongs to (0 outside pipelines).
+    pub stage: u32,
+    /// Interval start, virtual ns.
+    pub t0: u64,
+    /// Interval end, virtual ns.
+    pub t1: u64,
+    /// Operation name (see [`op`]).
+    pub op: &'static str,
+    /// Wait-cause attribution (always set on `op::WAIT` spans; set on
+    /// protocol-op spans whose latency is dominated by that mechanism).
+    pub cause: Option<WaitCause>,
+    /// Payload bytes moved (0 for pure synchronization).
+    pub bytes: u64,
+    /// Remote rank involved (None for collectives / local ops).
+    pub peer: Option<usize>,
+    /// Cross-rank dependency this operation waited behind.
+    pub edge: Option<SpanEdge>,
+}
+
+impl Span {
+    /// Interval length in virtual ns.
+    pub fn dur_ns(&self) -> u64 {
+        self.t1 - self.t0
+    }
+
+    /// Display label: the wait cause for attributed waits, the op name
+    /// otherwise.
+    pub fn label(&self) -> &'static str {
+        if self.op == op::WAIT {
+            self.cause.map_or(self.op, WaitCause::label)
+        } else {
+            self.op
+        }
+    }
+
+    /// Slack of this span's dependency edge: how long the dependency
+    /// was ready before this rank arrived (`t0 - src_vt`, floored at
+    /// zero).  Zero slack means the rank genuinely waited — the edge is
+    /// eligible for the critical path.
+    pub fn edge_slack(&self) -> Option<u64> {
+        self.edge.map(|e| self.t0.saturating_sub(e.src_vt))
+    }
+}
+
+/// Thread-local recorder: one per rank thread, installed by the job
+/// driver for the duration of a backend execution.
+struct Recorder {
+    rank: usize,
+    stage: u32,
+    spans: Vec<Span>,
+}
+
+thread_local! {
+    static RECORDER: RefCell<Option<Recorder>> = const { RefCell::new(None) };
+}
+
+/// Install a recorder on the current rank thread.  Replaces (drops) any
+/// previous recorder — rank threads live for exactly one stage.
+pub fn install(rank: usize, stage: u32) {
+    RECORDER.with(|r| {
+        *r.borrow_mut() = Some(Recorder { rank, stage, spans: Vec::new() });
+    });
+}
+
+/// Drain the current thread's recorder; empty when none was installed.
+pub fn take() -> Vec<Span> {
+    RECORDER.with(|r| r.borrow_mut().take().map(|rec| rec.spans).unwrap_or_default())
+}
+
+fn push(op: &'static str, cause: Option<WaitCause>, t0: u64, t1: u64, bytes: u64, peer: Option<usize>, edge: Option<SpanEdge>) {
+    if t1 <= t0 {
+        // Mirror `Timeline::record`: empty intervals are dropped, which
+        // keeps the wait-sum invariant exact on both sides.
+        return;
+    }
+    RECORDER.with(|r| {
+        if let Some(rec) = r.borrow_mut().as_mut() {
+            let (rank, stage) = (rec.rank, rec.stage);
+            rec.spans.push(Span { rank, stage, t0, t1, op, cause, bytes, peer, edge });
+        }
+    });
+}
+
+/// Record a protocol-op span (no-op without an installed recorder).
+pub fn record(op: &'static str, t0: u64, t1: u64, bytes: u64, peer: Option<usize>, edge: Option<SpanEdge>) {
+    push(op, None, t0, t1, bytes, peer, edge);
+}
+
+/// Record a protocol-op span carrying a wait-cause annotation (the
+/// mechanism behind its latency).  Not part of the wait-sum invariant —
+/// only [`wait`] spans are.
+pub fn record_cause(op: &'static str, cause: WaitCause, t0: u64, t1: u64, bytes: u64, peer: Option<usize>, edge: Option<SpanEdge>) {
+    push(op, Some(cause), t0, t1, bytes, peer, edge);
+}
+
+/// Record an attributed wait span.  Must mirror an `EventKind::Wait`
+/// timeline record over the identical interval (see `job::timed_wait`).
+pub fn wait(cause: WaitCause, t0: u64, t1: u64, edge: Option<SpanEdge>) {
+    push(op::WAIT, Some(cause), t0, t1, 0, None, edge);
+}
+
+/// Aggregate counters over one operation name.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpStat {
+    /// Spans recorded.
+    pub count: u64,
+    /// Total virtual ns.
+    pub total_ns: u64,
+    /// Total payload bytes.
+    pub bytes: u64,
+}
+
+/// Aggregate counters over one wait cause.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WaitStat {
+    /// Attributed wait spans.
+    pub count: u64,
+    /// Total attributed ns (sums to `PhaseBreakdown::wait_ns`).
+    pub total_ns: u64,
+    /// Longest single wait.
+    pub max_ns: u64,
+}
+
+/// The metrics registry a trace aggregates into: per-op counters and
+/// byte totals, plus the wait-by-cause decomposition.
+#[derive(Debug, Clone, Default)]
+pub struct TraceStats {
+    /// Per-op aggregates, keyed by op name (label order).
+    pub per_op: BTreeMap<&'static str, OpStat>,
+    /// Attributed-wait aggregates, keyed by cause label.
+    pub wait_by_cause: BTreeMap<&'static str, WaitStat>,
+}
+
+impl TraceStats {
+    /// Aggregate all ranks' spans.
+    pub fn from_spans(spans: &[Vec<Span>]) -> TraceStats {
+        let mut stats = TraceStats::default();
+        for s in spans.iter().flatten() {
+            let e = stats.per_op.entry(s.op).or_default();
+            e.count += 1;
+            e.total_ns += s.dur_ns();
+            e.bytes += s.bytes;
+            if s.op == op::WAIT {
+                let label = s.cause.map_or("unattributed", WaitCause::label);
+                let w = stats.wait_by_cause.entry(label).or_default();
+                w.count += 1;
+                w.total_ns += s.dur_ns();
+                w.max_ns = w.max_ns.max(s.dur_ns());
+            }
+        }
+        stats
+    }
+
+    /// Total attributed wait ns across causes.
+    pub fn attributed_wait_ns(&self) -> u64 {
+        self.wait_by_cause.values().map(|w| w.total_ns).sum()
+    }
+}
+
+/// Per-cause attributed wait ns of a single rank's spans (the left side
+/// of the wait-sum invariant).
+pub fn wait_by_cause_ns(spans: &[Span]) -> BTreeMap<&'static str, u64> {
+    let mut out = BTreeMap::new();
+    for s in spans.iter().filter(|s| s.op == op::WAIT) {
+        *out.entry(s.cause.map_or("unattributed", WaitCause::label)).or_insert(0) += s.dur_ns();
+    }
+    out
+}
+
+/// Append `ns` as a Chrome-trace microsecond value (`ns / 1000` with
+/// three fractional digits — the format's `ts`/`dur` unit is µs).
+fn push_us(out: &mut String, ns: u64) {
+    out.push_str(&format!("{}.{:03}", ns / 1000, ns % 1000));
+}
+
+fn push_event_head(out: &mut String, ph: char, name: &str, cat: &str, tid: usize, ts_ns: u64) {
+    out.push_str(&format!("{{\"ph\":\"{ph}\",\"name\":\"{name}\",\"cat\":\"{cat}\",\"pid\":0,\"tid\":{tid},\"ts\":"));
+    push_us(out, ts_ns);
+}
+
+/// Serialize timelines + spans as Chrome-trace-event JSON (JSON Object
+/// Format: `{"traceEvents": [...]}`), loadable in Perfetto.
+///
+/// * one track (`tid`) per rank under a single `mr1s` process;
+/// * every legacy phase event becomes a `cat:"phase"` complete (`X`)
+///   slice, so the coarse Fig. 7 view survives in the trace;
+/// * every op span becomes a `cat:"op"` (or `cat:"wait"`) slice with
+///   `bytes`/`peer`/`cause`/`stage` args;
+/// * every cross-rank edge becomes a flow arrow (`s` at the producer,
+///   `f` at the consumer) with the edge's slack in its id ordering.
+pub fn chrome_trace_json(timelines: &[Vec<Event>], spans: &[Vec<Span>]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    let mut sep = |out: &mut String| {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+    };
+
+    sep(&mut out);
+    out.push_str("{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":0,\"args\":{\"name\":\"mr1s\"}}");
+    let nranks = timelines.len().max(spans.len());
+    for rank in 0..nranks {
+        sep(&mut out);
+        out.push_str(&format!(
+            "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":0,\"tid\":{rank},\"args\":{{\"name\":\"rank {rank}\"}}}}"
+        ));
+    }
+
+    for (rank, tl) in timelines.iter().enumerate() {
+        for e in tl {
+            sep(&mut out);
+            push_event_head(&mut out, 'X', e.kind.label(), "phase", rank, e.t0);
+            out.push_str(",\"dur\":");
+            push_us(&mut out, e.t1 - e.t0);
+            out.push_str(&format!(",\"args\":{{\"stage\":{}}}}}", e.stage));
+        }
+    }
+
+    let mut flow_id = 0u64;
+    for rank_spans in spans {
+        for s in rank_spans {
+            sep(&mut out);
+            let cat = if s.op == op::WAIT { "wait" } else { "op" };
+            push_event_head(&mut out, 'X', s.label(), cat, s.rank, s.t0);
+            out.push_str(",\"dur\":");
+            push_us(&mut out, s.dur_ns());
+            out.push_str(&format!(",\"args\":{{\"stage\":{},\"bytes\":{}", s.stage, s.bytes));
+            if let Some(p) = s.peer {
+                out.push_str(&format!(",\"peer\":{p}"));
+            }
+            if let Some(c) = s.cause {
+                out.push_str(&format!(",\"cause\":\"{}\"", c.label()));
+            }
+            if let Some(slack) = s.edge_slack() {
+                out.push_str(&format!(",\"edge_slack_ns\":{slack}"));
+            }
+            out.push_str("}}");
+
+            if let Some(edge) = s.edge {
+                flow_id += 1;
+                sep(&mut out);
+                push_event_head(&mut out, 's', "dep", "dep", edge.src_rank, edge.src_vt);
+                out.push_str(&format!(",\"id\":{flow_id}}}"));
+                sep(&mut out);
+                push_event_head(&mut out, 'f', "dep", "dep", s.rank, s.t1);
+                out.push_str(&format!(",\"bp\":\"e\",\"id\":{flow_id}}}"));
+            }
+        }
+    }
+
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::timeline::EventKind;
+
+    #[test]
+    fn install_record_take_roundtrip() {
+        install(3, 2);
+        record(op::PUT, 10, 20, 64, Some(1), None);
+        wait(WaitCause::Barrier, 20, 25, Some(SpanEdge { src_rank: 0, src_vt: 24 }));
+        record(op::GET, 5, 5, 9, None, None); // empty: dropped
+        let spans = take();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].rank, 3);
+        assert_eq!(spans[0].stage, 2);
+        assert_eq!(spans[0].op, op::PUT);
+        assert_eq!(spans[1].cause, Some(WaitCause::Barrier));
+        assert_eq!(spans[1].label(), "barrier");
+        // Recorder is gone after take().
+        record(op::PUT, 0, 1, 0, None, None);
+        assert!(take().is_empty());
+    }
+
+    #[test]
+    fn recording_without_recorder_is_noop() {
+        assert!(take().is_empty());
+        record(op::FLUSH, 0, 10, 0, None, None);
+        assert!(take().is_empty());
+    }
+
+    #[test]
+    fn stats_aggregate_ops_and_wait_causes() {
+        install(0, 0);
+        record(op::PUT, 0, 10, 100, Some(1), None);
+        record(op::PUT, 10, 30, 200, Some(2), None);
+        wait(WaitCause::Barrier, 30, 40, None);
+        wait(WaitCause::StatusWait, 40, 70, None);
+        wait(WaitCause::Barrier, 70, 75, None);
+        let spans = vec![take()];
+        let stats = TraceStats::from_spans(&spans);
+        let put = stats.per_op[op::PUT];
+        assert_eq!((put.count, put.total_ns, put.bytes), (2, 30, 300));
+        assert_eq!(stats.wait_by_cause["barrier"].total_ns, 15);
+        assert_eq!(stats.wait_by_cause["barrier"].max_ns, 10);
+        assert_eq!(stats.wait_by_cause["status-wait"].count, 1);
+        assert_eq!(stats.attributed_wait_ns(), 45);
+        let per_rank = wait_by_cause_ns(&spans[0]);
+        assert_eq!(per_rank["barrier"], 15);
+        assert_eq!(per_rank["status-wait"], 30);
+    }
+
+    #[test]
+    fn edge_slack_floors_at_zero() {
+        let mut s = Span {
+            rank: 0,
+            stage: 0,
+            t0: 100,
+            t1: 200,
+            op: op::WAIT_ATOMIC,
+            cause: None,
+            bytes: 0,
+            peer: Some(1),
+            edge: Some(SpanEdge { src_rank: 1, src_vt: 150 }),
+        };
+        assert_eq!(s.edge_slack(), Some(0), "dependency arrived after us: no slack");
+        s.edge = Some(SpanEdge { src_rank: 1, src_vt: 40 });
+        assert_eq!(s.edge_slack(), Some(60));
+        s.edge = None;
+        assert_eq!(s.edge_slack(), None);
+    }
+
+    #[test]
+    fn chrome_trace_is_wellformed() {
+        let timelines = vec![vec![Event { t0: 0, t1: 1500, kind: EventKind::Map, stage: 0 }]];
+        install(0, 1);
+        record(op::PUT, 100, 300, 64, Some(1), None);
+        wait(WaitCause::StatusWait, 300, 800, Some(SpanEdge { src_rank: 1, src_vt: 750 }));
+        let spans = vec![take()];
+        let json = chrome_trace_json(&timelines, &spans);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with('}'));
+        assert!(json.contains("\"name\":\"map\""));
+        assert!(json.contains("\"cat\":\"phase\""));
+        assert!(json.contains("\"cat\":\"wait\""));
+        assert!(json.contains("\"cause\":\"status-wait\""));
+        // Fractional-µs timestamps: 1500 ns = 1.500 µs.
+        assert!(json.contains("\"dur\":1.500"));
+        // The edge produced a flow pair.
+        assert!(json.contains("\"ph\":\"s\""));
+        assert!(json.contains("\"ph\":\"f\""));
+        // Balanced braces (cheap well-formedness proxy; real schema
+        // validation lives in python/tests/test_trace_export.py).
+        let open = json.matches('{').count();
+        let close = json.matches('}').count();
+        assert_eq!(open, close);
+    }
+}

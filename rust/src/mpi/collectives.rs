@@ -13,14 +13,24 @@
 use std::sync::Arc;
 
 use super::universe::RankCtx;
+use crate::metrics::tracer::{self, op, SpanEdge};
 
 impl RankCtx {
     /// Barrier: everyone leaves at the max clock plus the stage cost.
     pub fn barrier(&self) {
-        let (_, max_vt) =
-            self.comm.shared.rendezvous.run(self.rank(), self.clock.now(), (), |_| ());
+        let t0 = self.clock.now();
+        let (_, max_vt, src) =
+            self.comm.shared.rendezvous.run_with_src(self.rank(), t0, (), |_| ());
         self.clock.sync_to(max_vt);
         self.clock.advance(self.cost.net.collective_cost(self.nranks(), 0));
+        tracer::record(
+            op::BARRIER,
+            t0,
+            self.clock.now(),
+            0,
+            None,
+            Some(SpanEdge { src_rank: src, src_vt: max_vt }),
+        );
     }
 
     /// Real-time-only rendezvous: all rank threads meet, virtual clocks
@@ -35,14 +45,24 @@ impl RankCtx {
     /// Broadcast `data` from `root`; every rank returns a copy.
     pub fn bcast(&self, root: usize, data: Option<Vec<u8>>) -> Vec<u8> {
         assert!(root < self.nranks());
-        let (out, max_vt): (Arc<Vec<u8>>, u64) = self.comm.shared.rendezvous.run(
-            self.rank(),
-            self.clock.now(),
-            (self.rank() == root).then_some(data.unwrap_or_default()),
-            move |mut inputs| inputs[root].take().expect("root contributed data"),
-        );
+        let t0 = self.clock.now();
+        let (out, max_vt, src): (Arc<Vec<u8>>, u64, usize) =
+            self.comm.shared.rendezvous.run_with_src(
+                self.rank(),
+                t0,
+                (self.rank() == root).then_some(data.unwrap_or_default()),
+                move |mut inputs| inputs[root].take().expect("root contributed data"),
+            );
         self.clock.sync_to(max_vt);
         self.clock.advance(self.cost.net.collective_cost(self.nranks(), out.len()));
+        tracer::record(
+            op::BCAST,
+            t0,
+            self.clock.now(),
+            out.len() as u64,
+            Some(root),
+            Some(SpanEdge { src_rank: src, src_vt: max_vt }),
+        );
         (*out).clone()
     }
 
@@ -55,32 +75,51 @@ impl RankCtx {
     ) -> T {
         assert!(root < self.nranks());
         let n = self.nranks();
-        let (all, max_vt): (Arc<Vec<T>>, u64) = self.comm.shared.rendezvous.run(
-            self.rank(),
-            self.clock.now(),
-            (self.rank() == root).then_some(items),
-            move |mut inputs| {
-                let items = inputs[root].take().flatten().expect("root provided items");
-                assert_eq!(items.len(), n, "scatter needs one item per rank");
-                items
-            },
-        );
+        let t0 = self.clock.now();
+        let (all, max_vt, src): (Arc<Vec<T>>, u64, usize) =
+            self.comm.shared.rendezvous.run_with_src(
+                self.rank(),
+                t0,
+                (self.rank() == root).then_some(items),
+                move |mut inputs| {
+                    let items = inputs[root].take().flatten().expect("root provided items");
+                    assert_eq!(items.len(), n, "scatter needs one item per rank");
+                    items
+                },
+            );
         self.clock.sync_to(max_vt);
         self.clock
             .advance(self.cost.net.collective_cost(n, std::mem::size_of::<T>()));
+        tracer::record(
+            op::SCATTER,
+            t0,
+            self.clock.now(),
+            std::mem::size_of::<T>() as u64,
+            Some(root),
+            Some(SpanEdge { src_rank: src, src_vt: max_vt }),
+        );
         all[self.rank()].clone()
     }
 
     /// Gather each rank's bytes at `root` (others get `None`).
     pub fn gather(&self, root: usize, data: Vec<u8>) -> Option<Vec<Vec<u8>>> {
         let bytes = data.len();
-        let (all, max_vt): (Arc<Vec<Vec<u8>>>, u64) =
+        let t0 = self.clock.now();
+        let (all, max_vt, src): (Arc<Vec<Vec<u8>>>, u64, usize) =
             self.comm
                 .shared
                 .rendezvous
-                .run(self.rank(), self.clock.now(), data, |inputs| inputs);
+                .run_with_src(self.rank(), t0, data, |inputs| inputs);
         self.clock.sync_to(max_vt);
         self.clock.advance(self.cost.net.collective_cost(self.nranks(), bytes));
+        tracer::record(
+            op::GATHER,
+            t0,
+            self.clock.now(),
+            bytes as u64,
+            Some(root),
+            Some(SpanEdge { src_rank: src, src_vt: max_vt }),
+        );
         (self.rank() == root).then(|| (*all).clone())
     }
 
@@ -91,16 +130,25 @@ impl RankCtx {
         assert_eq!(send.len(), self.nranks(), "one send buffer per destination");
         let me = self.rank();
         let sent: usize = send.iter().map(Vec::len).sum();
-        let (matrix, max_vt): (Arc<Vec<Vec<Vec<u8>>>>, u64) =
+        let t0 = self.clock.now();
+        let (matrix, max_vt, src): (Arc<Vec<Vec<Vec<u8>>>>, u64, usize) =
             self.comm
                 .shared
                 .rendezvous
-                .run(me, self.clock.now(), send, |inputs| inputs);
+                .run_with_src(me, t0, send, |inputs| inputs);
         self.clock.sync_to(max_vt);
         let recv: Vec<Vec<u8>> = matrix.iter().map(|row| row[me].clone()).collect();
         let recvd: usize = recv.iter().map(Vec::len).sum();
         self.clock
             .advance(self.cost.net.collective_cost(self.nranks(), sent.max(recvd)));
+        tracer::record(
+            op::ALLTOALLV,
+            t0,
+            self.clock.now(),
+            sent.max(recvd) as u64,
+            None,
+            Some(SpanEdge { src_rank: src, src_vt: max_vt }),
+        );
         recv
     }
 
@@ -115,26 +163,45 @@ impl RankCtx {
     pub fn multicast_round(&self, blob: Vec<u8>) -> Vec<Vec<u8>> {
         let me = self.rank();
         let sent = blob.len();
-        let (all, max_vt): (Arc<Vec<Vec<u8>>>, u64) =
+        let t0 = self.clock.now();
+        let (all, max_vt, src): (Arc<Vec<Vec<u8>>>, u64, usize) =
             self.comm
                 .shared
                 .rendezvous
-                .run(me, self.clock.now(), blob, |inputs| inputs);
+                .run_with_src(me, t0, blob, |inputs| inputs);
         self.clock.sync_to(max_vt);
         self.clock.advance(self.cost.net.collective_cost(self.nranks(), sent));
+        tracer::record(
+            op::MULTICAST_ROUND,
+            t0,
+            self.clock.now(),
+            sent as u64,
+            None,
+            Some(SpanEdge { src_rank: src, src_vt: max_vt }),
+        );
         (*all).clone()
     }
 
     /// All-reduce of a u64 with `op` (associative + commutative).
     pub fn allreduce_u64(&self, value: u64, op: impl Fn(u64, u64) -> u64 + Send + 'static) -> u64 {
-        let (out, max_vt): (Arc<u64>, u64) = self.comm.shared.rendezvous.run(
-            self.rank(),
-            self.clock.now(),
-            value,
-            move |inputs| inputs.into_iter().reduce(&op).unwrap(),
-        );
+        let t0 = self.clock.now();
+        let (out, max_vt, src): (Arc<u64>, u64, usize) =
+            self.comm.shared.rendezvous.run_with_src(
+                self.rank(),
+                t0,
+                value,
+                move |inputs| inputs.into_iter().reduce(&op).unwrap(),
+            );
         self.clock.sync_to(max_vt);
         self.clock.advance(self.cost.net.collective_cost(self.nranks(), 8));
+        tracer::record(
+            op::ALLREDUCE,
+            t0,
+            self.clock.now(),
+            8,
+            None,
+            Some(SpanEdge { src_rank: src, src_vt: max_vt }),
+        );
         *out
     }
 }

@@ -25,6 +25,7 @@ struct State {
     inputs: Vec<Option<Box<dyn Any + Send>>>,
     output: Option<Arc<dyn Any + Send + Sync>>,
     max_vt: u64,
+    max_vt_rank: usize,
 }
 
 /// Reusable all-ranks rendezvous point (one per communicator).
@@ -47,6 +48,7 @@ impl Rendezvous {
                 inputs: (0..nranks).map(|_| None).collect(),
                 output: None,
                 max_vt: 0,
+                max_vt_rank: 0,
             }),
             cv: Condvar::new(),
         }
@@ -63,6 +65,26 @@ impl Rendezvous {
         O: Send + Sync + 'static,
         F: FnOnce(Vec<I>) -> O,
     {
+        let (out, max_vt, _) = self.run_with_src(rank, vt, input, combine);
+        (out, max_vt)
+    }
+
+    /// Like [`Rendezvous::run`], but also returns the rank whose arrival
+    /// time set `max_vt` — the slowest entrant, i.e. the source of the
+    /// cross-rank dependency edge a collective creates (ties go to the
+    /// lowest rank that arrived with that vt first).
+    pub fn run_with_src<I, O, F>(
+        &self,
+        rank: usize,
+        vt: u64,
+        input: I,
+        combine: F,
+    ) -> (Arc<O>, u64, usize)
+    where
+        I: Send + 'static,
+        O: Send + Sync + 'static,
+        F: FnOnce(Vec<I>) -> O,
+    {
         let mut st = self.state.lock().unwrap();
         // Wait for the previous round to fully drain before depositing.
         while st.phase == Phase::Distribute {
@@ -72,7 +94,10 @@ impl Rendezvous {
         assert!(st.inputs[rank].is_none(), "rank {rank} double-entered rendezvous");
         st.inputs[rank] = Some(Box::new(input));
         st.arrived += 1;
-        st.max_vt = st.max_vt.max(vt);
+        if st.arrived == 1 || vt > st.max_vt {
+            st.max_vt = vt;
+            st.max_vt_rank = rank;
+        }
 
         if st.arrived == self.nranks {
             // Last arrival: combine in rank order and open distribution.
@@ -99,6 +124,7 @@ impl Rendezvous {
             .downcast::<O>()
             .expect("output type");
         let max_vt = st.max_vt;
+        let max_vt_rank = st.max_vt_rank;
 
         st.left += 1;
         if st.left == self.nranks {
@@ -109,9 +135,10 @@ impl Rendezvous {
             st.left = 0;
             st.output = None;
             st.max_vt = 0;
+            st.max_vt_rank = 0;
             self.cv.notify_all();
         }
-        (out, max_vt)
+        (out, max_vt, max_vt_rank)
     }
 }
 
@@ -155,6 +182,17 @@ mod tests {
             max_vt
         });
         assert!(outs.iter().all(|&v| v == 300));
+    }
+
+    #[test]
+    fn src_rank_is_slowest_entrant() {
+        let outs = run_ranks(3, |rank, rv| {
+            // Rank 1 enters with the largest vt.
+            let vt = if rank == 1 { 500 } else { 100 };
+            let (_, max_vt, src) = rv.run_with_src(rank, vt, (), |_| ());
+            (max_vt, src)
+        });
+        assert!(outs.iter().all(|&(v, s)| v == 500 && s == 1));
     }
 
     #[test]

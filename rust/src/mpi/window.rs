@@ -24,6 +24,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use crate::error::{Error, Result};
+use crate::metrics::tracer::{self, op, SpanEdge, WaitCause};
 use crate::sim::{Clock, NetModel};
 
 use super::universe::RankCtx;
@@ -82,11 +83,13 @@ struct Segment {
     buf: SharedBuf,
 }
 
-/// Atomic cell: value + publish virtual time.
+/// Atomic cell: value + publish virtual time + publishing rank (the
+/// source of the causal edge a synced reader inherits).
 #[derive(Clone, Copy, Default)]
 struct AtomicCell {
     value: u64,
     publish_vt: u64,
+    writer: usize,
 }
 
 /// Per-rank region of a window.
@@ -121,6 +124,7 @@ struct LockSt {
     exclusive: bool,
     shared: usize,
     release_vt: u64,
+    release_rank: usize,
 }
 
 pub(crate) struct WinShared {
@@ -228,22 +232,26 @@ impl Window {
     /// its own MPI calls (paper §4).  Jobs running with flush epochs
     /// (Fig. 7b) zero the delay but pay explicit lock/unlock cycles.
     pub fn put(&self, clock: &Clock, target: usize, disp: u64, data: &[u8]) -> Result<()> {
+        let t0 = clock.now();
         if target != self.my_rank {
             clock.advance(
                 self.shared.net.rma_cost(data.len()) + self.shared.net.progress_delay_ns,
             );
         }
+        tracer::record(op::PUT, t0, clock.now(), data.len() as u64, Some(target), None);
         self.with_segment(target, disp, data.len(), |buf, off| buf.write(off, data))
     }
 
     /// One-sided get: read `out.len()` bytes from `target` at `disp`.
     /// Remote gets pay the lazy-progress delay (see [`Window::put`]).
     pub fn get(&self, clock: &Clock, target: usize, disp: u64, out: &mut [u8]) -> Result<()> {
+        let t0 = clock.now();
         if target != self.my_rank {
             clock.advance(
                 self.shared.net.rma_cost(out.len()) + self.shared.net.progress_delay_ns,
             );
         }
+        tracer::record(op::GET, t0, clock.now(), out.len() as u64, Some(target), None);
         self.with_segment(target, disp, out.len(), |buf, off| buf.read(off, out))
     }
 
@@ -259,9 +267,11 @@ impl Window {
         disp: u64,
         out: &mut [u8],
     ) -> Result<()> {
+        let t0 = clock.now();
         if target != self.my_rank {
             clock.advance(self.shared.net.rma_latency_ns);
         }
+        tracer::record(op::GET_MULTICAST, t0, clock.now(), out.len() as u64, Some(target), None);
         self.with_segment(target, disp, out.len(), |buf, off| buf.read(off, out))
     }
 
@@ -276,14 +286,16 @@ impl Window {
     /// `value` at `disp` on `target`, stamped with the writer's clock.
     pub fn atomic_store(&self, clock: &Clock, target: usize, disp: u64, value: u64) -> Result<()> {
         Self::check_aligned(disp)?;
+        let t0 = clock.now();
         if target != self.my_rank {
             clock.advance(self.shared.net.atomic_latency_ns);
         }
         let region = &self.shared.regions[target];
         let mut cells = region.atomics.lock().unwrap();
         let publish_vt = clock.now() + self.shared.net.progress_delay_ns;
-        cells.insert(disp, AtomicCell { value, publish_vt });
+        cells.insert(disp, AtomicCell { value, publish_vt, writer: self.my_rank });
         region.atomics_cv.notify_all();
+        tracer::record(op::ATOMIC_STORE, t0, clock.now(), 8, Some(target), None);
         Ok(())
     }
 
@@ -299,12 +311,14 @@ impl Window {
     /// [`Window::wait_atomic`] (which does wait) or locks.
     pub fn atomic_load(&self, clock: &Clock, target: usize, disp: u64) -> Result<u64> {
         Self::check_aligned(disp)?;
+        let t0 = clock.now();
         if target != self.my_rank {
             clock.advance(self.shared.net.atomic_latency_ns);
         }
         let region = &self.shared.regions[target];
         let cells = region.atomics.lock().unwrap();
         let cell = cells.get(&disp).copied().unwrap_or_default();
+        tracer::record(op::ATOMIC_LOAD, t0, clock.now(), 8, Some(target), None);
         Ok(cell.value)
     }
 
@@ -318,6 +332,7 @@ impl Window {
         desired: u64,
     ) -> Result<u64> {
         Self::check_aligned(disp)?;
+        let t0 = clock.now();
         if target != self.my_rank {
             clock.advance(self.shared.net.atomic_latency_ns);
         }
@@ -325,13 +340,17 @@ impl Window {
         let mut cells = region.atomics.lock().unwrap();
         let cell = cells.entry(disp).or_default();
         let old = cell.value;
+        let mut edge = None;
         if old == expected {
             // A successful swap is causally after the version it replaces.
-            clock.sync_to(cell.publish_vt.saturating_sub(self.shared.net.progress_delay_ns));
+            let src_vt = cell.publish_vt.saturating_sub(self.shared.net.progress_delay_ns);
+            edge = Some(SpanEdge { src_rank: cell.writer, src_vt });
+            clock.sync_to(src_vt);
             let publish_vt = clock.now() + self.shared.net.progress_delay_ns;
-            *cell = AtomicCell { value: desired, publish_vt };
+            *cell = AtomicCell { value: desired, publish_vt, writer: self.my_rank };
             region.atomics_cv.notify_all();
         }
+        tracer::record(op::CAS, t0, clock.now(), 8, Some(target), edge);
         Ok(old)
     }
 
@@ -339,6 +358,7 @@ impl Window {
     /// the paper's future-work job-stealing mechanism needs.)
     pub fn fetch_add(&self, clock: &Clock, target: usize, disp: u64, delta: u64) -> Result<u64> {
         Self::check_aligned(disp)?;
+        let t0 = clock.now();
         if target != self.my_rank {
             clock.advance(self.shared.net.atomic_latency_ns);
         }
@@ -346,10 +366,14 @@ impl Window {
         let mut cells = region.atomics.lock().unwrap();
         let cell = cells.entry(disp).or_default();
         let old = cell.value;
-        clock.sync_to(cell.publish_vt.saturating_sub(self.shared.net.progress_delay_ns));
+        let src_vt = cell.publish_vt.saturating_sub(self.shared.net.progress_delay_ns);
+        let edge = (cell.publish_vt > 0)
+            .then_some(SpanEdge { src_rank: cell.writer, src_vt });
+        clock.sync_to(src_vt);
         let publish_vt = clock.now() + self.shared.net.progress_delay_ns;
-        *cell = AtomicCell { value: old.wrapping_add(delta), publish_vt };
+        *cell = AtomicCell { value: old.wrapping_add(delta), publish_vt, writer: self.my_rank };
         region.atomics_cv.notify_all();
+        tracer::record(op::FETCH_ADD, t0, clock.now(), 8, Some(target), edge);
         Ok(old)
     }
 
@@ -366,6 +390,7 @@ impl Window {
         pred: impl Fn(u64) -> bool,
     ) -> Result<u64> {
         Self::check_aligned(disp)?;
+        let t0 = clock.now();
         if target != self.my_rank {
             clock.advance(self.shared.net.atomic_latency_ns);
         }
@@ -375,6 +400,14 @@ impl Window {
             let cell = cells.get(&disp).copied().unwrap_or_default();
             if pred(cell.value) {
                 clock.sync_to(cell.publish_vt);
+                tracer::record(
+                    op::WAIT_ATOMIC,
+                    t0,
+                    clock.now(),
+                    8,
+                    Some(target),
+                    Some(SpanEdge { src_rank: cell.writer, src_vt: cell.publish_vt }),
+                );
                 return Ok(cell.value);
             }
             cells = region.atomics_cv.wait(cells).unwrap();
@@ -383,6 +416,7 @@ impl Window {
 
     /// Acquire a passive-target lock on `target`'s region.
     pub fn lock(&self, clock: &Clock, kind: LockKind, target: usize) {
+        let t0 = clock.now();
         let l = &self.shared.locks[target];
         let mut st = l.st.lock().unwrap();
         match kind {
@@ -400,12 +434,16 @@ impl Window {
             }
         }
         // The acquirer is causally after the previous release.
+        let edge = (st.release_vt > 0)
+            .then_some(SpanEdge { src_rank: st.release_rank, src_vt: st.release_vt });
         clock.sync_to(st.release_vt);
         clock.advance(self.shared.net.lock_latency_ns);
+        tracer::record_cause(op::LOCK, WaitCause::WindowLock, t0, clock.now(), 0, Some(target), edge);
     }
 
     /// Try to acquire without blocking; true on success.
     pub fn try_lock(&self, clock: &Clock, kind: LockKind, target: usize) -> bool {
+        let t0 = clock.now();
         let l = &self.shared.locks[target];
         let mut st = l.st.lock().unwrap();
         let ok = match kind {
@@ -420,14 +458,26 @@ impl Window {
             _ => false,
         };
         if ok {
+            let edge = (st.release_vt > 0)
+                .then_some(SpanEdge { src_rank: st.release_rank, src_vt: st.release_vt });
             clock.sync_to(st.release_vt);
             clock.advance(self.shared.net.lock_latency_ns);
+            tracer::record_cause(
+                op::LOCK,
+                WaitCause::WindowLock,
+                t0,
+                clock.now(),
+                0,
+                Some(target),
+                edge,
+            );
         }
         ok
     }
 
     /// Release a passive-target lock; publishes the releaser's clock.
     pub fn unlock(&self, clock: &Clock, kind: LockKind, target: usize) {
+        let t0 = clock.now();
         clock.advance(self.shared.net.lock_latency_ns);
         let l = &self.shared.locks[target];
         let mut st = l.st.lock().unwrap();
@@ -441,8 +491,12 @@ impl Window {
                 st.shared -= 1;
             }
         }
-        st.release_vt = st.release_vt.max(clock.now());
+        if clock.now() > st.release_vt {
+            st.release_vt = clock.now();
+            st.release_rank = self.my_rank;
+        }
         l.cv.notify_all();
+        tracer::record(op::UNLOCK, t0, clock.now(), 0, Some(target), None);
     }
 
     /// Flush outstanding RMA to `target` (MPI_Win_flush).  Transfers are
@@ -450,9 +504,11 @@ impl Window {
     /// kept because the Fig. 7 "improved" variant issues redundant
     /// flush/lock cycles and we reproduce its cost profile.
     pub fn flush(&self, clock: &Clock, target: usize) {
+        let t0 = clock.now();
         if target != self.my_rank {
             clock.advance(self.shared.net.rma_latency_ns);
         }
+        tracer::record(op::FLUSH, t0, clock.now(), 0, Some(target), None);
     }
 
     /// Total bytes attached to `rank`'s region (for memory accounting).

@@ -23,8 +23,11 @@ use crate::error::{Error, Result};
 use crate::mapreduce::job::{StageExec, StagedInput};
 use crate::mapreduce::kv::Value;
 use crate::mapreduce::{Job, JobConfig, JobOutput};
+use crate::metrics::tracer::{op, Span};
 use crate::metrics::{Event, JobReport};
 use crate::sim::CostModel;
+use crate::storage::prefetch::SPILL_ROOT_RANK;
+use crate::storage::spill::Availability;
 use crate::storage::SpillWriter;
 
 use super::plan::{Plan, StageSource};
@@ -40,6 +43,10 @@ pub struct StageReport {
     pub report: JobReport,
     /// Virtual time the stage's input was fully durable (0 = corpus).
     pub input_ready_vt: u64,
+    /// `spill-write` spans synthesized from this stage's input spill
+    /// flush schedule (empty for corpus stages).  Attributed to the
+    /// background flusher's home rank ([`SPILL_ROOT_RANK`]).
+    pub spill_spans: Vec<Span>,
 }
 
 /// Result of a pipeline execution.
@@ -79,6 +86,51 @@ impl PipelineOutput {
         }
         merged
     }
+
+    /// Merge all stages' per-rank trace spans into one pipeline trace
+    /// (span times are absolute), folding each stage's synthesized
+    /// `spill-write` spans onto the flusher's home rank.
+    pub fn merged_spans(&self) -> Vec<Vec<Span>> {
+        let nranks = self.stages.iter().map(|s| s.report.spans.len()).max().unwrap_or(0);
+        let mut merged: Vec<Vec<Span>> = vec![Vec::new(); nranks.max(SPILL_ROOT_RANK + 1)];
+        for stage in &self.stages {
+            for (rank, spans) in stage.report.spans.iter().enumerate() {
+                merged[rank].extend_from_slice(spans);
+            }
+            merged[SPILL_ROOT_RANK].extend_from_slice(&stage.spill_spans);
+        }
+        merged
+    }
+}
+
+/// Turn an input spill's flush schedule into `spill-write` spans: chunk
+/// `i` of the schedule occupies `[prev durable vt, durable vt)` on the
+/// flusher's home rank (the first chunk starts at the producing stage's
+/// result-ready time).  Gaps where the flusher idled between appends
+/// are charged to the following chunk — the schedule records landings,
+/// not starts — which only widens spans, never overlaps them.
+fn spill_write_spans(avail: &Availability, start_vt: u64, stage: u32) -> Vec<Span> {
+    let mut spans = Vec::with_capacity(avail.chunks().len());
+    let mut prev_vt = start_vt;
+    let mut prev_end = 0u64;
+    for &(end, vt) in avail.chunks() {
+        if vt > prev_vt {
+            spans.push(Span {
+                rank: SPILL_ROOT_RANK,
+                stage,
+                t0: prev_vt,
+                t1: vt,
+                op: op::SPILL_WRITE,
+                cause: None,
+                bytes: end.saturating_sub(prev_end),
+                peer: None,
+                edge: None,
+            });
+        }
+        prev_vt = prev_vt.max(vt);
+        prev_end = end;
+    }
+    spans
 }
 
 /// Executes a [`Plan`] over a fixed rank count and cost model.
@@ -145,9 +197,11 @@ impl Pipeline {
         let mut stages: Vec<StageReport> = Vec::new();
 
         for (i, stage) in self.plan.stages.iter().enumerate() {
-            let (input_path, staged, input_ready_vt, spill_saved) = match &stage.sources[0] {
-                StageSource::Corpus(path) => (path.clone(), None, 0u64, 0u64),
-                StageSource::Stage { .. } => {
+            let (input_path, staged, input_ready_vt, spill_saved, spill_spans) = match &stage
+                .sources[0]
+            {
+                StageSource::Corpus(path) => (path.clone(), None, 0u64, 0u64, Vec::new()),
+                StageSource::Stage { index: first_index, .. } => {
                     // Each consumer materializes its own input file: a
                     // multi-consumer producer is re-encoded per consumer
                     // because the byte stream genuinely differs (side
@@ -175,9 +229,12 @@ impl Pipeline {
                     let spill = writer.finish()?;
                     let ready = spill.availability.last_vt();
                     let saved = spill.bytes_saved;
+                    // The flusher starts on the first source's result.
+                    let spans =
+                        spill_write_spans(&spill.availability, ready_vts[*first_index], i as u32);
                     let staged =
                         StagedInput { file: spill.file, boundaries: spill.boundaries };
-                    (path, Some(staged), ready, saved)
+                    (path, Some(staged), ready, saved, spans)
                 }
             };
 
@@ -187,7 +244,12 @@ impl Pipeline {
                     stage.backend,
                     self.nranks,
                     self.cost,
-                    StageExec { start_vts: start_vts.clone(), input: staged, pipelined: true },
+                    StageExec {
+                        start_vts: start_vts.clone(),
+                        input: staged,
+                        pipelined: true,
+                        stage: i as u32,
+                    },
                 )?;
 
             // The stage consuming a spilled input carries the spill's
@@ -200,6 +262,7 @@ impl Pipeline {
                 backend: report.backend,
                 report,
                 input_ready_vt,
+                spill_spans,
             });
             results.push(result);
         }

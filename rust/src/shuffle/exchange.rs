@@ -23,6 +23,7 @@
 //! not on a barrier, and ranks re-decouple immediately after.
 
 use crate::error::Result;
+use crate::metrics::tracer::{self, op};
 use crate::mpi::{RankCtx, Window};
 
 use super::plan::{plan_route, Route};
@@ -112,21 +113,47 @@ pub fn exchange_and_plan_with(
 ) -> Result<Route> {
     let me = ctx.rank();
     let n = ctx.nranks();
-    publish(ctx, win, C_SKETCH_DISP, C_SKETCH_LEN, &sketch.encode())?;
+    let encoded = sketch.encode();
+    let t0 = ctx.clock.now();
+    publish(ctx, win, C_SKETCH_DISP, C_SKETCH_LEN, &encoded)?;
+    tracer::record(op::SKETCH_PUBLISH, t0, ctx.clock.now(), encoded.len() as u64, None, None);
     if me == PLANNER {
         let mut merged = Sketch::new();
         for s in 0..n {
             if s == me {
                 merged.merge(sketch);
             } else {
-                merged.merge(&Sketch::decode(&fetch(ctx, win, s, C_SKETCH_DISP, C_SKETCH_LEN)?)?);
+                let t0 = ctx.clock.now();
+                let buf = fetch(ctx, win, s, C_SKETCH_DISP, C_SKETCH_LEN)?;
+                tracer::record(
+                    op::SKETCH_FETCH,
+                    t0,
+                    ctx.clock.now(),
+                    buf.len() as u64,
+                    Some(s),
+                    None,
+                );
+                merged.merge(&Sketch::decode(&buf)?);
             }
         }
         let route = planner(&merged);
-        publish(ctx, win, C_ROUTE_DISP, C_ROUTE_LEN, &route.encode())?;
+        let encoded = route.encode();
+        let t0 = ctx.clock.now();
+        publish(ctx, win, C_ROUTE_DISP, C_ROUTE_LEN, &encoded)?;
+        tracer::record(op::ROUTE_PUBLISH, t0, ctx.clock.now(), encoded.len() as u64, None, None);
         Ok(route)
     } else {
-        Route::decode(&fetch(ctx, win, PLANNER, C_ROUTE_DISP, C_ROUTE_LEN)?)
+        let t0 = ctx.clock.now();
+        let buf = fetch(ctx, win, PLANNER, C_ROUTE_DISP, C_ROUTE_LEN)?;
+        tracer::record(
+            op::ROUTE_FETCH,
+            t0,
+            ctx.clock.now(),
+            buf.len() as u64,
+            Some(PLANNER),
+            None,
+        );
+        Route::decode(&buf)
     }
 }
 
@@ -136,7 +163,10 @@ pub fn exchange_and_plan_with(
 /// (`NetModel::multicast_cost`); the publication itself is a local
 /// attach + put plus the two atomic flag stores.
 pub fn publish_coded(ctx: &RankCtx, win: &Window, blob: &[u8]) -> Result<()> {
-    publish(ctx, win, C_CODED_DISP, C_CODED_LEN, blob)
+    let t0 = ctx.clock.now();
+    let out = publish(ctx, win, C_CODED_DISP, C_CODED_LEN, blob);
+    tracer::record(op::CODED_PUBLISH, t0, ctx.clock.now(), blob.len() as u64, None, None);
+    out
 }
 
 /// Wait for `target`'s coded blob and pull it at multicast cost: the
@@ -145,12 +175,14 @@ pub fn publish_coded(ctx: &RankCtx, win: &Window, blob: &[u8]) -> Result<()> {
 /// still carries the publisher's clock — a receiver cannot decode
 /// packets before they causally exist.
 pub fn fetch_coded(ctx: &RankCtx, win: &Window, target: usize) -> Result<Vec<u8>> {
+    let t0 = ctx.clock.now();
     let len = win.wait_atomic(&ctx.clock, target, C_CODED_LEN, |v| v > 0)? - 1;
     let disp = win.atomic_load(&ctx.clock, target, C_CODED_DISP)?;
     let mut buf = vec![0u8; len as usize];
     if !buf.is_empty() {
         win.get_multicast(&ctx.clock, target, disp, &mut buf)?;
     }
+    tracer::record(op::CODED_FETCH, t0, ctx.clock.now(), buf.len() as u64, Some(target), None);
     Ok(buf)
 }
 

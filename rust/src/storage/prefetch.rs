@@ -13,9 +13,15 @@ use std::sync::mpsc;
 use std::thread;
 
 use crate::error::Result;
+use crate::metrics::tracer::{self, op, SpanEdge, WaitCause};
 use crate::mpi::RankCtx;
 
 use super::layout::StripedFile;
+
+/// Rank whose spill flusher produced a durability schedule — pipeline
+/// spill files are written by the driver on behalf of the job, accounted
+/// to rank 0 (where the stage-boundary synthesis also lands).
+pub const SPILL_ROOT_RANK: usize = 0;
 
 /// An in-flight non-blocking read (cf. a pending MPI_Request).
 pub struct PendingRead {
@@ -25,6 +31,10 @@ pub struct PendingRead {
     /// Virtual time the request was issued.
     issued_vt: u64,
     issued_bytes: usize,
+    /// Durability time of the covered bytes (0 on plain files): when
+    /// this exceeds `issued_vt`, the read was gated on the producer's
+    /// flusher and the wait carries a spill-durability edge.
+    avail_vt: u64,
 }
 
 impl PendingRead {
@@ -32,7 +42,19 @@ impl PendingRead {
     /// virtual completion time: zero cost if compute already covered it.
     pub fn wait(self, ctx: &RankCtx) -> Result<Vec<u8>> {
         let data = self.rx.recv().expect("prefetch worker alive")?;
+        let t0 = ctx.clock.now();
         ctx.clock.sync_to(self.completion_vt);
+        let edge = (self.avail_vt > self.issued_vt)
+            .then_some(SpanEdge { src_rank: SPILL_ROOT_RANK, src_vt: self.avail_vt });
+        tracer::record_cause(
+            op::PREFETCH_WAIT,
+            WaitCause::SpillDurability,
+            t0,
+            ctx.clock.now(),
+            self.issued_bytes as u64,
+            None,
+            edge,
+        );
         Ok(data)
     }
 
@@ -78,16 +100,19 @@ impl Prefetcher {
     /// [`PendingRead::wait`] costs time.
     pub fn issue(&self, ctx: &RankCtx, offset: u64, len: usize) -> PendingRead {
         // Nonblocking-call software overhead (request setup).
+        let t0 = ctx.clock.now();
         ctx.clock.advance(2_000);
         let issued_vt = ctx.clock.now();
-        let ready_vt = issued_vt.max(self.file.available_vt(offset + len as u64));
+        tracer::record(op::PREFETCH_ISSUE, t0, issued_vt, len as u64, None, None);
+        let avail_vt = self.file.available_vt(offset + len as u64);
+        let ready_vt = issued_vt.max(avail_vt);
         let completion_vt = ready_vt + ctx.cost.storage.read_cost(len);
         let (tx, rx) = mpsc::channel();
         let file = self.file.clone();
         thread::spawn(move || {
             let _ = tx.send(file.read_at_raw(offset, len));
         });
-        PendingRead { rx, completion_vt, issued_vt, issued_bytes: len }
+        PendingRead { rx, completion_vt, issued_vt, issued_bytes: len, avail_vt }
     }
 }
 

@@ -173,6 +173,13 @@ impl Availability {
     pub fn last_vt(&self) -> u64 {
         self.chunks.last().map_or(0, |&(_, vt)| vt)
     }
+
+    /// The raw (end_offset, durable_vt) schedule — one entry per flush
+    /// chunk, in write order.  The pipeline driver turns these into
+    /// `spill-write` trace spans on the producing stage's timeline.
+    pub fn chunks(&self) -> &[(u64, u64)] {
+        &self.chunks
+    }
 }
 
 /// A fully-written spill file: data, record boundaries, durability.

@@ -573,3 +573,85 @@ fn prop_win_size_must_exceed_floor() {
         },
     );
 }
+
+#[test]
+fn prop_timelines_monotonic_nonoverlapping_all_usecases_and_routes() {
+    // Trace integrity as an exhaustive sweep: every registered use-case
+    // × every shuffle route, on both backends.  A rank's virtual clock
+    // never goes backwards, so its phase events and op spans must be
+    // t0-monotonic with no interval overlapping its predecessor, and
+    // every interval must be non-empty and end within the rank's
+    // elapsed time.
+    use mr1s::mapreduce::RouteConfig;
+    use mr1s::metrics::tracer::op;
+    use mr1s::usecases::REGISTRY;
+    use mr1s::workload::{generate_corpus, CorpusSpec};
+
+    let path = std::env::temp_dir().join(format!("mr1s-prop-trace-{}", std::process::id()));
+    generate_corpus(&path, &CorpusSpec { bytes: 120_000, seed: 21, ..Default::default() })
+        .unwrap();
+    let routes = [
+        RouteConfig::Modulo,
+        RouteConfig::Planned { split: RouteConfig::DEFAULT_SPLIT },
+        RouteConfig::Coded { r: 2 },
+    ];
+    for entry in REGISTRY {
+        for route in routes {
+            for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+                let cfg = JobConfig {
+                    input: path.clone(),
+                    task_size: 16 << 10,
+                    win_size: 16 << 10,
+                    chunk_size: 4 << 10,
+                    route,
+                    ..Default::default()
+                };
+                let out = Job::new((entry.make)(), cfg)
+                    .unwrap()
+                    .run(backend, 4, CostModel::default())
+                    .unwrap();
+                for (rank, tl) in out.report.timelines.iter().enumerate() {
+                    let ctx =
+                        format!("{} {} {route:?} rank {rank}", entry.name, backend.name());
+                    let end = out.report.rank_elapsed_ns[rank];
+                    for w in tl.windows(2) {
+                        assert!(
+                            w[0].t1 <= w[1].t0,
+                            "overlapping events {:?} / {:?} ({ctx})",
+                            w[0],
+                            w[1]
+                        );
+                    }
+                    for e in tl {
+                        assert!(e.t0 < e.t1, "empty event {e:?} ({ctx})");
+                        assert!(e.t1 <= end, "event past rank end {e:?} ({ctx})");
+                    }
+                }
+                for (rank, spans) in out.report.spans.iter().enumerate() {
+                    let ctx =
+                        format!("{} {} {route:?} rank {rank}", entry.name, backend.name());
+                    // Spans are pushed when the operation completes, so
+                    // the recording order is t1-monotonic (an attributed
+                    // wait may *contain* the protocol ops it blocked on,
+                    // so t0 order is not the invariant).
+                    for w in spans.windows(2) {
+                        assert!(
+                            w[0].t1 <= w[1].t1,
+                            "spans out of completion order {:?} / {:?} ({ctx})",
+                            w[0],
+                            w[1]
+                        );
+                    }
+                    for s in spans {
+                        assert!(s.t0 < s.t1, "empty span {s:?} ({ctx})");
+                        assert!(s.t1 <= out.report.rank_elapsed_ns[rank], "{ctx}");
+                        if s.op == op::WAIT {
+                            assert!(s.cause.is_some(), "uncaused wait span ({ctx})");
+                        }
+                    }
+                }
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}

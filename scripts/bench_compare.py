@@ -2,9 +2,12 @@
 """Perf-regression gate over the bench JSON summaries.
 
 Every bench binary writes a ``BENCH_<name>.json`` summary (see
-``rust/src/bench.rs``): ``{"bench": .., "samples": [{"name", "mean",
-"stddev", "n"}, ..]}`` with means in virtual nanoseconds for whole-job
-benches.  Virtual time is simulated, so run-to-run noise is tiny and a
+``rust/src/bench.rs``): ``{"bench": .., "schema": 2, "git_sha": ..,
+"config": .., "samples": [{"name", "mean", "stddev", "n"}, ..]}`` with
+means in virtual nanoseconds for whole-job benches.  The ``schema`` /
+``git_sha`` / ``config`` keys are run metadata: this gate prints them
+for provenance and excludes them from all regression math, so v1
+summaries (no metadata) and v2 summaries compare interchangeably.  Virtual time is simulated, so run-to-run noise is tiny and a
 tight threshold is meaningful — the default fails on >10% growth of any
 ``*_elapsed_ns`` sample versus the committed baseline in
 ``rust/benches/baselines/``.
@@ -42,15 +45,20 @@ import tempfile
 # accounting changes legitimately when a bench's sweep changes.
 TIME_SUFFIXES = ("_elapsed_ns",)
 
+# Top-level run-metadata keys (schema v2): carried for provenance,
+# never compared.  Any other unknown top-level key is ignored outright.
+META_KEYS = ("schema", "git_sha", "config")
+
 
 def load_summary(path):
-    """Parse one BENCH_*.json into {sample_name: mean}."""
+    """Parse one BENCH_*.json into (bench, {sample_name: mean}, meta)."""
     with open(path, "r", encoding="utf-8") as f:
         doc = json.load(f)
     samples = {}
     for s in doc.get("samples", []):
         samples[s["name"]] = float(s["mean"])
-    return doc.get("bench", os.path.basename(path)), samples
+    meta = {k: doc[k] for k in META_KEYS if k in doc}
+    return doc.get("bench", os.path.basename(path)), samples, meta
 
 
 def bench_files(directory):
@@ -105,7 +113,10 @@ def run_compare(fresh_dir, baseline_dir, threshold, allow_missing):
     failed = False
     for fresh_path in fresh_paths:
         base_path = os.path.join(baseline_dir, os.path.basename(fresh_path))
-        bench, fresh = load_summary(fresh_path)
+        bench, fresh, meta = load_summary(fresh_path)
+        if meta:
+            rendered = " ".join(f"{k}={meta[k]}" for k in META_KEYS if k in meta)
+            print(f"meta  {bench}: {rendered}")
         if not os.path.exists(base_path):
             msg = f"{bench}: no baseline at {base_path}"
             if allow_missing:
@@ -114,7 +125,7 @@ def run_compare(fresh_dir, baseline_dir, threshold, allow_missing):
             print(f"FAIL  {msg}", file=sys.stderr)
             failed = True
             continue
-        _, baseline = load_summary(base_path)
+        _, baseline, _ = load_summary(base_path)
         regressions, improvements, notes = compare(baseline, fresh, threshold)
         for note in notes:
             print(f"note  {bench}: {note}")
@@ -152,13 +163,14 @@ def run_update(fresh_dir, baseline_dir):
     return 0
 
 
-def write_summary(path, bench, samples):
+def write_summary(path, bench, samples, meta=None):
     doc = {
         "bench": bench,
         "samples": [
             {"name": n, "mean": m, "stddev": 0.0, "n": 1} for n, m in samples.items()
         ],
     }
+    doc.update(meta or {})
     with open(path, "w", encoding="utf-8") as f:
         json.dump(doc, f)
 
@@ -173,9 +185,12 @@ def run_self_check(threshold):
         base = {"job_elapsed_ns": 1e9, "job_bytes": 5e6}
         write_summary(os.path.join(base_dir, "BENCH_selfcheck.json"), "selfcheck", base)
 
-        # A clean run well inside the threshold must pass...
+        # A clean run well inside the threshold must pass — stamped with
+        # v2 metadata against a v1 (metadata-free) baseline, proving the
+        # metadata keys never enter the regression math.
         ok = dict(base, job_elapsed_ns=base["job_elapsed_ns"] * (1 + threshold / 2))
-        write_summary(os.path.join(fresh_dir, "BENCH_selfcheck.json"), "selfcheck", ok)
+        meta = {"schema": 2, "git_sha": "selfcheck", "config": "synthetic"}
+        write_summary(os.path.join(fresh_dir, "BENCH_selfcheck.json"), "selfcheck", ok, meta)
         if run_compare(fresh_dir, base_dir, threshold, False) != 0:
             print("self-check: clean run was rejected", file=sys.stderr)
             return 1
