@@ -1,10 +1,16 @@
-//! Fault tolerance via MPI storage windows (paper §4 / Fig. 5).
+//! Fault tolerance: kill a rank mid-job and recover from checkpoints
+//! (paper §4 / Fig. 5, extended by the fault-injection engine of
+//! DESIGN.md §10).
 //!
-//! Runs MR-1S Word-Count with transparent checkpointing (a window
-//! synchronization point after every Map task and after Reduce), then
-//! simulates a failure and shows the checkpointed state is really on
-//! disk and decodable — the recovery path the storage-windows concept
-//! [18] enables.  Also measures the checkpoint overhead (paper: ~4.8%).
+//! Runs MR-1S Word-Count three ways:
+//!
+//! 1. a fault-free baseline — the oracle;
+//! 2. a checkpointed run, to measure the checkpoint overhead (paper:
+//!    ~4.8%) and to show the framed on-disk state is decodable;
+//! 3. a checkpointed run with `--faults kill:rank=2@phase=map`: rank 2
+//!    dies after half its map share, the survivors detect the loss, the
+//!    job re-runs on 7 ranks replaying checkpointed tasks — and the
+//!    recovered result is asserted key-for-key equal to the oracle.
 //!
 //! ```sh
 //! cargo run --release --example fault_tolerance
@@ -12,12 +18,14 @@
 
 use std::sync::Arc;
 
-use mr1s::mapreduce::{kv, BackendKind, Job, JobConfig};
+use mr1s::fault::{valid_prefix, COMBINE_FRAME_ID};
+use mr1s::mapreduce::{BackendKind, Job, JobConfig};
 use mr1s::sim::CostModel;
 use mr1s::usecases::WordCount;
 use mr1s::workload::{generate_corpus, CorpusSpec};
 
 const RANKS: usize = 8;
+const VICTIM: usize = 2;
 
 fn main() -> mr1s::Result<()> {
     let input = std::env::temp_dir().join("mr1s-ft.txt");
@@ -25,53 +33,68 @@ fn main() -> mr1s::Result<()> {
     let ckpt_dir = std::env::temp_dir().join("mr1s-ft-ckpt");
     std::fs::create_dir_all(&ckpt_dir)?;
 
-    // Baseline without checkpoints.
+    // 1. Fault-free baseline: the oracle every recovery must reproduce.
     let base_cfg = JobConfig { input: input.clone(), ..Default::default() };
     let base = Job::new(Arc::new(WordCount), base_cfg)?
         .run(BackendKind::OneSided, RANKS, CostModel::default())?;
     println!("[ft] baseline      {}", base.report.summary());
 
-    // Checkpointed run.
+    // 2. Checkpointed run: overhead + decodable on-disk state.
     let ckpt_cfg = JobConfig {
         input: input.clone(),
         checkpoints: true,
         checkpoint_dir: ckpt_dir.clone(),
         ..Default::default()
     };
-    let ckpt = Job::new(Arc::new(WordCount), ckpt_cfg)?
+    let ckpt = Job::new(Arc::new(WordCount), ckpt_cfg.clone())?
         .run(BackendKind::OneSided, RANKS, CostModel::default())?;
     println!("[ft] checkpointed  {}", ckpt.report.summary());
-
     let overhead = (ckpt.report.elapsed_secs() - base.report.elapsed_secs())
         / base.report.elapsed_secs()
         * 100.0;
     println!("[ft] checkpoint overhead: {overhead:+.1}% (paper: ~4.8% average)");
 
-    // --- Simulated failure: the job is gone; what's on storage? --------
-    println!("\n[ft] simulating failure: recovering from window backing files");
-    let mut recovered_records = 0usize;
-    let mut recovered_count = 0u64;
+    // The checkpoint stream is framed (`| task_id | len | payload |`);
+    // decode each rank's longest valid prefix — the exact state the
+    // recovery driver would harvest after a crash.
+    let mut task_frames = 0usize;
     for rank in 0..RANKS {
-        let path = ckpt_dir.join(format!("mr1s-ckpt-{rank}.bin"));
-        let bytes = std::fs::read(&path)?;
-        // The checkpoint is a stream of kv records (bucket flushes, then
-        // the reduced run) — decode as far as the stream is valid.
-        let mut ok = 0usize;
-        for rec in kv::RecordIter::new(&bytes) {
-            match rec {
-                Ok(r) => {
-                    ok += 1;
-                    // Word-Count values are inline u64 counts on the wire.
-                    recovered_count += kv::u64_from_value(r.value);
-                }
-                Err(_) => break,
-            }
-        }
-        recovered_records += ok;
-        println!("[ft]   rank {rank}: {} bytes, {} records decodable", bytes.len(), ok);
+        let bytes = std::fs::read(ckpt_dir.join(format!("mr1s-ckpt-{rank}.bin")))?;
+        let (frames, valid) = valid_prefix(&bytes);
+        let tasks = frames.iter().filter(|f| f.task_id != COMBINE_FRAME_ID).count();
+        task_frames += tasks;
+        println!(
+            "[ft]   rank {rank}: {} bytes ({valid} valid), {tasks} task frames, {} snapshots",
+            bytes.len(),
+            frames.len() - tasks,
+        );
     }
-    println!("[ft] recovered {recovered_records} records, {recovered_count} occurrences");
-    assert!(recovered_records > 0, "checkpoints must contain state");
+    assert!(task_frames > 0, "checkpoints must contain replayable task frames");
+
+    // 3. Kill-and-recover, end to end.
+    println!("\n[ft] injecting kill:rank={VICTIM}@phase=map");
+    let fault_cfg = JobConfig {
+        faults: Some(format!("kill:rank={VICTIM}@phase=map").parse()?),
+        ..ckpt_cfg
+    };
+    let recovered = Job::new(Arc::new(WordCount), fault_cfg)?
+        .run(BackendKind::OneSided, RANKS, CostModel::default())?;
+    println!("[ft] recovered     {}", recovered.report.summary());
+    let rec = recovered.report.recovery.as_ref().expect("recovery breakdown");
+    println!(
+        "[ft] rank {} died in {}; {} tasks replayed from checkpoints ({} KiB), {} recomputed",
+        rec.dead_rank,
+        rec.phase,
+        rec.replayed_tasks,
+        rec.replayed_bytes >> 10,
+        rec.recomputed_tasks,
+    );
+    assert_eq!(recovered.report.nranks, RANKS - 1, "job completed on the survivors");
+    assert_eq!(
+        recovered.result, base.result,
+        "recovered result must equal the fault-free oracle"
+    );
+    println!("[ft] recovered result is key-for-key identical to the fault-free oracle");
 
     // Cleanup.
     std::fs::remove_file(&input).ok();

@@ -1,0 +1,137 @@
+//! Bench: fault-injection recovery (new "figure 10" — beyond the paper).
+//!
+//! Sweeps kill phase (`map` / `reduce`) × checkpointing (on / off) ×
+//! both backends on a Word-Count job, and reports:
+//!
+//! * the virtual makespan of the recovered (n−1 rank) run versus the
+//!   fault-free baseline on the same world;
+//! * the recovery cost breakdown (`detect` / `replay` / `replan` wait
+//!   attribution, replayed vs recomputed task counts);
+//! * an oracle check — the recovered result must be key-for-key
+//!   identical to the fault-free run.
+//!
+//! The checkpointed columns show the point of the subsystem: a mid-map
+//! kill with checkpoints on replays the victim's (and survivors')
+//! completed tasks from the backing files instead of recomputing them,
+//! so the degraded run pays checkpoint-read bandwidth, not map compute.
+//!
+//! `cargo bench --bench fig10_recovery` runs the smoke profile;
+//! `-- --full` the larger one.  Emits `BENCH_fig10_recovery.json`.
+
+use std::sync::Arc;
+
+use mr1s::bench::{record, section, write_json, Sample};
+use mr1s::harness::Scenario;
+use mr1s::mapreduce::{BackendKind, Job, JobConfig};
+use mr1s::sim::CostModel;
+use mr1s::usecases::WordCount;
+
+const NRANKS: usize = 8;
+const VICTIM: usize = 2;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scenario = if full { Scenario::default() } else { Scenario::smoke() };
+    let bytes: u64 = if full { 16 << 20 } else { 2 << 20 };
+    let input = scenario.corpus(bytes).expect("corpus generates");
+    println!(
+        "fig10 recovery bench ({} profile, {NRANKS} ranks, kill rank {VICTIM})",
+        if full { "full" } else { "smoke" }
+    );
+
+    let workdir = std::env::temp_dir().join(format!("mr1s-fig10-{}", std::process::id()));
+    std::fs::create_dir_all(&workdir).expect("workdir");
+
+    let mut samples: Vec<Sample> = Vec::new();
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        for checkpoints in [true, false] {
+            let base = JobConfig {
+                checkpoints,
+                checkpoint_dir: workdir.clone(),
+                ..scenario.config(input.clone(), false)
+            };
+            let baseline = Job::new(Arc::new(WordCount), base.clone())
+                .expect("config valid")
+                .run(backend, NRANKS, CostModel::default())
+                .expect("baseline runs");
+            let ck = if checkpoints { "ckpt" } else { "nockpt" };
+            section(&format!("{} {ck}", baseline.report.backend));
+
+            for phase in ["map", "reduce"] {
+                let cfg = JobConfig {
+                    faults: Some(
+                        format!("kill:rank={VICTIM}@phase={phase}")
+                            .parse()
+                            .expect("fault plan parses"),
+                    ),
+                    ..base.clone()
+                };
+                let out = Job::new(Arc::new(WordCount), cfg)
+                    .expect("config valid")
+                    .run(backend, NRANKS, CostModel::default())
+                    .expect("faulted job recovers");
+                let report = &out.report;
+                assert_eq!(
+                    report.nranks,
+                    NRANKS - 1,
+                    "recovered run completes on the survivors"
+                );
+                assert_eq!(
+                    out.result, baseline.result,
+                    "recovered result must equal the fault-free oracle"
+                );
+                let rec = report.recovery.as_ref().expect("recovery breakdown present");
+                let tag =
+                    format!("{}_{ck}_kill_{phase}", report.backend.to_lowercase());
+                let slowdown = report.elapsed_ns as f64 / baseline.report.elapsed_ns as f64;
+                println!(
+                    "{tag:<24} elapsed={:>7.3}s (x{slowdown:.2} of fault-free) \
+                     detect={}us replay={}us replan={}us replayed={}/{}",
+                    report.elapsed_secs(),
+                    rec.detect_ns / 1_000,
+                    rec.replay_ns / 1_000,
+                    rec.replan_ns / 1_000,
+                    rec.replayed_tasks,
+                    rec.replayed_tasks + rec.recomputed_tasks,
+                );
+                record(
+                    &mut samples,
+                    Sample::from_measurements(
+                        format!("{tag}_elapsed_ns"),
+                        &[report.elapsed_ns as f64],
+                    ),
+                );
+                record(
+                    &mut samples,
+                    Sample::from_measurements(
+                        format!("{tag}_slowdown_vs_faultfree"),
+                        &[slowdown],
+                    ),
+                );
+                record(
+                    &mut samples,
+                    Sample::from_measurements(
+                        format!("{tag}_recovery_total_ns"),
+                        &[rec.total_ns() as f64],
+                    ),
+                );
+                record(
+                    &mut samples,
+                    Sample::from_measurements(
+                        format!("{tag}_replayed_tasks"),
+                        &[rec.replayed_tasks as f64],
+                    ),
+                );
+                record(
+                    &mut samples,
+                    Sample::from_measurements(
+                        format!("{tag}_replayed_bytes"),
+                        &[rec.replayed_bytes as f64],
+                    ),
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&workdir).ok();
+    write_json("fig10_recovery", &samples).expect("json summary");
+}

@@ -99,12 +99,12 @@ fn main() {
     section("window RMA ops (4 ranks, 1 MiB puts)");
     record(&mut samples, b.wall("window_put_get_1mib_x4ranks", || {
         let outs = Universe::new(4, CostModel::default()).run(|ctx| {
-            let win = Window::create(ctx, 1 << 20);
-            ctx.barrier();
+            let win = Window::create(ctx, 1 << 20).unwrap();
+            ctx.barrier().unwrap();
             let data = vec![0u8; 1 << 20];
             let peer = (ctx.rank() + 1) % 4;
             win.put(&ctx.clock, peer, 0, &data).unwrap();
-            ctx.barrier();
+            ctx.barrier().unwrap();
             let mut out = vec![0u8; 1 << 20];
             win.get(&ctx.clock, ctx.rank(), 0, &mut out).unwrap();
             out[0]
@@ -115,14 +115,14 @@ fn main() {
     section("atomics (2 ranks, 10k CAS)");
     record(&mut samples, b.wall("atomic_cas_10k", || {
         let outs = Universe::new(2, CostModel::default()).run(|ctx| {
-            let win = Window::create(ctx, 64);
-            ctx.barrier();
+            let win = Window::create(ctx, 64).unwrap();
+            ctx.barrier().unwrap();
             if ctx.rank() == 0 {
                 for i in 0..10_000u64 {
                     win.compare_and_swap(&ctx.clock, 0, 0, i, i + 1).unwrap();
                 }
             }
-            ctx.barrier();
+            ctx.barrier().unwrap();
         });
         std::hint::black_box(outs);
     }));

@@ -87,6 +87,7 @@ USAGE:
            [--task-size S] [--win-size S] [--chunk-size S] [--unbalanced]
            [--route modulo|planned[:split=K]|coded[:r=R]]
            [--checkpoints] [--flush-epochs] [--stealing] [--no-kernel]
+           [--faults kill:rank=R@phase=map|reduce[,slow:rank=R@factor=F][,torn:rank=R]]
            [--top N] [--trace-out PATH]
   mr1s pipeline --input <PATH> [--usecase tfidf|join] [--backend 1s|2s]
            [--ranks N] [--task-size S] [--win-size S] [--chunk-size S]
@@ -108,6 +109,12 @@ shuffle volume ~Rx on shuffle-bound jobs (DESIGN.md section 8).
 chrome://tracing): one track per rank with phase intervals, protocol-op
 and cause-attributed wait slices, and flow arrows on cross-rank
 dependency edges (DESIGN.md section 9).
+--faults injects a deterministic fault plan: kill a rank mid-map or
+pre-combine, slow a rank's map compute by a factor, or tear its last
+checkpoint frame.  A killed rank is detected by the survivors, its
+checkpointed tasks replay from --checkpoints backing files, and the job
+completes on n-1 ranks with a recovery= cost breakdown in the summary
+(DESIGN.md section 10).
 Figures: 4a 4b 4c 4d 5a 5b 6a 6b 7a 7b (DESIGN.md section 4).
 Sizes accept K/M/G suffixes.";
 
@@ -187,6 +194,7 @@ fn job_config(flags: &Flags) -> Result<JobConfig> {
         use_kernel: !flags.has("no-kernel"),
         job_stealing: flags.has("stealing"),
         route: flags.get("route").map_or(Ok(RouteConfig::Modulo), |s| s.parse())?,
+        faults: flags.get("faults").map(str::parse).transpose()?,
         ..Default::default()
     };
     if flags.has("unbalanced") {
@@ -209,6 +217,15 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
     let usecase = usecase_by_name(flags.get("usecase").unwrap_or("word-count"))?;
     let cfg = job_config(flags)?;
     let nranks = ranks(flags)?;
+    if let Some(faults) = &cfg.faults {
+        let target = faults.kill.map(|k| k.rank).or(faults.slow.map(|s| s.rank));
+        if target.is_some_and(|r| r >= nranks) {
+            return Err(Error::Config(format!(
+                "--faults targets rank {} but the job runs {nranks} ranks",
+                target.unwrap_or(0)
+            )));
+        }
+    }
     let top = flags.get("top").map_or(Ok(10), |s| {
         s.parse::<usize>().map_err(|_| Error::Config("bad --top".into()))
     })?;

@@ -30,8 +30,8 @@ pub enum Error {
     /// Key-value record decoding failed (corrupt header / truncated data).
     KvDecode(String),
 
-    /// A reduce accumulator outgrew the wire format's u16 value-length
-    /// field (`kv::MAX_VALUE_LEN`).  Carries the offending key so the
+    /// A reduce accumulator outgrew the wire format's u32 extended
+    /// value-length field (`kv::MAX_VALUE_LEN`).  Carries the offending key so the
     /// use-case author can see which accumulator must be bounded
     /// (posting lists cap their shard space, top-k trims to K, …).
     ValueOverflow {
@@ -40,6 +40,24 @@ pub enum Error {
         /// Size the accumulator reached, in bytes.
         len: usize,
     },
+
+    /// A peer rank died (fault injection) and this operation cannot
+    /// complete: either the victim aborting at its injection point, or a
+    /// survivor detecting the loss from inside a blocking primitive
+    /// (`wait_atomic`, window lock, rendezvous, recv).  Carries the dead
+    /// rank and the virtual time the observer established the loss — the
+    /// recovery driver resumes survivors from the max of these.
+    RankLost {
+        /// The dead rank.
+        rank: usize,
+        /// Virtual time (ns) at which the loss was established.
+        vt: u64,
+    },
+
+    /// A spill `.idx` sidecar failed validation on reopen (corrupt,
+    /// truncated, or inconsistent with the data file).  Recoverable: the
+    /// record boundaries can be rescanned from the data file itself.
+    CorruptSidecar(String),
 
     /// Malformed configuration.
     Config(String),
@@ -74,6 +92,10 @@ impl std::fmt::Display for Error {
                 String::from_utf8_lossy(key),
                 crate::mapreduce::kv::MAX_VALUE_LEN,
             ),
+            Error::RankLost { rank, vt } => {
+                write!(f, "rank {rank} lost at virtual time {vt} ns")
+            }
+            Error::CorruptSidecar(msg) => write!(f, "corrupt spill sidecar: {msg}"),
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),

@@ -1,0 +1,125 @@
+//! Shared dead-rank epoch flags.
+//!
+//! The `DeadSet` models the dead-rank epoch flag that peers of a failed
+//! rank observe *through the window* (in a real one-sided runtime this is
+//! a well-known window cell bumped by the resource manager; here it is a
+//! lock-free per-rank slot shared by the simulated world).  A victim
+//! marks itself dead at its injection point; every blocking primitive
+//! (`wait_atomic`, window locks, rendezvous, `recv`) polls the set while
+//! waiting and converts the observation into a typed
+//! [`Error::RankLost`](crate::error::Error::RankLost) instead of blocking
+//! forever.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// Modeled failure-detection latency: the virtual-time gap between a
+/// rank's death (or the observer starting to wait, whichever is later)
+/// and the observer establishing the loss.  Stands in for a heartbeat
+/// timeout; generous relative to the ~µs collective costs so detection
+/// is visibly non-free in traces.
+pub const DETECT_NS: u64 = 100_000;
+
+/// Real-time poll interval used by blocking primitives while waiting on
+/// a condvar: each timeout wakeup re-checks the dead set.
+pub const POLL_INTERVAL: Duration = Duration::from_millis(1);
+
+/// Per-rank death flags, shared by every rank of a simulated world.
+///
+/// Slot encoding: `0` = alive, `vt + 1` = died at virtual time `vt`
+/// (the `+1` keeps a death at vt 0 representable).
+#[derive(Debug)]
+pub struct DeadSet {
+    slots: Vec<AtomicU64>,
+}
+
+impl DeadSet {
+    /// A fresh all-alive set for a world of `nranks`.
+    pub fn new(nranks: usize) -> Self {
+        DeadSet { slots: (0..nranks).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    /// Mark `rank` dead as of virtual time `vt`.  Idempotent: the first
+    /// recorded death wins.
+    pub fn mark_dead(&self, rank: usize, vt: u64) {
+        let _ = self.slots[rank].compare_exchange(
+            0,
+            vt.saturating_add(1),
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+    }
+
+    /// Death virtual time of `rank`, if it died.
+    pub fn death_vt(&self, rank: usize) -> Option<u64> {
+        match self.slots[rank].load(Ordering::SeqCst) {
+            0 => None,
+            stamped => Some(stamped - 1),
+        }
+    }
+
+    /// First dead rank (lowest index) and its death vt, if any.
+    pub fn any_dead(&self) -> Option<(usize, u64)> {
+        (0..self.slots.len()).find_map(|r| self.death_vt(r).map(|vt| (r, vt)))
+    }
+
+    /// Convert an observed death into the typed loss error a blocked
+    /// primitive returns: detection lands `DETECT_NS` after the later of
+    /// the death and the start of the observer's wait (`block_t0`).
+    /// `Ok(())` when everyone is alive.
+    pub fn check(&self, block_t0: u64) -> Result<()> {
+        match self.any_dead() {
+            None => Ok(()),
+            Some((rank, death_vt)) => Err(Error::RankLost {
+                rank,
+                vt: block_t0.max(death_vt) + DETECT_NS,
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marks_and_reports_first_death() {
+        let dead = DeadSet::new(4);
+        assert!(dead.any_dead().is_none());
+        assert!(dead.check(10).is_ok());
+        dead.mark_dead(2, 500);
+        dead.mark_dead(2, 900); // second death ignored
+        assert_eq!(dead.death_vt(2), Some(500));
+        assert_eq!(dead.any_dead(), Some((2, 500)));
+    }
+
+    #[test]
+    fn death_at_vt_zero_is_representable() {
+        let dead = DeadSet::new(1);
+        dead.mark_dead(0, 0);
+        assert_eq!(dead.death_vt(0), Some(0));
+    }
+
+    #[test]
+    fn check_stamps_detection_after_max_of_death_and_wait_start() {
+        let dead = DeadSet::new(2);
+        dead.mark_dead(1, 1_000);
+        // Observer started waiting before the death: detection counts
+        // from the death.
+        match dead.check(200) {
+            Err(Error::RankLost { rank, vt }) => {
+                assert_eq!(rank, 1);
+                assert_eq!(vt, 1_000 + DETECT_NS);
+            }
+            other => panic!("expected RankLost, got {other:?}"),
+        }
+        // Observer started waiting after the death: detection counts
+        // from the wait start.
+        match dead.check(5_000) {
+            Err(Error::RankLost { vt, .. }) => assert_eq!(vt, 5_000 + DETECT_NS),
+            other => panic!("expected RankLost, got {other:?}"),
+        }
+    }
+}

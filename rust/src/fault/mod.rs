@@ -1,0 +1,94 @@
+//! Fault injection and rank recovery (DESIGN.md §10).
+//!
+//! Three pieces turn the checkpoint demo into a real fault-tolerance
+//! axis:
+//!
+//! * [`plan`] — a deterministic [`FaultPlan`] parsed from
+//!   `--faults kill:rank=R@phase=P[,slow:rank=R@factor=F][,torn:rank=R]`
+//!   naming exactly which rank dies/slows and when.
+//! * [`dead`] — the shared [`DeadSet`] epoch flags every blocking
+//!   primitive polls so a rank loss surfaces as a typed
+//!   [`Error::RankLost`](crate::error::Error::RankLost) instead of a
+//!   deadlock.
+//! * [`replay`] — the framed checkpoint stream format and its
+//!   valid-prefix decoder, feeding a [`ReplayLog`] of map tasks the
+//!   re-execution can adopt instead of recomputing.
+//!
+//! The recovery driver itself lives in `mapreduce/job.rs` (it owns the
+//! two-attempt orchestration): attempt 1 runs with the plan armed and
+//! aborts with `RankLost` once the victim dies; the driver scans all
+//! checkpoint backing files into a [`ReplayLog`], then relaunches the
+//! job on the n−1 survivors with a [`RecoveryCtx`] in `JobShared`.
+//! Attempt 2 pays detection, replay, and re-planning on the virtual
+//! clock as attributed wait spans (`detect` / `replay` / `replan`).
+
+pub mod dead;
+pub mod plan;
+pub mod replay;
+
+pub use dead::{DeadSet, DETECT_NS, POLL_INTERVAL};
+pub use plan::{FaultPhase, FaultPlan, KillSpec, SlowSpec};
+pub use replay::{
+    encode_frame, valid_prefix, Frame, ReplayLog, COMBINE_FRAME_ID, FRAME_HEADER_BYTES,
+};
+
+/// Modeled cost of re-homing the dead rank's reduce buckets onto the
+/// survivors (a pass over the 4096-bucket route table plus bookkeeping).
+/// Charged once per surviving rank in the recovery prologue.
+pub const REPLAN_NS: u64 = 50_000;
+
+/// Everything the degraded re-execution needs to know about the loss.
+/// Built by the recovery driver between attempts and shared (read-only
+/// plus the adoption counters) with every surviving rank through
+/// `JobShared`.
+#[derive(Debug)]
+pub struct RecoveryCtx {
+    /// The rank that died in attempt 1 (numbered in the original world).
+    pub dead_rank: usize,
+    /// World size of the failed attempt (survivors run on one fewer).
+    pub orig_nranks: usize,
+    /// Phase the kill fired in.
+    pub kill_phase: FaultPhase,
+    /// Global resume point: the latest loss-establishment virtual time
+    /// across the victim's abort and every survivor's detection.
+    /// Survivors' clocks in attempt 2 start from here (the `detect`
+    /// prologue span covers `[0, resume_vt]`).
+    pub resume_vt: u64,
+    /// Checkpointed map tasks recovered from all ranks' backing files.
+    pub log: ReplayLog,
+    /// Map tasks attempt 2 adopted from the log instead of recomputing
+    /// (incremented by whichever rank claims each task).
+    pub replayed_tasks: std::sync::atomic::AtomicU64,
+    /// Checkpointed output bytes those adoptions replayed.
+    pub replayed_bytes: std::sync::atomic::AtomicU64,
+}
+
+impl RecoveryCtx {
+    /// Record one adopted task of `bytes` checkpointed output.
+    pub fn note_replayed(&self, bytes: usize) {
+        use std::sync::atomic::Ordering;
+        self.replayed_tasks.fetch_add(1, Ordering::Relaxed);
+        self.replayed_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+}
+
+/// How many map tasks the victim completes before a `phase=map` kill
+/// fires: half its fair share, but at least one (so there is always
+/// checkpointed state to tear when `torn` is armed).
+pub fn kill_after_tasks(total_tasks: usize, nranks: usize) -> usize {
+    (total_tasks / nranks.max(1) / 2).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_threshold_is_half_fair_share_at_least_one() {
+        assert_eq!(kill_after_tasks(64, 8), 4);
+        assert_eq!(kill_after_tasks(8, 8), 1);
+        assert_eq!(kill_after_tasks(0, 8), 1);
+        assert_eq!(kill_after_tasks(7, 2), 1);
+        assert_eq!(kill_after_tasks(40, 4), 5);
+    }
+}

@@ -1,0 +1,245 @@
+//! Deterministic fault plans (`--faults ...`).
+//!
+//! A plan names *what* goes wrong and *where*: which rank dies, in which
+//! phase, whether its last checkpoint frame is torn, and which rank runs
+//! slow.  Injection points are virtual-time-deterministic (a kill fires
+//! after the victim completes a fixed number of its map tasks, or after
+//! its reduce pull), so a faulted run is exactly reproducible.
+
+use crate::error::{Error, Result};
+
+/// Phase at which a kill fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPhase {
+    /// Mid-Map: the victim dies after completing half its fair share of
+    /// map tasks (at least one).
+    Map,
+    /// Post-Reduce: the victim dies after its reduce pull, before it
+    /// participates in the Combine tree.
+    Reduce,
+}
+
+impl FaultPhase {
+    /// Stable label used in reports and bench samples.
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultPhase::Map => "map",
+            FaultPhase::Reduce => "reduce",
+        }
+    }
+}
+
+impl std::str::FromStr for FaultPhase {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "map" => Ok(FaultPhase::Map),
+            "reduce" => Ok(FaultPhase::Reduce),
+            other => Err(Error::Config(format!("unknown fault phase '{other}' (map|reduce)"))),
+        }
+    }
+}
+
+/// Kill `rank` at `phase`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillSpec {
+    /// The victim rank.
+    pub rank: usize,
+    /// When it dies.
+    pub phase: FaultPhase,
+}
+
+/// Multiply `rank`'s map compute cost by `factor` (a degraded node).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlowSpec {
+    /// The degraded rank.
+    pub rank: usize,
+    /// Compute multiplier (>= 1.0).
+    pub factor: f64,
+}
+
+/// A deterministic fault plan: at most one kill, one slowdown, one torn
+/// checkpoint.  Parsed from
+/// `kill:rank=R@phase=P[,slow:rank=R@factor=F][,torn:rank=R]`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Rank death.
+    pub kill: Option<KillSpec>,
+    /// Rank slowdown.
+    pub slow: Option<SlowSpec>,
+    /// Tear the last checkpoint frame of this rank at its death (models
+    /// a write cut mid-flush; requires a kill of the same rank).
+    pub torn: Option<usize>,
+}
+
+impl FaultPlan {
+    /// Validate internal consistency and bounds against a world size.
+    pub fn validate(&self, nranks: usize) -> Result<()> {
+        if let Some(kill) = &self.kill {
+            if kill.rank >= nranks {
+                return Err(Error::Config(format!(
+                    "kill rank {} out of range (world size {nranks})",
+                    kill.rank
+                )));
+            }
+            if nranks < 2 {
+                return Err(Error::Config(
+                    "kill fault needs at least 2 ranks (no survivors otherwise)".into(),
+                ));
+            }
+        }
+        if let Some(slow) = &self.slow {
+            if slow.rank >= nranks {
+                return Err(Error::Config(format!(
+                    "slow rank {} out of range (world size {nranks})",
+                    slow.rank
+                )));
+            }
+            if !slow.factor.is_finite() || slow.factor < 1.0 {
+                return Err(Error::Config(format!(
+                    "slow factor {} must be >= 1.0",
+                    slow.factor
+                )));
+            }
+        }
+        if let Some(torn) = self.torn {
+            match &self.kill {
+                Some(kill) if kill.rank == torn => {}
+                _ => {
+                    return Err(Error::Config(format!(
+                        "torn:rank={torn} requires kill of the same rank \
+                         (a torn frame is cut by the death)"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// True when the plan injects anything at all.
+    pub fn is_armed(&self) -> bool {
+        self.kill.is_some() || self.slow.is_some() || self.torn.is_some()
+    }
+}
+
+/// Parse `key=value` out of a `rank=R` style token.
+fn parse_kv(clause: &str, token: &str, key: &str) -> Result<u64> {
+    let val = token
+        .strip_prefix(key)
+        .and_then(|rest| rest.strip_prefix('='))
+        .ok_or_else(|| Error::Config(format!("bad fault clause '{clause}': expected {key}=..")))?;
+    val.parse::<u64>()
+        .map_err(|_| Error::Config(format!("bad fault clause '{clause}': '{val}' not a number")))
+}
+
+impl std::str::FromStr for FaultPlan {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let mut plan = FaultPlan::default();
+        for clause in s.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (kind, body) = clause
+                .split_once(':')
+                .ok_or_else(|| Error::Config(format!("bad fault clause '{clause}'")))?;
+            match kind.to_ascii_lowercase().as_str() {
+                "kill" => {
+                    let (rank_tok, phase_tok) = body.split_once('@').ok_or_else(|| {
+                        Error::Config(format!("bad fault clause '{clause}': need rank=R@phase=P"))
+                    })?;
+                    let rank = parse_kv(clause, rank_tok, "rank")? as usize;
+                    let phase = phase_tok
+                        .strip_prefix("phase=")
+                        .ok_or_else(|| {
+                            Error::Config(format!("bad fault clause '{clause}': need phase=map|reduce"))
+                        })?
+                        .parse::<FaultPhase>()?;
+                    if plan.kill.replace(KillSpec { rank, phase }).is_some() {
+                        return Err(Error::Config("duplicate kill clause".into()));
+                    }
+                }
+                "slow" => {
+                    let (rank_tok, factor_tok) = body.split_once('@').ok_or_else(|| {
+                        Error::Config(format!("bad fault clause '{clause}': need rank=R@factor=F"))
+                    })?;
+                    let rank = parse_kv(clause, rank_tok, "rank")? as usize;
+                    let factor = factor_tok
+                        .strip_prefix("factor=")
+                        .and_then(|v| v.parse::<f64>().ok())
+                        .ok_or_else(|| {
+                            Error::Config(format!("bad fault clause '{clause}': need factor=F"))
+                        })?;
+                    if plan.slow.replace(SlowSpec { rank, factor }).is_some() {
+                        return Err(Error::Config("duplicate slow clause".into()));
+                    }
+                }
+                "torn" => {
+                    let rank = parse_kv(clause, body, "rank")? as usize;
+                    if plan.torn.replace(rank).is_some() {
+                        return Err(Error::Config("duplicate torn clause".into()));
+                    }
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown fault kind '{other}' (kill|slow|torn)"
+                    )));
+                }
+            }
+        }
+        if !plan.is_armed() {
+            return Err(Error::Config("empty fault plan".into()));
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_plan() {
+        let plan: FaultPlan =
+            "kill:rank=2@phase=map,slow:rank=1@factor=3.5,torn:rank=2".parse().unwrap();
+        assert_eq!(plan.kill, Some(KillSpec { rank: 2, phase: FaultPhase::Map }));
+        assert_eq!(plan.slow, Some(SlowSpec { rank: 1, factor: 3.5 }));
+        assert_eq!(plan.torn, Some(2));
+        assert!(plan.validate(4).is_ok());
+    }
+
+    #[test]
+    fn parses_reduce_phase_kill() {
+        let plan: FaultPlan = "kill:rank=0@phase=reduce".parse().unwrap();
+        assert_eq!(plan.kill.unwrap().phase, FaultPhase::Reduce);
+        assert!(plan.validate(2).is_ok());
+    }
+
+    #[test]
+    fn rejects_malformed_clauses() {
+        for bad in [
+            "",
+            "kill",
+            "kill:rank=1",
+            "kill:rank=x@phase=map",
+            "kill:rank=1@phase=shuffle",
+            "slow:rank=1@factor=fast",
+            "torn:2",
+            "explode:rank=1",
+            "kill:rank=1@phase=map,kill:rank=2@phase=map",
+        ] {
+            assert!(bad.parse::<FaultPlan>().is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn validate_bounds_and_consistency() {
+        let kill: FaultPlan = "kill:rank=3@phase=map".parse().unwrap();
+        assert!(kill.validate(4).is_ok());
+        assert!(kill.validate(3).is_err(), "rank out of range");
+        let lone: FaultPlan = "kill:rank=0@phase=map".parse().unwrap();
+        assert!(lone.validate(1).is_err(), "no survivors");
+        let torn_wrong: FaultPlan = "kill:rank=1@phase=map,torn:rank=2".parse().unwrap();
+        assert!(torn_wrong.validate(4).is_err(), "torn without matching kill");
+        let slow_sub_unit: FaultPlan = "slow:rank=0@factor=0.5".parse().unwrap();
+        assert!(slow_sub_unit.validate(4).is_err());
+    }
+}

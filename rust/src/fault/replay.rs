@@ -1,0 +1,233 @@
+//! Framed checkpoint streams and valid-prefix replay.
+//!
+//! Checkpoint backing files (written through
+//! [`StorageWindow`](crate::storage::storage_window::StorageWindow)) are
+//! a sequence of self-delimiting frames:
+//!
+//! ```text
+//! |task_id: u32 LE|len: u32 LE|payload: len bytes| ...
+//! ```
+//!
+//! Map frames carry the wire-encoded records a completed map task
+//! contributed (`task_id` = the task's id); the Combine frame
+//! (`task_id == COMBINE_FRAME_ID`) carries a rank's encoded
+//! [`SortedRun`](crate::mapreduce::bucket::SortedRun).  Both payloads are
+//! record streams, so validity is checked the same way: every record
+//! header and body must decode inside the frame.
+//!
+//! Recovery never needs the whole file to be intact: a torn write (rank
+//! died mid-flush) leaves a truncated or garbled tail, and
+//! [`valid_prefix`] keeps exactly the leading run of complete,
+//! well-formed frames.  Tasks whose frame fell past the tear are simply
+//! recomputed — that is the degraded-mode contract.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::mapreduce::kv;
+
+/// Frame id reserved for a rank's Combine-stage `SortedRun` snapshot.
+pub const COMBINE_FRAME_ID: u32 = u32::MAX;
+
+/// Bytes of frame header (`task_id` + `len`).
+pub const FRAME_HEADER_BYTES: usize = 8;
+
+/// Append one frame to `out`.
+pub fn encode_frame(out: &mut Vec<u8>, task_id: u32, payload: &[u8]) {
+    out.extend_from_slice(&task_id.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// One decoded frame, borrowing its payload from the stream.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Frame<'a> {
+    /// Task id, or [`COMBINE_FRAME_ID`].
+    pub task_id: u32,
+    /// Wire-encoded record payload.
+    pub payload: &'a [u8],
+}
+
+/// True when `payload` is a clean wire record stream (every header and
+/// body decodes, nothing left over).
+fn payload_decodes(payload: &[u8]) -> bool {
+    let mut off = 0;
+    while off < payload.len() {
+        match kv::Record::decode(payload, off) {
+            Ok((_, next)) => off = next,
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// Decode the valid prefix of a (possibly torn) checkpoint stream:
+/// the leading complete frames whose payloads decode cleanly.  Returns
+/// the frames and the byte length of the prefix they occupy.
+pub fn valid_prefix(buf: &[u8]) -> (Vec<Frame<'_>>, usize) {
+    let mut frames = Vec::new();
+    let mut off = 0;
+    while buf.len() - off >= FRAME_HEADER_BYTES {
+        let task_id = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+        let len = u32::from_le_bytes(buf[off + 4..off + 8].try_into().unwrap()) as usize;
+        let body = off + FRAME_HEADER_BYTES;
+        let Some(end) = body.checked_add(len).filter(|&e| e <= buf.len()) else {
+            break; // torn tail: header promises more bytes than exist
+        };
+        let payload = &buf[body..end];
+        if !payload_decodes(payload) {
+            break; // garbled frame body: stop at the last clean frame
+        }
+        frames.push(Frame { task_id, payload });
+        off = end;
+    }
+    (frames, off)
+}
+
+/// Replayable state recovered from checkpoint files: map-task record
+/// payloads keyed by task id, plus per-rank Combine snapshots (validated
+/// but not replayed — the degraded route re-homes bucket ownership, so
+/// reduce state is recomputed from the replayed map output).
+#[derive(Debug, Default)]
+pub struct ReplayLog {
+    tasks: HashMap<usize, Vec<u8>>,
+    /// Encoded `SortedRun` snapshots found (one per rank that reached
+    /// Combine before the fault), kept for accounting.
+    pub combine_snapshots: usize,
+    /// Total bytes of valid prefix ingested across all files.
+    pub valid_bytes: u64,
+    /// Total file bytes scanned (valid + torn tails).
+    pub total_bytes: u64,
+}
+
+impl ReplayLog {
+    /// Ingest one rank's checkpoint stream (valid prefix only).
+    pub fn ingest(&mut self, buf: &[u8]) {
+        let (frames, valid) = valid_prefix(buf);
+        self.valid_bytes += valid as u64;
+        self.total_bytes += buf.len() as u64;
+        for frame in frames {
+            if frame.task_id == COMBINE_FRAME_ID {
+                self.combine_snapshots += 1;
+            } else {
+                // First writer wins; a task checkpointed twice (stolen
+                // then re-flushed) carries identical records either way.
+                self.tasks
+                    .entry(frame.task_id as usize)
+                    .or_insert_with(|| frame.payload.to_vec());
+            }
+        }
+    }
+
+    /// Ingest a checkpoint backing file from disk.  A missing file is an
+    /// empty contribution (the rank never checkpointed), not an error.
+    pub fn ingest_file(&mut self, path: &Path) {
+        if let Ok(bytes) = std::fs::read(path) {
+            self.ingest(&bytes);
+        }
+    }
+
+    /// Wire-encoded records of `task_id`, if that task was checkpointed.
+    pub fn task(&self, task_id: usize) -> Option<&[u8]> {
+        self.tasks.get(&task_id).map(Vec::as_slice)
+    }
+
+    /// Number of replayable map tasks.
+    pub fn task_count(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Total replayable payload bytes across map tasks.
+    pub fn task_bytes(&self) -> u64 {
+        self.tasks.values().map(|v| v.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::kv::hash_key;
+
+    fn records(words: &[(&str, u64)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for (w, c) in words {
+            kv::encode_parts(hash_key(w.as_bytes()), w.as_bytes(), &c.to_le_bytes(), &mut out);
+        }
+        out
+    }
+
+    fn stream(frames: &[(u32, Vec<u8>)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for (id, payload) in frames {
+            encode_frame(&mut out, *id, payload);
+        }
+        out
+    }
+
+    #[test]
+    fn round_trips_frames() {
+        let a = records(&[("alpha", 1), ("beta", 2)]);
+        let b = records(&[("gamma", 3)]);
+        let buf = stream(&[(7, a.clone()), (COMBINE_FRAME_ID, b.clone())]);
+        let (frames, valid) = valid_prefix(&buf);
+        assert_eq!(valid, buf.len());
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0], Frame { task_id: 7, payload: &a });
+        assert_eq!(frames[1], Frame { task_id: COMBINE_FRAME_ID, payload: &b });
+    }
+
+    #[test]
+    fn truncation_at_every_offset_yields_clean_prefix() {
+        let buf = stream(&[
+            (0, records(&[("one", 1)])),
+            (1, records(&[("two", 2), ("three", 3)])),
+            (2, records(&[("four", 4)])),
+        ]);
+        let (all, _) = valid_prefix(&buf);
+        assert_eq!(all.len(), 3);
+        let mut frame_ends = Vec::new();
+        let mut end = 0;
+        for f in &all {
+            end += FRAME_HEADER_BYTES + f.payload.len();
+            frame_ends.push(end);
+        }
+        for cut in 0..=buf.len() {
+            let (frames, valid) = valid_prefix(&buf[..cut]);
+            // Exactly the frames wholly before the cut survive.
+            let expect = frame_ends.iter().filter(|&&e| e <= cut).count();
+            assert_eq!(frames.len(), expect, "cut at {cut}");
+            assert_eq!(valid, frame_ends.get(expect.wrapping_sub(1)).copied().unwrap_or(0));
+        }
+    }
+
+    #[test]
+    fn garbled_frame_body_stops_the_prefix() {
+        let good = records(&[("keep", 9)]);
+        let mut bad = records(&[("drop", 1)]);
+        bad[9] = 0xFF; // klen high byte -> key runs past the frame body
+        let buf = stream(&[(0, good.clone()), (1, bad)]);
+        let (frames, valid) = valid_prefix(&buf);
+        assert_eq!(frames.len(), 1);
+        assert_eq!(frames[0].payload, &good[..]);
+        assert_eq!(valid, FRAME_HEADER_BYTES + good.len());
+    }
+
+    #[test]
+    fn replay_log_merges_files_first_writer_wins() {
+        let mut log = ReplayLog::default();
+        log.ingest(&stream(&[(0, records(&[("a", 1)])), (2, records(&[("c", 3)]))]));
+        log.ingest(&stream(&[
+            (0, records(&[("a", 1)])), // duplicate of task 0
+            (1, records(&[("b", 2)])),
+            (COMBINE_FRAME_ID, records(&[("z", 9)])),
+        ]));
+        assert_eq!(log.task_count(), 3);
+        assert_eq!(log.combine_snapshots, 1);
+        assert!(log.task(0).is_some());
+        assert!(log.task(1).is_some());
+        assert!(log.task(2).is_some());
+        assert!(log.task(3).is_none());
+        assert!(log.task_bytes() > 0);
+        assert_eq!(log.valid_bytes, log.total_bytes);
+    }
+}

@@ -34,6 +34,7 @@
 pub mod bench;
 pub mod cli;
 pub mod error;
+pub mod fault;
 pub mod harness;
 pub mod mapreduce;
 pub mod metrics;

@@ -61,13 +61,13 @@ pub struct OwnedRecord {
 impl OwnedRecord {
     /// Encoded size of this record.
     pub fn encoded_len(&self) -> usize {
-        HEADER_BYTES + self.key.len() + self.value.wire_len()
+        kv::encoded_len_parts(self.key.len(), self.value.wire_len())
     }
 
     /// Append the wire encoding to `out`.
     ///
     /// Fails with [`crate::error::Error::ValueOverflow`] when a reduce
-    /// accumulator outgrew the u16 value-length field.
+    /// accumulator outgrew even the u32 extended value-length field.
     pub fn encode_into(&self, out: &mut Vec<u8>) -> crate::error::Result<()> {
         match &self.value {
             Value::U64(v) => kv::encode_parts(self.hash, &self.key, &v.to_le_bytes(), out),
@@ -343,7 +343,7 @@ impl SortedRun {
 
     /// Encode the run for window publication.  Fails with a typed
     /// [`crate::error::Error::ValueOverflow`] when a reduced value no
-    /// longer fits the wire format's u16 length field.
+    /// longer fits the wire format's u32 extended length field.
     pub fn encode(&self) -> crate::error::Result<Vec<u8>> {
         let mut out = Vec::with_capacity(self.encoded_bytes());
         for rec in &self.records {
@@ -561,21 +561,22 @@ mod tests {
     }
 
     #[test]
-    fn overflowing_accumulator_is_typed_error() {
+    fn accumulator_past_u16_drains_via_extended_vlen() {
+        // 80 KiB concat accumulator: beyond the compact u16 field, well
+        // within the u32 extension — must drain and decode intact.
         let mut t = KeyTable::new();
         let h = kv::hash_key(b"hot");
         let chunk = vec![7u8; 16 << 10];
         for _ in 0..5 {
-            t.merge(h, b"hot", &chunk, &ConcatOps); // 80 KiB > u16::MAX
+            t.merge(h, b"hot", &chunk, &ConcatOps);
         }
-        let err = t.drain_by_owner(2).unwrap_err();
-        match err {
-            crate::error::Error::ValueOverflow { key, len } => {
-                assert_eq!(key, b"hot".to_vec());
-                assert!(len > kv::MAX_VALUE_LEN);
-            }
-            other => panic!("expected ValueOverflow, got {other}"),
-        }
+        let parts = t.drain_by_owner(2).unwrap();
+        let buf: &Vec<u8> = parts.iter().find(|p| !p.is_empty()).unwrap();
+        let recs = kv::decode_all(buf).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].key, b"hot");
+        assert_eq!(recs[0].value.len(), 5 * (16 << 10));
+        assert!(recs[0].value.iter().all(|&b| b == 7));
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use std::path::PathBuf;
 
 use crate::error::{Error, Result};
+use crate::fault::FaultPlan;
 
 /// Which backend executes the job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -153,6 +154,10 @@ pub struct JobConfig {
     /// once; §3 footnote 5).  Empty = balanced.  Indexed by task id,
     /// cycled if shorter than the task list.
     pub skew: Vec<f64>,
+    /// Deterministic fault plan (`--faults`, see `crate::fault`): inject
+    /// a rank death / slowdown / torn checkpoint write and recover.
+    /// `None` = fault-free run.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for JobConfig {
@@ -170,6 +175,7 @@ impl Default for JobConfig {
             route: RouteConfig::Modulo,
             checkpoint_dir: std::env::temp_dir(),
             skew: Vec::new(),
+            faults: None,
         }
     }
 }
@@ -208,6 +214,31 @@ impl JobConfig {
                 return Err(Error::Config(
                     "job stealing is incompatible with the coded route".into(),
                 ));
+            }
+            if self.faults.as_ref().is_some_and(FaultPlan::is_armed) {
+                // Losing a replica invalidates whole coded batches and the
+                // C(n, r) placement itself; recovery would have to re-run
+                // the placement from scratch rather than re-home buckets.
+                return Err(Error::Config(
+                    "fault injection is incompatible with the coded route".into(),
+                ));
+            }
+        }
+        if let Some(faults) = &self.faults {
+            if faults.slow.is_some_and(|s| !s.factor.is_finite() || s.factor < 1.0) {
+                return Err(Error::Config("slow fault factor must be >= 1.0".into()));
+            }
+            if let Some(torn) = faults.torn {
+                if faults.kill.map(|k| k.rank) != Some(torn) {
+                    return Err(Error::Config(
+                        "torn checkpoint fault requires a kill of the same rank".into(),
+                    ));
+                }
+                if !self.checkpoints {
+                    return Err(Error::Config(
+                        "torn checkpoint fault requires --checkpoint".into(),
+                    ));
+                }
             }
         }
         Ok(())
@@ -294,6 +325,27 @@ mod tests {
         let cfg =
             JobConfig { route: RouteConfig::Planned { split: 0 }, ..Default::default() };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn fault_plan_validation_in_config() {
+        let kill: FaultPlan = "kill:rank=1@phase=map".parse().unwrap();
+        let cfg = JobConfig { faults: Some(kill.clone()), ..Default::default() };
+        assert!(cfg.validate().is_ok());
+
+        let coded = JobConfig {
+            route: RouteConfig::Coded { r: 2 },
+            faults: Some(kill.clone()),
+            ..Default::default()
+        };
+        assert!(coded.validate().is_err(), "coded route must reject faults");
+
+        let torn: FaultPlan = "kill:rank=1@phase=map,torn:rank=1".parse().unwrap();
+        let no_ckpt = JobConfig { faults: Some(torn.clone()), ..Default::default() };
+        assert!(no_ckpt.validate().is_err(), "torn needs checkpoints on");
+        let with_ckpt =
+            JobConfig { faults: Some(torn), checkpoints: true, ..Default::default() };
+        assert!(with_ckpt.validate().is_ok());
     }
 
     #[test]

@@ -6,12 +6,13 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::metrics::tracer::{self, Span, WaitCause};
-use crate::metrics::{JobReport, MemoryTracker, PhaseBreakdown, Timeline};
+use crate::fault::{RecoveryCtx, ReplayLog};
+use crate::metrics::tracer::{self, op, Span, WaitCause};
+use crate::metrics::{JobReport, MemoryTracker, PhaseBreakdown, RecoveryReport, Timeline};
 use crate::mpi::{RankCtx, Universe};
 use crate::runtime::Engine;
 use crate::sim::CostModel;
-use crate::storage::StripedFile;
+use crate::storage::{StorageWindow, StripedFile};
 
 use super::bucket::{KeyTable, SortedRun};
 use super::config::{BackendKind, JobConfig};
@@ -142,6 +143,10 @@ pub struct JobShared {
     /// their timelines with `Timeline::for_stage(shared.stage)` so every
     /// event and span carries the stage tag.
     pub stage: u32,
+    /// Present on the degraded re-execution after a rank loss: the
+    /// checkpoint replay log and recovery accounting shared by all
+    /// surviving ranks (see `crate::fault`).  `None` on normal runs.
+    pub recovery: Option<Arc<RecoveryCtx>>,
 }
 
 impl JobShared {
@@ -452,7 +457,15 @@ pub fn run_map_task(
     // multiplied by the task's imbalance factor (paper §3 footnote 5:
     // same task computed multiple times, input read once).
     let skew = shared.config.skew_for_task(task.skew_id);
-    let cost = ctx.cost.compute.map_cost(task.len) as f64 * skew;
+    let mut cost = ctx.cost.compute.map_cost(task.len) as f64 * skew;
+    // Slow fault: the victim's map compute runs `factor`x slower — a
+    // degraded-but-alive rank the decoupled backend routes around
+    // rather than losing (contrast with the kill fault).
+    if let Some(slow) = shared.config.faults.as_ref().and_then(|f| f.slow) {
+        if slow.rank == ctx.rank() {
+            cost *= slow.factor;
+        }
+    }
     ctx.clock.advance(cost as u64 + ctx.cost.compute.task_overhead_ns);
     Ok(emitted)
 }
@@ -651,6 +664,7 @@ impl Job {
             start_vts: stage.start_vts,
             pipelined: stage.pipelined,
             stage: stage.stage,
+            recovery: None,
         });
 
         let backend_impl: Arc<dyn Backend> = match backend {
@@ -658,32 +672,94 @@ impl Job {
             BackendKind::TwoSided => Arc::new(super::twosided::Mr2s),
         };
 
-        let shared2 = shared.clone();
-        let outcomes: Vec<Result<(RankOutcome, Vec<Span>)>> =
-            Universe::new(nranks, cost).run(move |ctx| {
-                // Arm the thread-local span recorder for this rank thread;
-                // substrate code (windows, collectives, prefetch) records
-                // into it without signature changes.
-                tracer::install(ctx.rank(), shared2.stage);
-                // Stage handoff: this rank's thread becomes free when it
-                // finished the previous stage, not when the stage barrier
-                // would have let it go.
-                ctx.clock.sync_to(shared2.start_vts.get(ctx.rank()).copied().unwrap_or(0));
-                let out = backend_impl.execute(ctx, &shared2);
-                let spans = tracer::take();
-                out.map(|o| (o, spans))
+        // Attempt 1: the configured fault plan (if any) is armed.  When a
+        // kill fires, the victim aborts with `RankLost` and every survivor
+        // detects the loss from inside whichever blocking primitive it
+        // reaches next — all of attempt 1's outcomes are then discarded
+        // and the job re-runs degraded on the survivors.
+        let mut outcomes = run_attempt(&backend_impl, &shared, nranks, cost);
+        let losses: Vec<(usize, u64)> = outcomes
+            .iter()
+            .filter_map(|o| match o {
+                Err(Error::RankLost { rank, vt }) => Some((*rank, *vt)),
+                _ => None,
+            })
+            .collect();
+        let mut nranks_eff = nranks;
+        let mut recovery_ctx: Option<Arc<RecoveryCtx>> = None;
+        let mut mem_tracker = shared.mem.clone();
+        if !losses.is_empty() {
+            let kill =
+                self.config.faults.as_ref().and_then(|f| f.kill).ok_or_else(|| {
+                    Error::Config("rank lost without an armed kill fault".into())
+                })?;
+            if nranks < 2 {
+                return Err(Error::Config("cannot recover: no surviving ranks".into()));
+            }
+            // Global loss-establishment time: the latest of the victim's
+            // abort and every survivor's detection — attempt 2 resumes
+            // all survivors from here.
+            let resume_vt = losses.iter().map(|&(_, vt)| vt).max().unwrap_or(0);
+            // Harvest every rank's checkpoint backing file — only files
+            // this attempt just wrote (the running backend's naming; a
+            // missing file contributes nothing).  With checkpoints off
+            // nothing is ingested and every task is recomputed.
+            let mut log = ReplayLog::default();
+            if self.config.checkpoints {
+                let tag = match backend {
+                    BackendKind::OneSided => "mr1s",
+                    BackendKind::TwoSided => "mr2s",
+                };
+                for r in 0..nranks {
+                    log.ingest_file(
+                        &self.config.checkpoint_dir.join(format!("{tag}-ckpt-{r}.bin")),
+                    );
+                }
+            }
+            let rc = Arc::new(RecoveryCtx {
+                dead_rank: kill.rank,
+                orig_nranks: nranks,
+                kill_phase: kill.phase,
+                resume_vt,
+                log,
+                replayed_tasks: Default::default(),
+                replayed_bytes: Default::default(),
             });
+            // Attempt 2: a fresh universe on the n−1 survivors with the
+            // fault plan disarmed and the replay log shared.  Per-rank
+            // state is rebuilt from scratch; only the checkpoint files
+            // and the recovery context carry over.
+            let mut degraded_config = self.config.clone();
+            degraded_config.faults = None;
+            let degraded = Arc::new(JobShared {
+                config: degraded_config,
+                usecase: shared.usecase.clone(),
+                file: shared.file.clone(),
+                tasks: shared.tasks.clone(),
+                engine: shared.engine.clone(),
+                mem: Arc::new(MemoryTracker::new()),
+                record_bounds: shared.record_bounds.clone(),
+                start_vts: Vec::new(),
+                pipelined: shared.pipelined,
+                stage: shared.stage,
+                recovery: Some(rc.clone()),
+            });
+            nranks_eff = nranks - 1;
+            mem_tracker = degraded.mem.clone();
+            outcomes = run_attempt(&backend_impl, &degraded, nranks_eff, cost);
+            recovery_ctx = Some(rc);
+        }
 
-        let mut rank_elapsed = Vec::with_capacity(nranks);
-        let mut breakdowns = Vec::with_capacity(nranks);
-        let mut timelines = Vec::with_capacity(nranks);
-        let mut first_read_issue = Vec::with_capacity(nranks);
-        let mut reduce_bytes_per_rank = Vec::with_capacity(nranks);
-        let mut reduce_keys_per_rank = Vec::with_capacity(nranks);
-        let mut planned_reduce = Vec::with_capacity(nranks);
-        let mut shuffle_wire_bytes_per_rank = Vec::with_capacity(nranks);
-        let mut shuffle_logical_bytes_per_rank = Vec::with_capacity(nranks);
-        let mut spans_per_rank = Vec::with_capacity(nranks);
+        let mut rank_elapsed = Vec::with_capacity(nranks_eff);
+        let mut breakdowns = Vec::with_capacity(nranks_eff);
+        let mut timelines = Vec::with_capacity(nranks_eff);
+        let mut first_read_issue = Vec::with_capacity(nranks_eff);
+        let mut reduce_bytes_per_rank = Vec::with_capacity(nranks_eff);
+        let mut reduce_keys_per_rank = Vec::with_capacity(nranks_eff);
+        let mut planned_reduce = Vec::with_capacity(nranks_eff);
+        let mut shuffle_wire_bytes_per_rank = Vec::with_capacity(nranks_eff);
+        let mut shuffle_logical_bytes_per_rank = Vec::with_capacity(nranks_eff);
+        let mut spans_per_rank = Vec::with_capacity(nranks_eff);
         let mut input_bytes = 0u64;
         let mut result_run = None;
         for outcome in outcomes {
@@ -725,9 +801,36 @@ impl Job {
         let total_count: u64 =
             result.iter().fold(0u64, |acc, (_, v)| acc.wrapping_add(v.weight()));
 
+        // Recovery cost, derived from the degraded run's attributed wait
+        // spans — so the `recovery=` breakdown is consistent with the
+        // per-rank `wait_ns` attribution by construction.
+        let recovery = recovery_ctx.map(|rc| {
+            use std::sync::atomic::Ordering;
+            let cause_ns = |cause: WaitCause| -> u64 {
+                spans_per_rank
+                    .iter()
+                    .flatten()
+                    .filter(|s| s.op == op::WAIT && s.cause == Some(cause))
+                    .map(Span::dur_ns)
+                    .sum()
+            };
+            let replayed_tasks = rc.replayed_tasks.load(Ordering::Relaxed);
+            RecoveryReport {
+                dead_rank: rc.dead_rank,
+                phase: rc.kill_phase.label(),
+                orig_nranks: rc.orig_nranks,
+                detect_ns: cause_ns(WaitCause::Detect),
+                replay_ns: cause_ns(WaitCause::Replay),
+                replan_ns: cause_ns(WaitCause::Replan),
+                replayed_tasks,
+                recomputed_tasks: (shared.tasks.len() as u64).saturating_sub(replayed_tasks),
+                replayed_bytes: rc.replayed_bytes.load(Ordering::Relaxed),
+            }
+        });
+
         let report = JobReport {
             backend: backend.name(),
-            nranks,
+            nranks: nranks_eff,
             input_bytes,
             elapsed_ns: rank_elapsed.iter().copied().max().unwrap_or(0),
             rank_elapsed_ns: rank_elapsed,
@@ -740,15 +843,43 @@ impl Job {
             shuffle_wire_bytes_per_rank,
             shuffle_logical_bytes_per_rank,
             spill_bytes_saved: 0,
-            peak_memory_bytes: shared.mem.peak(),
-            mem_hwm_vt_ns: shared.mem.peak_sample().0,
-            memory_series: shared.mem.normalized_series(256),
+            peak_memory_bytes: mem_tracker.peak(),
+            mem_hwm_vt_ns: mem_tracker.peak_sample().0,
+            memory_series: mem_tracker.normalized_series(256),
             spans: spans_per_rank,
             unique_keys,
             total_count,
+            recovery,
         };
         Ok(JobOutput { report, result })
     }
+}
+
+/// Launch one universe of `nranks` rank threads over `shared` and
+/// collect each rank's outcome with its recorded trace spans.  The
+/// recovery driver calls this twice on a faulted job (armed attempt,
+/// then the degraded re-execution).
+fn run_attempt(
+    backend_impl: &Arc<dyn Backend>,
+    shared: &Arc<JobShared>,
+    nranks: usize,
+    cost: CostModel,
+) -> Vec<Result<(RankOutcome, Vec<Span>)>> {
+    let backend_impl = backend_impl.clone();
+    let shared = shared.clone();
+    Universe::new(nranks, cost).run(move |ctx| {
+        // Arm the thread-local span recorder for this rank thread;
+        // substrate code (windows, collectives, prefetch) records
+        // into it without signature changes.
+        tracer::install(ctx.rank(), shared.stage);
+        // Stage handoff: this rank's thread becomes free when it
+        // finished the previous stage, not when the stage barrier
+        // would have let it go.
+        ctx.clock.sync_to(shared.start_vts.get(ctx.rank()).copied().unwrap_or(0));
+        let out = backend_impl.execute(ctx, &shared);
+        let spans = tracer::take();
+        out.map(|o| (o, spans))
+    })
 }
 
 /// Process-wide engine cache: artifacts are compiled once per process
@@ -801,6 +932,72 @@ pub fn timed_wait<T>(
     timeline.record(t0, t1, crate::metrics::EventKind::Wait);
     tracer::wait(cause, t0, t1, None);
     out
+}
+
+/// Recovery entry hook every backend calls at the top of `execute`:
+/// on a degraded re-execution, charge this rank the failure-detection
+/// interval (its clock jumps to the virtual time the loss was globally
+/// established) and the route re-planning overhead — both as attributed
+/// wait spans, so the recovery cost shows up in `wait_ns`, the trace
+/// export, and the critical path like any other stall.
+pub fn recovery_prologue(ctx: &RankCtx, shared: &JobShared, timeline: &Timeline) {
+    if let Some(rc) = &shared.recovery {
+        timed_wait(ctx, timeline, WaitCause::Detect, || ctx.clock.sync_to(rc.resume_vt));
+        timed_wait(ctx, timeline, WaitCause::Replan, || {
+            ctx.clock.advance(crate::fault::REPLAN_NS);
+        });
+    }
+}
+
+/// Abort at a fault-injection point: optionally tear the tail off the
+/// last checkpoint frame (a write cut mid-flush), mark this rank dead in
+/// the shared epoch flags, and build the typed loss error.  The death
+/// virtual time is captured *before* the checkpoint drain — the flush
+/// raced the crash; its durability is not the victim's clock's business.
+pub fn die(ctx: &RankCtx, checkpoint: &mut Option<StorageWindow>, torn: bool) -> Error {
+    let me = ctx.rank();
+    let vt = ctx.clock.now();
+    if let Some(ckpt) = checkpoint.as_mut() {
+        let _ = ckpt.drain(ctx);
+        if torn {
+            if let Ok(len) = ckpt.len() {
+                // Cut into the last frame (7 < FRAME_HEADER_BYTES, so
+                // even an empty-payload frame loses bytes): recovery must
+                // fall back to the longest valid prefix.
+                let _ = ckpt.truncate(len.saturating_sub(7));
+            }
+        }
+    }
+    ctx.dead().mark_dead(me, vt);
+    Error::RankLost { rank: me, vt }
+}
+
+/// Adopt one checkpointed map task on a recovering run: fold the frame
+/// payload (the task's full flushed output, encoded records) straight
+/// into `staging`, charging checkpoint-read + fold cost on the virtual
+/// clock as a `replay` wait span — instead of re-reading the input and
+/// re-running Map + Local Reduce.
+pub fn replay_task(
+    ctx: &RankCtx,
+    shared: &JobShared,
+    timeline: &Timeline,
+    payload: &[u8],
+    staging: &mut KeyTable,
+) -> Result<()> {
+    let ops = shared.ops();
+    timed_wait(ctx, timeline, WaitCause::Replay, || {
+        ctx.clock.advance(
+            ctx.cost.storage.read_cost(payload.len())
+                + ctx.cost.compute.reduce_cost(payload.len()),
+        );
+    });
+    for rec in kv::RecordIter::new(payload) {
+        staging.merge_record(rec?, &ops);
+    }
+    if let Some(rc) = &shared.recovery {
+        rc.note_replayed(payload.len());
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -10,6 +10,18 @@
 //! | hash: u64 | klen: u16 | vlen: u16 | key: klen bytes | value: vlen bytes |
 //! ```
 //!
+//! Values longer than the u16 field can express use an escape: `vlen ==
+//! 0xFFFF` marks an extension header, and the true length follows the
+//! fixed header as a `u32`:
+//!
+//! ```text
+//! | hash: u64 | klen: u16 | 0xFFFF | vlen: u32 | key | value |
+//! ```
+//!
+//! Short values (the overwhelmingly common case) pay nothing for the
+//! escape; unbounded accumulators (posting lists, concatenations) grow
+//! to 4 GiB before hitting the typed overflow error.
+//!
 //! Records sort by `(hash, key)`; equal keys reduce.
 //!
 //! ## Two-tier values
@@ -32,10 +44,18 @@ pub const HEADER_BYTES: usize = 8 + 2 + 2;
 /// Longest key the framework accepts (u16 length field).
 pub const MAX_KEY_LEN: usize = u16::MAX as usize;
 
-/// Longest value the framework accepts (u16 length field).  Use-cases
-/// with unbounded accumulators (posting lists…) must bound them below
-/// this (the shipped inverted index caps its shard space accordingly).
-pub const MAX_VALUE_LEN: usize = u16::MAX as usize;
+/// Sentinel in the u16 `vlen` field marking an extension header: the
+/// true value length follows the fixed header as a `u32`.
+pub const VLEN_ESCAPE: u16 = u16::MAX;
+
+/// Bytes of the `u32` extended-length field (present only when the
+/// header's `vlen` equals [`VLEN_ESCAPE`]).
+pub const EXT_VLEN_BYTES: usize = 4;
+
+/// Longest value the framework accepts (u32 extended length field).
+/// Values shorter than [`VLEN_ESCAPE`] use the compact 12-byte header;
+/// longer ones carry the 4-byte extension.
+pub const MAX_VALUE_LEN: usize = u32::MAX as usize;
 
 /// One decoded key-value record (borrowing key and value from its
 /// buffer).
@@ -49,10 +69,18 @@ pub struct Record<'a> {
     pub value: &'a [u8],
 }
 
+/// Encoded size of a record with the given key/value lengths (accounts
+/// for the extended-vlen escape).
+#[inline]
+pub fn encoded_len_parts(klen: usize, vlen: usize) -> usize {
+    let ext = if vlen >= VLEN_ESCAPE as usize { EXT_VLEN_BYTES } else { 0 };
+    HEADER_BYTES + ext + klen + vlen
+}
+
 impl<'a> Record<'a> {
     /// Encoded size of this record.
     pub fn encoded_len(&self) -> usize {
-        HEADER_BYTES + self.key.len() + self.value.len()
+        encoded_len_parts(self.key.len(), self.value.len())
     }
 
     /// Append the encoded record to `out`.
@@ -71,7 +99,20 @@ impl<'a> Record<'a> {
         }
         let hash = u64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
         let klen = u16::from_le_bytes(buf[off + 8..off + 10].try_into().unwrap()) as usize;
-        let vlen = u16::from_le_bytes(buf[off + 10..off + 12].try_into().unwrap()) as usize;
+        let vfield = u16::from_le_bytes(buf[off + 10..off + 12].try_into().unwrap());
+        let (vlen, hdr_end) = if vfield == VLEN_ESCAPE {
+            let ext_end = hdr_end + EXT_VLEN_BYTES;
+            if ext_end > buf.len() {
+                return Err(Error::KvDecode(format!(
+                    "truncated extended-vlen header at {off} (buf len {})",
+                    buf.len()
+                )));
+            }
+            let v = u32::from_le_bytes(buf[hdr_end..ext_end].try_into().unwrap()) as usize;
+            (v, ext_end)
+        } else {
+            (vfield as usize, hdr_end)
+        };
         let key_end = hdr_end + klen;
         let end = key_end + vlen;
         if end > buf.len() {
@@ -96,9 +137,10 @@ impl<'a> Record<'a> {
 ///
 /// Map emissions are bounded by construction (use-cases emit small
 /// values), but reduce accumulators grow — an unbounded operator can
-/// outgrow the u16 length field.  Every owned-record encode path calls
-/// this, so the failure is a typed [`Error::ValueOverflow`] carrying the
-/// key instead of a wire-corrupting truncation (or a debug panic).
+/// outgrow even the u32 extended length field.  Every owned-record
+/// encode path calls this, so the failure is a typed
+/// [`Error::ValueOverflow`] carrying the key instead of a
+/// wire-corrupting truncation (or a debug panic).
 #[inline]
 pub fn check_value_len(key: &[u8], len: usize) -> Result<()> {
     if len > MAX_VALUE_LEN {
@@ -114,7 +156,12 @@ pub fn encode_parts(hash: u64, key: &[u8], value: &[u8], out: &mut Vec<u8>) {
     debug_assert!(value.len() <= MAX_VALUE_LEN);
     out.extend_from_slice(&hash.to_le_bytes());
     out.extend_from_slice(&(key.len() as u16).to_le_bytes());
-    out.extend_from_slice(&(value.len() as u16).to_le_bytes());
+    if value.len() >= VLEN_ESCAPE as usize {
+        out.extend_from_slice(&VLEN_ESCAPE.to_le_bytes());
+        out.extend_from_slice(&(value.len() as u32).to_le_bytes());
+    } else {
+        out.extend_from_slice(&(value.len() as u16).to_le_bytes());
+    }
     out.extend_from_slice(key);
     out.extend_from_slice(value);
 }
@@ -409,6 +456,58 @@ mod tests {
         let recs = decode_all(&buf).unwrap();
         assert_eq!(recs[0].key, b"");
         assert_eq!(recs[0].value, b"");
+    }
+
+    #[test]
+    fn extended_vlen_roundtrips_past_u16() {
+        // One compact record, one at the escape boundary, one well past
+        // it — decoding must walk all three.
+        let big = vec![0xABu8; (VLEN_ESCAPE as usize) + 10_000];
+        let boundary = vec![0xCDu8; VLEN_ESCAPE as usize];
+        let mut buf = Vec::new();
+        Record { hash: 1, key: b"small", value: b"v" }.encode_into(&mut buf);
+        Record { hash: 2, key: b"boundary", value: &boundary }.encode_into(&mut buf);
+        Record { hash: 3, key: b"big", value: &big }.encode_into(&mut buf);
+        let recs = decode_all(&buf).unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].value, b"v");
+        assert_eq!(recs[1].value.len(), VLEN_ESCAPE as usize);
+        assert_eq!(recs[2].value, big.as_slice());
+        // The compact form stays 12-byte-headed; the escape costs 4.
+        assert_eq!(recs[0].encoded_len(), HEADER_BYTES + 5 + 1);
+        assert_eq!(
+            recs[2].encoded_len(),
+            HEADER_BYTES + EXT_VLEN_BYTES + 3 + big.len()
+        );
+    }
+
+    #[test]
+    fn value_just_below_escape_stays_compact() {
+        let v = vec![9u8; (VLEN_ESCAPE as usize) - 1];
+        let mut buf = Vec::new();
+        Record { hash: 7, key: b"k", value: &v }.encode_into(&mut buf);
+        assert_eq!(buf.len(), HEADER_BYTES + 1 + v.len());
+        let (dec, _) = Record::decode(&buf, 0).unwrap();
+        assert_eq!(dec.value, v.as_slice());
+    }
+
+    #[test]
+    fn truncated_extension_header_is_error() {
+        let big = vec![1u8; VLEN_ESCAPE as usize];
+        let mut buf = Vec::new();
+        Record { hash: 1, key: b"k", value: &big }.encode_into(&mut buf);
+        // Cut inside the 4-byte extended length field.
+        buf.truncate(HEADER_BYTES + 2);
+        assert!(decode_all(&buf).is_err());
+    }
+
+    #[test]
+    fn check_value_len_admits_large_values() {
+        assert!(check_value_len(b"k", 1 << 20).is_ok());
+        assert!(matches!(
+            check_value_len(b"k", MAX_VALUE_LEN + 1),
+            Err(Error::ValueOverflow { .. })
+        ));
     }
 
     #[test]

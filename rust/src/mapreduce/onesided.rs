@@ -30,16 +30,20 @@
 //!   child's exclusive lock is released.
 
 use crate::error::Result;
+use crate::fault::{self, FaultPhase};
 use crate::metrics::tracer::{self, op, WaitCause};
 use crate::metrics::{EventKind, Timeline};
 use crate::mpi::{LockKind, RankCtx, Window};
-use crate::shuffle::{coding, exchange, plan_coded_route, CodedPlacement, Route, Sketch};
+use crate::shuffle::{
+    coding, exchange, plan_coded_route, plan_route, rehome, CodedPlacement, Route, Sketch,
+};
 use crate::storage::{Prefetcher, StorageWindow};
 
 use super::bucket::{KeyTable, SortedRun};
 use super::config::RouteConfig;
 use super::job::{
-    build_local_run, run_map_task, timed, timed_wait, Backend, JobShared, RankOutcome,
+    build_local_run, die, recovery_prologue, replay_task, run_map_task, timed, timed_wait,
+    Backend, JobShared, RankOutcome,
 };
 use super::kv::{self, ValueOps};
 
@@ -210,6 +214,10 @@ impl Backend for Mr1s {
         let cfg = &shared.config;
         let ops = shared.ops();
 
+        // Degraded re-execution (attempt 2 of a recovery): pay failure
+        // detection and route re-planning on the clock before any setup.
+        recovery_prologue(ctx, shared, &tl);
+
         // Coded route: derive the repetition placement up front — it is a
         // pure function of (nranks, r), so every rank rejects bad
         // parameters (r > nranks, batch explosion) identically, before
@@ -234,9 +242,9 @@ impl Backend for Mr1s {
                 Window::create(ctx, size)
             }
         };
-        let ctrl = mk_win(ctrl_size(n));
-        let kv_win = mk_win(0);
-        let comb_win = mk_win(0);
+        let ctrl = mk_win(ctrl_size(n))?;
+        let kv_win = mk_win(0)?;
+        let comb_win = mk_win(0)?;
         // Planned and coded routing need a fourth window for the
         // sketch/route exchange (and, under coded, the packet blobs);
         // creation is collective, so it must exist up front.
@@ -244,21 +252,23 @@ impl Backend for Mr1s {
             RouteConfig::Planned { split } => Some(split),
             RouteConfig::Modulo | RouteConfig::Coded { .. } => None,
         };
-        let plan_win = (planned_split.is_some() || placement.is_some()).then(|| {
-            let w = mk_win(0);
+        let plan_win = if planned_split.is_some() || placement.is_some() {
+            let w = mk_win(0)?;
             exchange::init_window(&w);
-            w
-        });
+            Some(w)
+        } else {
+            None
+        };
         // Paper: each process acquires the exclusive lock over its own
         // Combine window during initialization.
-        comb_win.lock(&ctx.clock, LockKind::Exclusive, me);
+        comb_win.lock(&ctx.clock, LockKind::Exclusive, me)?;
         timed_wait(ctx, &tl, WaitCause::Barrier, || {
             if pipelined {
-                ctx.rendezvous_real();
+                ctx.rendezvous_real()
             } else {
-                ctx.barrier();
+                ctx.barrier()
             }
-        });
+        })?;
 
         let mut out_buckets = vec![OutBucket::default(); n];
         let mut reduce_table = KeyTable::new();
@@ -271,6 +281,15 @@ impl Backend for Mr1s {
             None
         };
         let mut ckpt_off = 0u64;
+
+        // Fault-plan hooks for this rank: whether it is the kill victim
+        // (and at which phase), and whether its last checkpoint frame is
+        // torn off at death.  Attempt 2 of a recovery runs with
+        // `faults: None`, so these are all inert there.
+        let kill = cfg.faults.as_ref().and_then(|f| f.kill).filter(|k| k.rank == me);
+        let torn = cfg.faults.as_ref().and_then(|f| f.torn) == Some(me);
+        let kill_after = fault::kill_after_tasks(shared.tasks.len(), n);
+        let mut completed_tasks = 0usize;
 
         // ---- Map + Local Reduce (self-managed, prefetched) -----------
         // Rank-strided queues; heads are atomic cells so idle ranks can
@@ -334,11 +353,27 @@ impl Backend for Mr1s {
         let mut shuffle_logical_bytes = 0u64;
 
         while let Some((task, read)) = pending {
-            let data = timed(ctx, &tl, EventKind::Io, || read.wait(ctx))?;
+            // A recovering run adopts checkpointed tasks instead of
+            // recomputing them: the frame payload is the task's full
+            // locally-reduced output, so decoding it replaces input read
+            // + Map + Local Reduce at checkpoint-read cost.
+            let replayed: Option<Vec<u8>> = shared
+                .recovery
+                .as_ref()
+                .and_then(|rc| rc.log.task(task.id))
+                .map(<[u8]>::to_vec);
+            let data = if replayed.is_some() {
+                drop(read);
+                Vec::new()
+            } else {
+                timed(ctx, &tl, EventKind::Io, || read.wait(ctx))?
+            };
             // Claim the next task (and start its input) before computing
             // this one — the paper's overlap of Map with non-blocking I/O.
             pending = claimer.claim(ctx, &ctrl, &prefetcher)?;
-            input_bytes += task.len as u64;
+            if replayed.is_none() {
+                input_bytes += task.len as u64;
+            }
             let task = &task;
 
             if let Some(p) = &placement {
@@ -356,19 +391,27 @@ impl Backend for Mr1s {
                     .alloc(ctx.clock.now(), (table.bytes() as u64).saturating_sub(before));
             } else if planned_split.is_some() {
                 let before = map_table.bytes() as u64;
-                let range = shared.owned_range(task, &data);
-                timed(ctx, &tl, EventKind::Map, || {
-                    run_map_task(ctx, shared, task, &data[range], &mut map_table)
-                })?;
+                if let Some(payload) = &replayed {
+                    replay_task(ctx, shared, &tl, payload, &mut map_table)?;
+                } else {
+                    let range = shared.owned_range(task, &data);
+                    timed(ctx, &tl, EventKind::Map, || {
+                        run_map_task(ctx, shared, task, &data[range], &mut map_table)
+                    })?;
+                }
                 shared
                     .mem
                     .alloc(ctx.clock.now(), (map_table.bytes() as u64).saturating_sub(before));
             } else {
                 let mut staging = KeyTable::new();
-                let range = shared.owned_range(task, &data);
-                timed(ctx, &tl, EventKind::Map, || {
-                    run_map_task(ctx, shared, task, &data[range], &mut staging)
-                })?;
+                if let Some(payload) = &replayed {
+                    replay_task(ctx, shared, &tl, payload, &mut staging)?;
+                } else {
+                    let range = shared.owned_range(task, &data);
+                    timed(ctx, &tl, EventKind::Map, || {
+                        run_map_task(ctx, shared, task, &data[range], &mut staging)
+                    })?;
+                }
                 shared.mem.alloc(ctx.clock.now(), staging.bytes() as u64);
                 let staged_bytes = staging.bytes() as u64;
 
@@ -403,17 +446,32 @@ impl Backend for Mr1s {
                         ctx.clock.advance(
                             flushed.len() as u64 + kv_win.attached_bytes(me) as u64 / 4,
                         );
-                        ckpt.sync(ctx, ckpt_off, &flushed)?;
-                        ckpt_off += flushed.len() as u64;
+                        // One self-delimiting frame per task, so recovery
+                        // can adopt exactly the tasks whose frames landed
+                        // intact (`fault::valid_prefix`).
+                        let mut frame =
+                            Vec::with_capacity(fault::FRAME_HEADER_BYTES + flushed.len());
+                        fault::encode_frame(&mut frame, task.id as u32, &flushed);
+                        ckpt.sync(ctx, ckpt_off, &frame)?;
+                        ckpt_off += frame.len() as u64;
                         Ok(())
                     })?;
                 }
             }
             // Fig. 7b variant: redundant lock/unlock to force progress.
             if cfg.flush_epochs {
-                kv_win.lock(&ctx.clock, LockKind::Shared, me);
+                kv_win.lock(&ctx.clock, LockKind::Shared, me)?;
                 kv_win.unlock(&ctx.clock, LockKind::Shared, me);
                 kv_win.flush(&ctx.clock, me);
+            }
+            // Mid-Map kill point: the victim dies after completing half
+            // its fair share of tasks — with its checkpoint frames (all
+            // but possibly a torn tail) durable for recovery to harvest.
+            completed_tasks += 1;
+            if let Some(k) = kill {
+                if k.phase == FaultPhase::Map && completed_tasks >= kill_after {
+                    return Err(die(ctx, &mut checkpoint, torn));
+                }
             }
         }
 
@@ -503,14 +561,21 @@ impl Backend for Mr1s {
                             (flushed.len() + blob.len()) as u64
                                 + kv_win.attached_bytes(me) as u64 / 4,
                         );
-                        ckpt.sync(ctx, ckpt_off, &flushed)?;
-                        ckpt_off += flushed.len() as u64;
+                        // The routed flush spans all of this rank's tasks,
+                        // so it checkpoints as one aggregate frame —
+                        // counted by recovery but never replayed (the
+                        // coded route rejects fault plans anyway).
+                        let mut frame =
+                            Vec::with_capacity(fault::FRAME_HEADER_BYTES + flushed.len());
+                        fault::encode_frame(&mut frame, fault::COMBINE_FRAME_ID, &flushed);
+                        ckpt.sync(ctx, ckpt_off, &frame)?;
+                        ckpt_off += frame.len() as u64;
                         Ok(())
                     })?;
                 }
                 // Same real-time visibility fence as the planned flush
                 // (see below): publications virtually precede any close.
-                ctx.rendezvous_real();
+                ctx.rendezvous_real()?;
                 route
             }
             (None, None) => Route::modulo(n),
@@ -519,7 +584,18 @@ impl Backend for Mr1s {
                 let mut sketch = Sketch::new();
                 map_table.for_each_size(&mut |h, len| sketch.observe(h, len as u64));
                 let route = timed_wait(ctx, &tl, WaitCause::StatusWait, || {
-                    exchange::exchange_and_plan(ctx, plan_win, &sketch, split)
+                    exchange::exchange_and_plan_with(ctx, plan_win, &sketch, |merged| {
+                        match &shared.recovery {
+                            // Degraded re-execution: plan as the original
+                            // world would have, then re-home the dead
+                            // rank's buckets onto the survivors (the
+                            // replan cost was charged in the prologue).
+                            Some(rc) => {
+                                rehome(plan_route(merged, rc.orig_nranks, split), rc.dead_rank)
+                            }
+                            None => plan_route(merged, n, split),
+                        }
+                    })
                 })?;
                 let staged_bytes = map_table.bytes() as u64;
                 let flushed = timed(ctx, &tl, EventKind::LocalReduce, || {
@@ -546,8 +622,13 @@ impl Backend for Mr1s {
                         ctx.clock.advance(
                             flushed.len() as u64 + kv_win.attached_bytes(me) as u64 / 4,
                         );
-                        ckpt.sync(ctx, ckpt_off, &flushed)?;
-                        ckpt_off += flushed.len() as u64;
+                        // Aggregate frame (spans all tasks): counted by
+                        // recovery, recomputed rather than replayed.
+                        let mut frame =
+                            Vec::with_capacity(fault::FRAME_HEADER_BYTES + flushed.len());
+                        fault::encode_frame(&mut frame, fault::COMBINE_FRAME_ID, &flushed);
+                        ckpt.sync(ctx, ckpt_off, &frame)?;
+                        ckpt_off += frame.len() as u64;
                         Ok(())
                     })?;
                 }
@@ -558,7 +639,7 @@ impl Backend for Mr1s {
                 // the one-core host serializes the flush burst
                 // arbitrarily and the close/retain path would reflect
                 // thread scheduling instead of protocol timing.
-                ctx.rendezvous_real();
+                ctx.rendezvous_real()?;
                 route
             }
         };
@@ -574,7 +655,11 @@ impl Backend for Mr1s {
                 }
                 // Close the bucket: CAS the closed bit into s's fill cell
                 // for target me; late emissions stay with the straggler.
+                // The CAS loop has no blocking primitive to poll the dead
+                // set for it, so check here: a spin against a lost rank's
+                // cell must surface as `RankLost`, not livelock.
                 let fill = loop {
+                    ctx.dead().check(ctx.clock.now())?;
                     let cur = ctrl.atomic_load(&ctx.clock, s, c_fill(me))?;
                     if cur & CLOSED_BIT != 0 {
                         break cur & !CLOSED_BIT;
@@ -661,9 +746,19 @@ impl Backend for Mr1s {
         }
         shared.mem.alloc(ctx.clock.now(), reduce_table.bytes() as u64);
         if cfg.flush_epochs {
-            ctrl.lock(&ctx.clock, LockKind::Shared, me);
+            ctrl.lock(&ctx.clock, LockKind::Shared, me)?;
             ctrl.unlock(&ctx.clock, LockKind::Shared, me);
             ctrl.flush(&ctx.clock, me);
+        }
+
+        // Post-Reduce kill point: the victim dies after its reduce pull,
+        // before joining the Combine tree — still holding the exclusive
+        // lock on its own Combine window, which is exactly where its
+        // parent detects the loss.
+        if let Some(k) = kill {
+            if k.phase == FaultPhase::Reduce {
+                return Err(die(ctx, &mut checkpoint, torn));
+            }
         }
 
         // Unique keys this rank reduced (the companion to the ingest
@@ -685,11 +780,15 @@ impl Backend for Mr1s {
             let mut merged = build_local_run(shared, records, &ops);
             ctx.clock.advance(ctx.cost.compute.combine_cost(nbytes));
 
-            // Checkpoint the reduced state (window sync after Reduce).
+            // Checkpoint the reduced state (window sync after Reduce),
+            // framed under the reserved Combine id so recovery can tell
+            // the run snapshot apart from adoptable map frames.
             if let Some(ckpt) = checkpoint.as_mut() {
                 let enc = merged.encode()?;
                 let t0 = ctx.clock.now();
-                ckpt.sync(ctx, ckpt_off, &enc)?;
+                let mut frame = Vec::with_capacity(fault::FRAME_HEADER_BYTES + enc.len());
+                fault::encode_frame(&mut frame, fault::COMBINE_FRAME_ID, &enc);
+                ckpt.sync(ctx, ckpt_off, &frame)?;
                 ckpt.drain(ctx)?;
                 tl.record(t0, ctx.clock.now(), EventKind::Checkpoint);
             }
@@ -707,8 +806,10 @@ impl Backend for Mr1s {
                         // Blocked by the MPI implementation until the
                         // peer's access epoch completes (paper §2.1).
                         // The wait is part of the Combine interval, as in
-                        // the paper's Fig. 7 timelines.
-                        comb_win.lock(&ctx.clock, LockKind::Shared, peer);
+                        // the paper's Fig. 7 timelines.  A dead child
+                        // never releases its init lock — this is where a
+                        // post-Reduce loss surfaces as `RankLost`.
+                        comb_win.lock(&ctx.clock, LockKind::Shared, peer)?;
 
                         let disp = ctrl.atomic_load(&ctx.clock, peer, C_COMBINE_DISP)?;
                         let len =
@@ -781,8 +882,8 @@ impl Backend for Mr1s {
 
 impl Mr1s {
     /// Flush one task's locally-reduced staging into the outgoing
-    /// buckets.  Returns the concatenated encoded bytes that were
-    /// appended (checkpoint payload).
+    /// buckets.  Returns the task's full concatenated encoded output
+    /// (checkpoint frame payload — see [`Mr1s::flush_parts`]).
     #[allow(clippy::too_many_arguments)]
     fn flush_staging(
         &self,
@@ -821,6 +922,11 @@ impl Mr1s {
     /// the one-sided buckets.  Successfully shipped bytes are charged to
     /// both sides of the shuffle ledger — a unicast's wire and logical
     /// volumes are the same thing.
+    ///
+    /// Returns the *full* concatenated task output (own-reduced +
+    /// retained + appended, in destination order): the checkpoint frame
+    /// payload, so a recovering run can adopt the task wholesale and
+    /// re-route it through its own (degraded) route.
     #[allow(clippy::too_many_arguments)]
     fn flush_parts(
         &self,
@@ -838,12 +944,13 @@ impl Mr1s {
     ) -> Result<Vec<u8>> {
         let me = ctx.rank();
         let ops = shared.ops();
-        let mut appended = Vec::new();
+        let mut full = Vec::new();
 
         for (t, buf) in parts.iter_mut().map(|b| std::mem::take(b)).enumerate() {
             if buf.is_empty() {
                 continue;
             }
+            full.extend_from_slice(&buf);
             if t == me {
                 // Own keys reduce in place — no window traffic.
                 *own_ingest_bytes += buf.len() as u64;
@@ -871,7 +978,6 @@ impl Mr1s {
                 true => {
                     *wire_bytes += buf.len() as u64;
                     *logical_bytes += buf.len() as u64;
-                    appended.extend_from_slice(&buf);
                 }
                 false => {
                     // Closed (or full) under us: ownership transfer
@@ -884,7 +990,7 @@ impl Mr1s {
                 }
             }
         }
-        Ok(appended)
+        Ok(full)
     }
 
     /// Append `buf` to the local bucket for `target`; publishes the new
@@ -936,7 +1042,10 @@ impl Mr1s {
         }
 
         // Publish the new fill; a concurrent close wins and we retain.
+        // Polled dead-check: the CAS spin has no blocking primitive to
+        // convert a lost peer into `RankLost` for us.
         loop {
+            ctx.dead().check(ctx.clock.now())?;
             let cur = ctrl.atomic_load(&ctx.clock, me, c_fill(target))?;
             if cur & CLOSED_BIT != 0 {
                 return Ok(false);

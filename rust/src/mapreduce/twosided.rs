@@ -13,15 +13,20 @@
 //! are shared with MR-1S (the paper keeps them identical on purpose).
 
 use crate::error::Result;
+use crate::fault::{self, FaultPhase};
 use crate::metrics::tracer::WaitCause;
 use crate::metrics::{EventKind, Timeline};
 use crate::mpi::RankCtx;
-use crate::shuffle::{coding, exchange, plan_coded_route, plan_route, CodedPlacement, Route};
+use crate::shuffle::{
+    coding, exchange, plan_coded_route, plan_route, rehome, CodedPlacement, Route,
+};
+use crate::storage::StorageWindow;
 
 use super::bucket::{KeyTable, SortedRun};
 use super::config::RouteConfig;
 use super::job::{
-    build_local_run, run_map_task, timed, timed_wait, Backend, JobShared, RankOutcome, TaskSpec,
+    build_local_run, die, recovery_prologue, replay_task, run_map_task, timed, timed_wait,
+    Backend, JobShared, RankOutcome, TaskSpec,
 };
 use super::kv::{self, ValueOps};
 
@@ -37,6 +42,7 @@ impl Backend for Mr2s {
         let me = ctx.rank();
         let n = ctx.nranks();
         let ops = shared.ops();
+        recovery_prologue(ctx, shared, &tl);
 
         // Coded route: the repetition placement is a pure function of
         // (nranks, r) — every rank derives it and rejects bad parameters
@@ -76,8 +82,26 @@ impl Backend for Mr2s {
         });
         let my_tasks: Vec<TaskSpec> = timed_wait(ctx, &tl, WaitCause::Barrier, || {
             ctx.scatter(0, assignment)
-        });
-        let rounds = ctx.allreduce_u64(my_tasks.len() as u64, u64::max) as usize;
+        })?;
+        let rounds = ctx.allreduce_u64(my_tasks.len() as u64, u64::max)? as usize;
+
+        // Checkpoint stream (the recovery source): one frame per
+        // completed map task, the same framing as MR-1S.  The coded
+        // route maps into per-batch tables and is rejected alongside
+        // fault plans at config validation, so it writes no frames.
+        let mut checkpoint = if shared.config.checkpoints && placement.is_none() {
+            Some(StorageWindow::create(
+                shared.config.checkpoint_dir.join(format!("mr2s-ckpt-{me}.bin")),
+            )?)
+        } else {
+            None
+        };
+        let mut ckpt_off = 0u64;
+        let kill =
+            shared.config.faults.as_ref().and_then(|f| f.kill).filter(|k| k.rank == me);
+        let torn = shared.config.faults.as_ref().and_then(|f| f.torn) == Some(me);
+        let kill_after = fault::kill_after_tasks(shared.tasks.len(), n);
+        let mut completed_tasks = 0usize;
 
         // ---- Map rounds under collective I/O --------------------------
         let mut all_staging = KeyTable::new();
@@ -91,9 +115,20 @@ impl Backend for Mr2s {
         let mut first_read_issue_vt = None;
         for round in 0..rounds {
             let task = my_tasks.get(round);
+            // A recovering run adopts checkpointed tasks from the replay
+            // log instead of re-reading and re-mapping them.
+            let replayed: Option<Vec<u8>> = task.and_then(|t| {
+                shared.recovery.as_ref().and_then(|rc| rc.log.task(t.id)).map(<[u8]>::to_vec)
+            });
             // Collective read: everyone participates every round, even
-            // with no task left (MPI collective I/O semantics).
-            let (offset, len) = task.map_or((0, 0), |t| shared.read_span(t));
+            // with no task left (MPI collective I/O semantics).  A
+            // replayed task joins with an empty extent — its input is
+            // served from the checkpoint log, not the corpus.
+            let (offset, len) = if replayed.is_some() {
+                (0, 0)
+            } else {
+                task.map_or((0, 0), |t| shared.read_span(t))
+            };
             let data = timed(ctx, &tl, EventKind::Io, || {
                 shared.file.read_collective(ctx, offset, len)
             })?;
@@ -106,16 +141,53 @@ impl Backend for Mr2s {
                 first_read_issue_vt = Some(ctx.clock.now());
             }
             let Some(task) = task else { continue };
-            input_bytes += task.len as u64;
 
-            let range = shared.owned_range(task, &data);
             let table = match &placement {
                 Some(p) => &mut batch_tables[p.batch_of_task(task.id)],
                 None => &mut all_staging,
             };
-            timed(ctx, &tl, EventKind::Map, || {
-                run_map_task(ctx, shared, task, &data[range], table)
-            })?;
+            if let Some(payload) = &replayed {
+                replay_task(ctx, shared, &tl, payload, table)?;
+            } else {
+                input_bytes += task.len as u64;
+                let range = shared.owned_range(task, &data);
+                match checkpoint.as_mut() {
+                    Some(ckpt) => {
+                        // Map into a per-task table so the task's whole
+                        // output can be framed into the checkpoint
+                        // stream, then fold it into the rank staging.
+                        let mut task_table = KeyTable::new();
+                        timed(ctx, &tl, EventKind::Map, || {
+                            run_map_task(ctx, shared, task, &data[range], &mut task_table)
+                        })?;
+                        let mut payload = Vec::new();
+                        for rec in task_table.drain_records() {
+                            rec.encode_into(&mut payload)?;
+                        }
+                        let mut frame =
+                            Vec::with_capacity(fault::FRAME_HEADER_BYTES + payload.len());
+                        fault::encode_frame(&mut frame, task.id as u32, &payload);
+                        timed(ctx, &tl, EventKind::Checkpoint, || {
+                            ckpt.sync(ctx, ckpt_off, &frame)
+                        })?;
+                        ckpt_off += frame.len() as u64;
+                        for rec in kv::RecordIter::new(&payload) {
+                            table.merge_record(rec?, &ops);
+                        }
+                    }
+                    None => {
+                        timed(ctx, &tl, EventKind::Map, || {
+                            run_map_task(ctx, shared, task, &data[range], table)
+                        })?;
+                    }
+                }
+            }
+            completed_tasks += 1;
+            if let Some(k) = kill {
+                if k.phase == FaultPhase::Map && completed_tasks >= kill_after {
+                    return Err(die(ctx, &mut checkpoint, torn));
+                }
+            }
         }
         let staging_bytes = all_staging.bytes() as u64
             + batch_tables.iter().map(|t| t.bytes() as u64).sum::<u64>();
@@ -134,9 +206,17 @@ impl Backend for Mr2s {
                 let enc = sketch.encode();
                 let recv = timed_wait(ctx, &tl, WaitCause::Barrier, || {
                     ctx.alltoallv(vec![enc; n])
-                });
+                })?;
                 let merged = exchange::merge_encoded(&recv)?;
-                plan_route(&merged, n, split)
+                // Recovering: plan for the original world, then re-home
+                // the dead rank's buckets onto the survivors — the same
+                // deterministic transform on every rank.
+                match &shared.recovery {
+                    Some(rc) => {
+                        rehome(plan_route(&merged, rc.orig_nranks, split), rc.dead_rank)
+                    }
+                    None => plan_route(&merged, n, split),
+                }
             }
             RouteConfig::Coded { r } => {
                 // Only each batch's primary replica sketches its records,
@@ -154,7 +234,7 @@ impl Backend for Mr2s {
                 let enc = sketch.encode();
                 let recv = timed_wait(ctx, &tl, WaitCause::Barrier, || {
                     ctx.alltoallv(vec![enc; n])
-                });
+                })?;
                 let merged = exchange::merge_encoded(&recv)?;
                 plan_coded_route(&merged, n, r)
             }
@@ -176,7 +256,7 @@ impl Backend for Mr2s {
                     shuffle.light.iter().map(|b| b.len() as u64).sum();
                 let recv = timed_wait(ctx, &tl, WaitCause::Barrier, || {
                     ctx.alltoallv(shuffle.light)
-                });
+                })?;
                 let mut wire = light_sent;
                 let mut logical = light_sent + shuffle.replica_local_bytes;
                 let mut blob = Vec::new();
@@ -186,7 +266,7 @@ impl Backend for Mr2s {
                     logical += packet.logical_bytes();
                 }
                 let blobs =
-                    timed_wait(ctx, &tl, WaitCause::Barrier, || ctx.multicast_round(blob));
+                    timed_wait(ctx, &tl, WaitCause::Barrier, || ctx.multicast_round(blob))?;
                 let mut parts = Vec::new();
                 for (s, b) in blobs.iter().enumerate() {
                     if s == me || b.is_empty() {
@@ -204,7 +284,7 @@ impl Backend for Mr2s {
                 let mut parts = all_staging.drain_routed(&route, me)?;
                 let own = std::mem::take(&mut parts[me]);
                 let sent_bytes: u64 = parts.iter().map(|b| b.len() as u64).sum();
-                let recv = timed_wait(ctx, &tl, WaitCause::Barrier, || ctx.alltoallv(parts));
+                let recv = timed_wait(ctx, &tl, WaitCause::Barrier, || ctx.alltoallv(parts))?;
                 // A unicast shuffle's wire and logical volumes coincide.
                 (own, recv, Vec::new(), sent_bytes, sent_bytes)
             };
@@ -254,6 +334,16 @@ impl Backend for Mr2s {
             + decoded_segs.iter().map(|b| b.len() as u64).sum::<u64>();
         let reduce_keys = reduce_table.len() as u64;
 
+        // Kill point: phase=reduce fires after this rank folded its
+        // reduce input, before it joins the Combine tree.  The victim's
+        // parent detects the loss from inside its blocking recv; other
+        // survivors from whichever primitive they block in next.
+        if let Some(k) = kill {
+            if k.phase == FaultPhase::Reduce {
+                return Err(die(ctx, &mut checkpoint, torn));
+            }
+        }
+
         // ---- Combine: same tree, point-to-point -----------------------
         let mut result: Option<SortedRun> = None;
         timed(ctx, &tl, EventKind::Combine, || -> Result<()> {
@@ -273,7 +363,7 @@ impl Backend for Mr2s {
                     let peer = me + half;
                     if peer < n {
                         let (_, _, buf) =
-                            ctx.comm.recv(&ctx.clock, Some(peer), Some(TAG_COMBINE));
+                            ctx.comm.recv(&ctx.clock, Some(peer), Some(TAG_COMBINE))?;
                         let peer_run = SortedRun::decode(&buf, ops.kind())?;
                         shared.mem.alloc(ctx.clock.now(), buf.len() as u64);
                         merged = merged.merge(peer_run, &ops);
@@ -293,6 +383,12 @@ impl Backend for Mr2s {
             Ok(())
         })?;
         shared.mem.free(ctx.clock.now(), reduce_table_bytes);
+
+        // Checkpoint durability: wait out any in-flight frame flushes
+        // before reporting completion (same contract as MR-1S).
+        if let Some(ckpt) = checkpoint.as_mut() {
+            ckpt.drain(ctx)?;
+        }
 
         Ok(RankOutcome {
             elapsed_ns: ctx.clock.now(),

@@ -16,6 +16,6 @@ pub mod tracer;
 
 pub use crit::{CritPath, CritSegment};
 pub use memory::MemoryTracker;
-pub use report::{JobReport, PhaseBreakdown};
+pub use report::{JobReport, PhaseBreakdown, RecoveryReport};
 pub use timeline::{Event, EventKind, Timeline};
 pub use tracer::{Span, SpanEdge, TraceStats, WaitCause};

@@ -43,6 +43,44 @@ impl PhaseBreakdown {
     }
 }
 
+/// Cost breakdown of a checkpoint-based rank recovery (DESIGN.md §10):
+/// who was lost, what the degraded re-execution paid on the virtual
+/// clock, and how much checkpointed work it adopted instead of
+/// recomputing.  The ns fields are sums of the recovery's attributed
+/// wait spans (`detect` / `replay` / `replan`), so they are consistent
+/// with the per-rank `wait_ns` attribution by construction.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// The rank that died (numbered in the original world).
+    pub dead_rank: usize,
+    /// Phase label the kill fired in ("map" / "reduce").
+    pub phase: &'static str,
+    /// World size of the failed attempt (the job completed on one fewer).
+    pub orig_nranks: usize,
+    /// Failure-detection ns summed across survivors (the `detect` spans:
+    /// each survivor's clock advancing to the global loss-establishment
+    /// time).
+    pub detect_ns: u64,
+    /// Checkpoint-replay ns summed across survivors (`replay` spans:
+    /// reading + folding adopted task frames).
+    pub replay_ns: u64,
+    /// Route re-planning ns summed across survivors (`replan` spans).
+    pub replan_ns: u64,
+    /// Map tasks adopted from the checkpoint log instead of recomputed.
+    pub replayed_tasks: u64,
+    /// Map tasks the degraded run recomputed from the input.
+    pub recomputed_tasks: u64,
+    /// Checkpointed payload bytes the adoptions replayed.
+    pub replayed_bytes: u64,
+}
+
+impl RecoveryReport {
+    /// Total recovery ns on the virtual clock (detect + replay + replan).
+    pub fn total_ns(&self) -> u64 {
+        self.detect_ns + self.replay_ns + self.replan_ns
+    }
+}
+
 /// Outcome of one MapReduce job execution.
 #[derive(Debug, Clone)]
 pub struct JobReport {
@@ -108,6 +146,10 @@ pub struct JobReport {
     /// exactly — both are recorded by the same `timed_wait` call over
     /// the same interval.
     pub spans: Vec<Vec<Span>>,
+    /// Cost breakdown of the checkpoint-based recovery, when a rank was
+    /// lost to fault injection and the job re-ran degraded on the
+    /// survivors (DESIGN.md §10).  `None` for fault-free runs.
+    pub recovery: Option<RecoveryReport>,
 }
 
 impl JobReport {
@@ -242,6 +284,19 @@ impl JobReport {
                 self.mem_hwm_vt_ns as f64 / 1e9
             ));
         }
+        if let Some(rec) = &self.recovery {
+            line.push_str(&format!(
+                " recovery=dead:{}@{} detect={}us replay={}us replan={}us replayed={}/{} ({}KiB)",
+                rec.dead_rank,
+                rec.phase,
+                rec.detect_ns / 1_000,
+                rec.replay_ns / 1_000,
+                rec.replan_ns / 1_000,
+                rec.replayed_tasks,
+                rec.replayed_tasks + rec.recomputed_tasks,
+                rec.replayed_bytes >> 10,
+            ));
+        }
         let crit = self.crit_path();
         if !crit.segments.is_empty() {
             line.push_str(&format!(" crit-path={}", crit.render_top(3)));
@@ -305,6 +360,7 @@ mod tests {
             unique_keys: 0,
             total_count: 0,
             spans: vec![vec![], vec![]],
+            recovery: None,
         };
         assert!((r.mean_wait_fraction() - 0.25).abs() < 1e-9);
         assert!((r.reduce_max_over_mean() - 1.5).abs() < 1e-9);

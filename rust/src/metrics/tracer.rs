@@ -55,6 +55,15 @@ pub enum WaitCause {
     SpillDurability,
     /// Job-stealing claim gate pacing a thief against victim progress.
     StealGate,
+    /// Failure detection: time between a rank's death and the survivors
+    /// establishing the loss (heartbeat timeout, recovery prologue).
+    Detect,
+    /// Checkpoint replay: reading and decoding the victim's checkpointed
+    /// records from the storage-window backing file.
+    Replay,
+    /// Route re-planning: rehoming the dead rank's reduce buckets onto
+    /// the survivors.
+    Replan,
 }
 
 impl WaitCause {
@@ -66,16 +75,22 @@ impl WaitCause {
             WaitCause::StatusWait => "status-wait",
             WaitCause::SpillDurability => "spill-durability",
             WaitCause::StealGate => "steal-gate",
+            WaitCause::Detect => "detect",
+            WaitCause::Replay => "replay",
+            WaitCause::Replan => "replan",
         }
     }
 
     /// Every cause, in label order (taxonomy enumeration for reports).
-    pub const ALL: [WaitCause; 5] = [
+    pub const ALL: [WaitCause; 8] = [
         WaitCause::Barrier,
         WaitCause::WindowLock,
         WaitCause::StatusWait,
         WaitCause::SpillDurability,
         WaitCause::StealGate,
+        WaitCause::Detect,
+        WaitCause::Replay,
+        WaitCause::Replan,
     ];
 }
 

@@ -9,18 +9,25 @@
 //! participants leave at `max(entry clocks) + collective_cost(P, bytes)`.
 //! That max is exactly the coupling the decoupled strategy removes: under
 //! imbalance, everyone waits for the slowest rank here.
+//!
+//! Fault semantics: a collective cannot complete without every rank, so
+//! when a participant dies the rendezvous wait observes the dead-rank
+//! flag and every method here returns the typed
+//! [`Error::RankLost`](crate::error::Error::RankLost) — the two-sided
+//! failure-detection protocol of DESIGN.md §10.
 
 use std::sync::Arc;
 
 use super::universe::RankCtx;
+use crate::error::Result;
 use crate::metrics::tracer::{self, op, SpanEdge};
 
 impl RankCtx {
     /// Barrier: everyone leaves at the max clock plus the stage cost.
-    pub fn barrier(&self) {
+    pub fn barrier(&self) -> Result<()> {
         let t0 = self.clock.now();
         let (_, max_vt, src) =
-            self.comm.shared.rendezvous.run_with_src(self.rank(), t0, (), |_| ());
+            self.comm.shared.rendezvous.run_with_src(self.rank(), t0, (), |_| ())?;
         self.clock.sync_to(max_vt);
         self.clock.advance(self.cost.net.collective_cost(self.nranks(), 0));
         tracer::record(
@@ -31,6 +38,7 @@ impl RankCtx {
             None,
             Some(SpanEdge { src_rank: src, src_vt: max_vt }),
         );
+        Ok(())
     }
 
     /// Real-time-only rendezvous: all rank threads meet, virtual clocks
@@ -38,12 +46,13 @@ impl RankCtx {
     /// stage entry, where the modeled runtime has no collective (window
     /// infrastructure persists across stages) but the *threads* must
     /// still agree the stage's shared state exists before using it.
-    pub fn rendezvous_real(&self) {
-        let _ = self.comm.shared.rendezvous.run(self.rank(), self.clock.now(), (), |_| ());
+    pub fn rendezvous_real(&self) -> Result<()> {
+        let _ = self.comm.shared.rendezvous.run(self.rank(), self.clock.now(), (), |_| ())?;
+        Ok(())
     }
 
     /// Broadcast `data` from `root`; every rank returns a copy.
-    pub fn bcast(&self, root: usize, data: Option<Vec<u8>>) -> Vec<u8> {
+    pub fn bcast(&self, root: usize, data: Option<Vec<u8>>) -> Result<Vec<u8>> {
         assert!(root < self.nranks());
         let t0 = self.clock.now();
         let (out, max_vt, src): (Arc<Vec<u8>>, u64, usize) =
@@ -52,7 +61,7 @@ impl RankCtx {
                 t0,
                 (self.rank() == root).then_some(data.unwrap_or_default()),
                 move |mut inputs| inputs[root].take().expect("root contributed data"),
-            );
+            )?;
         self.clock.sync_to(max_vt);
         self.clock.advance(self.cost.net.collective_cost(self.nranks(), out.len()));
         tracer::record(
@@ -63,7 +72,7 @@ impl RankCtx {
             Some(root),
             Some(SpanEdge { src_rank: src, src_vt: max_vt }),
         );
-        (*out).clone()
+        Ok((*out).clone())
     }
 
     /// Scatter one element per rank from `root` (MPI_Scatter; the
@@ -72,7 +81,7 @@ impl RankCtx {
         &self,
         root: usize,
         items: Option<Vec<T>>,
-    ) -> T {
+    ) -> Result<T> {
         assert!(root < self.nranks());
         let n = self.nranks();
         let t0 = self.clock.now();
@@ -86,7 +95,7 @@ impl RankCtx {
                     assert_eq!(items.len(), n, "scatter needs one item per rank");
                     items
                 },
-            );
+            )?;
         self.clock.sync_to(max_vt);
         self.clock
             .advance(self.cost.net.collective_cost(n, std::mem::size_of::<T>()));
@@ -98,18 +107,18 @@ impl RankCtx {
             Some(root),
             Some(SpanEdge { src_rank: src, src_vt: max_vt }),
         );
-        all[self.rank()].clone()
+        Ok(all[self.rank()].clone())
     }
 
     /// Gather each rank's bytes at `root` (others get `None`).
-    pub fn gather(&self, root: usize, data: Vec<u8>) -> Option<Vec<Vec<u8>>> {
+    pub fn gather(&self, root: usize, data: Vec<u8>) -> Result<Option<Vec<Vec<u8>>>> {
         let bytes = data.len();
         let t0 = self.clock.now();
         let (all, max_vt, src): (Arc<Vec<Vec<u8>>>, u64, usize) =
             self.comm
                 .shared
                 .rendezvous
-                .run_with_src(self.rank(), t0, data, |inputs| inputs);
+                .run_with_src(self.rank(), t0, data, |inputs| inputs)?;
         self.clock.sync_to(max_vt);
         self.clock.advance(self.cost.net.collective_cost(self.nranks(), bytes));
         tracer::record(
@@ -120,13 +129,13 @@ impl RankCtx {
             Some(root),
             Some(SpanEdge { src_rank: src, src_vt: max_vt }),
         );
-        (self.rank() == root).then(|| (*all).clone())
+        Ok((self.rank() == root).then(|| (*all).clone()))
     }
 
     /// All-to-all exchange of variable-length buffers (MPI_Alltoallv; the
     /// MapReduce-2S shuffle).  `send[d]` goes to rank `d`; returns the
     /// buffers received from every source, indexed by source.
-    pub fn alltoallv(&self, send: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+    pub fn alltoallv(&self, send: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>> {
         assert_eq!(send.len(), self.nranks(), "one send buffer per destination");
         let me = self.rank();
         let sent: usize = send.iter().map(Vec::len).sum();
@@ -135,7 +144,7 @@ impl RankCtx {
             self.comm
                 .shared
                 .rendezvous
-                .run_with_src(me, t0, send, |inputs| inputs);
+                .run_with_src(me, t0, send, |inputs| inputs)?;
         self.clock.sync_to(max_vt);
         let recv: Vec<Vec<u8>> = matrix.iter().map(|row| row[me].clone()).collect();
         let recvd: usize = recv.iter().map(Vec::len).sum();
@@ -149,7 +158,7 @@ impl RankCtx {
             None,
             Some(SpanEdge { src_rank: src, src_vt: max_vt }),
         );
-        recv
+        Ok(recv)
     }
 
     /// One round of multicasts: every rank publishes `blob` to all peers
@@ -160,7 +169,7 @@ impl RankCtx {
     /// its *own* payload on the wire once — receiving peers' blobs is
     /// free because one multicast transmission serves every receiver, so
     /// unlike [`RankCtx::alltoallv`] the received volume is not charged.
-    pub fn multicast_round(&self, blob: Vec<u8>) -> Vec<Vec<u8>> {
+    pub fn multicast_round(&self, blob: Vec<u8>) -> Result<Vec<Vec<u8>>> {
         let me = self.rank();
         let sent = blob.len();
         let t0 = self.clock.now();
@@ -168,7 +177,7 @@ impl RankCtx {
             self.comm
                 .shared
                 .rendezvous
-                .run_with_src(me, t0, blob, |inputs| inputs);
+                .run_with_src(me, t0, blob, |inputs| inputs)?;
         self.clock.sync_to(max_vt);
         self.clock.advance(self.cost.net.collective_cost(self.nranks(), sent));
         tracer::record(
@@ -179,11 +188,15 @@ impl RankCtx {
             None,
             Some(SpanEdge { src_rank: src, src_vt: max_vt }),
         );
-        (*all).clone()
+        Ok((*all).clone())
     }
 
     /// All-reduce of a u64 with `op` (associative + commutative).
-    pub fn allreduce_u64(&self, value: u64, op: impl Fn(u64, u64) -> u64 + Send + 'static) -> u64 {
+    pub fn allreduce_u64(
+        &self,
+        value: u64,
+        op: impl Fn(u64, u64) -> u64 + Send + 'static,
+    ) -> Result<u64> {
         let t0 = self.clock.now();
         let (out, max_vt, src): (Arc<u64>, u64, usize) =
             self.comm.shared.rendezvous.run_with_src(
@@ -191,7 +204,7 @@ impl RankCtx {
                 t0,
                 value,
                 move |inputs| inputs.into_iter().reduce(&op).unwrap(),
-            );
+            )?;
         self.clock.sync_to(max_vt);
         self.clock.advance(self.cost.net.collective_cost(self.nranks(), 8));
         tracer::record(
@@ -202,7 +215,7 @@ impl RankCtx {
             None,
             Some(SpanEdge { src_rank: src, src_vt: max_vt }),
         );
-        *out
+        Ok(*out)
     }
 }
 
@@ -215,7 +228,7 @@ mod tests {
     fn barrier_syncs_clocks_to_max() {
         let outs = Universe::new(4, CostModel::default()).run(|ctx| {
             ctx.clock.advance(ctx.rank() as u64 * 1_000);
-            ctx.barrier();
+            ctx.barrier().unwrap();
             ctx.clock.now()
         });
         // All equal and at least the slowest entrant's 3000 ns.
@@ -227,7 +240,7 @@ mod tests {
     fn bcast_delivers_root_payload() {
         let outs = Universe::new(3, CostModel::default()).run(|ctx| {
             let data = (ctx.rank() == 1).then(|| b"payload".to_vec());
-            ctx.bcast(1, data)
+            ctx.bcast(1, data).unwrap()
         });
         assert!(outs.iter().all(|o| o == b"payload"));
     }
@@ -236,7 +249,7 @@ mod tests {
     fn scatter_delivers_per_rank_item() {
         let outs = Universe::new(4, CostModel::default()).run(|ctx| {
             let items = (ctx.rank() == 0).then(|| vec![10usize, 11, 12, 13]);
-            ctx.scatter(0, items)
+            ctx.scatter(0, items).unwrap()
         });
         assert_eq!(outs, vec![10, 11, 12, 13]);
     }
@@ -244,7 +257,7 @@ mod tests {
     #[test]
     fn gather_collects_at_root_only() {
         let outs = Universe::new(3, CostModel::default()).run(|ctx| {
-            ctx.gather(2, vec![ctx.rank() as u8])
+            ctx.gather(2, vec![ctx.rank() as u8]).unwrap()
         });
         assert!(outs[0].is_none() && outs[1].is_none());
         assert_eq!(outs[2].as_ref().unwrap()[1], vec![1u8]);
@@ -256,7 +269,7 @@ mod tests {
             let send: Vec<Vec<u8>> = (0..3)
                 .map(|d| vec![ctx.rank() as u8 * 10 + d as u8])
                 .collect();
-            ctx.alltoallv(send)
+            ctx.alltoallv(send).unwrap()
         });
         // outs[r][s] must be the buffer rank s sent to rank r: s*10 + r.
         for (r, recv) in outs.iter().enumerate() {
@@ -270,7 +283,7 @@ mod tests {
     fn alltoallv_handles_empty_buffers() {
         let outs = Universe::new(2, CostModel::default()).run(|ctx| {
             let send = vec![vec![], vec![1, 2, 3]];
-            ctx.alltoallv(send)
+            ctx.alltoallv(send).unwrap()
         });
         assert_eq!(outs[0][0], Vec::<u8>::new());
         assert_eq!(outs[1][0], vec![1, 2, 3]);
@@ -283,7 +296,7 @@ mod tests {
             let big = 1 << 20;
             let blob = if ctx.rank() == 0 { vec![7u8; big] } else { vec![ctx.rank() as u8] };
             let before = ctx.clock.now();
-            let all = ctx.multicast_round(blob);
+            let all = ctx.multicast_round(blob).unwrap();
             (all, ctx.clock.now() - before)
         });
         for (all, _) in &outs {
@@ -298,10 +311,29 @@ mod tests {
     #[test]
     fn allreduce_max_and_sum() {
         let outs = Universe::new(4, CostModel::default()).run(|ctx| {
-            let mx = ctx.allreduce_u64(ctx.rank() as u64, u64::max);
-            let sm = ctx.allreduce_u64(ctx.rank() as u64, |a, b| a + b);
+            let mx = ctx.allreduce_u64(ctx.rank() as u64, u64::max).unwrap();
+            let sm = ctx.allreduce_u64(ctx.rank() as u64, |a, b| a + b).unwrap();
             (mx, sm)
         });
         assert!(outs.iter().all(|&(mx, sm)| mx == 3 && sm == 6));
+    }
+
+    #[test]
+    fn collective_with_dead_rank_returns_rank_lost() {
+        use crate::error::Error;
+        let outs = Universe::new(3, CostModel::default()).run(|ctx| {
+            if ctx.rank() == 2 {
+                // Victim: dies without entering the barrier.
+                ctx.comm.dead().mark_dead(2, ctx.clock.now());
+                return Err(Error::RankLost { rank: 2, vt: ctx.clock.now() });
+            }
+            ctx.barrier()
+        });
+        for (rank, out) in outs.iter().enumerate() {
+            match out {
+                Err(Error::RankLost { rank: 2, .. }) => {}
+                other => panic!("rank {rank}: expected RankLost, got {other:?}"),
+            }
+        }
     }
 }

@@ -4,6 +4,8 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::error::Result;
+use crate::fault::{DeadSet, POLL_INTERVAL};
 use crate::sim::{Clock, NetModel};
 
 use super::rendezvous::Rendezvous;
@@ -35,6 +37,9 @@ pub(crate) struct CommShared {
     pub rendezvous: Rendezvous,
     pub mailboxes: Vec<Mailbox>,
     pub net: NetModel,
+    /// Dead-rank epoch flags shared by every blocking primitive of this
+    /// world (see `crate::fault::dead`).
+    pub dead: Arc<DeadSet>,
 }
 
 /// Handle to the communicator from one rank.
@@ -51,11 +56,13 @@ impl Communicator {
     /// per rank, in rank order.
     pub fn world(nranks: usize, net: NetModel) -> Vec<Communicator> {
         assert!(nranks > 0, "communicator needs at least one rank");
+        let dead = Arc::new(DeadSet::new(nranks));
         let shared = Arc::new(CommShared {
             nranks,
-            rendezvous: Rendezvous::new(nranks),
+            rendezvous: Rendezvous::new_with(nranks, dead.clone()),
             mailboxes: (0..nranks).map(|_| Mailbox::new()).collect(),
             net,
+            dead,
         });
         (0..nranks)
             .map(|rank| Communicator { shared: shared.clone(), rank })
@@ -80,6 +87,12 @@ impl Communicator {
         &self.shared.net
     }
 
+    /// Dead-rank epoch flags of this world (fault injection / detection).
+    #[inline]
+    pub fn dead(&self) -> &Arc<DeadSet> {
+        &self.shared.dead
+    }
+
     /// Blocking send of `payload` to `dst` under `tag`.
     ///
     /// Eager-protocol model: the sender is charged the p2p latency, the
@@ -99,12 +112,18 @@ impl Communicator {
     /// Blocking receive matching `src` (None = any) and `tag` (None = any).
     /// Returns (src, tag, payload); the clock is synced to the message's
     /// arrival time — waiting for a straggler costs virtual time.
+    ///
+    /// Fails with [`crate::error::Error::RankLost`] when a rank of this
+    /// world is dead and no matching message is queued: the wait polls
+    /// the dead-rank flags instead of blocking forever on a sender that
+    /// will never send.
     pub fn recv(
         &self,
         clock: &Clock,
         src: Option<usize>,
         tag: Option<u64>,
-    ) -> (usize, u64, Vec<u8>) {
+    ) -> Result<(usize, u64, Vec<u8>)> {
+        let block_t0 = clock.now();
         let mb = &self.shared.mailboxes[self.rank];
         let mut q = mb.queue.lock().unwrap();
         loop {
@@ -115,9 +134,10 @@ impl Communicator {
                 let m = q.remove(i).unwrap();
                 clock.sync_to(m.arrive_vt);
                 clock.advance(self.shared.net.p2p_latency_ns);
-                return (m.src, m.tag, m.payload);
+                return Ok((m.src, m.tag, m.payload));
             }
-            q = mb.cv.wait(q).unwrap();
+            self.shared.dead.check(block_t0)?;
+            q = mb.cv.wait_timeout(q, POLL_INTERVAL).unwrap().0;
         }
     }
 
@@ -168,7 +188,7 @@ mod tests {
                 comm.send(&clock, 1, 7, b"hello".to_vec());
                 String::new()
             } else {
-                let (src, tag, data) = comm.recv(&clock, Some(0), Some(7));
+                let (src, tag, data) = comm.recv(&clock, Some(0), Some(7)).unwrap();
                 assert_eq!((src, tag), (0, 7));
                 String::from_utf8(data).unwrap()
             }
@@ -183,7 +203,7 @@ mod tests {
                 comm.send(&clock, 1, 0, vec![0u8; 6_000_000]); // ~1ms wire
                 0
             } else {
-                let _ = comm.recv(&clock, Some(0), None);
+                let _ = comm.recv(&clock, Some(0), None).unwrap();
                 clock.now()
             }
         });
@@ -199,8 +219,8 @@ mod tests {
                 vec![]
             } else {
                 // Receive tag 2 first even though tag 1 arrived first.
-                let (_, _, d2) = comm.recv(&clock, None, Some(2));
-                let (_, _, d1) = comm.recv(&clock, None, Some(1));
+                let (_, _, d2) = comm.recv(&clock, None, Some(2)).unwrap();
+                let (_, _, d1) = comm.recv(&clock, None, Some(1)).unwrap();
                 vec![d2[0], d1[0]]
             }
         });
@@ -214,10 +234,51 @@ mod tests {
                 comm.send(&clock, 1, 9, vec![]);
                 true
             } else {
-                let (_, _, _) = comm.recv(&clock, None, Some(9)); // ensure arrival
+                let (_, _, _) = comm.recv(&clock, None, Some(9)).unwrap(); // ensure arrival
                 comm.iprobe(Some(0), Some(9)) == false
             }
         });
         assert!(outs[1]);
+    }
+
+    #[test]
+    fn recv_from_dead_sender_is_typed_loss() {
+        use crate::error::Error;
+        use crate::fault::DETECT_NS;
+        let outs = spawn_world(2, |comm, clock| {
+            if comm.rank() == 0 {
+                comm.dead().mark_dead(0, 300);
+                Ok(0)
+            } else {
+                clock.advance(100);
+                comm.recv(&clock, Some(0), None).map(|_| 1)
+            }
+        });
+        match &outs[1] {
+            Err(Error::RankLost { rank, vt }) => {
+                assert_eq!(*rank, 0);
+                // Detection cannot pre-date the death or the wait start.
+                assert!(*vt >= 100 + DETECT_NS);
+            }
+            other => panic!("expected RankLost, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recv_prefers_queued_message_over_death() {
+        let outs = spawn_world(2, |comm, clock| {
+            if comm.rank() == 0 {
+                comm.send(&clock, 1, 5, b"last words".to_vec());
+                comm.dead().mark_dead(0, clock.now());
+                Vec::new()
+            } else {
+                // A message that made it out before the death is still
+                // deliverable; only an empty wait observes the loss.
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                let (_, _, data) = comm.recv(&clock, Some(0), Some(5)).unwrap();
+                data
+            }
+        });
+        assert_eq!(outs[1], b"last words");
     }
 }

@@ -10,6 +10,9 @@
 use std::any::Any;
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::error::Result;
+use crate::fault::{DeadSet, POLL_INTERVAL};
+
 /// Round phase: collecting inputs, or distributing the combined output.
 #[derive(Debug, PartialEq, Eq, Clone, Copy)]
 enum Phase {
@@ -33,13 +36,23 @@ pub struct Rendezvous {
     nranks: usize,
     state: Mutex<State>,
     cv: Condvar,
+    dead: Arc<DeadSet>,
 }
 
 impl Rendezvous {
-    /// A rendezvous for `nranks` participants.
+    /// A rendezvous for `nranks` participants with its own (all-alive)
+    /// dead-rank flags — direct construction for tests and standalone use.
     pub fn new(nranks: usize) -> Self {
+        Self::new_with(nranks, Arc::new(DeadSet::new(nranks)))
+    }
+
+    /// A rendezvous sharing a communicator's dead-rank flags: a rank
+    /// blocked waiting for a participant that died returns
+    /// [`crate::error::Error::RankLost`] instead of hanging.
+    pub fn new_with(nranks: usize, dead: Arc<DeadSet>) -> Self {
         Rendezvous {
             nranks,
+            dead,
             state: Mutex::new(State {
                 phase: Phase::Collect,
                 round: 0,
@@ -58,15 +71,24 @@ impl Rendezvous {
     /// the last arrival runs `combine` over all inputs (rank order).
     /// Returns the shared output and the max `vt` over all participants.
     ///
+    /// Fails with [`crate::error::Error::RankLost`] when a participant
+    /// died — a collective cannot complete without every rank.
+    ///
     /// Panics if `combine` output type differs across ranks of one round.
-    pub fn run<I, O, F>(&self, rank: usize, vt: u64, input: I, combine: F) -> (Arc<O>, u64)
+    pub fn run<I, O, F>(
+        &self,
+        rank: usize,
+        vt: u64,
+        input: I,
+        combine: F,
+    ) -> Result<(Arc<O>, u64)>
     where
         I: Send + 'static,
         O: Send + Sync + 'static,
         F: FnOnce(Vec<I>) -> O,
     {
-        let (out, max_vt, _) = self.run_with_src(rank, vt, input, combine);
-        (out, max_vt)
+        let (out, max_vt, _) = self.run_with_src(rank, vt, input, combine)?;
+        Ok((out, max_vt))
     }
 
     /// Like [`Rendezvous::run`], but also returns the rank whose arrival
@@ -79,7 +101,7 @@ impl Rendezvous {
         vt: u64,
         input: I,
         combine: F,
-    ) -> (Arc<O>, u64, usize)
+    ) -> Result<(Arc<O>, u64, usize)>
     where
         I: Send + 'static,
         O: Send + Sync + 'static,
@@ -88,7 +110,8 @@ impl Rendezvous {
         let mut st = self.state.lock().unwrap();
         // Wait for the previous round to fully drain before depositing.
         while st.phase == Phase::Distribute {
-            st = self.cv.wait(st).unwrap();
+            self.dead.check(vt)?;
+            st = self.cv.wait_timeout(st, POLL_INTERVAL).unwrap().0;
         }
         let my_round = st.round;
         assert!(st.inputs[rank].is_none(), "rank {rank} double-entered rendezvous");
@@ -112,7 +135,8 @@ impl Rendezvous {
             self.cv.notify_all();
         } else {
             while !(st.phase == Phase::Distribute && st.round == my_round) {
-                st = self.cv.wait(st).unwrap();
+                self.dead.check(vt)?;
+                st = self.cv.wait_timeout(st, POLL_INTERVAL).unwrap().0;
             }
         }
 
@@ -138,7 +162,7 @@ impl Rendezvous {
             st.max_vt_rank = 0;
             self.cv.notify_all();
         }
-        (out, max_vt, max_vt_rank)
+        Ok((out, max_vt, max_vt_rank))
     }
 }
 
@@ -166,7 +190,7 @@ mod tests {
     #[test]
     fn gathers_inputs_in_rank_order() {
         let outs = run_ranks(4, |rank, rv| {
-            let (sum, _) = rv.run(rank, 0, rank as u64, |xs| xs.clone());
+            let (sum, _) = rv.run(rank, 0, rank as u64, |xs| xs.clone()).unwrap();
             sum.as_ref().clone()
         });
         for o in outs {
@@ -178,7 +202,7 @@ mod tests {
     fn vt_is_max_over_participants() {
         let outs = run_ranks(3, |rank, rv| {
             let vt = (rank as u64 + 1) * 100;
-            let (_, max_vt) = rv.run(rank, vt, (), |_| ());
+            let (_, max_vt) = rv.run(rank, vt, (), |_| ()).unwrap();
             max_vt
         });
         assert!(outs.iter().all(|&v| v == 300));
@@ -189,7 +213,7 @@ mod tests {
         let outs = run_ranks(3, |rank, rv| {
             // Rank 1 enters with the largest vt.
             let vt = if rank == 1 { 500 } else { 100 };
-            let (_, max_vt, src) = rv.run_with_src(rank, vt, (), |_| ());
+            let (_, max_vt, src) = rv.run_with_src(rank, vt, (), |_| ()).unwrap();
             (max_vt, src)
         });
         assert!(outs.iter().all(|&(v, s)| v == 500 && s == 1));
@@ -200,9 +224,9 @@ mod tests {
         let outs = run_ranks(4, |rank, rv| {
             let mut acc = 0u64;
             for round in 0..50u64 {
-                let (sum, _) = rv.run(rank, 0, round + rank as u64, |xs| {
-                    xs.iter().sum::<u64>()
-                });
+                let (sum, _) = rv
+                    .run(rank, 0, round + rank as u64, |xs| xs.iter().sum::<u64>())
+                    .unwrap();
                 acc += *sum;
             }
             acc
@@ -212,9 +236,30 @@ mod tests {
     }
 
     #[test]
+    fn dead_participant_surfaces_as_rank_lost() {
+        use crate::error::Error;
+        let dead = Arc::new(DeadSet::new(3));
+        let rv = Arc::new(Rendezvous::new_with(3, dead.clone()));
+        // Rank 2 never arrives: it is marked dead before anyone enters.
+        dead.mark_dead(2, 77);
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let rv = rv.clone();
+                std::thread::spawn(move || rv.run(r, 10, (), |_| ()))
+            })
+            .collect();
+        for h in handles {
+            match h.join().unwrap() {
+                Err(Error::RankLost { rank: 2, .. }) => {}
+                other => panic!("expected RankLost for rank 2, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn single_rank_is_trivial() {
         let outs = run_ranks(1, |rank, rv| {
-            let (v, vt) = rv.run(rank, 42, 7u32, |xs| xs[0] * 2);
+            let (v, vt) = rv.run(rank, 42, 7u32, |xs| xs[0] * 2).unwrap();
             (*v, vt)
         });
         assert_eq!(outs[0], (14, 42));

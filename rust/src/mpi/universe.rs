@@ -40,6 +40,13 @@ impl RankCtx {
         self.comm.size()
     }
 
+    /// Dead-rank epoch flags of this world (fault injection/detection;
+    /// see `crate::fault::dead`).
+    #[inline]
+    pub fn dead(&self) -> &Arc<crate::fault::DeadSet> {
+        self.comm.dead()
+    }
+
     /// Align real time with this rank's virtual clock (1:1).
     ///
     /// Most of the protocol tolerates real/virtual divergence (races only

@@ -24,6 +24,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use crate::error::{Error, Result};
+use crate::fault::{DeadSet, POLL_INTERVAL};
 use crate::metrics::tracer::{self, op, SpanEdge, WaitCause};
 use crate::sim::{Clock, NetModel};
 
@@ -131,6 +132,10 @@ pub(crate) struct WinShared {
     regions: Vec<Region>,
     locks: Vec<TargetLock>,
     net: NetModel,
+    /// Dead-rank epoch flags (shared with the communicator): blocking
+    /// waits poll these through the window instead of hanging on a peer
+    /// that died (DESIGN.md §10 one-sided detection).
+    dead: Arc<DeadSet>,
 }
 
 /// One rank's handle to a window (collectively created).
@@ -142,8 +147,10 @@ pub struct Window {
 impl Window {
     /// Collectively create a window with `local_size` bytes attached at
     /// displacement 0 on every rank (pass 0 for a dynamic window and use
-    /// [`Window::attach`]).
-    pub fn create(ctx: &RankCtx, local_size: usize) -> Window {
+    /// [`Window::attach`]).  Fails with
+    /// [`Error::RankLost`](crate::error::Error::RankLost) when a
+    /// participant died before the creation rendezvous completed.
+    pub fn create(ctx: &RankCtx, local_size: usize) -> Result<Window> {
         Self::create_inner(ctx, local_size, true)
     }
 
@@ -154,13 +161,14 @@ impl Window {
     /// runtime during the previous stage, so stage entry costs no
     /// collective synchronization (the paper's decoupling lifted to
     /// stage boundaries; see DESIGN.md §6).
-    pub fn create_decoupled(ctx: &RankCtx, local_size: usize) -> Window {
+    pub fn create_decoupled(ctx: &RankCtx, local_size: usize) -> Result<Window> {
         Self::create_inner(ctx, local_size, false)
     }
 
-    fn create_inner(ctx: &RankCtx, local_size: usize, sync_clocks: bool) -> Window {
+    fn create_inner(ctx: &RankCtx, local_size: usize, sync_clocks: bool) -> Result<Window> {
         let nranks = ctx.comm.size();
         let net = *ctx.comm.net();
+        let dead = ctx.comm.dead().clone();
         let (shared, max_vt) = ctx.comm.shared.rendezvous.run(
             ctx.comm.rank(),
             ctx.clock.now(),
@@ -172,9 +180,10 @@ impl Window {
                         .map(|_| TargetLock { st: Mutex::new(LockSt::default()), cv: Condvar::new() })
                         .collect(),
                     net,
+                    dead,
                 })
             },
-        );
+        )?;
         if sync_clocks {
             ctx.clock.sync_to(max_vt);
         }
@@ -182,7 +191,7 @@ impl Window {
         if local_size > 0 {
             win.attach(local_size);
         }
-        win
+        Ok(win)
     }
 
     /// Attach a fresh `len`-byte segment to the *local* region; returns
@@ -382,6 +391,11 @@ impl Window {
     /// clock synced past its publish time.  This is the decoupled wait
     /// loop of the protocol: repeated `atomic_load` polling without
     /// busy-burning the host's single core.
+    ///
+    /// While blocked, the wait polls the dead-rank epoch flags: if a rank
+    /// of the world dies before the predicate is satisfied, the wait
+    /// returns [`Error::RankLost`] instead of hanging on a publisher that
+    /// no longer exists (DESIGN.md §10 one-sided detection).
     pub fn wait_atomic(
         &self,
         clock: &Clock,
@@ -410,25 +424,33 @@ impl Window {
                 );
                 return Ok(cell.value);
             }
-            cells = region.atomics_cv.wait(cells).unwrap();
+            self.shared.dead.check(t0)?;
+            cells = region.atomics_cv.wait_timeout(cells, POLL_INTERVAL).unwrap().0;
         }
     }
 
     /// Acquire a passive-target lock on `target`'s region.
-    pub fn lock(&self, clock: &Clock, kind: LockKind, target: usize) {
+    ///
+    /// Fails with [`Error::RankLost`] when a rank died while this rank
+    /// was queued behind the lock — the holder may never release it
+    /// (the Combine-tree detection point: a victim dies holding its own
+    /// exclusive lock, and its merge parent observes the loss here).
+    pub fn lock(&self, clock: &Clock, kind: LockKind, target: usize) -> Result<()> {
         let t0 = clock.now();
         let l = &self.shared.locks[target];
         let mut st = l.st.lock().unwrap();
         match kind {
             LockKind::Exclusive => {
                 while st.exclusive || st.shared > 0 {
-                    st = l.cv.wait(st).unwrap();
+                    self.shared.dead.check(t0)?;
+                    st = l.cv.wait_timeout(st, POLL_INTERVAL).unwrap().0;
                 }
                 st.exclusive = true;
             }
             LockKind::Shared => {
                 while st.exclusive {
-                    st = l.cv.wait(st).unwrap();
+                    self.shared.dead.check(t0)?;
+                    st = l.cv.wait_timeout(st, POLL_INTERVAL).unwrap().0;
                 }
                 st.shared += 1;
             }
@@ -439,6 +461,7 @@ impl Window {
         clock.sync_to(st.release_vt);
         clock.advance(self.shared.net.lock_latency_ns);
         tracer::record_cause(op::LOCK, WaitCause::WindowLock, t0, clock.now(), 0, Some(target), edge);
+        Ok(())
     }
 
     /// Try to acquire without blocking; true on success.
@@ -533,12 +556,12 @@ mod tests {
     #[test]
     fn put_get_roundtrip_across_ranks() {
         let outs = world(2, |ctx| {
-            let win = Window::create(ctx, 64);
-            ctx.barrier();
+            let win = Window::create(ctx, 64).unwrap();
+            ctx.barrier().unwrap();
             if ctx.rank() == 0 {
                 win.put(&ctx.clock, 1, 0, b"abcd").unwrap();
             }
-            ctx.barrier();
+            ctx.barrier().unwrap();
             if ctx.rank() == 1 {
                 let mut buf = [0u8; 4];
                 win.get(&ctx.clock, 1, 0, &mut buf).unwrap();
@@ -553,7 +576,7 @@ mod tests {
     #[test]
     fn out_of_bounds_put_is_error() {
         let outs = world(1, |ctx| {
-            let win = Window::create(ctx, 8);
+            let win = Window::create(ctx, 8).unwrap();
             win.put(&ctx.clock, 0, 4, &[0u8; 8]).is_err()
         });
         assert!(outs[0]);
@@ -562,7 +585,7 @@ mod tests {
     #[test]
     fn dynamic_attach_returns_disjoint_disps() {
         let outs = world(1, |ctx| {
-            let win = Window::create(ctx, 0);
+            let win = Window::create(ctx, 0).unwrap();
             let d1 = win.attach(100);
             let d2 = win.attach(100);
             (d1, d2, win.attached_bytes(0))
@@ -576,8 +599,8 @@ mod tests {
     #[test]
     fn wait_atomic_carries_publish_virtual_time() {
         let outs = world(2, |ctx| {
-            let win = Window::create(ctx, 64);
-            ctx.barrier();
+            let win = Window::create(ctx, 64).unwrap();
+            ctx.barrier().unwrap();
             if ctx.rank() == 0 {
                 ctx.clock.advance(1_000_000); // writer is far in the future
                 win.atomic_store(&ctx.clock, 1, 0, 42).unwrap();
@@ -595,15 +618,15 @@ mod tests {
     #[test]
     fn atomic_load_does_not_time_travel_forward() {
         let outs = world(2, |ctx| {
-            let win = Window::create(ctx, 64);
-            ctx.barrier();
+            let win = Window::create(ctx, 64).unwrap();
+            ctx.barrier().unwrap();
             if ctx.rank() == 0 {
                 ctx.clock.advance(50_000_000); // far-future writer
                 win.atomic_store(&ctx.clock, 0, 0, 7).unwrap();
-                ctx.barrier();
+                ctx.barrier().unwrap();
                 0
             } else {
-                ctx.barrier(); // the store is visible now (real time)
+                ctx.barrier().unwrap(); // the store is visible now (real time)
                 let before = ctx.clock.now();
                 let _ = win.atomic_load(&ctx.clock, 0, 0).unwrap();
                 // ...but a plain poll must NOT drag the reader to the
@@ -617,7 +640,7 @@ mod tests {
     #[test]
     fn cas_swaps_only_on_match() {
         let outs = world(1, |ctx| {
-            let win = Window::create(ctx, 64);
+            let win = Window::create(ctx, 64).unwrap();
             win.atomic_store(&ctx.clock, 0, 8, 5).unwrap();
             let old1 = win.compare_and_swap(&ctx.clock, 0, 8, 5, 9).unwrap();
             let old2 = win.compare_and_swap(&ctx.clock, 0, 8, 5, 11).unwrap();
@@ -630,10 +653,10 @@ mod tests {
     #[test]
     fn fetch_add_accumulates() {
         let outs = world(4, |ctx| {
-            let win = Window::create(ctx, 64);
-            ctx.barrier();
+            let win = Window::create(ctx, 64).unwrap();
+            ctx.barrier().unwrap();
             win.fetch_add(&ctx.clock, 0, 0, 1).unwrap();
-            ctx.barrier();
+            ctx.barrier().unwrap();
             win.atomic_load(&ctx.clock, 0, 0).unwrap()
         });
         assert!(outs.iter().all(|&v| v == 4));
@@ -642,7 +665,7 @@ mod tests {
     #[test]
     fn unaligned_atomic_rejected() {
         let outs = world(1, |ctx| {
-            let win = Window::create(ctx, 64);
+            let win = Window::create(ctx, 64).unwrap();
             win.atomic_store(&ctx.clock, 0, 3, 1).is_err()
         });
         assert!(outs[0]);
@@ -651,17 +674,17 @@ mod tests {
     #[test]
     fn exclusive_lock_serializes_and_hands_off_clock() {
         let outs = world(2, |ctx| {
-            let win = Window::create(ctx, 64);
-            ctx.barrier();
+            let win = Window::create(ctx, 64).unwrap();
+            ctx.barrier().unwrap();
             if ctx.rank() == 0 {
-                win.lock(&ctx.clock, LockKind::Exclusive, 0);
+                win.lock(&ctx.clock, LockKind::Exclusive, 0).unwrap();
                 ctx.clock.advance(500_000);
                 win.unlock(&ctx.clock, LockKind::Exclusive, 0);
-                ctx.barrier();
+                ctx.barrier().unwrap();
                 ctx.clock.now()
             } else {
-                ctx.barrier(); // rank 0 held + released first
-                win.lock(&ctx.clock, LockKind::Exclusive, 0);
+                ctx.barrier().unwrap(); // rank 0 held + released first
+                win.lock(&ctx.clock, LockKind::Exclusive, 0).unwrap();
                 let t = ctx.clock.now();
                 win.unlock(&ctx.clock, LockKind::Exclusive, 0);
                 t
@@ -673,10 +696,10 @@ mod tests {
     #[test]
     fn shared_locks_coexist() {
         let outs = world(3, |ctx| {
-            let win = Window::create(ctx, 8);
-            ctx.barrier();
-            win.lock(&ctx.clock, LockKind::Shared, 0);
-            ctx.barrier(); // all three hold it simultaneously
+            let win = Window::create(ctx, 8).unwrap();
+            ctx.barrier().unwrap();
+            win.lock(&ctx.clock, LockKind::Shared, 0).unwrap();
+            ctx.barrier().unwrap(); // all three hold it simultaneously
             win.unlock(&ctx.clock, LockKind::Shared, 0);
             true
         });
@@ -686,8 +709,8 @@ mod tests {
     #[test]
     fn wait_atomic_blocks_until_predicate() {
         let outs = world(2, |ctx| {
-            let win = Window::create(ctx, 64);
-            ctx.barrier();
+            let win = Window::create(ctx, 64).unwrap();
+            ctx.barrier().unwrap();
             if ctx.rank() == 0 {
                 ctx.clock.advance(10_000);
                 win.atomic_store(&ctx.clock, 0, 0, 7).unwrap();
@@ -700,10 +723,53 @@ mod tests {
     }
 
     #[test]
+    fn wait_atomic_on_dead_rank_is_typed_loss() {
+        use crate::fault::DETECT_NS;
+        let outs = world(2, |ctx| {
+            let win = Window::create(ctx, 64).unwrap();
+            ctx.barrier().unwrap();
+            if ctx.rank() == 0 {
+                // Victim: dies without ever publishing the status value.
+                ctx.comm.dead().mark_dead(0, 2_000);
+                Ok(0)
+            } else {
+                ctx.clock.advance(1_000);
+                win.wait_atomic(&ctx.clock, 0, 0, |v| v == 42)
+            }
+        });
+        match &outs[1] {
+            Err(Error::RankLost { rank: 0, vt }) => {
+                assert!(*vt >= 2_000 + DETECT_NS, "detect vt {vt} too early");
+            }
+            other => panic!("expected RankLost, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lock_behind_dead_holder_is_typed_loss() {
+        let outs = world(2, |ctx| {
+            let win = Window::create(ctx, 64).unwrap();
+            ctx.barrier().unwrap();
+            if ctx.rank() == 0 {
+                // Victim: dies holding its own exclusive lock (the
+                // Combine-tree hazard).
+                win.lock(&ctx.clock, LockKind::Exclusive, 0).unwrap();
+                ctx.barrier().unwrap();
+                ctx.comm.dead().mark_dead(0, ctx.clock.now());
+                Ok(())
+            } else {
+                ctx.barrier().unwrap(); // holder owns the lock now
+                win.lock(&ctx.clock, LockKind::Shared, 0)
+            }
+        });
+        assert!(matches!(outs[1], Err(Error::RankLost { rank: 0, .. })));
+    }
+
+    #[test]
     fn local_put_is_free_remote_put_is_charged() {
         let outs = world(2, |ctx| {
-            let win = Window::create(ctx, 1 << 20);
-            ctx.barrier();
+            let win = Window::create(ctx, 1 << 20).unwrap();
+            ctx.barrier().unwrap();
             let before = ctx.clock.now();
             let data = vec![0u8; 1 << 16];
             win.put(&ctx.clock, ctx.rank(), 0, &data).unwrap();

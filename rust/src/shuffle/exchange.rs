@@ -207,9 +207,9 @@ mod tests {
     #[test]
     fn every_rank_derives_the_published_route() {
         let outs = Universe::new(4, CostModel::default()).run(|ctx| {
-            let win = Window::create(ctx, 0);
+            let win = Window::create(ctx, 0).unwrap();
             init_window(&win);
-            ctx.barrier();
+            ctx.barrier().unwrap();
             let mut sketch = Sketch::new();
             // Rank-dependent observations; one shared heavy key.
             for i in 0..200u64 {
@@ -229,9 +229,9 @@ mod tests {
     #[test]
     fn exchange_clock_carries_slowest_publisher() {
         let outs = Universe::new(3, CostModel::default()).run(|ctx| {
-            let win = Window::create(ctx, 0);
+            let win = Window::create(ctx, 0).unwrap();
             init_window(&win);
-            ctx.barrier();
+            ctx.barrier().unwrap();
             if ctx.rank() == 2 {
                 ctx.clock.advance(5_000_000); // straggling mapper
             }
@@ -247,9 +247,9 @@ mod tests {
     #[test]
     fn coded_blob_roundtrips_including_empty() {
         let outs = Universe::new(3, CostModel::default()).run(|ctx| {
-            let win = Window::create(ctx, 0);
+            let win = Window::create(ctx, 0).unwrap();
             init_window(&win);
-            ctx.barrier();
+            ctx.barrier().unwrap();
             // Rank 1 has nothing to multicast.
             let blob: Vec<u8> =
                 if ctx.rank() == 1 { Vec::new() } else { vec![ctx.rank() as u8; 100] };

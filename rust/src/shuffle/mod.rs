@@ -50,7 +50,7 @@ pub use coding::{
 };
 pub use placement::CodedPlacement;
 pub use plan::{
-    plan_coded_route, plan_route, route_bucket_of, CodedRoute, PlannedRoute, Route,
+    plan_coded_route, plan_route, rehome, route_bucket_of, CodedRoute, PlannedRoute, Route,
     ROUTE_BUCKETS,
 };
 pub use sketch::{Sketch, SKETCH_CAPACITY};

@@ -360,6 +360,74 @@ pub fn plan_coded_route(sketch: &Sketch, nranks: usize, r: usize) -> Route {
     Route::Coded(CodedRoute { base, r, heavy })
 }
 
+/// Re-home a route after rank `dead` was lost: the degraded world keeps
+/// the original plan and only reassigns the dead rank's share, exactly
+/// what survivors would do with the already-published route table (the
+/// `replan` cost charged in the recovery prologue models this pass).
+///
+/// * Modulo routes shrink the world by one (`hash % (n-1)`).
+/// * Planned routes hand the dead rank's buckets round-robin to the
+///   survivors in ascending planned-load order, drop the dead rank from
+///   split target lists (a split left with no targets falls back to the
+///   bucket table), and compact rank indices above `dead` by one so the
+///   result addresses the n−1 world directly.
+/// * Coded routes never get here: `JobConfig::validate` rejects armed
+///   fault plans under the coded route (replication placement is a
+///   function of the original world size).
+///
+/// Deterministic, like [`plan_route`] — every survivor derives the same
+/// degraded route from the same input.
+pub fn rehome(route: Route, dead: usize) -> Route {
+    match route {
+        Route::Modulo { nranks } => {
+            assert!(dead < nranks && nranks >= 2, "rehome needs a survivor");
+            Route::Modulo { nranks: nranks - 1 }
+        }
+        Route::Planned(mut p) => {
+            let n = p.planned_loads.len();
+            assert!(dead < n && n >= 2, "rehome needs a survivor");
+            let mut order: Vec<usize> = (0..n).filter(|&r| r != dead).collect();
+            order.sort_by_key(|&r| (p.planned_loads[r], r));
+            let compact = |r: usize| if r > dead { r - 1 } else { r } as u16;
+            let mut next = 0usize;
+            for slot in p.table.iter_mut() {
+                let owner = *slot as usize;
+                *slot = if owner == dead {
+                    let t = order[next % order.len()];
+                    next += 1;
+                    compact(t)
+                } else {
+                    compact(owner)
+                };
+            }
+            p.splits = p
+                .splits
+                .into_iter()
+                .filter_map(|(hash, targets)| {
+                    let kept: Vec<u16> = targets
+                        .iter()
+                        .filter(|&&t| t as usize != dead)
+                        .map(|&t| compact(t as usize))
+                        .collect();
+                    (!kept.is_empty()).then_some((hash, kept))
+                })
+                .collect();
+            // Fold the dead rank's load estimate evenly into the
+            // survivors (advisory — correctness never depends on it,
+            // but the planned-vs-actual report should stay comparable).
+            let dead_load = p.planned_loads.remove(dead);
+            let m = p.planned_loads.len() as u64;
+            for (i, l) in p.planned_loads.iter_mut().enumerate() {
+                *l += dead_load / m + u64::from((i as u64) < dead_load % m);
+            }
+            Route::Planned(p)
+        }
+        Route::Coded(_) => {
+            unreachable!("coded routes cannot rehome (rejected at config validation)")
+        }
+    }
+}
+
 #[inline]
 fn argmin(loads: &[u64]) -> usize {
     let mut best = 0usize;
@@ -526,6 +594,39 @@ mod tests {
         let route = plan_coded_route(&Sketch::new(), 4, 2);
         let Route::Coded(c) = &route else { panic!("coded") };
         assert!(c.heavy.iter().all(|&w| w == 0));
+    }
+
+    #[test]
+    fn rehome_modulo_shrinks_world() {
+        assert_eq!(rehome(Route::modulo(4), 1), Route::modulo(3));
+    }
+
+    #[test]
+    fn rehome_reassigns_dead_buckets_onto_survivors() {
+        let route = plan_route(&skewed_sketch(42, 100_000), 4, 2);
+        let rehomed = rehome(route.clone(), 2);
+        assert_eq!(rehomed.nranks(), 3);
+        // Total routing: every hash lands on a surviving (compacted) rank.
+        for h in (0..3000u64).map(|i| i.wrapping_mul(0x9E3779B97F4A7C15)) {
+            for src in 0..3 {
+                assert!(rehomed.owner(h, src) < 3, "hash {h} from {src}");
+            }
+        }
+        // Planned load mass is conserved across the re-homing.
+        let Route::Planned(orig) = &route else { panic!("planned") };
+        let Route::Planned(p) = &rehomed else { panic!("planned") };
+        assert_eq!(
+            p.planned_loads.iter().sum::<u64>(),
+            orig.planned_loads.iter().sum::<u64>()
+        );
+        // Splits never target the dead rank's old slot out of range.
+        assert!(p.splits.iter().all(|(_, ts)| ts.iter().all(|&t| (t as usize) < 3)));
+    }
+
+    #[test]
+    fn rehome_is_deterministic() {
+        let route = plan_route(&skewed_sketch(7, 50_000), 6, 3);
+        assert_eq!(rehome(route.clone(), 4), rehome(route, 4));
     }
 
     #[test]

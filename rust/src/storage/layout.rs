@@ -127,7 +127,7 @@ impl StripedFile {
     /// each reads its own extent at the amortized collective cost — the
     /// access mode of MapReduce-2S.
     pub fn read_collective(&self, ctx: &RankCtx, offset: u64, len: usize) -> Result<Vec<u8>> {
-        ctx.barrier();
+        ctx.barrier()?;
         let data = self.read_at_raw(offset, len)?;
         ctx.clock.sync_to(self.available_vt(offset + data.len() as u64));
         ctx.clock

@@ -200,10 +200,24 @@ pub struct SpillFile {
 impl SpillFile {
     /// Open a previously-written spill (data + `.idx` sidecar) as an
     /// already-durable input (availability floor 0).
+    ///
+    /// A corrupt or truncated sidecar (typed
+    /// [`Error::CorruptSidecar`] from the index parser) does not fail
+    /// the open: the boundaries are rebuilt by rescanning the record
+    /// headers of the data file — the sidecar is an accelerator, the
+    /// data file is the source of truth.  Only when the data itself is
+    /// undecodable does the open fail.
     pub fn open(path: impl AsRef<Path>) -> Result<SpillFile> {
         let path = path.as_ref();
         let file = StripedFile::open(path)?;
-        let boundaries = read_index(&index_path(path), file.len())?;
+        let boundaries = match read_index(&index_path(path), file.len()) {
+            Ok(b) => b,
+            Err(Error::CorruptSidecar(_)) => {
+                let data = file.read_at_raw(0, file.len() as usize)?;
+                rescan_boundaries(&data)?
+            }
+            Err(e) => return Err(e),
+        };
         Ok(SpillFile {
             file,
             boundaries: Arc::new(boundaries),
@@ -233,18 +247,20 @@ pub fn index_path(data: &Path) -> PathBuf {
 
 /// Parse and validate a sidecar index against the data file's length:
 /// entries must start at 0, be strictly increasing, and stay inside the
-/// data — a stale or corrupt sidecar must surface as a typed decode
-/// error, never as a wrapped task extent.
+/// data — a stale or corrupt sidecar must surface as a typed
+/// [`Error::CorruptSidecar`], never as a wrapped task extent.  A
+/// missing sidecar (the file was deleted, not damaged) stays an I/O
+/// error.
 fn read_index(path: &Path, data_len: u64) -> Result<Vec<u64>> {
     let mut buf = Vec::new();
     File::open(path)?.read_to_end(&mut buf)?;
     if buf.len() < 16 || (&buf[..8] != IDX_MAGIC_V1 && &buf[..8] != IDX_MAGIC_V2) {
-        return Err(Error::KvDecode(format!("bad spill index {}", path.display())));
+        return Err(Error::CorruptSidecar(format!("bad spill index {}", path.display())));
     }
     let count = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
     let boundaries: Vec<u64> = if &buf[..8] == IDX_MAGIC_V1 {
         if buf.len() != 16 + count * 8 {
-            return Err(Error::KvDecode(format!(
+            return Err(Error::CorruptSidecar(format!(
                 "spill index {} truncated: {} entries, {} bytes",
                 path.display(),
                 count,
@@ -261,12 +277,13 @@ fn read_index(path: &Path, data_len: u64) -> Result<Vec<u64>> {
         let mut boundaries = Vec::with_capacity(count);
         let mut prev = 0u64;
         for i in 0..count {
-            let v = read_varint(&buf, &mut pos)?;
+            let v = read_varint(&buf, &mut pos)
+                .map_err(|e| Error::CorruptSidecar(format!("{}: {e}", path.display())))?;
             prev = if i == 0 { v } else { prev.saturating_add(v) };
             boundaries.push(prev);
         }
         if pos != buf.len() {
-            return Err(Error::KvDecode(format!(
+            return Err(Error::CorruptSidecar(format!(
                 "spill index {} has {} trailing bytes",
                 path.display(),
                 buf.len() - pos
@@ -278,11 +295,27 @@ fn read_index(path: &Path, data_len: u64) -> Result<Vec<u64>> {
     let in_range = boundaries.first().map_or(true, |&b| b == 0)
         && boundaries.last().map_or(true, |&b| b < data_len);
     if !monotonic || !in_range {
-        return Err(Error::KvDecode(format!(
+        return Err(Error::CorruptSidecar(format!(
             "spill index {} inconsistent with data ({} bytes)",
             path.display(),
             data_len
         )));
+    }
+    Ok(boundaries)
+}
+
+/// Rebuild the record-boundary index by walking the §2.1 headers of the
+/// raw data stream — the recovery path behind a corrupt sidecar.  The
+/// wire format is not self-synchronizing, but from offset 0 it is
+/// unambiguous; any decode failure means the *data* is damaged, which
+/// rightly fails the open.
+pub fn rescan_boundaries(data: &[u8]) -> Result<Vec<u64>> {
+    let mut boundaries = Vec::new();
+    let mut off = 0usize;
+    while off < data.len() {
+        boundaries.push(off as u64);
+        let (_, next) = kv::Record::decode(data, off)?;
+        off = next;
     }
     Ok(boundaries)
 }
@@ -503,6 +536,7 @@ mod tests {
         )
         .unwrap();
         let spill = w.finish().unwrap();
+        let len = spill.file.len();
         // Out-of-order boundaries: rewrite the sidecar with swapped entries.
         let mut idx = Vec::new();
         idx.extend_from_slice(IDX_MAGIC_V1);
@@ -510,14 +544,14 @@ mod tests {
         idx.extend_from_slice(&spill.boundaries[1].to_le_bytes());
         idx.extend_from_slice(&spill.boundaries[0].to_le_bytes());
         std::fs::write(index_path(&p), &idx).unwrap();
-        assert!(matches!(SpillFile::open(&p), Err(Error::KvDecode(_))));
+        assert!(matches!(read_index(&index_path(&p), len), Err(Error::CorruptSidecar(_))));
         // Boundary beyond the data file is rejected too.
         let mut idx = Vec::new();
         idx.extend_from_slice(IDX_MAGIC_V1);
         idx.extend_from_slice(&1u64.to_le_bytes());
-        idx.extend_from_slice(&(spill.file.len() + 8).to_le_bytes());
+        idx.extend_from_slice(&(len + 8).to_le_bytes());
         std::fs::write(index_path(&p), &idx).unwrap();
-        assert!(matches!(SpillFile::open(&p), Err(Error::KvDecode(_))));
+        assert!(matches!(read_index(&index_path(&p), len), Err(Error::CorruptSidecar(_))));
         // A truncated v2 sidecar (count promises more varints than are
         // present) is a typed error, not a short read.
         let mut idx = Vec::new();
@@ -525,7 +559,41 @@ mod tests {
         idx.extend_from_slice(&3u64.to_le_bytes());
         write_varint(&mut idx, 0);
         std::fs::write(index_path(&p), &idx).unwrap();
-        assert!(matches!(SpillFile::open(&p), Err(Error::KvDecode(_))));
+        assert!(matches!(read_index(&index_path(&p), len), Err(Error::CorruptSidecar(_))));
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(index_path(&p)).ok();
+    }
+
+    #[test]
+    fn corrupt_sidecar_falls_back_to_boundary_rescan() {
+        let p = tmppath("rescan");
+        let mut w = SpillWriter::create(&p).unwrap();
+        w.append_records(
+            &[
+                (b"alpha".to_vec(), Value::U64(1)),
+                (b"beta".to_vec(), Value::Bytes(b"payload".to_vec())),
+                (b"gamma".to_vec(), Value::U64(3)),
+            ],
+            None,
+            0,
+            &StorageModel::default(),
+        )
+        .unwrap();
+        let spill = w.finish().unwrap();
+        let want = spill.boundaries.clone();
+        // Garbage sidecar: the open must rescan the data file and
+        // recover exactly the boundaries the writer recorded.
+        std::fs::write(index_path(&p), b"not an index at all").unwrap();
+        let reopened = SpillFile::open(&p).unwrap();
+        assert_eq!(reopened.boundaries, want);
+        assert_eq!(reopened.decode_all().unwrap().len(), 3);
+        // Truncated (but well-magic'd) sidecar rescans too.
+        let mut idx = Vec::new();
+        idx.extend_from_slice(IDX_MAGIC_V2);
+        idx.extend_from_slice(&9u64.to_le_bytes());
+        std::fs::write(index_path(&p), &idx).unwrap();
+        let reopened = SpillFile::open(&p).unwrap();
+        assert_eq!(reopened.boundaries, want);
         std::fs::remove_file(&p).ok();
         std::fs::remove_file(index_path(&p)).ok();
     }
@@ -622,15 +690,31 @@ mod tests {
     }
 
     #[test]
-    fn oversize_value_is_typed_overflow() {
-        let p = tmppath("ovf");
+    fn value_past_u16_spills_via_extended_vlen() {
+        // A 100 KiB value outgrows the compact u16 field; the extended
+        // header must carry it through the spill and back, and the
+        // boundary rescan must step over the escape correctly.
+        let p = tmppath("bigval");
+        let big = vec![0x5Au8; 100 << 10];
         let mut w = SpillWriter::create(&p).unwrap();
-        let huge = Value::Bytes(vec![0u8; kv::MAX_VALUE_LEN + 1]);
-        let err = w
-            .append_records(&[(b"big".to_vec(), huge)], None, 0, &StorageModel::default())
-            .unwrap_err();
-        assert!(matches!(err, Error::ValueOverflow { .. }), "got {err}");
+        w.append_records(
+            &[
+                (b"big".to_vec(), Value::Bytes(big.clone())),
+                (b"after".to_vec(), Value::U64(9)),
+            ],
+            None,
+            0,
+            &StorageModel::default(),
+        )
+        .unwrap();
+        let spill = w.finish().unwrap();
+        let decoded = spill.decode_all().unwrap();
+        assert_eq!(decoded[0].2, big);
+        assert_eq!(decoded[1].1, b"after".to_vec());
+        let data = spill.file.read_at_raw(0, spill.file.len() as usize).unwrap();
+        assert_eq!(&rescan_boundaries(&data).unwrap(), spill.boundaries.as_ref());
         std::fs::remove_file(&p).ok();
+        std::fs::remove_file(index_path(&p)).ok();
     }
 
     #[test]

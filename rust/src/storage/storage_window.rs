@@ -91,6 +91,27 @@ impl StorageWindow {
         Ok(())
     }
 
+    /// Truncate the backing file to `new_len` bytes (fault injection:
+    /// a `torn` write cuts the tail of the last checkpoint frame, so
+    /// recovery must fall back to the longest valid prefix).  Real
+    /// `ftruncate`; no virtual cost — a torn write is not an operation
+    /// the rank chose to perform.
+    pub fn truncate(&mut self, new_len: u64) -> Result<()> {
+        self.file.set_len(new_len)?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    /// Current length of the backing file in bytes.
+    pub fn len(&self) -> Result<u64> {
+        Ok(self.file.metadata()?.len())
+    }
+
+    /// True when nothing has been checkpointed yet.
+    pub fn is_empty(&self) -> Result<bool> {
+        Ok(self.len()? == 0)
+    }
+
     /// Read back `len` bytes at `offset` from the checkpoint (recovery
     /// path after a simulated failure).
     pub fn recover(&mut self, ctx: &RankCtx, offset: u64, len: usize) -> Result<Vec<u8>> {

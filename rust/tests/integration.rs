@@ -651,22 +651,31 @@ impl UseCase for UnboundedConcat {
 }
 
 #[test]
-fn variable_reduce_overflow_is_typed_error() {
-    let p = tmppath("overflow");
+fn variable_values_past_the_u16_cap_roundtrip_via_u32_escape() {
+    // The extension-header escape: an accumulator that outgrows the
+    // classic u16 value-length field (here ~1.3 MiB on one hot key) must
+    // now cross the wire and come back byte-exact instead of failing
+    // with ValueOverflow — on both backends, single- and multi-rank.
+    let p = tmppath("bigvalue");
     let mut text = String::new();
     for _ in 0..40 {
         text.push_str("spill spill spill spill\n");
     }
     std::fs::write(&p, text).unwrap();
+    let want_len = 40 * 4 * 8192usize;
     for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
-        let job = Job::new(Arc::new(UnboundedConcat), small_config(p.clone())).unwrap();
-        let err = job.run(backend, 1, CostModel::default()).unwrap_err();
-        match err {
-            Error::ValueOverflow { key, len } => {
-                assert_eq!(key, b"hot".to_vec(), "{}", backend.name());
-                assert!(len > 65_535, "{}: len {len}", backend.name());
-            }
-            other => panic!("{}: expected ValueOverflow, got {other}", backend.name()),
+        for nranks in [1, 3] {
+            let job = Job::new(Arc::new(UnboundedConcat), small_config(p.clone())).unwrap();
+            let out = job.run(backend, nranks, CostModel::default()).unwrap();
+            let got = value_map(out.result);
+            let v = got
+                .get(b"hot".as_slice())
+                .unwrap_or_else(|| panic!("{}: hot key missing", backend.name()))
+                .as_bytes()
+                .unwrap();
+            assert!(v.len() > 65_535, "{}: value must exceed the u16 cap", backend.name());
+            assert_eq!(v.len(), want_len, "{} n={nranks}", backend.name());
+            assert!(v.iter().all(|&b| b == 7), "{} n={nranks}: bytes differ", backend.name());
         }
     }
     std::fs::remove_file(&p).ok();
@@ -851,6 +860,191 @@ fn trace_stats_and_mem_hwm_surface_in_report() {
     assert!(out.report.peak_memory_bytes > 0);
     assert!(out.report.mem_hwm_vt_ns <= out.report.elapsed_ns);
     assert!(out.report.summary().contains("mem-hwm="));
+    std::fs::remove_file(&p).ok();
+}
+
+// ---- fault injection & recovery (DESIGN.md §10) --------------------------
+
+#[test]
+fn kill_recovery_is_oracle_identical_for_every_usecase() {
+    // The acceptance matrix: kill a rank in either phase, on either
+    // backend, for every registered use-case — the job must complete on
+    // the survivors with a result key-for-key identical to the
+    // fault-free oracle, and report a nonzero recovery breakdown whose
+    // components equal the wait time attributed to their causes.
+    use mr1s::metrics::tracer::{op, WaitCause};
+    let p = corpus("faults-matrix", 60_000, 41);
+    let dir = tmppath("faults-matrix-ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    const NRANKS: usize = 4;
+    const VICTIM: usize = 1;
+    for entry in usecases::REGISTRY {
+        for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+            let oracle = value_map(
+                Job::new((entry.make)(), small_config(p.clone()))
+                    .unwrap()
+                    .run(backend, NRANKS, CostModel::default())
+                    .unwrap()
+                    .result,
+            );
+            for phase in ["map", "reduce"] {
+                let ctx = format!("{} {} kill@{phase}", entry.name, backend.name());
+                let cfg = JobConfig {
+                    checkpoints: true,
+                    checkpoint_dir: dir.clone(),
+                    faults: Some(
+                        format!("kill:rank={VICTIM}@phase={phase}").parse().unwrap(),
+                    ),
+                    ..small_config(p.clone())
+                };
+                let out = Job::new((entry.make)(), cfg)
+                    .unwrap()
+                    .run(backend, NRANKS, CostModel::default())
+                    .unwrap();
+                let report = &out.report;
+                assert_eq!(report.nranks, NRANKS - 1, "{ctx}: survivors");
+                assert_eq!(value_map(out.result), oracle, "{ctx}: result differs");
+                let rec = report
+                    .recovery
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("{ctx}: no recovery breakdown"));
+                assert_eq!(rec.dead_rank, VICTIM, "{ctx}");
+                assert_eq!(rec.phase, phase, "{ctx}");
+                assert_eq!(rec.orig_nranks, NRANKS, "{ctx}");
+                assert!(rec.total_ns() > 0, "{ctx}: recovery cost must be nonzero");
+                assert!(rec.replan_ns > 0, "{ctx}: replan charged on every survivor");
+                assert!(rec.replayed_tasks > 0, "{ctx}: checkpoints must replay tasks");
+                assert!(rec.replayed_bytes > 0, "{ctx}");
+                // Span-sum consistency: each recovery component equals
+                // the wait time attributed to its cause, and the whole
+                // breakdown is contained in the ranks' wait_ns.
+                let cause_ns = |c: WaitCause| -> u64 {
+                    report
+                        .spans
+                        .iter()
+                        .flatten()
+                        .filter(|s| s.op == op::WAIT && s.cause == Some(c))
+                        .map(|s| s.dur_ns())
+                        .sum()
+                };
+                assert_eq!(rec.detect_ns, cause_ns(WaitCause::Detect), "{ctx}");
+                assert_eq!(rec.replay_ns, cause_ns(WaitCause::Replay), "{ctx}");
+                assert_eq!(rec.replan_ns, cause_ns(WaitCause::Replan), "{ctx}");
+                let total_wait: u64 =
+                    report.breakdowns.iter().map(|b| b.wait_ns).sum();
+                assert!(
+                    rec.total_ns() <= total_wait,
+                    "{ctx}: recovery {} exceeds attributed wait {total_wait}",
+                    rec.total_ns()
+                );
+                assert!(report.summary().contains("recovery=dead:"), "{ctx}");
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn kill_recovery_without_checkpoints_recomputes_everything() {
+    // Degraded mode must not depend on checkpoints: with none to replay
+    // the survivors recompute every task from the input and still match
+    // the oracle exactly.
+    let p = corpus("faults-nockpt", 60_000, 42);
+    let oracle = oracle_wordcount(&p);
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        for phase in ["map", "reduce"] {
+            let ctx = format!("{} kill@{phase}", backend.name());
+            let cfg = JobConfig {
+                faults: Some(format!("kill:rank=2@phase={phase}").parse().unwrap()),
+                ..small_config(p.clone())
+            };
+            let out = Job::new(Arc::new(WordCount), cfg)
+                .unwrap()
+                .run(backend, 4, CostModel::default())
+                .unwrap();
+            assert_eq!(out.report.nranks, 3, "{ctx}");
+            assert_eq!(counts_map(out.result), oracle, "{ctx}");
+            let rec = out.report.recovery.as_ref().unwrap();
+            assert_eq!(rec.replayed_tasks, 0, "{ctx}: nothing to replay");
+            assert_eq!(rec.replay_ns, 0, "{ctx}");
+            assert!(rec.recomputed_tasks > 0, "{ctx}");
+            assert!(rec.total_ns() > 0, "{ctx}: detect/replan still charged");
+        }
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn torn_checkpoint_write_still_recovers_from_the_valid_prefix() {
+    // A crash mid-write leaves a truncated final frame; recovery must
+    // fall back to the longest valid prefix and recompute the rest.
+    let p = corpus("faults-torn", 60_000, 43);
+    let dir = tmppath("faults-torn-ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let oracle = oracle_wordcount(&p);
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        let cfg = JobConfig {
+            checkpoints: true,
+            checkpoint_dir: dir.clone(),
+            faults: Some("kill:rank=1@phase=map,torn:rank=1".parse().unwrap()),
+            ..small_config(p.clone())
+        };
+        let out = Job::new(Arc::new(WordCount), cfg)
+            .unwrap()
+            .run(backend, 4, CostModel::default())
+            .unwrap();
+        assert_eq!(out.report.nranks, 3, "{}", backend.name());
+        assert_eq!(counts_map(out.result), oracle, "{}", backend.name());
+        assert!(out.report.recovery.is_some(), "{}", backend.name());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn slow_fault_stretches_the_victim_without_triggering_recovery() {
+    let p = corpus("faults-slow", 150_000, 44);
+    let oracle = oracle_wordcount(&p);
+    let base = Job::new(Arc::new(WordCount), small_config(p.clone()))
+        .unwrap()
+        .run(BackendKind::OneSided, 4, CostModel::default())
+        .unwrap();
+    let cfg = JobConfig {
+        faults: Some("slow:rank=1@factor=4.0".parse().unwrap()),
+        ..small_config(p.clone())
+    };
+    let slow = Job::new(Arc::new(WordCount), cfg)
+        .unwrap()
+        .run(BackendKind::OneSided, 4, CostModel::default())
+        .unwrap();
+    assert_eq!(counts_map(slow.result), oracle);
+    assert_eq!(slow.report.nranks, 4, "nobody died: full world");
+    assert!(slow.report.recovery.is_none(), "slowdown is not a loss");
+    assert!(
+        slow.report.elapsed_ns > base.report.elapsed_ns,
+        "a 4x straggler must stretch the makespan: {} !> {}",
+        slow.report.elapsed_ns,
+        base.report.elapsed_ns
+    );
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn pipelines_reject_armed_fault_plans() {
+    let p = corpus("faults-pipe", 30_000, 45);
+    let base = JobConfig {
+        faults: Some("kill:rank=1@phase=map".parse().unwrap()),
+        ..small_config(p.clone())
+    };
+    let plan = plans::tfidf_plan(p.clone(), BackendKind::OneSided);
+    let err = Pipeline::new(plan, 4, CostModel::default(), base).unwrap_err();
+    match err {
+        Error::Config(msg) => {
+            assert!(msg.contains("fault injection"), "unexpected message {msg:?}")
+        }
+        other => panic!("expected Error::Config, got {other}"),
+    }
     std::fs::remove_file(&p).ok();
 }
 

@@ -558,6 +558,137 @@ fn prop_spill_roundtrip_both_tiers() {
 }
 
 #[test]
+fn prop_checkpoint_truncation_any_byte_decodes_valid_prefix() {
+    // A checkpoint stream torn at ANY byte offset must decode to exactly
+    // the frames wholly before the cut — never garbage, never a partial
+    // frame, and `valid_prefix` must report the byte length of that
+    // decodable prefix.
+    use mr1s::fault::{encode_frame, valid_prefix};
+    PropRunner::new(150).check(
+        "torn checkpoint decodes valid prefix",
+        |rng| {
+            let n = 1 + rng.below(10) as usize;
+            let frames: Vec<(u32, Vec<u8>)> =
+                (0..n).map(|i| (i as u32, rand_value(rng))).collect();
+            let mut buf = Vec::new();
+            let mut ends = Vec::new();
+            for (id, payload) in &frames {
+                encode_frame(&mut buf, *id, payload);
+                ends.push(buf.len());
+            }
+            let cut = rng.below(buf.len() as u64 + 1) as usize;
+            (frames, buf, ends, cut)
+        },
+        |(frames, buf, ends, cut)| {
+            let (decoded, valid) = valid_prefix(&buf[..*cut]);
+            let want = ends.iter().filter(|&&e| e <= *cut).count();
+            if decoded.len() != want {
+                return Err(format!(
+                    "cut {cut}: {} frames decoded, want {want}",
+                    decoded.len()
+                ));
+            }
+            let want_valid = if want == 0 { 0 } else { ends[want - 1] };
+            if valid != want_valid {
+                return Err(format!("cut {cut}: {valid} valid bytes, want {want_valid}"));
+            }
+            for (d, (id, payload)) in decoded.iter().zip(frames) {
+                if d.task_id != *id || d.payload != payload.as_slice() {
+                    return Err(format!("frame {id} corrupted through truncation"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_replay_log_recovers_exactly_the_checkpointed_prefix_both_tiers() {
+    // The recovery contract: after a crash tears the checkpoint stream
+    // at an arbitrary byte, the replay log must hand back bit-exact
+    // records for every task checkpointed before the tear, and nothing
+    // (`None` → recompute) for the lost suffix — for inline-u64 values
+    // and for variable values including ones past the u16 length escape.
+    use mr1s::fault::{encode_frame, ReplayLog};
+    PropRunner::new(60).check(
+        "replay log prefix recovery",
+        |rng| {
+            let ntasks = 1 + rng.below(8) as usize;
+            let inline_tier = rng.below(2) == 0;
+            let tasks: Vec<Vec<(Vec<u8>, Value)>> = (0..ntasks)
+                .map(|_| {
+                    let nrecs = 1 + rng.below(12) as usize;
+                    (0..nrecs)
+                        .map(|_| {
+                            let key = rand_key(rng);
+                            let value = if inline_tier {
+                                Value::U64(rng.next_u64())
+                            } else if rng.below(16) == 0 {
+                                // Past the u16 cap: exercises the u32
+                                // extension-header escape on the wire.
+                                let n = (u16::MAX as usize) + 1 + rng.below(512) as usize;
+                                Value::Bytes(vec![rng.below(256) as u8; n])
+                            } else {
+                                Value::Bytes(rand_value(rng))
+                            };
+                            (key, value)
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut buf = Vec::new();
+            let mut ends = Vec::new();
+            for (id, records) in tasks.iter().enumerate() {
+                let mut payload = Vec::new();
+                for (key, value) in records {
+                    OwnedRecord { hash: kv::hash_key(key), key: key.as_slice().into(), value: value.clone() }
+                        .encode_into(&mut payload)
+                        .expect("u32 escape covers test values");
+                }
+                encode_frame(&mut buf, id as u32, &payload);
+                ends.push(buf.len());
+            }
+            let cut = rng.below(buf.len() as u64 + 1) as usize;
+            (tasks, buf, ends, cut)
+        },
+        |(tasks, buf, ends, cut)| {
+            let mut log = ReplayLog::default();
+            log.ingest(&buf[..*cut]);
+            for (id, records) in tasks.iter().enumerate() {
+                let survived = ends[id] <= *cut;
+                match log.task(id) {
+                    None if survived => {
+                        return Err(format!("task {id} checkpointed before the tear but lost"))
+                    }
+                    Some(_) if !survived => {
+                        return Err(format!("task {id} lost in the tear but replayed"))
+                    }
+                    None => {} // lost suffix → recomputed, as required
+                    Some(payload) => {
+                        let decoded = kv::decode_all(payload).map_err(|e| e.to_string())?;
+                        if decoded.len() != records.len() {
+                            return Err(format!(
+                                "task {id}: {} records replayed, want {}",
+                                decoded.len(),
+                                records.len()
+                            ));
+                        }
+                        for (d, (key, value)) in decoded.iter().zip(records) {
+                            let mut want = Vec::new();
+                            value.write_into(&mut want);
+                            if d.key != key.as_slice() || d.value != want {
+                                return Err(format!("task {id}: replayed record differs"));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_win_size_must_exceed_floor() {
     PropRunner::new(50).check(
         "config validation",
