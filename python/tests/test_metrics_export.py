@@ -1,0 +1,267 @@
+"""Schema validation for ``--metrics-out`` telemetry artifacts.
+
+The Rust exporter writes the live-telemetry plane three ways (see
+``rust/src/metrics/export.rs`` and DESIGN.md section 11): a
+schema-versioned JSON time series, a Prometheus text exposition of the
+final per-rank counter snapshot, and a self-contained HTML report.
+These tests pin the JSON and Prometheus contracts from the consumer
+side against synthetic documents shaped exactly like the exporter's
+output, and, when ``MR1S_METRICS_JSON`` / ``MR1S_METRICS_PROM`` point
+at real artifacts (CI sets them to the fig8 smoke bench's exports),
+against those artifacts too.
+"""
+
+import json
+import os
+import re
+
+import pytest
+
+SCHEMA_VERSION = 1
+
+# One JSON object per sample, all cells always present (mirrors
+# rust/src/metrics/telemetry.rs::TelemetryBlock).
+SAMPLE_KEYS = {
+    "vt",
+    "phase",
+    "tasks_done",
+    "tasks_total",
+    "bytes_mapped",
+    "bytes_shuffled",
+    "bytes_reduced",
+    "wait_ns",
+    "ckpt_frames",
+    "heartbeat_vt",
+}
+# Cells that may only grow along a rank's series (virtual time and the
+# cumulative counters; ``phase`` also only advances init->map->reduce->done).
+MONOTONIC_KEYS = [
+    "vt",
+    "phase",
+    "tasks_done",
+    "bytes_mapped",
+    "bytes_shuffled",
+    "bytes_reduced",
+    "wait_ns",
+    "ckpt_frames",
+    "heartbeat_vt",
+]
+HEALTH_KINDS = {"straggler-detected", "slow-progress", "heartbeat-stale"}
+
+# Prometheus text exposition syntax (the subset the exporter emits).
+METRIC_NAME = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+LABEL_RE = re.compile(r'^([a-zA-Z_][a-zA-Z0-9_]*)="([^"\\]*)"$')
+SAMPLE_RE = re.compile(rf"^({METRIC_NAME})(?:\{{([^}}]*)\}})? (\d+)$")
+
+
+def validate_metrics(doc):
+    """Assert ``doc`` is an mr1s JSON metrics document."""
+    assert isinstance(doc, dict), "top level is one object"
+    assert doc["schema"] == SCHEMA_VERSION
+    assert doc["kind"] == "mr1s-metrics"
+    assert isinstance(doc["git_sha"], str) and doc["git_sha"]
+    assert isinstance(doc["config"], str)
+    assert isinstance(doc["sample_every_ns"], int) and doc["sample_every_ns"] >= 0
+
+    series = doc["series"]
+    assert isinstance(series, list)
+    assert doc["ranks"] == len(series), "ranks must count the series"
+    for rank, samples in enumerate(series):
+        assert isinstance(samples, list)
+        for s in samples:
+            assert set(s) == SAMPLE_KEYS, f"rank {rank}: sample keys {sorted(s)}"
+            for key, value in s.items():
+                assert isinstance(value, int) and value >= 0, f"rank {rank}: {key}={value!r}"
+            assert s["phase"] <= 3, f"rank {rank}: unknown phase {s['phase']}"
+        for prev, cur in zip(samples, samples[1:]):
+            for key in MONOTONIC_KEYS:
+                assert prev[key] <= cur[key], (
+                    f"rank {rank}: {key} regressed {prev[key]} -> {cur[key]}"
+                )
+
+    health = doc["health"]
+    assert isinstance(health, list)
+    for ev in health:
+        assert set(ev) == {"vt", "rank", "kind", "detail"}
+        assert isinstance(ev["vt"], int) and ev["vt"] >= 0
+        assert isinstance(ev["rank"], int) and 0 <= ev["rank"] < doc["ranks"]
+        assert ev["kind"] in HEALTH_KINDS, f"unknown health kind {ev['kind']!r}"
+        assert isinstance(ev["detail"], str)
+    return True
+
+
+def validate_prometheus(text):
+    """Assert ``text`` is a well-formed Prometheus exposition.
+
+    Returns ``{(name, labels): value}`` for cross-checking.
+    """
+    helped, typed, seen = set(), {}, {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            name = line.split(" ", 3)[2]
+            assert name not in helped, f"line {lineno}: duplicate HELP for {name}"
+            helped.add(name)
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(" ")
+            name, kind = parts[2], parts[3]
+            assert name in helped, f"line {lineno}: TYPE before HELP for {name}"
+            assert name not in typed, f"line {lineno}: duplicate TYPE for {name}"
+            assert kind in {"counter", "gauge"}, f"line {lineno}: type {kind!r}"
+            typed[name] = kind
+            continue
+        assert not line.startswith("#"), f"line {lineno}: unknown comment {line!r}"
+        m = SAMPLE_RE.match(line)
+        assert m, f"line {lineno}: malformed sample {line!r}"
+        name, labels, value = m.group(1), m.group(2), int(m.group(3))
+        assert name in typed, f"line {lineno}: sample for untyped family {name}"
+        parsed = {}
+        if labels:
+            for pair in labels.split(","):
+                lm = LABEL_RE.match(pair)
+                assert lm, f"line {lineno}: malformed label {pair!r}"
+                assert lm.group(1) not in parsed, f"line {lineno}: duplicate label"
+                parsed[lm.group(1)] = lm.group(2)
+        key = (name, tuple(sorted(parsed.items())))
+        assert key not in seen, f"line {lineno}: duplicate series {key}"
+        seen[key] = value
+    assert seen, "an exposition with no samples monitors nothing"
+    return seen
+
+
+def synthetic_doc():
+    """Shaped exactly like metrics_json's output."""
+
+    def sample(vt, phase, done, total):
+        return {
+            "vt": vt,
+            "phase": phase,
+            "tasks_done": done,
+            "tasks_total": total,
+            "bytes_mapped": done * 1024,
+            "bytes_shuffled": 0,
+            "bytes_reduced": 0,
+            "wait_ns": done * 10,
+            "ckpt_frames": done,
+            "heartbeat_vt": vt,
+        }
+
+    return {
+        "schema": 1,
+        "kind": "mr1s-metrics",
+        "git_sha": "0123abc",
+        "config": "run backend=MR-1S ranks=2 usecase=word-count",
+        "sample_every_ns": 250000,
+        "ranks": 2,
+        "series": [
+            [sample(100, 1, 1, 4), sample(200, 1, 2, 4), sample(300, 3, 4, 4)],
+            [sample(100, 1, 0, 4), sample(200, 1, 1, 4), sample(300, 2, 1, 4)],
+        ],
+        "health": [
+            {
+                "vt": 300,
+                "rank": 1,
+                "kind": "slow-progress",
+                "detail": "rate-ratio=3.00 progress=0.25 eta-ns=900",
+            }
+        ],
+    }
+
+
+SYNTHETIC_PROM = """\
+# HELP mr1s_phase Execution phase code (0=init 1=map 2=reduce 3=done).
+# TYPE mr1s_phase gauge
+mr1s_phase{rank="0"} 3
+mr1s_phase{rank="1"} 2
+# HELP mr1s_tasks_done_total Map tasks completed by the rank (own queue plus stolen).
+# TYPE mr1s_tasks_done_total counter
+mr1s_tasks_done_total{rank="0"} 4
+mr1s_tasks_done_total{rank="1"} 1
+# HELP mr1s_health_events_total Health events emitted by the monitor.
+# TYPE mr1s_health_events_total counter
+mr1s_health_events_total{rank="1",kind="slow-progress"} 1
+"""
+
+
+def test_synthetic_json_validates():
+    assert validate_metrics(json.loads(json.dumps(synthetic_doc())))
+
+
+def test_validator_rejects_counter_regression():
+    doc = synthetic_doc()
+    doc["series"][0][2]["tasks_done"] = 1  # went backwards
+    with pytest.raises(AssertionError, match="regressed"):
+        validate_metrics(doc)
+
+
+def test_validator_rejects_missing_cells():
+    doc = synthetic_doc()
+    del doc["series"][1][0]["wait_ns"]
+    with pytest.raises(AssertionError, match="sample keys"):
+        validate_metrics(doc)
+
+
+def test_validator_rejects_unknown_health_kind():
+    doc = synthetic_doc()
+    doc["health"][0]["kind"] = "cosmic-rays"
+    with pytest.raises(AssertionError, match="health kind"):
+        validate_metrics(doc)
+
+
+def test_synthetic_prometheus_validates():
+    seen = validate_prometheus(SYNTHETIC_PROM)
+    assert seen[("mr1s_tasks_done_total", (("rank", "0"),))] == 4
+    assert seen[("mr1s_health_events_total", (("kind", "slow-progress"), ("rank", "1")))] == 1
+
+
+def test_prometheus_validator_rejects_untyped_family():
+    text = SYNTHETIC_PROM + 'mr1s_mystery{rank="0"} 1\n'
+    with pytest.raises(AssertionError, match="untyped family"):
+        validate_prometheus(text)
+
+
+def test_prometheus_validator_rejects_duplicate_series():
+    text = SYNTHETIC_PROM + 'mr1s_phase{rank="0"} 3\n'
+    with pytest.raises(AssertionError, match="duplicate series"):
+        validate_prometheus(text)
+
+
+def _real(path_env):
+    path = os.environ.get(path_env)
+    if not path:
+        pytest.skip(f"{path_env} not set (no metrics artifact to validate)")
+    with open(path, "r", encoding="utf-8") as f:
+        return f.read()
+
+
+def test_real_json_artifact_when_provided():
+    """CI exports the fig8 smoke metrics and points MR1S_METRICS_JSON at it."""
+    doc = json.loads(_real("MR1S_METRICS_JSON"))
+    assert validate_metrics(doc)
+    # A real run monitors a real fleet: every rank has samples, and the
+    # fleet as a whole made progress.
+    assert doc["ranks"] > 0
+    assert all(len(s) > 0 for s in doc["series"])
+    assert sum(s[-1]["tasks_done"] for s in doc["series"]) > 0
+
+
+def test_real_prometheus_artifact_when_provided():
+    seen = validate_prometheus(_real("MR1S_METRICS_PROM"))
+    names = {name for name, _ in seen}
+    assert "mr1s_tasks_done_total" in names
+    assert "mr1s_heartbeat_vt_ns" in names
+
+
+def test_real_artifacts_agree_when_both_provided():
+    """The .prom snapshot is the JSON series' final sample, rank by rank."""
+    if not (os.environ.get("MR1S_METRICS_JSON") and os.environ.get("MR1S_METRICS_PROM")):
+        pytest.skip("need both MR1S_METRICS_JSON and MR1S_METRICS_PROM")
+    doc = json.loads(_real("MR1S_METRICS_JSON"))
+    seen = validate_prometheus(_real("MR1S_METRICS_PROM"))
+    for rank, samples in enumerate(doc["series"]):
+        if not samples:
+            continue
+        key = ("mr1s_tasks_done_total", (("rank", str(rank)),))
+        assert seen[key] == samples[-1]["tasks_done"], f"rank {rank} snapshot differs"

@@ -20,7 +20,7 @@
 
 use std::sync::Arc;
 
-use mr1s::bench::{record, section, write_json, Sample};
+use mr1s::bench::{job_samples, record, section, write_json, Sample};
 use mr1s::harness::Scenario;
 use mr1s::mapreduce::{BackendKind, Job, JobConfig};
 use mr1s::sim::CostModel;
@@ -129,6 +129,11 @@ fn main() {
                         &[rec.replayed_bytes as f64],
                     ),
                 );
+                // Same job-report funnel as fig8: mem-hwm, per-cause
+                // wait decomposition, critical path, health events.
+                for sample in job_samples(&tag, report) {
+                    record(&mut samples, sample);
+                }
             }
         }
     }

@@ -7,16 +7,18 @@
 //! per-rank reduce-load imbalance the shuffle planner removes.
 //!
 //! `cargo bench --bench fig8_skew` runs the smoke profile; `-- --full`
-//! the paper-scaled one.  Emits `BENCH_fig8_skew.json`, and with
+//! the paper-scaled one.  Emits `BENCH_fig8_skew.json`, with
 //! `-- --trace-out PATH` also a Chrome-trace JSON of the most skewed
-//! MR-1S planned run (load in Perfetto; DESIGN.md §9).
+//! MR-1S planned run (load in Perfetto; DESIGN.md §9), and with
+//! `-- --metrics-out PATH` that run's live-telemetry export (JSON +
+//! Prometheus + HTML; DESIGN.md §11).
 
 use std::sync::Arc;
 
-use mr1s::bench::{imbalance_samples, record, section, trace_samples, write_json_with_config, Sample};
+use mr1s::bench::{job_samples, record, section, write_json_with_config, Sample};
 use mr1s::harness::Scenario;
 use mr1s::mapreduce::{BackendKind, Job, JobConfig, RouteConfig};
-use mr1s::metrics::tracer;
+use mr1s::metrics::{tracer, write_metrics};
 use mr1s::sim::CostModel;
 use mr1s::usecases::InvertedIndex;
 
@@ -26,6 +28,11 @@ fn main() {
     let trace_out = args
         .iter()
         .position(|a| a == "--trace-out")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let metrics_out = args
+        .iter()
+        .position(|a| a == "--metrics-out")
         .and_then(|i| args.get(i + 1))
         .cloned();
     let base = if full { Scenario::default() } else { Scenario::smoke() };
@@ -62,20 +69,28 @@ fn main() {
                         &[out.report.elapsed_ns as f64],
                     ),
                 );
-                for sample in imbalance_samples(&tag, &out.report) {
-                    record(&mut samples, sample);
-                }
-                for sample in trace_samples(&tag, &out.report) {
+                for sample in job_samples(&tag, &out.report) {
                     record(&mut samples, sample);
                 }
                 // Export the most skewed MR-1S planned run as the
-                // representative trace artifact.
+                // representative trace + telemetry artifacts.
                 if s == 1.4 && backend == BackendKind::OneSided && route_name == "planned" {
                     if let Some(path) = &trace_out {
                         let json =
                             tracer::chrome_trace_json(&out.report.timelines, &out.report.spans);
                         std::fs::write(path, json).expect("trace writes");
                         println!("trace: wrote {path} ({tag})");
+                    }
+                    if let Some(path) = &metrics_out {
+                        write_metrics(
+                            std::path::Path::new(path),
+                            &format!("fig8_skew {tag} ranks={nranks}"),
+                            JobConfig::default().sample_every,
+                            &out.report.telemetry,
+                            &out.report.health,
+                        )
+                        .expect("metrics write");
+                        println!("metrics: wrote {path} ({tag})");
                     }
                 }
             }

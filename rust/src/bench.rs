@@ -145,6 +145,30 @@ pub fn trace_samples(tag: &str, report: &crate::metrics::JobReport) -> Vec<Sampl
     out
 }
 
+/// The one job-report → bench-sample funnel: every whole-job bench
+/// records the same series for a tagged run — the reduce-imbalance set,
+/// the trace set (wait-by-cause + critical path), the memory high-water
+/// mark (bytes and when it peaked), and the health-event count — so
+/// every job bench's JSON carries like-for-like columns regardless of
+/// which figure it drives.
+pub fn job_samples(tag: &str, report: &crate::metrics::JobReport) -> Vec<Sample> {
+    let mut out = imbalance_samples(tag, report);
+    out.extend(trace_samples(tag, report));
+    out.push(Sample::from_measurements(
+        format!("{tag}_mem_hwm_bytes"),
+        &[report.peak_memory_bytes as f64],
+    ));
+    out.push(Sample::from_measurements(
+        format!("{tag}_mem_hwm_vt_ns"),
+        &[report.mem_hwm_vt_ns as f64],
+    ));
+    out.push(Sample::from_measurements(
+        format!("{tag}_health_events"),
+        &[report.health.len() as f64],
+    ));
+    out
+}
+
 /// JSON-summary schema version.  Bumped to 2 when run metadata
 /// (`git_sha`, `config`) joined the top level; consumers must ignore
 /// unknown top-level keys.

@@ -88,11 +88,12 @@ USAGE:
            [--route modulo|planned[:split=K]|coded[:r=R]]
            [--checkpoints] [--flush-epochs] [--stealing] [--no-kernel]
            [--faults kill:rank=R@phase=map|reduce[,slow:rank=R@factor=F][,torn:rank=R]]
-           [--top N] [--trace-out PATH]
+           [--top N] [--trace-out PATH] [--metrics-out PATH] [--sample-every NS]
   mr1s pipeline --input <PATH> [--usecase tfidf|join] [--backend 1s|2s]
            [--ranks N] [--task-size S] [--win-size S] [--chunk-size S]
            [--route modulo|planned[:split=K]|coded[:r=R]] [--stealing]
            [--no-kernel] [--timeline] [--top N] [--trace-out PATH]
+           [--metrics-out PATH] [--sample-every NS]
   mr1s compare --input <PATH> [--ranks N] [--unbalanced]
   mr1s figures --fig <ID|all> [--smoke]
   mr1s help
@@ -109,6 +110,18 @@ shuffle volume ~Rx on shuffle-bound jobs (DESIGN.md section 8).
 chrome://tracing): one track per rank with phase intervals, protocol-op
 and cause-attributed wait slices, and flow arrows on cross-rank
 dependency edges (DESIGN.md section 9).
+--sample-every sets the live-telemetry monitor's cadence in virtual ns
+(default 250000; 0 disables the plane).  Workers publish progress
+counters into their own window region with local atomic stores; on
+MR-1S rank 0 samples the fleet with pure one-sided reads (workers never
+participate), on MR-2S sampling rides the backend's own collective
+rounds.  An online detector flags stragglers and stale heartbeats:
+events land in the summary as health=, in the trace as spans, and feed
+job stealing victim choice (DESIGN.md section 11).
+--metrics-out PATH exports the sampled series three ways: JSON time
+series at PATH, Prometheus exposition text at PATH.prom, and a
+self-contained HTML report (SVG sparklines, CoV-over-time, health
+markers) at PATH.html.
 --faults injects a deterministic fault plan: kill a rank mid-map or
 pre-combine, slow a rank's map compute by a factor, or tear its last
 checkpoint frame.  A killed rank is detected by the survivors, its
@@ -197,6 +210,11 @@ fn job_config(flags: &Flags) -> Result<JobConfig> {
         faults: flags.get("faults").map(str::parse).transpose()?,
         ..Default::default()
     };
+    if let Some(s) = flags.get("sample-every") {
+        cfg.sample_every = s
+            .parse()
+            .map_err(|_| Error::Config("bad --sample-every (virtual ns; 0 disables)".into()))?;
+    }
     if flags.has("unbalanced") {
         let ntasks = std::fs::metadata(input)
             .map(|m| (m.len() as usize).div_ceil(cfg.task_size))
@@ -230,12 +248,29 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
         s.parse::<usize>().map_err(|_| Error::Config("bad --top".into()))
     })?;
 
+    let sample_every = cfg.sample_every;
+    let cfg_line = format!(
+        "run backend={} ranks={nranks} usecase={} input={}",
+        backend.name(),
+        usecase.name(),
+        cfg.input.display()
+    );
     let out = Job::new(usecase.clone(), cfg)?.run(backend, nranks, CostModel::default())?;
     println!("{}", out.report.summary());
     if let Some(path) = flags.get("trace-out") {
         let json = tracer::chrome_trace_json(&out.report.timelines, &out.report.spans);
         std::fs::write(path, json)?;
         println!("trace: wrote {path}");
+    }
+    if let Some(path) = flags.get("metrics-out") {
+        crate::metrics::write_metrics(
+            std::path::Path::new(path),
+            &cfg_line,
+            sample_every,
+            &out.report.telemetry,
+            &out.report.health,
+        )?;
+        println!("metrics: wrote {path} (+ .prom, .html)");
     }
     if std::env::var_os("MR1S_DEBUG_PHASES").is_some() {
         for (r, b) in out.report.breakdowns.iter().enumerate() {
@@ -342,7 +377,7 @@ fn cmd_pipeline(flags: &Flags) -> Result<i32> {
     let top = flags.get("top").map_or(Ok(10), |s| {
         s.parse::<usize>().map_err(|_| Error::Config("bad --top".into()))
     })?;
-    let base = JobConfig {
+    let mut base = JobConfig {
         input: input.into(),
         task_size: flags.size("task-size", 128 << 10)?,
         win_size: flags.size("win-size", 1 << 20)?,
@@ -352,6 +387,12 @@ fn cmd_pipeline(flags: &Flags) -> Result<i32> {
         route: flags.get("route").map_or(Ok(RouteConfig::Modulo), |s| s.parse())?,
         ..Default::default()
     };
+    if let Some(s) = flags.get("sample-every") {
+        base.sample_every = s
+            .parse()
+            .map_err(|_| Error::Config("bad --sample-every (virtual ns; 0 disables)".into()))?;
+    }
+    let sample_every = base.sample_every;
     let plan = plans::by_name(which, input.into(), backend).expect("canonical name resolves");
     let pipe = Pipeline::new(plan, nranks, CostModel::default(), base)?;
     let out = pipe.run()?;
@@ -380,6 +421,18 @@ fn cmd_pipeline(flags: &Flags) -> Result<i32> {
         let json = tracer::chrome_trace_json(&out.merged_timelines(), &out.merged_spans());
         std::fs::write(path, json)?;
         println!("trace: wrote {path}");
+    }
+    if let Some(path) = flags.get("metrics-out") {
+        let cfg_line =
+            format!("pipeline {which} backend={} ranks={nranks} input={input}", backend.name());
+        crate::metrics::write_metrics(
+            std::path::Path::new(path),
+            &cfg_line,
+            sample_every,
+            &out.merged_telemetry(),
+            &out.merged_health(),
+        )?;
+        println!("metrics: wrote {path} (+ .prom, .html)");
     }
 
     // Intermediate spills are only needed while stages run.

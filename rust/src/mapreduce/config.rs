@@ -158,6 +158,11 @@ pub struct JobConfig {
     /// a rank death / slowdown / torn checkpoint write and recover.
     /// `None` = fault-free run.
     pub faults: Option<FaultPlan>,
+    /// Virtual ns between live-telemetry monitor samples
+    /// (`--sample-every`, DESIGN.md §11): rank 0 reads every rank's
+    /// telemetry block this often on MR-1S; MR-2S allgathers blocks at
+    /// phase boundaries when nonzero.  0 disables the telemetry plane.
+    pub sample_every: u64,
 }
 
 impl Default for JobConfig {
@@ -176,6 +181,7 @@ impl Default for JobConfig {
             checkpoint_dir: std::env::temp_dir(),
             skew: Vec::new(),
             faults: None,
+            sample_every: 250_000, // 250 µs virtual cadence
         }
     }
 }

@@ -7,6 +7,8 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::fault::{RecoveryCtx, ReplayLog};
+use crate::metrics::straggler::STALE_AFTER_NS;
+use crate::metrics::telemetry::{HealthEvent, HealthKind, TelemetryPlane};
 use crate::metrics::tracer::{self, op, Span, WaitCause};
 use crate::metrics::{JobReport, MemoryTracker, PhaseBreakdown, RecoveryReport, Timeline};
 use crate::mpi::{RankCtx, Universe};
@@ -147,6 +149,11 @@ pub struct JobShared {
     /// checkpoint replay log and recovery accounting shared by all
     /// surviving ranks (see `crate::fault`).  `None` on normal runs.
     pub recovery: Option<Arc<RecoveryCtx>>,
+    /// Live-telemetry plane (DESIGN.md §11): per-rank ring series the
+    /// monitor samples into, plus the detector's health events and
+    /// steal hint.  One plane spans both attempts of a faulted run, so
+    /// attempt 1's observations survive the attempt being discarded.
+    pub telemetry: Arc<TelemetryPlane>,
 }
 
 impl JobShared {
@@ -653,6 +660,7 @@ impl Job {
             return Err(Error::Config("empty input".into()));
         }
         let engine = if self.config.use_kernel { cached_engine() } else { None };
+        let telemetry = Arc::new(TelemetryPlane::new(nranks));
         let shared = Arc::new(JobShared {
             config: self.config.clone(),
             usecase: self.usecase.clone(),
@@ -665,6 +673,7 @@ impl Job {
             pipelined: stage.pipelined,
             stage: stage.stage,
             recovery: None,
+            telemetry: telemetry.clone(),
         });
 
         let backend_impl: Arc<dyn Backend> = match backend {
@@ -743,6 +752,10 @@ impl Job {
                 pipelined: shared.pipelined,
                 stage: shared.stage,
                 recovery: Some(rc.clone()),
+                // The same plane: attempt 1's samples and events stay,
+                // and attempt 2's virtual times resume past the loss,
+                // so the series remain time-ordered.
+                telemetry: telemetry.clone(),
             });
             nranks_eff = nranks - 1;
             mem_tracker = degraded.mem.clone();
@@ -828,6 +841,7 @@ impl Job {
             }
         });
 
+        let (telemetry_series, health) = telemetry.snapshot();
         let report = JobReport {
             backend: backend.name(),
             nranks: nranks_eff,
@@ -850,6 +864,8 @@ impl Job {
             unique_keys,
             total_count,
             recovery,
+            telemetry: telemetry_series,
+            health,
         };
         Ok(JobOutput { report, result })
     }
@@ -942,6 +958,26 @@ pub fn timed_wait<T>(
 /// export, and the critical path like any other stall.
 pub fn recovery_prologue(ctx: &RankCtx, shared: &JobShared, timeline: &Timeline) {
     if let Some(rc) = &shared.recovery {
+        // The monitor's view of the death: the victim's heartbeat went
+        // stale `STALE_AFTER_NS` before the loss was globally
+        // established at `resume_vt` (detection adds `DETECT_NS` past
+        // the death, so the stale observation strictly precedes it).
+        // Rank 0 of the degraded world stamps the health event and its
+        // trace span before paying the detection wait, keeping span end
+        // times monotone.
+        if ctx.rank() == 0 && shared.config.sample_every > 0 {
+            let stale_vt = rc.resume_vt.saturating_sub(STALE_AFTER_NS);
+            let t0 = ctx.clock.now();
+            if stale_vt > t0 {
+                tracer::record(op::HEALTH, t0, stale_vt, 0, Some(rc.dead_rank), None);
+            }
+            shared.telemetry.push_event(HealthEvent {
+                vt: stale_vt,
+                rank: rc.dead_rank,
+                kind: HealthKind::HeartbeatStale,
+                detail: format!("no heartbeat since loss; detection at vt={}", rc.resume_vt),
+            });
+        }
         timed_wait(ctx, timeline, WaitCause::Detect, || ctx.clock.sync_to(rc.resume_vt));
         timed_wait(ctx, timeline, WaitCause::Replan, || {
             ctx.clock.advance(crate::fault::REPLAN_NS);

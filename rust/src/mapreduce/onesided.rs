@@ -31,6 +31,11 @@
 
 use crate::error::Result;
 use crate::fault::{self, FaultPhase};
+use crate::metrics::straggler::StragglerDetector;
+use crate::metrics::telemetry::{
+    TelemetryBlock, TelemetrySample, PHASE_DONE, PHASE_MAP, PHASE_REDUCE, TELEM_BYTES,
+    TELEM_CELLS,
+};
 use crate::metrics::tracer::{self, op, WaitCause};
 use crate::metrics::{EventKind, Timeline};
 use crate::mpi::{LockKind, RankCtx, Window};
@@ -89,9 +94,15 @@ fn c_seg_disp(target: usize, seg: usize) -> u64 {
     c_fill(target) + 8 + seg as u64 * 8
 }
 
-/// Control-window region size for `nranks`.
+/// Telemetry block base displacement in a rank's control region: nine
+/// fixed cells after the bucket cells (DESIGN.md §11).
+fn c_telem(nranks: usize) -> u64 {
+    C_BUCKET_BASE + (nranks * (1 + MAX_SEGS)) as u64 * 8
+}
+
+/// Control-window region size for `nranks` (bucket + telemetry cells).
 fn ctrl_size(nranks: usize) -> usize {
-    (C_BUCKET_BASE as usize) + nranks * (1 + MAX_SEGS) * 8
+    c_telem(nranks) as usize + TELEM_BYTES
 }
 
 /// Local bookkeeping for one outgoing bucket (me → target).
@@ -100,6 +111,112 @@ struct OutBucket {
     seg_disps: Vec<u64>,
     fill: u64,
     closed: bool,
+}
+
+/// Worker-side telemetry publisher: mirrors this rank's progress block
+/// into its own telemetry cells with *local* atomic stores.  A store
+/// whose target is the caller skips the latency advance, so publishing
+/// is free on the virtual clock and the tracer drops the zero-duration
+/// op — the worker never records a telemetry span and never waits on
+/// the monitor (DESIGN.md §11).
+struct TelemetryCells {
+    base: u64,
+    on: bool,
+    block: TelemetryBlock,
+}
+
+impl TelemetryCells {
+    fn new(shared: &JobShared, ctx: &RankCtx) -> Self {
+        TelemetryCells {
+            base: c_telem(ctx.nranks()),
+            on: shared.config.sample_every > 0,
+            block: TelemetryBlock::default(),
+        }
+    }
+
+    /// Publish the whole block into this rank's own cells, stamping the
+    /// heartbeat with the current virtual time.
+    fn publish(&mut self, ctx: &RankCtx, ctrl: &Window) -> Result<()> {
+        if !self.on {
+            return Ok(());
+        }
+        self.block.heartbeat_vt = ctx.clock.now();
+        for (i, v) in self.block.cells().iter().enumerate() {
+            ctrl.atomic_store(&ctx.clock, ctx.rank(), self.base + (i as u64) * 8, *v)?;
+        }
+        Ok(())
+    }
+}
+
+/// Rank 0's sampling monitor: on a virtual-clock cadence it reads every
+/// rank's telemetry cells with one-sided atomic loads (`MPI_Fetch_and_op`
+/// + `MPI_NO_OP` — charges only the monitor's clock and never syncs the
+/// reader to a writer's virtual future), folds the blocks into the
+/// job-wide [`TelemetryPlane`](crate::metrics::telemetry::TelemetryPlane)
+/// ring buffers and runs the online straggler detector over them.
+struct Monitor {
+    every: u64,
+    next_vt: u64,
+    base: u64,
+    detector: StragglerDetector,
+}
+
+impl Monitor {
+    /// Monitors exist only on rank 0 and only when sampling is enabled.
+    fn new(shared: &JobShared, ctx: &RankCtx) -> Option<Monitor> {
+        let every = shared.config.sample_every;
+        if ctx.rank() != 0 || every == 0 {
+            return None;
+        }
+        Some(Monitor {
+            every,
+            next_vt: every,
+            base: c_telem(ctx.nranks()),
+            detector: StragglerDetector::new(ctx.nranks(), every),
+        })
+    }
+
+    /// Run a sampling round if the cadence came due.
+    fn maybe_sample(&mut self, ctx: &RankCtx, ctrl: &Window, shared: &JobShared) -> Result<()> {
+        if ctx.clock.now() < self.next_vt {
+            return Ok(());
+        }
+        self.sample(ctx, ctrl, shared)
+    }
+
+    /// One sampling round: pull all blocks, record, detect.
+    fn sample(&mut self, ctx: &RankCtx, ctrl: &Window, shared: &JobShared) -> Result<()> {
+        let n = ctx.nranks();
+        let t0 = ctx.clock.now();
+        let mut blocks = Vec::with_capacity(n);
+        for r in 0..n {
+            let mut cells = [0u64; TELEM_CELLS];
+            for (i, c) in cells.iter_mut().enumerate() {
+                *c = ctrl.atomic_load(&ctx.clock, r, self.base + (i as u64) * 8)?;
+            }
+            blocks.push(TelemetryBlock::from_cells(cells));
+        }
+        let vt = ctx.clock.now();
+        tracer::record(
+            op::TELEMETRY_SAMPLE,
+            t0,
+            vt,
+            (TELEM_BYTES * n.saturating_sub(1)) as u64,
+            None,
+            None,
+        );
+        for (r, b) in blocks.iter().enumerate() {
+            shared.telemetry.record_sample(r, TelemetrySample { vt, block: *b });
+        }
+        for ev in self.detector.observe(vt, &blocks) {
+            let rank = ev.rank;
+            if shared.telemetry.push_event(ev) {
+                tracer::record(op::HEALTH, t0, vt, 0, Some(rank), None);
+            }
+        }
+        self.next_vt = vt + self.every;
+        Ok(())
+    }
 }
 
 /// Atomic task claiming over the control window (the paper's §6
@@ -154,16 +271,32 @@ impl TaskClaimer<'_> {
         loop {
             let t0 = ctx.clock.now();
             let mut best: Option<(usize, usize)> = None;
-            for v in 0..ctx.nranks() {
-                if v == me {
-                    continue;
+            // Health-guided preference (DESIGN.md §11): a rank the online
+            // detector flagged as a straggler is stolen from first when
+            // it still has a real backlog.  The hint only reorders victim
+            // choice — the fetch_add claim protocol (and thus the job
+            // result) is unchanged.
+            if let Some(h) = self.shared.telemetry.steal_hint(ctx.clock.now()) {
+                if h != me && h < ctx.nranks() {
+                    let next = ctrl.atomic_load(&ctx.clock, h, C_TASK_NEXT)? as usize;
+                    let remaining = self.queues[h].len().saturating_sub(next);
+                    if remaining >= 2 {
+                        best = Some((h, remaining));
+                    }
                 }
-                let next = ctrl.atomic_load(&ctx.clock, v, C_TASK_NEXT)? as usize;
-                let remaining = self.queues[v].len().saturating_sub(next);
-                // Require a real backlog (>= 2): stealing a victim's
-                // final task usually just moves it to a *later* finisher.
-                if remaining >= 2 && best.map_or(true, |(_, r)| remaining > r) {
-                    best = Some((v, remaining));
+            }
+            if best.is_none() {
+                for v in 0..ctx.nranks() {
+                    if v == me {
+                        continue;
+                    }
+                    let next = ctrl.atomic_load(&ctx.clock, v, C_TASK_NEXT)? as usize;
+                    let remaining = self.queues[v].len().saturating_sub(next);
+                    // Require a real backlog (>= 2): stealing a victim's
+                    // final task usually just moves it to a *later* finisher.
+                    if remaining >= 2 && best.map_or(true, |(_, r)| remaining > r) {
+                        best = Some((v, remaining));
+                    }
                 }
             }
             tracer::record(op::STEAL_ATTEMPT, t0, ctx.clock.now(), 0, None, None);
@@ -324,6 +457,17 @@ impl Backend for Mr1s {
             gate_base_vt: shared.start_vts.iter().copied().min().unwrap_or(0),
         };
         let prefetcher = Prefetcher::new(shared.file.clone());
+
+        // Telemetry: publish the initial Map-phase block and start the
+        // rank-0 monitor.  Workers only ever *store locally*; the
+        // monitor only ever *loads remotely* — the decoupling invariant
+        // of the plane (DESIGN.md §11).
+        let mut telem = TelemetryCells::new(shared, ctx);
+        let mut monitor = Monitor::new(shared, ctx);
+        telem.block.phase = PHASE_MAP;
+        telem.block.tasks_total = queues[me].len() as u64;
+        telem.publish(ctx, &ctrl)?;
+
         let mut input_bytes = 0u64;
         let mut pending = claimer.claim(ctx, &ctrl, &prefetcher)?;
         let first_read_issue_vt = pending.as_ref().map(|(_, read)| read.issued_vt());
@@ -456,6 +600,7 @@ impl Backend for Mr1s {
                         ckpt_off += frame.len() as u64;
                         Ok(())
                     })?;
+                    telem.block.ckpt_frames += 1;
                 }
             }
             // Fig. 7b variant: redundant lock/unlock to force progress.
@@ -468,6 +613,13 @@ impl Backend for Mr1s {
             // its fair share of tasks — with its checkpoint frames (all
             // but possibly a torn tail) durable for recovery to harvest.
             completed_tasks += 1;
+            telem.block.tasks_done += 1;
+            telem.block.bytes_mapped += task.len as u64;
+            telem.block.wait_ns = tl.total(EventKind::Wait);
+            telem.publish(ctx, &ctrl)?;
+            if let Some(m) = monitor.as_mut() {
+                m.maybe_sample(ctx, &ctrl, shared)?;
+            }
             if let Some(k) = kill {
                 if k.phase == FaultPhase::Map && completed_tasks >= kill_after {
                     return Err(die(ctx, &mut checkpoint, torn));
@@ -572,6 +724,7 @@ impl Backend for Mr1s {
                         ckpt_off += frame.len() as u64;
                         Ok(())
                     })?;
+                    telem.block.ckpt_frames += 1;
                 }
                 // Same real-time visibility fence as the planned flush
                 // (see below): publications virtually precede any close.
@@ -631,6 +784,7 @@ impl Backend for Mr1s {
                         ckpt_off += frame.len() as u64;
                         Ok(())
                     })?;
+                    telem.block.ckpt_frames += 1;
                 }
                 // Every rank's routed flush starts at the plan's publish
                 // time, so *virtually* all flushes complete before any
@@ -645,11 +799,17 @@ impl Backend for Mr1s {
         };
 
         // ---- Status -> REDUCE (atomic put: Accumulate + REPLACE) -----
+        telem.block.phase = PHASE_REDUCE;
+        telem.block.wait_ns = tl.total(EventKind::Wait);
+        telem.publish(ctx, &ctrl)?;
         ctrl.atomic_store(&ctx.clock, me, C_STATUS, STATUS_REDUCE)?;
 
         // ---- Reduce: close + pull every peer's bucket for me ---------
         timed(ctx, &tl, EventKind::Reduce, || -> Result<()> {
             for s in 0..n {
+                if let Some(m) = monitor.as_mut() {
+                    m.maybe_sample(ctx, &ctrl, shared)?;
+                }
                 if s == me {
                     continue;
                 }
@@ -745,6 +905,16 @@ impl Backend for Mr1s {
             })?;
         }
         shared.mem.alloc(ctx.clock.now(), reduce_table.bytes() as u64);
+
+        // Reduce-side ingest is final; publish it before Combine.
+        telem.block.bytes_shuffled = reduce_ingest_bytes;
+        telem.block.bytes_reduced = (reduce_table.bytes() + retained.bytes()) as u64;
+        telem.block.wait_ns = tl.total(EventKind::Wait);
+        telem.publish(ctx, &ctrl)?;
+        if let Some(m) = monitor.as_mut() {
+            m.maybe_sample(ctx, &ctrl, shared)?;
+        }
+
         if cfg.flush_epochs {
             ctrl.lock(&ctx.clock, LockKind::Shared, me)?;
             ctrl.unlock(&ctx.clock, LockKind::Shared, me);
@@ -791,6 +961,7 @@ impl Backend for Mr1s {
                 ckpt.sync(ctx, ckpt_off, &frame)?;
                 ckpt.drain(ctx)?;
                 tl.record(t0, ctx.clock.now(), EventKind::Checkpoint);
+                telem.block.ckpt_frames += 1;
             }
 
             let mut level = 1usize;
@@ -854,7 +1025,16 @@ impl Backend for Mr1s {
         })?;
         shared.mem.free(ctx.clock.now(), reduce_table_bytes + retained_bytes);
 
+        // Final telemetry: publish DONE, then (rank 0 — the root of the
+        // merge tree, so virtually the last to get here) one forced
+        // sweep so the plane's terminal sample observes the whole fleet.
+        telem.block.phase = PHASE_DONE;
+        telem.block.wait_ns = tl.total(EventKind::Wait);
+        telem.publish(ctx, &ctrl)?;
         ctrl.atomic_store(&ctx.clock, me, C_STATUS, STATUS_DONE)?;
+        if let Some(m) = monitor.as_mut() {
+            m.sample(ctx, &ctrl, shared)?;
+        }
         if let Some(ckpt) = checkpoint.as_mut() {
             ckpt.drain(ctx)?;
         }

@@ -14,7 +14,11 @@
 
 use crate::error::Result;
 use crate::fault::{self, FaultPhase};
-use crate::metrics::tracer::WaitCause;
+use crate::metrics::straggler::StragglerDetector;
+use crate::metrics::telemetry::{
+    TelemetryBlock, TelemetrySample, PHASE_DONE, PHASE_MAP, PHASE_REDUCE,
+};
+use crate::metrics::tracer::{self, op, WaitCause};
 use crate::metrics::{EventKind, Timeline};
 use crate::mpi::RankCtx;
 use crate::shuffle::{
@@ -32,6 +36,46 @@ use super::kv::{self, ValueOps};
 
 /// Message tag for Combine-tree run transfers.
 const TAG_COMBINE: u64 = 0xC0;
+
+/// Telemetry on the coupled backend is itself coupled: the fleet
+/// allgathers its encoded progress blocks (one more collective round,
+/// charged as a barrier wait) and rank 0 folds them into the plane and
+/// the online detector.  The contrast with MR-1S's zero-participation
+/// one-sided monitor is the point (DESIGN.md §11).
+fn telemetry_round(
+    ctx: &RankCtx,
+    shared: &JobShared,
+    tl: &Timeline,
+    detector: &mut Option<StragglerDetector>,
+    block: &mut TelemetryBlock,
+) -> Result<()> {
+    if shared.config.sample_every == 0 {
+        return Ok(());
+    }
+    let t0 = ctx.clock.now();
+    block.heartbeat_vt = t0;
+    let blobs = timed_wait(ctx, tl, WaitCause::Barrier, || {
+        ctx.multicast_round(block.encode().to_vec())
+    })?;
+    if ctx.rank() != 0 {
+        return Ok(());
+    }
+    let vt = ctx.clock.now();
+    let blocks: Vec<TelemetryBlock> =
+        blobs.iter().map(|b| TelemetryBlock::decode(b).unwrap_or_default()).collect();
+    for (r, b) in blocks.iter().enumerate() {
+        shared.telemetry.record_sample(r, TelemetrySample { vt, block: *b });
+    }
+    if let Some(det) = detector.as_mut() {
+        for ev in det.observe(vt, &blocks) {
+            let rank = ev.rank;
+            if shared.telemetry.push_event(ev) {
+                tracer::record(op::HEALTH, t0, vt, 0, Some(rank), None);
+            }
+        }
+    }
+    Ok(())
+}
 
 /// The MapReduce-2S backend.
 pub struct Mr2s;
@@ -85,6 +129,15 @@ impl Backend for Mr2s {
         })?;
         let rounds = ctx.allreduce_u64(my_tasks.len() as u64, u64::max)? as usize;
 
+        // Telemetry: the coupled plane (rank 0 detector + per-round
+        // collective block exchange).
+        let mut telem = TelemetryBlock::default();
+        let mut detector = (me == 0 && shared.config.sample_every > 0)
+            .then(|| StragglerDetector::new(n, shared.config.sample_every));
+        telem.phase = PHASE_MAP;
+        telem.tasks_total = my_tasks.len() as u64;
+        telemetry_round(ctx, shared, &tl, &mut detector, &mut telem)?;
+
         // Checkpoint stream (the recovery source): one frame per
         // completed map task, the same framing as MR-1S.  The coded
         // route maps into per-batch tables and is rejected alongside
@@ -114,6 +167,13 @@ impl Backend for Mr2s {
         let mut input_bytes = 0u64;
         let mut first_read_issue_vt = None;
         for round in 0..rounds {
+            // Every rank joins the round's telemetry exchange before its
+            // collective read — in-flight progress on a backend whose
+            // only sampling opportunities are its sync points.
+            if round > 0 {
+                telem.wait_ns = tl.total(EventKind::Wait);
+                telemetry_round(ctx, shared, &tl, &mut detector, &mut telem)?;
+            }
             let task = my_tasks.get(round);
             // A recovering run adopts checkpointed tasks from the replay
             // log instead of re-reading and re-mapping them.
@@ -171,6 +231,7 @@ impl Backend for Mr2s {
                             ckpt.sync(ctx, ckpt_off, &frame)
                         })?;
                         ckpt_off += frame.len() as u64;
+                        telem.ckpt_frames += 1;
                         for rec in kv::RecordIter::new(&payload) {
                             table.merge_record(rec?, &ops);
                         }
@@ -183,6 +244,8 @@ impl Backend for Mr2s {
                 }
             }
             completed_tasks += 1;
+            telem.tasks_done += 1;
+            telem.bytes_mapped += task.len as u64;
             if let Some(k) = kill {
                 if k.phase == FaultPhase::Map && completed_tasks >= kill_after {
                     return Err(die(ctx, &mut checkpoint, torn));
@@ -192,6 +255,11 @@ impl Backend for Mr2s {
         let staging_bytes = all_staging.bytes() as u64
             + batch_tables.iter().map(|t| t.bytes() as u64).sum::<u64>();
         shared.mem.alloc(ctx.clock.now(), staging_bytes);
+
+        // Map → Reduce boundary exchange.
+        telem.phase = PHASE_REDUCE;
+        telem.wait_ns = tl.total(EventKind::Wait);
+        telemetry_round(ctx, shared, &tl, &mut detector, &mut telem)?;
 
         // ---- Shuffle route ------------------------------------------
         // The collective backend stays collective: planned routing
@@ -334,6 +402,12 @@ impl Backend for Mr2s {
             + decoded_segs.iter().map(|b| b.len() as u64).sum::<u64>();
         let reduce_keys = reduce_table.len() as u64;
 
+        // Reduce done: publish final ingest/output volumes.
+        telem.bytes_shuffled = reduce_bytes;
+        telem.bytes_reduced = reduce_table_bytes;
+        telem.wait_ns = tl.total(EventKind::Wait);
+        telemetry_round(ctx, shared, &tl, &mut detector, &mut telem)?;
+
         // Kill point: phase=reduce fires after this rank folded its
         // reduce input, before it joins the Combine tree.  The victim's
         // parent detects the loss from inside its blocking recv; other
@@ -383,6 +457,11 @@ impl Backend for Mr2s {
             Ok(())
         })?;
         shared.mem.free(ctx.clock.now(), reduce_table_bytes);
+
+        // Terminal exchange: every rank reports DONE.
+        telem.phase = PHASE_DONE;
+        telem.wait_ns = tl.total(EventKind::Wait);
+        telemetry_round(ctx, shared, &tl, &mut detector, &mut telem)?;
 
         // Checkpoint durability: wait out any in-flight frame flushes
         // before reporting completion (same contract as MR-1S).

@@ -1,0 +1,479 @@
+//! Metrics export for `--metrics-out PATH` (DESIGN.md §11).
+//!
+//! One call writes the sampled telemetry three ways:
+//!
+//! * **`PATH`** — schema-versioned JSON time series (the machine
+//!   format, validated by `python/tests/test_metrics_export.py`).
+//! * **`PATH.prom`** — Prometheus text exposition of the final
+//!   per-rank counter snapshot plus health-event counts.
+//! * **`PATH.html`** — a self-contained HTML report with an inline SVG
+//!   progress sparkline per rank, the fleet's progress CoV over time,
+//!   and health-event markers.
+
+use std::io;
+use std::path::Path;
+
+use crate::bench::git_sha;
+use crate::metrics::telemetry::{phase_label, HealthEvent, TelemetrySample};
+
+/// Version of the JSON metrics schema (bumped on breaking changes,
+/// mirroring `bench::JSON_SCHEMA_VERSION` for `BENCH_*.json`).
+pub const METRICS_SCHEMA_VERSION: u32 = 1;
+
+/// Write the JSON series to `path` and the Prometheus/HTML renderings
+/// beside it (extension swapped to `.prom` / `.html`).
+pub fn write_metrics(
+    path: &Path,
+    config: &str,
+    sample_every_ns: u64,
+    series: &[Vec<TelemetrySample>],
+    health: &[HealthEvent],
+) -> io::Result<()> {
+    std::fs::write(path, metrics_json(config, sample_every_ns, series, health))?;
+    std::fs::write(path.with_extension("prom"), prometheus_text(series, health))?;
+    std::fs::write(path.with_extension("html"), html_report(config, series, health))?;
+    Ok(())
+}
+
+/// The JSON time-series document (one object; series indexed by rank).
+pub fn metrics_json(
+    config: &str,
+    sample_every_ns: u64,
+    series: &[Vec<TelemetrySample>],
+    health: &[HealthEvent],
+) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"schema\": {},\n", METRICS_SCHEMA_VERSION));
+    out.push_str("  \"kind\": \"mr1s-metrics\",\n");
+    out.push_str(&format!("  \"git_sha\": \"{}\",\n", json_escape(&git_sha())));
+    out.push_str(&format!("  \"config\": \"{}\",\n", json_escape(config)));
+    out.push_str(&format!("  \"sample_every_ns\": {},\n", sample_every_ns));
+    out.push_str(&format!("  \"ranks\": {},\n", series.len()));
+    out.push_str("  \"series\": [\n");
+    for (r, samples) in series.iter().enumerate() {
+        out.push_str("    [");
+        for (i, s) in samples.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n     ");
+            }
+            let b = &s.block;
+            out.push_str(&format!(
+                "{{\"vt\": {}, \"phase\": {}, \"tasks_done\": {}, \"tasks_total\": {}, \
+                 \"bytes_mapped\": {}, \"bytes_shuffled\": {}, \"bytes_reduced\": {}, \
+                 \"wait_ns\": {}, \"ckpt_frames\": {}, \"heartbeat_vt\": {}}}",
+                s.vt,
+                b.phase,
+                b.tasks_done,
+                b.tasks_total,
+                b.bytes_mapped,
+                b.bytes_shuffled,
+                b.bytes_reduced,
+                b.wait_ns,
+                b.ckpt_frames,
+                b.heartbeat_vt
+            ));
+        }
+        out.push(']');
+        out.push_str(if r + 1 < series.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"health\": [\n");
+    for (i, ev) in health.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"vt\": {}, \"rank\": {}, \"kind\": \"{}\", \"detail\": \"{}\"}}{}\n",
+            ev.vt,
+            ev.rank,
+            ev.kind.label(),
+            json_escape(&ev.detail),
+            if i + 1 < health.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+/// Prometheus text exposition of the final per-rank snapshot.
+pub fn prometheus_text(series: &[Vec<TelemetrySample>], health: &[HealthEvent]) -> String {
+    struct Family {
+        name: &'static str,
+        kind: &'static str,
+        help: &'static str,
+        cell: fn(&TelemetrySample) -> u64,
+    }
+    let families: &[Family] = &[
+        Family {
+            name: "mr1s_phase",
+            kind: "gauge",
+            help: "Execution phase code (0=init 1=map 2=reduce 3=done).",
+            cell: |s| s.block.phase,
+        },
+        Family {
+            name: "mr1s_tasks_done_total",
+            kind: "counter",
+            help: "Map tasks completed by the rank (own queue plus stolen).",
+            cell: |s| s.block.tasks_done,
+        },
+        Family {
+            name: "mr1s_tasks_assigned",
+            kind: "gauge",
+            help: "Map tasks initially assigned to the rank.",
+            cell: |s| s.block.tasks_total,
+        },
+        Family {
+            name: "mr1s_bytes_mapped_total",
+            kind: "counter",
+            help: "Input bytes mapped.",
+            cell: |s| s.block.bytes_mapped,
+        },
+        Family {
+            name: "mr1s_bytes_shuffled_total",
+            kind: "counter",
+            help: "Shuffle bytes ingested.",
+            cell: |s| s.block.bytes_shuffled,
+        },
+        Family {
+            name: "mr1s_bytes_reduced_total",
+            kind: "counter",
+            help: "Reduce output bytes produced.",
+            cell: |s| s.block.bytes_reduced,
+        },
+        Family {
+            name: "mr1s_wait_ns_total",
+            kind: "counter",
+            help: "Attributed wait virtual nanoseconds.",
+            cell: |s| s.block.wait_ns,
+        },
+        Family {
+            name: "mr1s_checkpoint_frames_total",
+            kind: "counter",
+            help: "Checkpoint frames flushed.",
+            cell: |s| s.block.ckpt_frames,
+        },
+        Family {
+            name: "mr1s_heartbeat_vt_ns",
+            kind: "gauge",
+            help: "Virtual time of the rank's last telemetry publish.",
+            cell: |s| s.block.heartbeat_vt,
+        },
+    ];
+    let mut out = String::new();
+    for fam in families {
+        let lines: Vec<String> = series
+            .iter()
+            .enumerate()
+            .filter_map(|(rank, samples)| samples.last().map(|s| (rank, s)))
+            .map(|(rank, s)| format!("{}{{rank=\"{}\"}} {}", fam.name, rank, (fam.cell)(s)))
+            .collect();
+        if lines.is_empty() {
+            continue;
+        }
+        out.push_str(&format!("# HELP {} {}\n", fam.name, fam.help));
+        out.push_str(&format!("# TYPE {} {}\n", fam.name, fam.kind));
+        for line in lines {
+            out.push_str(&line);
+            out.push('\n');
+        }
+    }
+    if !health.is_empty() {
+        out.push_str("# HELP mr1s_health_events_total Health events emitted by the monitor.\n");
+        out.push_str("# TYPE mr1s_health_events_total counter\n");
+        // Stable order: first emission order, deduplicated label pairs.
+        let mut seen: Vec<(usize, &str, u64)> = Vec::new();
+        for ev in health {
+            match seen.iter_mut().find(|(r, k, _)| *r == ev.rank && *k == ev.kind.label()) {
+                Some(entry) => entry.2 += 1,
+                None => seen.push((ev.rank, ev.kind.label(), 1)),
+            }
+        }
+        for (rank, kind, count) in seen {
+            out.push_str(&format!(
+                "mr1s_health_events_total{{rank=\"{}\",kind=\"{}\"}} {}\n",
+                rank, kind, count
+            ));
+        }
+    }
+    out
+}
+
+/// Self-contained HTML report: per-rank SVG progress sparklines with
+/// health-event markers, and the fleet progress-CoV series.
+pub fn html_report(
+    config: &str,
+    series: &[Vec<TelemetrySample>],
+    health: &[HealthEvent],
+) -> String {
+    const W: f64 = 480.0;
+    const H: f64 = 56.0;
+    let vt_max = series
+        .iter()
+        .flat_map(|s| s.iter().map(|x| x.vt))
+        .chain(health.iter().map(|e| e.vt))
+        .max()
+        .unwrap_or(1)
+        .max(1) as f64;
+    let x = |vt: u64| (vt as f64 / vt_max * (W - 8.0) + 4.0);
+    let y = |frac: f64| H - 4.0 - frac.clamp(0.0, 1.0) * (H - 8.0);
+
+    let mut out = String::new();
+    out.push_str("<!DOCTYPE html>\n<html><head><meta charset=\"utf-8\">\n");
+    out.push_str("<title>mr1s telemetry report</title>\n<style>\n");
+    out.push_str(
+        "body{font:14px/1.4 system-ui,sans-serif;margin:2em;max-width:60em}\
+         svg{background:#f6f8fa;border:1px solid #d0d7de;border-radius:4px}\
+         .rank{margin:0.6em 0}.meta{color:#57606a;font-size:12px}\
+         table{border-collapse:collapse}td,th{border:1px solid #d0d7de;\
+         padding:2px 8px;font-size:13px;text-align:left}\n",
+    );
+    out.push_str("</style></head><body>\n<h1>mr1s telemetry report</h1>\n");
+    out.push_str(&format!(
+        "<p class=\"meta\">config: {} &middot; ranks: {} &middot; git: {}</p>\n",
+        html_escape(config),
+        series.len(),
+        html_escape(&git_sha())
+    ));
+
+    out.push_str("<h2>Per-rank map progress</h2>\n");
+    for (rank, samples) in series.iter().enumerate() {
+        let last = samples.last();
+        let label = last
+            .map(|s| {
+                format!(
+                    "phase={} tasks={}/{} wait-ns={}",
+                    phase_label(s.block.phase),
+                    s.block.tasks_done,
+                    s.block.tasks_total,
+                    s.block.wait_ns
+                )
+            })
+            .unwrap_or_else(|| "no samples".to_string());
+        out.push_str(&format!(
+            "<div class=\"rank\"><b>rank {}</b> <span class=\"meta\">{}</span><br>\n",
+            rank, label
+        ));
+        out.push_str(&format!("<svg width=\"{}\" height=\"{}\">", W, H));
+        let points: Vec<String> = samples
+            .iter()
+            .map(|s| {
+                let frac = s.block.progress().unwrap_or(0.0);
+                format!("{:.1},{:.1}", x(s.vt), y(frac))
+            })
+            .collect();
+        if !points.is_empty() {
+            out.push_str(&format!(
+                "<polyline fill=\"none\" stroke=\"#0969da\" stroke-width=\"1.5\" \
+                 points=\"{}\"/>",
+                points.join(" ")
+            ));
+        }
+        for ev in health.iter().filter(|e| e.rank == rank) {
+            out.push_str(&format!(
+                "<circle cx=\"{:.1}\" cy=\"{:.1}\" r=\"3\" fill=\"#cf222e\">\
+                 <title>{} @ {} ns</title></circle>",
+                x(ev.vt),
+                H / 2.0,
+                ev.kind.label(),
+                ev.vt
+            ));
+        }
+        out.push_str("</svg></div>\n");
+    }
+
+    // Fleet progress CoV per sampling round (ranks sampled in the same
+    // round share a round index; use the shortest series so every
+    // round compares the same fleet).
+    let rounds = series.iter().map(Vec::len).filter(|&l| l > 0).min().unwrap_or(0);
+    out.push_str("<h2>Fleet progress CoV over time</h2>\n");
+    if rounds > 0 && series.len() > 1 {
+        let cov: Vec<(u64, f64)> = (0..rounds)
+            .map(|i| {
+                let fracs: Vec<f64> = series
+                    .iter()
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s[i].block.progress().unwrap_or(0.0))
+                    .collect();
+                let vt = series.iter().filter(|s| !s.is_empty()).map(|s| s[i].vt).max().unwrap();
+                let mean = fracs.iter().sum::<f64>() / fracs.len() as f64;
+                let var =
+                    fracs.iter().map(|f| (f - mean) * (f - mean)).sum::<f64>() / fracs.len() as f64;
+                let cov = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+                (vt, cov)
+            })
+            .collect();
+        let cov_max = cov.iter().map(|&(_, c)| c).fold(0.0f64, f64::max).max(1e-9);
+        out.push_str(&format!("<svg width=\"{}\" height=\"{}\">", W, H));
+        let points: Vec<String> = cov
+            .iter()
+            .map(|&(vt, c)| format!("{:.1},{:.1}", x(vt), y(c / cov_max)))
+            .collect();
+        out.push_str(&format!(
+            "<polyline fill=\"none\" stroke=\"#8250df\" stroke-width=\"1.5\" points=\"{}\"/>",
+            points.join(" ")
+        ));
+        out.push_str("</svg>\n");
+        out.push_str(&format!(
+            "<p class=\"meta\">peak CoV {:.3} over {} sampling rounds</p>\n",
+            cov_max, rounds
+        ));
+    } else {
+        out.push_str("<p class=\"meta\">not enough samples for a fleet comparison</p>\n");
+    }
+
+    out.push_str("<h2>Health events</h2>\n");
+    if health.is_empty() {
+        out.push_str("<p class=\"meta\">none</p>\n");
+    } else {
+        out.push_str("<table><tr><th>vt (ns)</th><th>rank</th><th>kind</th><th>detail</th></tr>\n");
+        for ev in health {
+            out.push_str(&format!(
+                "<tr><td>{}</td><td>{}</td><td>{}</td><td>{}</td></tr>\n",
+                ev.vt,
+                ev.rank,
+                ev.kind.label(),
+                html_escape(&ev.detail)
+            ));
+        }
+        out.push_str("</table>\n");
+    }
+    out.push_str("</body></html>\n");
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn html_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::telemetry::{
+        HealthKind, TelemetryBlock, TelemetrySample, PHASE_DONE, PHASE_MAP,
+    };
+
+    fn sample(vt: u64, done: u64, total: u64) -> TelemetrySample {
+        TelemetrySample {
+            vt,
+            block: TelemetryBlock {
+                phase: if done >= total { PHASE_DONE } else { PHASE_MAP },
+                tasks_done: done,
+                tasks_total: total,
+                bytes_mapped: done * 1024,
+                wait_ns: done * 10,
+                heartbeat_vt: vt,
+                ..Default::default()
+            },
+        }
+    }
+
+    fn fixture() -> (Vec<Vec<TelemetrySample>>, Vec<HealthEvent>) {
+        let series = vec![
+            vec![sample(100, 1, 4), sample(200, 2, 4), sample(300, 4, 4)],
+            vec![sample(100, 0, 4), sample(200, 1, 4), sample(300, 1, 4)],
+        ];
+        let health = vec![HealthEvent {
+            vt: 300,
+            rank: 1,
+            kind: HealthKind::SlowProgress,
+            detail: "rate-ratio=3.00 progress=0.25 eta-ns=900".into(),
+        }];
+        (series, health)
+    }
+
+    #[test]
+    fn json_document_carries_schema_and_all_cells() {
+        let (series, health) = fixture();
+        let doc = metrics_json("fig8 smoke", 1000, &series, &health);
+        assert!(doc.contains("\"schema\": 1"));
+        assert!(doc.contains("\"kind\": \"mr1s-metrics\""));
+        assert!(doc.contains("\"ranks\": 2"));
+        assert!(doc.contains("\"tasks_done\": 4"));
+        assert!(doc.contains("\"heartbeat_vt\": 300"));
+        assert!(doc.contains("\"kind\": \"slow-progress\""));
+        // Every sample object names every telemetry cell.
+        for key in [
+            "vt",
+            "phase",
+            "tasks_done",
+            "tasks_total",
+            "bytes_mapped",
+            "bytes_shuffled",
+            "bytes_reduced",
+            "wait_ns",
+            "ckpt_frames",
+            "heartbeat_vt",
+        ] {
+            assert!(doc.contains(&format!("\"{}\":", key)), "missing {}", key);
+        }
+    }
+
+    #[test]
+    fn prometheus_families_have_help_type_and_rank_labels() {
+        let (series, health) = fixture();
+        let text = prometheus_text(&series, &health);
+        assert!(text.contains("# HELP mr1s_tasks_done_total"));
+        assert!(text.contains("# TYPE mr1s_tasks_done_total counter"));
+        assert!(text.contains("mr1s_tasks_done_total{rank=\"0\"} 4"));
+        assert!(text.contains("mr1s_tasks_done_total{rank=\"1\"} 1"));
+        assert!(text.contains("# TYPE mr1s_phase gauge"));
+        assert!(text
+            .contains("mr1s_health_events_total{rank=\"1\",kind=\"slow-progress\"} 1"));
+        assert!(text.ends_with('\n'));
+        // Empty fleet emits an empty (but valid) exposition.
+        assert_eq!(prometheus_text(&[], &[]), "");
+    }
+
+    #[test]
+    fn html_report_is_self_contained_with_sparklines_and_markers() {
+        let (series, health) = fixture();
+        let html = html_report("fig8 <smoke>", &series, &health);
+        assert!(html.starts_with("<!DOCTYPE html>"));
+        assert!(html.contains("fig8 &lt;smoke&gt;"), "config is escaped");
+        assert!(html.matches("<polyline").count() >= 3, "2 ranks + CoV series");
+        assert!(html.contains("<circle"), "health marker on the flagged rank");
+        assert!(html.contains("slow-progress"));
+        assert!(html.ends_with("</body></html>\n"));
+        assert!(!html.contains("http://") && !html.contains("https://"), "no external assets");
+    }
+
+    #[test]
+    fn write_metrics_places_three_siblings() {
+        let (series, health) = fixture();
+        let dir = std::env::temp_dir().join(format!("mr1s-export-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.json");
+        write_metrics(&path, "unit", 1000, &series, &health).unwrap();
+        for ext in ["json", "prom", "html"] {
+            let p = path.with_extension(ext);
+            assert!(p.exists(), "missing {:?}", p);
+            assert!(std::fs::metadata(&p).unwrap().len() > 0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

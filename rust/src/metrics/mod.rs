@@ -9,13 +9,21 @@
 //! and `crit` extracts the cross-rank critical path (DESIGN.md §9).
 
 pub mod crit;
+pub mod export;
 pub mod memory;
 pub mod report;
+pub mod straggler;
+pub mod telemetry;
 pub mod timeline;
 pub mod tracer;
 
 pub use crit::{CritPath, CritSegment};
+pub use export::{write_metrics, METRICS_SCHEMA_VERSION};
 pub use memory::MemoryTracker;
 pub use report::{JobReport, PhaseBreakdown, RecoveryReport};
+pub use straggler::StragglerDetector;
+pub use telemetry::{
+    HealthEvent, HealthKind, RingSeries, TelemetryBlock, TelemetryPlane, TelemetrySample,
+};
 pub use timeline::{Event, EventKind, Timeline};
 pub use tracer::{Span, SpanEdge, TraceStats, WaitCause};

@@ -1,6 +1,7 @@
 //! Job reports: the numbers every figure is derived from.
 
 use super::crit::CritPath;
+use super::telemetry::{HealthEvent, TelemetrySample};
 use super::timeline::{Event, EventKind};
 use super::tracer::{Span, TraceStats};
 
@@ -150,6 +151,14 @@ pub struct JobReport {
     /// lost to fault injection and the job re-ran degraded on the
     /// survivors (DESIGN.md §10).  `None` for fault-free runs.
     pub recovery: Option<RecoveryReport>,
+    /// Per-rank live-telemetry time series the monitor sampled
+    /// (DESIGN.md §11); empty when `sample_every == 0`.  On a faulted
+    /// run both attempts accumulate into the same plane, so a rank's
+    /// series can span the loss point.
+    pub telemetry: Vec<Vec<TelemetrySample>>,
+    /// Health events the online straggler detector emitted, in emission
+    /// order (deduplicated per rank and kind).
+    pub health: Vec<HealthEvent>,
 }
 
 impl JobReport {
@@ -297,6 +306,11 @@ impl JobReport {
                 rec.replayed_bytes >> 10,
             ));
         }
+        if !self.health.is_empty() {
+            let rendered: Vec<String> =
+                self.health.iter().map(|e| format!("{}:{}", e.kind.label(), e.rank)).collect();
+            line.push_str(&format!(" health={}", rendered.join(",")));
+        }
         let crit = self.crit_path();
         if !crit.segments.is_empty() {
             line.push_str(&format!(" crit-path={}", crit.render_top(3)));
@@ -361,6 +375,8 @@ mod tests {
             total_count: 0,
             spans: vec![vec![], vec![]],
             recovery: None,
+            telemetry: vec![vec![], vec![]],
+            health: vec![],
         };
         assert!((r.mean_wait_fraction() - 0.25).abs() < 1e-9);
         assert!((r.reduce_max_over_mean() - 1.5).abs() < 1e-9);

@@ -1,0 +1,326 @@
+//! Online straggler scoring over sampled telemetry (DESIGN.md §11).
+//!
+//! Each sampling round the monitor feeds every rank's
+//! [`TelemetryBlock`] into [`StragglerDetector::observe`], which scores
+//! ranks three ways:
+//!
+//! * **Progress-rate EWMA vs. fleet median** — a rank's map-progress
+//!   rate (completed fraction per virtual ns since the first
+//!   observation) is smoothed with an EWMA and compared against the
+//!   fleet median rate.  A ratio ≥ [`SLOW_RATIO`] emits
+//!   [`HealthKind::SlowProgress`]; a ratio ≥ [`STRAGGLER_RATIO`]
+//!   sustained for [`STRAGGLER_ROUNDS`] consecutive rounds emits
+//!   [`HealthKind::StragglerDetected`].
+//! * **ETA skew** — the projected remaining time `(1 − p) / rate` is
+//!   reported in event details so summaries show how far behind the
+//!   flagged rank is.
+//! * **Heartbeat staleness** — a rank whose heartbeat virtual time
+//!   stopped advancing while the fleet moved on emits
+//!   [`HealthKind::HeartbeatStale`]; this is the monitor-side signal
+//!   that precedes the protocol's `DETECT_NS` loss detection.
+//!
+//! The detector is deliberately conservative: ranks with zero assigned
+//! tasks are never scored, a single-rank fleet has no peers to compare
+//! against, and straggler flagging needs at least [`MIN_FLEET`] scored
+//! ranks so the median is meaningful.  Deduplication of repeated
+//! emissions is the `TelemetryPlane`'s job, not the detector's.
+
+use crate::metrics::telemetry::{HealthEvent, HealthKind, TelemetryBlock, PHASE_DONE};
+
+/// Rate ratio (fleet median / rank EWMA) that marks mild slowness.
+pub const SLOW_RATIO: f64 = 1.5;
+/// Rate ratio that marks a hard straggler.
+pub const STRAGGLER_RATIO: f64 = 2.5;
+/// Consecutive rounds the hard ratio must hold before flagging.
+pub const STRAGGLER_ROUNDS: u32 = 2;
+/// Minimum scored ranks for straggler flagging (median stability).
+pub const MIN_FLEET: usize = 3;
+/// EWMA smoothing factor for per-rank progress rates.
+pub const EWMA_ALPHA: f64 = 0.5;
+/// Baseline heartbeat-staleness threshold in virtual ns.  Chosen below
+/// the fault engine's `DETECT_NS` (100 µs) so a stale heartbeat is
+/// observable before loss detection establishes the death.
+pub const STALE_AFTER_NS: u64 = 50_000;
+
+#[derive(Debug, Clone, Copy, Default)]
+struct RankState {
+    /// Smoothed progress rate (fraction per virtual ns).
+    ewma_rate: Option<f64>,
+    /// Consecutive rounds at or past `STRAGGLER_RATIO`.
+    hard_rounds: u32,
+}
+
+/// Online detector; one instance per monitored job, fed once per
+/// sampling round.
+pub struct StragglerDetector {
+    states: Vec<RankState>,
+    /// Virtual time of the first observation (rate epoch).
+    vt0: Option<u64>,
+    /// Effective staleness threshold; at least [`STALE_AFTER_NS`] and
+    /// widened by the sampling cadence so coarse cadences do not
+    /// misread "between two samples" as "dead".
+    stale_after_ns: u64,
+}
+
+impl StragglerDetector {
+    /// Detector for `nranks` ranks sampled every `sample_every_ns`
+    /// virtual ns (0 = cadence unknown, use the baseline threshold).
+    pub fn new(nranks: usize, sample_every_ns: u64) -> StragglerDetector {
+        StragglerDetector {
+            states: vec![RankState::default(); nranks],
+            vt0: None,
+            stale_after_ns: STALE_AFTER_NS.max(sample_every_ns.saturating_mul(8)),
+        }
+    }
+
+    /// Effective heartbeat-staleness threshold in virtual ns.
+    pub fn stale_after_ns(&self) -> u64 {
+        self.stale_after_ns
+    }
+
+    /// Fold one sampling round (`blocks[r]` is rank `r`'s block read at
+    /// monitor time `vt`) and return the health events observed this
+    /// round.  Repeated emissions across rounds are expected; the
+    /// telemetry plane deduplicates per `(rank, kind)`.
+    pub fn observe(&mut self, vt: u64, blocks: &[TelemetryBlock]) -> Vec<HealthEvent> {
+        let vt0 = *self.vt0.get_or_insert(vt);
+        let mut events = Vec::new();
+        if blocks.len() < 2 {
+            return events; // single rank: no fleet to compare against
+        }
+
+        // Heartbeat staleness is independent of progress rates: a rank
+        // that published at least once, is not done, and whose
+        // heartbeat lags the monitor clock past the threshold.
+        for (rank, block) in blocks.iter().enumerate() {
+            if block.heartbeat_vt == 0 || block.phase == PHASE_DONE {
+                continue;
+            }
+            let gap = vt.saturating_sub(block.heartbeat_vt);
+            if gap > self.stale_after_ns {
+                events.push(HealthEvent {
+                    vt,
+                    rank,
+                    kind: HealthKind::HeartbeatStale,
+                    detail: format!("gap-ns={} threshold-ns={}", gap, self.stale_after_ns),
+                });
+            }
+        }
+
+        // Progress rates need a nonzero epoch span.
+        let span = vt.saturating_sub(vt0);
+        if span == 0 {
+            return events;
+        }
+        let mut rates = Vec::with_capacity(blocks.len());
+        for (rank, block) in blocks.iter().enumerate() {
+            let p = match block.progress() {
+                Some(p) => p,
+                None => continue, // zero assigned tasks: never scored
+            };
+            let raw = p / span as f64;
+            let state = &mut self.states[rank];
+            let rate = match state.ewma_rate {
+                // A finished rank's rate freezes so it keeps holding
+                // the median up instead of dropping out of the fleet.
+                Some(prev) if p >= 1.0 => prev,
+                Some(prev) => EWMA_ALPHA * raw + (1.0 - EWMA_ALPHA) * prev,
+                None => raw,
+            };
+            state.ewma_rate = Some(rate);
+            rates.push((rank, p, rate));
+        }
+        let fleet = rates.len();
+        let median = match median_rate(&rates) {
+            Some(m) if m > 0.0 => m,
+            _ => return events,
+        };
+
+        for &(rank, p, rate) in &rates {
+            let state = &mut self.states[rank];
+            if p >= 1.0 {
+                state.hard_rounds = 0;
+                continue;
+            }
+            let ratio = if rate > 0.0 { median / rate } else { f64::INFINITY };
+            let eta_ns = if rate > 0.0 { ((1.0 - p) / rate) as u64 } else { u64::MAX };
+            if ratio >= STRAGGLER_RATIO {
+                state.hard_rounds += 1;
+            } else {
+                state.hard_rounds = 0;
+            }
+            if state.hard_rounds >= STRAGGLER_ROUNDS && fleet >= MIN_FLEET {
+                events.push(HealthEvent {
+                    vt,
+                    rank,
+                    kind: HealthKind::StragglerDetected,
+                    detail: format!(
+                        "rate-ratio={:.2} progress={:.2} eta-ns={}",
+                        ratio, p, eta_ns
+                    ),
+                });
+            }
+            if ratio >= SLOW_RATIO {
+                events.push(HealthEvent {
+                    vt,
+                    rank,
+                    kind: HealthKind::SlowProgress,
+                    detail: format!(
+                        "rate-ratio={:.2} progress={:.2} eta-ns={}",
+                        ratio, p, eta_ns
+                    ),
+                });
+            }
+        }
+        events
+    }
+}
+
+/// Median of the fleet's smoothed rates (mean of the two middle values
+/// for even fleets).
+fn median_rate(rates: &[(usize, f64, f64)]) -> Option<f64> {
+    if rates.is_empty() {
+        return None;
+    }
+    let mut sorted: Vec<f64> = rates.iter().map(|&(_, _, r)| r).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mid = sorted.len() / 2;
+    if sorted.len() % 2 == 1 {
+        Some(sorted[mid])
+    } else {
+        Some(0.5 * (sorted[mid - 1] + sorted[mid]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::telemetry::{PHASE_MAP, TELEM_CELLS};
+
+    fn block(done: u64, total: u64, heartbeat: u64) -> TelemetryBlock {
+        let mut cells = [0u64; TELEM_CELLS];
+        cells[0] = PHASE_MAP;
+        cells[1] = done;
+        cells[2] = total;
+        cells[8] = heartbeat;
+        TelemetryBlock::from_cells(cells)
+    }
+
+    fn kinds(events: &[HealthEvent]) -> Vec<(usize, HealthKind)> {
+        events.iter().map(|e| (e.rank, e.kind)).collect()
+    }
+
+    #[test]
+    fn all_equal_fleet_never_flags() {
+        let mut det = StragglerDetector::new(4, 1_000);
+        for round in 1..=6u64 {
+            let vt = round * 10_000;
+            let blocks: Vec<_> = (0..4).map(|_| block(round, 8, vt)).collect();
+            assert!(det.observe(vt, &blocks).is_empty(), "round {}", round);
+        }
+    }
+
+    #[test]
+    fn zero_task_rank_is_never_scored() {
+        let mut det = StragglerDetector::new(4, 1_000);
+        for round in 1..=6u64 {
+            let vt = round * 10_000;
+            let mut blocks: Vec<_> = (0..4).map(|_| block(round, 8, vt)).collect();
+            blocks[3] = block(0, 0, vt); // no tasks assigned
+            let events = det.observe(vt, &blocks);
+            assert!(
+                events.iter().all(|e| e.rank != 3),
+                "round {}: {:?}",
+                round,
+                kinds(&events)
+            );
+        }
+    }
+
+    #[test]
+    fn single_rank_has_no_fleet() {
+        let mut det = StragglerDetector::new(1, 1_000);
+        for round in 1..=6u64 {
+            let vt = round * 10_000;
+            // Even a stalled heartbeat is not flagged with no peers.
+            assert!(det.observe(vt, &[block(1, 8, 5)]).is_empty());
+        }
+    }
+
+    #[test]
+    fn hard_straggler_is_flagged_after_consecutive_rounds() {
+        let mut det = StragglerDetector::new(4, 1_000);
+        let mut saw_straggler = false;
+        for round in 1..=6u64 {
+            let vt = round * 10_000;
+            let mut blocks: Vec<_> = (0..4).map(|_| block(round.min(8), 8, vt)).collect();
+            blocks[1] = block(round / 6, 8, vt); // ~6x slower than the fleet
+            let events = det.observe(vt, &blocks);
+            for ev in &events {
+                assert_eq!(ev.rank, 1, "only the slow rank is flagged: {:?}", kinds(&events));
+                assert!(ev.detail.contains("rate-ratio="), "detail carries the score");
+            }
+            if round == 1 {
+                assert!(
+                    !events.iter().any(|e| e.kind == HealthKind::StragglerDetected),
+                    "hard flag needs consecutive rounds"
+                );
+            }
+            saw_straggler |= events.iter().any(|e| e.kind == HealthKind::StragglerDetected);
+        }
+        assert!(saw_straggler);
+    }
+
+    #[test]
+    fn straggler_flag_requires_min_fleet() {
+        let mut det = StragglerDetector::new(2, 1_000);
+        for round in 1..=6u64 {
+            let vt = round * 10_000;
+            let blocks = vec![block(round.min(8), 8, vt), block(round / 6, 8, vt)];
+            let events = det.observe(vt, &blocks);
+            assert!(
+                !events.iter().any(|e| e.kind == HealthKind::StragglerDetected),
+                "two ranks cannot out-vote each other: {:?}",
+                kinds(&events)
+            );
+        }
+    }
+
+    #[test]
+    fn stale_heartbeat_is_flagged_for_the_silent_rank_only() {
+        let mut det = StragglerDetector::new(3, 1_000);
+        let stale_after = det.stale_after_ns();
+        let dead_at = 20_000u64;
+        let mut flagged = false;
+        for round in 1..=8u64 {
+            let vt = round * 10_000;
+            let mut blocks: Vec<_> = (0..3).map(|_| block(round, 8, vt)).collect();
+            blocks[2] = block(2, 8, dead_at.min(vt)); // stops publishing at 20 µs
+            let events = det.observe(vt, &blocks);
+            for ev in events.iter().filter(|e| e.kind == HealthKind::HeartbeatStale) {
+                assert_eq!(ev.rank, 2);
+                assert!(vt - dead_at > stale_after);
+                flagged = true;
+            }
+        }
+        assert!(flagged, "silent rank is eventually stale");
+    }
+
+    #[test]
+    fn finished_rank_holds_the_median_up() {
+        let mut det = StragglerDetector::new(3, 1_000);
+        let mut saw_flag = false;
+        for round in 1..=8u64 {
+            let vt = round * 10_000;
+            let blocks = vec![
+                block((2 * round).min(8), 8, vt), // finishes at round 4, rate freezes
+                block((2 * round).min(8), 8, vt),
+                block(round / 8, 8, vt),
+            ];
+            let events = det.observe(vt, &blocks);
+            assert!(events.iter().all(|e| e.rank == 2));
+            saw_flag |= events.iter().any(|e| e.kind == HealthKind::StragglerDetected);
+        }
+        assert!(saw_flag, "frozen fast rates keep the straggler visible");
+    }
+}

@@ -1,0 +1,441 @@
+//! One-sided live telemetry plane (DESIGN.md §11).
+//!
+//! Each rank publishes a small fixed-layout [`TelemetryBlock`] of
+//! progress counters into its own region of the MR-1S control window
+//! via *local* atomic stores — free on the virtual clock, invisible to
+//! the tracer (zero-duration spans are dropped) — and a monitor (rank 0
+//! on MR-1S) samples every rank's block with pure one-sided reads
+//! (`MPI_Fetch_and_op(MPI_NO_OP)`, the accumulate-model "get") on a
+//! virtual-clock cadence.  MR-2S has no always-on window to poll, so it
+//! allgathers encoded blocks at phase boundaries instead.
+//!
+//! Samples land in per-rank ring-buffer time series inside a
+//! [`TelemetryPlane`] shared between the job driver and the backend
+//! threads, so the series survive a discarded recovery attempt.  The
+//! online straggler detector (`metrics::straggler`) folds each sampling
+//! round into typed [`HealthEvent`]s recorded on the same plane.
+//!
+//! Workers never wait on the monitor: publishing is a local store, and
+//! sampling charges only the monitor's clock (asserted by the
+//! integration suite — no telemetry op spans on worker ranks).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Cell indices of the telemetry block (u64 each, displacement
+/// `base + cell * 8` in the owning rank's window region).
+pub const CELL_PHASE: usize = 0;
+/// Map tasks completed by the rank (own queue + stolen).
+pub const CELL_TASKS_DONE: usize = 1;
+/// Map tasks initially assigned to the rank (its own queue length).
+pub const CELL_TASKS_TOTAL: usize = 2;
+/// Input bytes mapped so far.
+pub const CELL_BYTES_MAPPED: usize = 3;
+/// Shuffle bytes ingested so far.
+pub const CELL_BYTES_SHUFFLED: usize = 4;
+/// Reduce output bytes produced so far.
+pub const CELL_BYTES_REDUCED: usize = 5;
+/// Attributed wait ns accumulated so far.
+pub const CELL_WAIT_NS: usize = 6;
+/// Checkpoint frames flushed so far.
+pub const CELL_CKPT_FRAMES: usize = 7;
+/// Virtual time of the last publish (the heartbeat).
+pub const CELL_HEARTBEAT_VT: usize = 8;
+
+/// Number of u64 cells in a telemetry block.
+pub const TELEM_CELLS: usize = 9;
+/// Size of an encoded telemetry block in bytes.
+pub const TELEM_BYTES: usize = TELEM_CELLS * 8;
+
+/// Phase codes published in [`CELL_PHASE`].
+pub const PHASE_INIT: u64 = 0;
+/// Rank is mapping.
+pub const PHASE_MAP: u64 = 1;
+/// Rank is reducing (shuffle ingest + merge).
+pub const PHASE_REDUCE: u64 = 2;
+/// Rank finished its Combine contribution.
+pub const PHASE_DONE: u64 = 3;
+
+/// Stable label of a phase code (metrics export, event details).
+pub fn phase_label(phase: u64) -> &'static str {
+    match phase {
+        PHASE_INIT => "init",
+        PHASE_MAP => "map",
+        PHASE_REDUCE => "reduce",
+        PHASE_DONE => "done",
+        _ => "unknown",
+    }
+}
+
+/// One rank's published progress counters (the fixed window layout).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TelemetryBlock {
+    /// Current phase code (`PHASE_*`).
+    pub phase: u64,
+    /// Map tasks completed.
+    pub tasks_done: u64,
+    /// Map tasks initially assigned.
+    pub tasks_total: u64,
+    /// Input bytes mapped.
+    pub bytes_mapped: u64,
+    /// Shuffle bytes ingested.
+    pub bytes_shuffled: u64,
+    /// Reduce output bytes.
+    pub bytes_reduced: u64,
+    /// Attributed wait ns so far.
+    pub wait_ns: u64,
+    /// Checkpoint frames flushed.
+    pub ckpt_frames: u64,
+    /// Virtual time of the last publish.
+    pub heartbeat_vt: u64,
+}
+
+impl TelemetryBlock {
+    /// Cell-ordered view (index with the `CELL_*` constants).
+    pub fn cells(&self) -> [u64; TELEM_CELLS] {
+        [
+            self.phase,
+            self.tasks_done,
+            self.tasks_total,
+            self.bytes_mapped,
+            self.bytes_shuffled,
+            self.bytes_reduced,
+            self.wait_ns,
+            self.ckpt_frames,
+            self.heartbeat_vt,
+        ]
+    }
+
+    /// Rebuild from a cell-ordered view.
+    pub fn from_cells(cells: [u64; TELEM_CELLS]) -> TelemetryBlock {
+        TelemetryBlock {
+            phase: cells[CELL_PHASE],
+            tasks_done: cells[CELL_TASKS_DONE],
+            tasks_total: cells[CELL_TASKS_TOTAL],
+            bytes_mapped: cells[CELL_BYTES_MAPPED],
+            bytes_shuffled: cells[CELL_BYTES_SHUFFLED],
+            bytes_reduced: cells[CELL_BYTES_REDUCED],
+            wait_ns: cells[CELL_WAIT_NS],
+            ckpt_frames: cells[CELL_CKPT_FRAMES],
+            heartbeat_vt: cells[CELL_HEARTBEAT_VT],
+        }
+    }
+
+    /// Encode as little-endian bytes (MR-2S allgather payload).
+    pub fn encode(&self) -> [u8; TELEM_BYTES] {
+        let mut out = [0u8; TELEM_BYTES];
+        for (i, v) in self.cells().iter().enumerate() {
+            out[i * 8..(i + 1) * 8].copy_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Decode from little-endian bytes; `None` when truncated.
+    pub fn decode(bytes: &[u8]) -> Option<TelemetryBlock> {
+        if bytes.len() < TELEM_BYTES {
+            return None;
+        }
+        let mut cells = [0u64; TELEM_CELLS];
+        for (i, c) in cells.iter_mut().enumerate() {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&bytes[i * 8..(i + 1) * 8]);
+            *c = u64::from_le_bytes(b);
+        }
+        Some(TelemetryBlock::from_cells(cells))
+    }
+
+    /// Map-progress fraction in `[0, 1]` (`None` when the rank has no
+    /// tasks to report against).
+    pub fn progress(&self) -> Option<f64> {
+        if self.tasks_total == 0 {
+            return None;
+        }
+        Some((self.tasks_done as f64 / self.tasks_total as f64).min(1.0))
+    }
+}
+
+/// One monitor observation of one rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TelemetrySample {
+    /// Monitor virtual time of the sampling round.
+    pub vt: u64,
+    /// The observed block.
+    pub block: TelemetryBlock,
+}
+
+/// Fixed-capacity ring buffer of samples: pushing past capacity
+/// overwrites the oldest sample, so the latest block is never lost no
+/// matter the sampling cadence (property-tested).
+#[derive(Debug, Clone)]
+pub struct RingSeries {
+    buf: Vec<TelemetrySample>,
+    cap: usize,
+    /// Index of the oldest sample once the ring wrapped.
+    head: usize,
+    /// Total samples ever pushed (may exceed `cap`).
+    pushed: u64,
+}
+
+/// Default ring capacity per rank (samples kept per series).
+pub const RING_CAP: usize = 512;
+
+impl RingSeries {
+    /// Empty series holding at most `cap` samples (`cap >= 1`).
+    pub fn new(cap: usize) -> RingSeries {
+        RingSeries { buf: Vec::new(), cap: cap.max(1), head: 0, pushed: 0 }
+    }
+
+    /// Append a sample, overwriting the oldest once full.
+    pub fn push(&mut self, sample: TelemetrySample) {
+        if self.buf.len() < self.cap {
+            self.buf.push(sample);
+        } else {
+            self.buf[self.head] = sample;
+            self.head = (self.head + 1) % self.cap;
+        }
+        self.pushed += 1;
+    }
+
+    /// Samples currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing was ever pushed.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total samples ever pushed (retention-independent).
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// Most recent sample.
+    pub fn latest(&self) -> Option<TelemetrySample> {
+        if self.buf.is_empty() {
+            None
+        } else if self.buf.len() < self.cap {
+            self.buf.last().copied()
+        } else {
+            Some(self.buf[(self.head + self.cap - 1) % self.cap])
+        }
+    }
+
+    /// Samples oldest-to-newest.
+    pub fn iter(&self) -> impl Iterator<Item = TelemetrySample> + '_ {
+        let (tail, head) = self.buf.split_at(self.head.min(self.buf.len()));
+        head.iter().chain(tail.iter()).copied()
+    }
+
+    /// Materialize oldest-to-newest.
+    pub fn to_vec(&self) -> Vec<TelemetrySample> {
+        self.iter().collect()
+    }
+}
+
+/// Typed health-event kinds the straggler detector emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HealthKind {
+    /// A rank's progress rate fell hard below the fleet median for
+    /// consecutive sampling rounds.
+    StragglerDetected,
+    /// A rank's progress rate is mildly below the fleet median.
+    SlowProgress,
+    /// A rank's heartbeat stopped advancing (observed before the
+    /// `DETECT_NS` failure detection establishes the loss).
+    HeartbeatStale,
+}
+
+impl HealthKind {
+    /// Stable label used in summaries, spans, and metrics export.
+    pub fn label(self) -> &'static str {
+        match self {
+            HealthKind::StragglerDetected => "straggler-detected",
+            HealthKind::SlowProgress => "slow-progress",
+            HealthKind::HeartbeatStale => "heartbeat-stale",
+        }
+    }
+}
+
+/// One emitted health event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HealthEvent {
+    /// Monitor virtual time of the observation.
+    pub vt: u64,
+    /// Rank the event is about (original world numbering).
+    pub rank: usize,
+    /// What was observed.
+    pub kind: HealthKind,
+    /// Human-readable scoring detail.
+    pub detail: String,
+}
+
+/// Steal-hint sentinel: no straggler flagged yet.
+const NO_HINT: u64 = u64::MAX;
+
+struct PlaneInner {
+    series: Vec<RingSeries>,
+    events: Vec<HealthEvent>,
+}
+
+/// The shared telemetry store of one job: per-rank ring series, the
+/// emitted health events (deduplicated per `(rank, kind)`), and the
+/// straggler steal hint the detector feeds into job stealing.
+///
+/// Lives behind an `Arc` in `JobShared` so a recovery attempt's samples
+/// survive the attempt being discarded; both attempts of a faulted run
+/// accumulate into the same plane (attempt-2 virtual times resume past
+/// attempt 1's, so series stay time-ordered).
+pub struct TelemetryPlane {
+    inner: Mutex<PlaneInner>,
+    /// Latest flagged straggler rank (`NO_HINT` = none).
+    hint_rank: AtomicU64,
+    /// Virtual time the hint was published (thieves ignore hints from
+    /// their own future).
+    hint_vt: AtomicU64,
+}
+
+impl TelemetryPlane {
+    /// Empty plane for a world of `nranks`.
+    pub fn new(nranks: usize) -> TelemetryPlane {
+        TelemetryPlane {
+            inner: Mutex::new(PlaneInner {
+                series: (0..nranks).map(|_| RingSeries::new(RING_CAP)).collect(),
+                events: Vec::new(),
+            }),
+            hint_rank: AtomicU64::new(NO_HINT),
+            hint_vt: AtomicU64::new(0),
+        }
+    }
+
+    /// Ranks the plane tracks.
+    pub fn nranks(&self) -> usize {
+        self.inner.lock().unwrap().series.len()
+    }
+
+    /// Append one observation of `rank` (ignored for out-of-range ranks
+    /// — a degraded attempt runs fewer ranks than the plane was sized
+    /// for, never more).
+    pub fn record_sample(&self, rank: usize, sample: TelemetrySample) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(series) = inner.series.get_mut(rank) {
+            series.push(sample);
+        }
+    }
+
+    /// Record a health event unless the same `(rank, kind)` was already
+    /// emitted; returns whether the event was accepted.
+    pub fn push_event(&self, event: HealthEvent) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.events.iter().any(|e| e.rank == event.rank && e.kind == event.kind) {
+            return false;
+        }
+        if event.kind == HealthKind::StragglerDetected {
+            // Publish the hint before the event becomes visible so a
+            // thief that learns of the straggler also sees the hint.
+            self.hint_vt.store(event.vt, Ordering::SeqCst);
+            self.hint_rank.store(event.rank as u64, Ordering::SeqCst);
+        }
+        inner.events.push(event);
+        true
+    }
+
+    /// Latest straggler hint, if one was published no later than
+    /// `now_vt` (a thief must not act on information from its own
+    /// virtual future).
+    pub fn steal_hint(&self, now_vt: u64) -> Option<usize> {
+        let rank = self.hint_rank.load(Ordering::SeqCst);
+        if rank == NO_HINT || self.hint_vt.load(Ordering::SeqCst) > now_vt {
+            return None;
+        }
+        Some(rank as usize)
+    }
+
+    /// Materialize the per-rank series (oldest-to-newest) and the event
+    /// log for the job report.
+    pub fn snapshot(&self) -> (Vec<Vec<TelemetrySample>>, Vec<HealthEvent>) {
+        let inner = self.inner.lock().unwrap();
+        (inner.series.iter().map(RingSeries::to_vec).collect(), inner.events.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_roundtrips_through_cells_and_bytes() {
+        let block = TelemetryBlock {
+            phase: PHASE_REDUCE,
+            tasks_done: 7,
+            tasks_total: 9,
+            bytes_mapped: 1 << 20,
+            bytes_shuffled: 1 << 19,
+            bytes_reduced: 1 << 18,
+            wait_ns: 12345,
+            ckpt_frames: 3,
+            heartbeat_vt: 999_999,
+        };
+        assert_eq!(TelemetryBlock::from_cells(block.cells()), block);
+        assert_eq!(TelemetryBlock::decode(&block.encode()), Some(block));
+        assert_eq!(TelemetryBlock::decode(&[0u8; 8]), None);
+        assert_eq!(block.cells()[CELL_HEARTBEAT_VT], 999_999);
+    }
+
+    #[test]
+    fn progress_caps_at_one_and_requires_tasks() {
+        let mut b = TelemetryBlock::default();
+        assert_eq!(b.progress(), None);
+        b.tasks_total = 4;
+        b.tasks_done = 2;
+        assert_eq!(b.progress(), Some(0.5));
+        b.tasks_done = 9; // stolen extras past its own queue
+        assert_eq!(b.progress(), Some(1.0));
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_keeps_latest() {
+        let mut ring = RingSeries::new(3);
+        assert!(ring.latest().is_none());
+        for i in 0..5u64 {
+            ring.push(TelemetrySample {
+                vt: i * 10,
+                block: TelemetryBlock { tasks_done: i, ..Default::default() },
+            });
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.pushed(), 5);
+        assert_eq!(ring.latest().unwrap().block.tasks_done, 4);
+        let vts: Vec<u64> = ring.iter().map(|s| s.vt).collect();
+        assert_eq!(vts, vec![20, 30, 40]);
+    }
+
+    #[test]
+    fn plane_dedups_events_and_gates_the_hint_by_vt() {
+        let plane = TelemetryPlane::new(4);
+        assert_eq!(plane.steal_hint(u64::MAX), None);
+        let ev = HealthEvent {
+            vt: 500,
+            rank: 2,
+            kind: HealthKind::StragglerDetected,
+            detail: "ratio=4.0".into(),
+        };
+        assert!(plane.push_event(ev.clone()));
+        assert!(!plane.push_event(ev.clone()), "same (rank, kind) emits once");
+        assert!(plane.push_event(HealthEvent { kind: HealthKind::SlowProgress, ..ev.clone() }));
+        assert_eq!(plane.steal_hint(499), None, "hint from the thief's future");
+        assert_eq!(plane.steal_hint(500), Some(2));
+        let (series, events) = plane.snapshot();
+        assert_eq!(series.len(), 4);
+        assert_eq!(events.len(), 2);
+    }
+
+    #[test]
+    fn plane_ignores_out_of_range_ranks() {
+        let plane = TelemetryPlane::new(2);
+        plane.record_sample(7, TelemetrySample { vt: 1, block: TelemetryBlock::default() });
+        let (series, _) = plane.snapshot();
+        assert!(series.iter().all(|s| s.is_empty()));
+    }
+}

@@ -127,6 +127,8 @@ pub mod op {
     pub const TASK_CLAIM: &str = "task-claim";
     pub const STEAL_ATTEMPT: &str = "steal-attempt";
     pub const STEAL_CLAIM: &str = "steal-claim";
+    pub const TELEMETRY_SAMPLE: &str = "telemetry-sample";
+    pub const HEALTH: &str = "health-event";
     pub const WAIT: &str = "wait";
 }
 

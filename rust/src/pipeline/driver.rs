@@ -24,7 +24,7 @@ use crate::mapreduce::job::{StageExec, StagedInput};
 use crate::mapreduce::kv::Value;
 use crate::mapreduce::{Job, JobConfig, JobOutput};
 use crate::metrics::tracer::{op, Span};
-use crate::metrics::{Event, JobReport};
+use crate::metrics::{Event, HealthEvent, JobReport, TelemetrySample};
 use crate::sim::CostModel;
 use crate::storage::prefetch::SPILL_ROOT_RANK;
 use crate::storage::spill::Availability;
@@ -83,6 +83,30 @@ impl PipelineOutput {
             for (rank, tl) in stage.report.timelines.iter().enumerate() {
                 merged[rank].extend_from_slice(tl);
             }
+        }
+        merged
+    }
+
+    /// Merge all stages' per-rank telemetry series into one pipeline
+    /// series per rank (sample times are absolute pipeline times, so
+    /// concatenation in stage order stays time-ordered — the same
+    /// contract as [`PipelineOutput::merged_timelines`]).
+    pub fn merged_telemetry(&self) -> Vec<Vec<TelemetrySample>> {
+        let nranks = self.stages.iter().map(|s| s.report.telemetry.len()).max().unwrap_or(0);
+        let mut merged: Vec<Vec<TelemetrySample>> = vec![Vec::new(); nranks];
+        for stage in &self.stages {
+            for (rank, series) in stage.report.telemetry.iter().enumerate() {
+                merged[rank].extend_from_slice(series);
+            }
+        }
+        merged
+    }
+
+    /// Merge all stages' health events into one absolute-time stream.
+    pub fn merged_health(&self) -> Vec<HealthEvent> {
+        let mut merged: Vec<HealthEvent> = Vec::new();
+        for stage in &self.stages {
+            merged.extend_from_slice(&stage.report.health);
         }
         merged
     }

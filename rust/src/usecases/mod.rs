@@ -21,6 +21,7 @@ pub mod hll;
 pub mod inverted_index;
 pub mod join;
 pub mod meanlen;
+pub mod secondary_sort;
 pub mod tfidf;
 pub mod topk;
 pub mod wordcount;
@@ -30,6 +31,7 @@ pub use hll::DistinctShards;
 pub use inverted_index::InvertedIndex;
 pub use join::EquiJoin;
 pub use meanlen::MeanLength;
+pub use secondary_sort::SecondarySort;
 pub use tfidf::{DocFreq, TermFreq, TfIdfScore};
 pub use topk::TopK;
 pub use wordcount::WordCount;
@@ -85,6 +87,12 @@ pub static REGISTRY: &[UseCaseEntry] = &[
         summary: "distinct containing shards per token (HLL registers, lane-wise max)",
         make: || Arc::new(DistinctShards),
     },
+    UseCaseEntry {
+        name: "secondary-sort",
+        aliases: &["secsort"],
+        summary: "sorted distinct secondary keys per token (variable-width)",
+        make: || Arc::new(SecondarySort),
+    },
 ];
 
 /// Look up a use-case by canonical name or alias.
@@ -110,6 +118,7 @@ mod tests {
         assert_eq!(by_name("wc").unwrap().name(), "word-count");
         assert_eq!(by_name("invidx").unwrap().name(), "inverted-index");
         assert_eq!(by_name("mean-length").unwrap().name(), "mean-length");
+        assert_eq!(by_name("secsort").unwrap().name(), "secondary-sort");
         assert!(by_name("no-such-usecase").is_none());
     }
 

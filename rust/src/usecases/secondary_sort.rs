@@ -1,0 +1,165 @@
+//! Secondary sort: every secondary key observed per primary key, kept
+//! sorted by the framework's reduce merges rather than a post-pass.
+//!
+//! The classic MapReduce secondary-sort pattern wants reduce output
+//! ordered by a *secondary* key within each primary key.  Here the
+//! primary key is the token and the secondary key is the length of the
+//! containing line (a `u32`); the value is the sorted distinct list of
+//! secondary keys, each 4 LE bytes — exactly the merge shape of the
+//! inverted index's posting lists, so Reduce stays an associative,
+//! commutative, idempotent sorted-set union no matter how Local Reduce,
+//! the Reduce windows and the Combine tree interleave.
+
+use crate::mapreduce::kv::Value;
+use crate::mapreduce::{UseCase, ValueKind};
+
+use super::wordcount::WordCount;
+
+/// The secondary-sort use-case.
+#[derive(Debug, Default)]
+pub struct SecondarySort;
+
+impl SecondarySort {
+    /// Secondary key of a record's tokens: the containing-line length.
+    pub fn secondary_key(record: &[u8]) -> u32 {
+        record.len() as u32
+    }
+
+    /// Decode a value into its sorted secondary keys.
+    pub fn decode_keys(value: &[u8]) -> Vec<u32> {
+        value
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    /// Union of two sorted-distinct secondary-key lists (wire
+    /// encoding).
+    fn union(a: &[u8], b: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            let x = u32::from_le_bytes(a[i..i + 4].try_into().unwrap());
+            let y = u32::from_le_bytes(b[j..j + 4].try_into().unwrap());
+            match x.cmp(&y) {
+                std::cmp::Ordering::Less => {
+                    out.extend_from_slice(&a[i..i + 4]);
+                    i += 4;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.extend_from_slice(&b[j..j + 4]);
+                    j += 4;
+                }
+                std::cmp::Ordering::Equal => {
+                    out.extend_from_slice(&a[i..i + 4]);
+                    i += 4;
+                    j += 4;
+                }
+            }
+        }
+        out.extend_from_slice(&a[i..]);
+        out.extend_from_slice(&b[j..]);
+        out
+    }
+}
+
+impl UseCase for SecondarySort {
+    fn name(&self) -> &'static str {
+        "secondary-sort"
+    }
+
+    fn value_kind(&self) -> ValueKind {
+        ValueKind::Variable
+    }
+
+    fn map_record(&self, record: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        if record.is_empty() {
+            return;
+        }
+        let secondary = Self::secondary_key(record).to_le_bytes();
+        let mut scratch = Vec::with_capacity(32);
+        WordCount::tokens_into(record, &mut scratch, &mut |tok| emit(tok, &secondary));
+    }
+
+    fn reduce(&self, acc: &mut Vec<u8>, incoming: &[u8]) {
+        debug_assert_eq!(acc.len() % 4, 0);
+        debug_assert_eq!(incoming.len() % 4, 0);
+        // Fast path: a single incoming entry that extends the tail
+        // appends without a rebuild.  Compare numerically — LE byte
+        // order is not lexicographic.
+        if incoming.len() == 4 {
+            let key = u32::from_le_bytes(incoming.try_into().unwrap());
+            let tail = acc
+                .len()
+                .checked_sub(4)
+                .map(|t| u32::from_le_bytes(acc[t..].try_into().unwrap()));
+            match tail {
+                Some(last) if last >= key => {} // falls through to the union
+                _ => {
+                    acc.extend_from_slice(incoming);
+                    return;
+                }
+            }
+        }
+        *acc = Self::union(acc, incoming);
+    }
+
+    fn render_value(&self, value: &Value) -> String {
+        let Some(bytes) = value.as_bytes() else { return "?".into() };
+        let keys = Self::decode_keys(bytes);
+        let head: Vec<String> = keys.iter().take(6).map(u32::to_string).collect();
+        let ellipsis = if keys.len() > 6 { ",…" } else { "" };
+        format!("{} secondary keys [{}{}]", keys.len(), head.join(","), ellipsis)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_the_line_length_for_every_token() {
+        let mut out = Vec::new();
+        SecondarySort.map_record(b"alpha beta", &mut |k, v| {
+            out.push((k.to_vec(), v.to_vec()));
+        });
+        assert_eq!(out.len(), 2);
+        assert_eq!(SecondarySort::decode_keys(&out[0].1), vec![10]);
+        assert_eq!(out[0].1, out[1].1, "same line, same secondary key");
+    }
+
+    #[test]
+    fn reduce_keeps_keys_sorted_and_distinct() {
+        let enc = |ks: &[u32]| -> Vec<u8> { ks.iter().flat_map(|k| k.to_le_bytes()).collect() };
+        let mut acc = enc(&[10, 40, 90]);
+        SecondarySort.reduce(&mut acc, &enc(&[20, 40, 300]));
+        assert_eq!(SecondarySort::decode_keys(&acc), vec![10, 20, 40, 90, 300]);
+        // Idempotent.
+        SecondarySort.reduce(&mut acc, &enc(&[20]));
+        assert_eq!(SecondarySort::decode_keys(&acc), vec![10, 20, 40, 90, 300]);
+        // Tail append fast path.
+        SecondarySort.reduce(&mut acc, &enc(&[500]));
+        assert_eq!(SecondarySort::decode_keys(&acc), vec![10, 20, 40, 90, 300, 500]);
+    }
+
+    #[test]
+    fn reduce_from_empty_accumulator() {
+        let mut acc = Vec::new();
+        SecondarySort.reduce(&mut acc, &7u32.to_le_bytes());
+        assert_eq!(SecondarySort::decode_keys(&acc), vec![7]);
+    }
+
+    #[test]
+    fn numeric_order_differs_from_lexicographic() {
+        // 256 encodes as [0,1,0,0], 1 as [1,0,0,0]: byte-wise the
+        // encodings sort the other way around, so the union must
+        // compare decoded values.
+        let enc = |ks: &[u32]| -> Vec<u8> { ks.iter().flat_map(|k| k.to_le_bytes()).collect() };
+        let mut acc = enc(&[1]);
+        SecondarySort.reduce(&mut acc, &enc(&[256]));
+        assert_eq!(SecondarySort::decode_keys(&acc), vec![1, 256]);
+        let mut acc = enc(&[256]);
+        SecondarySort.reduce(&mut acc, &enc(&[1]));
+        assert_eq!(SecondarySort::decode_keys(&acc), vec![1, 256]);
+    }
+}

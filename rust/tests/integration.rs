@@ -11,8 +11,8 @@ use mr1s::mapreduce::{BackendKind, Job, JobConfig, RouteConfig, UseCase, ValueKi
 use mr1s::pipeline::{oracle, plans, Pipeline};
 use mr1s::sim::CostModel;
 use mr1s::usecases::{
-    self, DistinctShards, EquiJoin, InvertedIndex, LengthHistogram, MeanLength, TfIdfScore,
-    TopK, WordCount,
+    self, DistinctShards, EquiJoin, InvertedIndex, LengthHistogram, MeanLength, SecondarySort,
+    TfIdfScore, TopK, WordCount,
 };
 use mr1s::workload::{generate_corpus, skew_factors, CorpusSpec, SkewSpec};
 
@@ -1081,5 +1081,231 @@ fn pipeline_trace_merges_stages_with_spill_spans() {
         total_spill,
     );
     std::fs::remove_dir_all(pipe.workdir()).ok();
+    std::fs::remove_file(&p).ok();
+}
+
+// ---- live telemetry & straggler detection (DESIGN.md §11) ----------------
+
+#[test]
+fn secondary_sort_matches_oracle_on_both_backends() {
+    let p = corpus("secsort", 80_000, 50);
+    // Independent oracle: token -> sorted distinct lengths of the lines
+    // containing it.
+    let data = std::fs::read(&p).unwrap();
+    let mut want: HashMap<Vec<u8>, BTreeSet<u32>> = HashMap::new();
+    for line in data.split(|&b| b == b'\n') {
+        for tok in WordCount::tokens(line) {
+            want.entry(tok).or_default().insert(line.len() as u32);
+        }
+    }
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        let out = Job::new(Arc::new(SecondarySort), small_config(p.clone()))
+            .unwrap()
+            .run(backend, 4, CostModel::default())
+            .unwrap();
+        assert_eq!(out.result.len(), want.len(), "{}", backend.name());
+        for (key, value) in out.result {
+            let got = SecondarySort::decode_keys(value.as_bytes().unwrap());
+            let exp: Vec<u32> = want[&key].iter().copied().collect();
+            assert_eq!(got, exp, "secondary keys of {:?}", String::from_utf8_lossy(&key));
+        }
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn telemetry_series_cover_every_rank_without_worker_side_spans() {
+    // The plane is on by default (sample_every = 250us): both backends
+    // must produce a non-empty, time-ordered, counter-monotonic series
+    // per rank — and on MR-1S only the monitor (rank 0) may record
+    // telemetry spans, because workers publish with free local stores.
+    use mr1s::metrics::tracer::op;
+    use mr1s::metrics::HealthKind;
+    let p = corpus("telem-basic", 150_000, 51);
+    let oracle = oracle_wordcount(&p);
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        let out = Job::new(Arc::new(WordCount), small_config(p.clone()))
+            .unwrap()
+            .run(backend, 4, CostModel::default())
+            .unwrap();
+        let name = backend.name();
+        assert_eq!(counts_map(out.result), oracle, "{name}");
+        assert_eq!(out.report.telemetry.len(), 4, "{name}: one series per rank");
+        for (rank, series) in out.report.telemetry.iter().enumerate() {
+            assert!(!series.is_empty(), "{name}: rank {rank} has no samples");
+            for w in series.windows(2) {
+                assert!(w[0].vt <= w[1].vt, "{name}: rank {rank} samples out of order");
+                assert!(
+                    w[0].block.tasks_done <= w[1].block.tasks_done
+                        && w[0].block.bytes_mapped <= w[1].block.bytes_mapped
+                        && w[0].block.heartbeat_vt <= w[1].block.heartbeat_vt,
+                    "{name}: rank {rank} counters regressed"
+                );
+            }
+            let last = series.last().unwrap().block;
+            assert!(last.heartbeat_vt > 0, "{name}: rank {rank} never heartbeat");
+            assert!(last.tasks_done > 0, "{name}: rank {rank} reported no progress");
+        }
+        // Telemetry must be invisible to workers: sampling spans live on
+        // the monitor's rank only (MR-1S reads one-sidedly from rank 0;
+        // MR-2S folds a collective round, recording no sampling spans).
+        for (rank, spans) in out.report.spans.iter().enumerate().skip(1) {
+            assert!(
+                !spans.iter().any(|s| s.op == op::TELEMETRY_SAMPLE || s.op == op::HEALTH),
+                "{name}: rank {rank} recorded telemetry spans"
+            );
+        }
+        if backend == BackendKind::OneSided {
+            assert!(
+                out.report.spans[0].iter().any(|s| s.op == op::TELEMETRY_SAMPLE),
+                "MR-1S monitor must record its sampling reads"
+            );
+        }
+        // A healthy uniform run escalates nobody: transient SlowProgress
+        // on a short tail is tolerated, hard flags are not.
+        assert!(
+            !out.report.health.iter().any(|e| e.kind == HealthKind::StragglerDetected
+                || e.kind == HealthKind::HeartbeatStale),
+            "{name}: spurious {:?}",
+            out.report.health
+        );
+        // The monitor adds no waiting anywhere: the PR 6 invariant that
+        // WAIT spans reproduce wait_ns must survive telemetry-on runs.
+        for (spans, b) in out.report.spans.iter().zip(&out.report.breakdowns) {
+            let wait_sum: u64 =
+                spans.iter().filter(|s| s.op == op::WAIT).map(|s| s.dur_ns()).sum();
+            assert_eq!(wait_sum, b.wait_ns, "{name}: wait spans != wait_ns");
+        }
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn slow_fault_is_flagged_as_a_straggler_for_exactly_the_victim() {
+    use mr1s::metrics::tracer::op;
+    use mr1s::metrics::HealthKind;
+    let p = corpus("telem-slow", 300_000, 52);
+    let oracle = oracle_wordcount(&p);
+    let cfg = JobConfig {
+        sample_every: 10_000, // dense cadence: many observations per task
+        faults: Some("slow:rank=1@factor=6.0".parse().unwrap()),
+        ..small_config(p.clone())
+    };
+    let out = Job::new(Arc::new(WordCount), cfg)
+        .unwrap()
+        .run(BackendKind::OneSided, 4, CostModel::default())
+        .unwrap();
+    assert_eq!(counts_map(out.result), oracle);
+    let hard: Vec<_> = out
+        .report
+        .health
+        .iter()
+        .filter(|e| e.kind == HealthKind::StragglerDetected)
+        .collect();
+    assert!(!hard.is_empty(), "a 6x straggler must escalate to straggler-detected");
+    assert!(hard.iter().all(|e| e.rank == 1), "only rank 1 is slow: {hard:?}");
+    // Health events surface in the human summary and as tracer spans on
+    // the monitor's rank.
+    let summary = out.report.summary();
+    assert!(summary.contains("health="), "summary lacks health: {summary}");
+    assert!(summary.contains("straggler-detected:1"), "summary: {summary}");
+    assert!(
+        out.report.spans[0].iter().any(|s| s.op == op::HEALTH && s.peer == Some(1)),
+        "health events must be visible in the trace"
+    );
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn straggler_hint_steers_stealing_toward_the_flagged_rank() {
+    use mr1s::metrics::tracer::op;
+    use mr1s::metrics::HealthKind;
+    let p = corpus("telem-steal", 300_000, 53);
+    let oracle = oracle_wordcount(&p);
+    let cfg = JobConfig {
+        job_stealing: true,
+        sample_every: 10_000,
+        faults: Some("slow:rank=1@factor=6.0".parse().unwrap()),
+        ..small_config(p.clone())
+    };
+    let out = Job::new(Arc::new(WordCount), cfg)
+        .unwrap()
+        .run(BackendKind::OneSided, 4, CostModel::default())
+        .unwrap();
+    assert_eq!(counts_map(out.result), oracle, "stealing + slow fault stays exact");
+    let flag_vt = out
+        .report
+        .health
+        .iter()
+        .filter(|e| e.kind == HealthKind::StragglerDetected && e.rank == 1)
+        .map(|e| e.vt)
+        .min()
+        .expect("the 6x straggler is detected");
+    let claims: Vec<_> = out
+        .report
+        .spans
+        .iter()
+        .flatten()
+        .filter(|s| s.op == op::STEAL_CLAIM)
+        .collect();
+    assert!(!claims.is_empty(), "fast ranks must steal from the straggler");
+    assert!(
+        claims.iter().any(|s| s.peer == Some(1)),
+        "somebody must relieve the flagged rank: {claims:?}"
+    );
+    // The hint takes effect from the moment the detector fires: the
+    // first claim issued at-or-after the flag targets the flagged rank.
+    if let Some(first) = claims.iter().filter(|s| s.t0 >= flag_vt).min_by_key(|s| s.t0) {
+        assert_eq!(
+            first.peer,
+            Some(1),
+            "post-flag steals must prefer the straggler (flag at {flag_vt})"
+        );
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn kill_runs_surface_heartbeat_stale_for_the_dead_rank() {
+    use mr1s::metrics::tracer::op;
+    use mr1s::metrics::HealthKind;
+    let p = corpus("telem-kill", 60_000, 54);
+    let dir = tmppath("telem-kill-ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    const VICTIM: usize = 2;
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        let cfg = JobConfig {
+            checkpoints: true,
+            checkpoint_dir: dir.clone(),
+            faults: Some(format!("kill:rank={VICTIM}@phase=map").parse().unwrap()),
+            ..small_config(p.clone())
+        };
+        let out = Job::new(Arc::new(WordCount), cfg)
+            .unwrap()
+            .run(backend, 4, CostModel::default())
+            .unwrap();
+        let name = backend.name();
+        assert!(out.report.recovery.is_some(), "{name}");
+        let stale: Vec<_> = out
+            .report
+            .health
+            .iter()
+            .filter(|e| e.kind == HealthKind::HeartbeatStale)
+            .collect();
+        assert_eq!(stale.len(), 1, "{name}: exactly one stale heartbeat: {stale:?}");
+        assert_eq!(stale[0].rank, VICTIM, "{name}: the dead rank goes stale");
+        let summary = out.report.summary();
+        assert!(
+            summary.contains(&format!("heartbeat-stale:{VICTIM}")),
+            "{name}: summary lacks the stale heartbeat: {summary}"
+        );
+        assert!(
+            out.report.spans[0]
+                .iter()
+                .any(|s| s.op == op::HEALTH && s.peer == Some(VICTIM)),
+            "{name}: stale heartbeat must be visible in the trace"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
     std::fs::remove_file(&p).ok();
 }

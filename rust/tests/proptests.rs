@@ -689,6 +689,63 @@ fn prop_replay_log_recovers_exactly_the_checkpointed_prefix_both_tiers() {
 }
 
 #[test]
+fn prop_telemetry_ring_keeps_the_latest_suffix() {
+    // The monitor's per-rank ring buffer may drop history but never the
+    // present: after any sequence of pushes, `latest()` is the last
+    // sample pushed, and the retained window is exactly the newest
+    // `min(pushed, cap)` samples in push order.
+    use mr1s::metrics::{RingSeries, TelemetryBlock, TelemetrySample};
+    PropRunner::new(300).check(
+        "telemetry ring retention",
+        |rng| {
+            let cap = 1 + rng.below(40) as usize;
+            let n = rng.below(200) as usize;
+            let mut vt = 0u64;
+            let samples: Vec<TelemetrySample> = (0..n)
+                .map(|i| {
+                    vt += 1 + rng.below(10_000);
+                    TelemetrySample {
+                        vt,
+                        block: TelemetryBlock { tasks_done: i as u64, ..Default::default() },
+                    }
+                })
+                .collect();
+            (cap, samples)
+        },
+        |(cap, samples)| {
+            let mut ring = RingSeries::new(*cap);
+            for (i, s) in samples.iter().enumerate() {
+                ring.push(*s);
+                let latest = ring.latest().ok_or("latest() empty after a push")?;
+                if latest.vt != s.vt || latest.block.tasks_done != s.block.tasks_done {
+                    return Err(format!("push {i}: latest() is not the newest sample"));
+                }
+                if ring.len() != (i + 1).min(*cap) {
+                    return Err(format!("push {i}: len {} != min(n, cap)", ring.len()));
+                }
+            }
+            if ring.pushed() != samples.len() as u64 {
+                return Err(format!("pushed() {} != {}", ring.pushed(), samples.len()));
+            }
+            let kept = ring.to_vec();
+            let want = &samples[samples.len() - samples.len().min(*cap)..];
+            if kept.len() != want.len() {
+                return Err(format!("retained {} samples, want {}", kept.len(), want.len()));
+            }
+            for (k, w) in kept.iter().zip(want) {
+                if k.vt != w.vt || k.block.tasks_done != w.block.tasks_done {
+                    return Err("retained window is not the newest suffix".into());
+                }
+            }
+            if !kept.windows(2).all(|w| w[0].vt <= w[1].vt) {
+                return Err("iteration order lost time order".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_win_size_must_exceed_floor() {
     PropRunner::new(50).check(
         "config validation",
