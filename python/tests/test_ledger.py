@@ -1,0 +1,317 @@
+"""Run-ledger schema validation and differential-attribution checks.
+
+The Rust side writes ``LEDGER_<name>.json`` run ledgers (see
+``rust/src/metrics/ledger.rs`` and DESIGN.md section 12) and ``mr1s
+diff`` renders attribution between two of them.  These tests pin the
+JSON contract from the consumer side against the committed placeholder
+fixture in ``rust/benches/baselines/ledgers/``, exercise the Python
+mirror of the diff algebra in ``scripts/bench_compare.py`` (exactness
+invariant: components sum to the elapsed delta with zero residual), and
+— when CI sets ``MR1S_LEDGER_JSON`` / ``MR1S_DIFF_HTML`` to real
+artifacts from the fig8 smoke bench — validate those too.
+"""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SCRIPT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "scripts", "bench_compare.py")
+)
+_PLACEHOLDER = os.path.abspath(
+    os.path.join(
+        os.path.dirname(__file__),
+        "..",
+        "..",
+        "rust",
+        "benches",
+        "baselines",
+        "ledgers",
+        "LEDGER_placeholder.json",
+    )
+)
+
+LEDGER_SCHEMA = 1
+WAIT_CAUSES = {
+    "barrier",
+    "window-lock",
+    "status-wait",
+    "spill-durability",
+    "steal-gate",
+    "detect",
+    "replay",
+    "replan",
+}
+RANK_COMPONENT_KEYS = (
+    "io_ns",
+    "map_ns",
+    "local_reduce_ns",
+    "reduce_ns",
+    "combine_ns",
+    "checkpoint_ns",
+    "other_ns",
+)
+RUN_KEYS = {
+    "tag",
+    "usecase",
+    "backend",
+    "route",
+    "nranks",
+    "elapsed_ns",
+    "ranks",
+    "bytes",
+    "imbalance",
+    "route_fingerprint",
+    "crit",
+    "health",
+    "recovery",
+}
+
+
+@pytest.fixture(scope="module")
+def bench_compare():
+    spec = importlib.util.spec_from_file_location("bench_compare", _SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def validate_ledger(doc):
+    """Assert the full schema-v1 contract on a ledger document."""
+    assert doc["schema"] == LEDGER_SCHEMA
+    for key in ("ledger", "git_sha", "config", "runs"):
+        assert key in doc, f"missing top-level key {key}"
+    assert isinstance(doc["runs"], list)
+    for run in doc["runs"]:
+        assert RUN_KEYS <= set(run), f"run missing keys: {RUN_KEYS - set(run)}"
+        elapsed = run["elapsed_ns"]
+        assert isinstance(elapsed, int) and elapsed >= 0
+        # Invariant 1: every rank's components sum exactly to its
+        # elapsed time (other_ns is the defined remainder).
+        for i, rank in enumerate(run["ranks"]):
+            waits = rank["wait_ns"]
+            assert WAIT_CAUSES <= set(waits), "wait causes must be zero-filled"
+            total = sum(rank[k] for k in RANK_COMPONENT_KEYS) + sum(waits.values())
+            assert total == rank["elapsed_ns"], f"rank {i} decomposition inexact"
+        # Invariant 2: crit labels sum to the crit total, segments tile
+        # it, and for driver-built ledgers the total equals the makespan.
+        crit = run["crit"]
+        assert sum(crit["labels"].values()) == crit["total_ns"]
+        assert sum(t1 - t0 for _, t0, t1, _ in crit["segments"]) == crit["total_ns"]
+        assert crit["total_ns"] == elapsed
+        for _, t0, t1, label in crit["segments"]:
+            assert t0 <= t1
+            assert label in crit["labels"]
+        # Hashes travel as decimal strings (f64-unsafe above 2**53).
+        fp = run["route_fingerprint"]
+        if fp is not None:
+            assert isinstance(fp["table_hash"], str)
+            int(fp["table_hash"])
+            for hash_str, ways in fp["splits"]:
+                assert isinstance(hash_str, str)
+                assert int(hash_str) >= 0 and ways >= 1
+        if run["recovery"] is not None:
+            rec = run["recovery"]
+            assert rec["phase"] in ("map", "reduce")
+            assert rec["orig_nranks"] == run["nranks"] + 1
+        for event in run["health"]:
+            assert {"vt", "rank", "kind"} <= set(event)
+
+
+def test_placeholder_fixture_is_schema_valid():
+    with open(_PLACEHOLDER, "r", encoding="utf-8") as f:
+        validate_ledger(json.load(f))
+
+
+def test_placeholder_big_hashes_survive():
+    """The committed fixture carries a >2**53 hash to pin the encoding."""
+    with open(_PLACEHOLDER, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    hashes = [
+        int(h)
+        for run in doc["runs"]
+        if run["route_fingerprint"]
+        for h, _ in run["route_fingerprint"]["splits"]
+    ]
+    assert any(h > 2**53 for h in hashes), "fixture must exercise the string encoding"
+
+
+def test_self_diff_of_placeholder_is_all_zero(bench_compare):
+    doc = bench_compare.load_ledger(_PLACEHOLDER)
+    assert doc is not None
+    pairs = bench_compare.diff_ledgers(doc, doc)
+    assert len(pairs) == len(doc["runs"])
+    for p in pairs:
+        assert p["residual"] == 0
+        assert all(d == 0 for _, _, d in p["components"].values())
+    assert bench_compare.top_causes(pairs) == []
+
+
+def test_synthetic_regression_attributes_exactly(bench_compare):
+    base = {
+        "ledger": "t",
+        "schema": LEDGER_SCHEMA,
+        "git_sha": "x",
+        "config": "",
+        "runs": [
+            bench_compare.synthetic_run("a", 1000, {"work": 800, "barrier": 200}),
+            bench_compare.synthetic_run("b", 500, {"work": 500}),
+        ],
+    }
+    fresh = {
+        "ledger": "t",
+        "schema": LEDGER_SCHEMA,
+        "git_sha": "y",
+        "config": "",
+        "runs": [
+            # barrier regresses, work improves; a brand-new label appears.
+            bench_compare.synthetic_run("a", 1250, {"work": 750, "barrier": 450, "detect": 50}),
+            bench_compare.synthetic_run("b", 500, {"work": 500}),
+        ],
+    }
+    pairs = bench_compare.diff_ledgers(base, fresh)
+    assert len(pairs) == 2
+    for p in pairs:
+        delta = p["elapsed_b"] - p["elapsed_a"]
+        assert sum(d for _, _, d in p["components"].values()) == delta
+        assert p["residual"] == 0
+    causes = bench_compare.top_causes(pairs)
+    assert causes[0][1] == "barrier" and causes[0][2] == 250
+    assert ("a [word-count mr-1s modulo 4r]", "detect", 50) in causes
+    assert ("a [word-count mr-1s modulo 4r]", "work", -50) in causes
+
+
+def test_untracked_slack_is_an_explicit_component(bench_compare):
+    run = bench_compare.synthetic_run("a", 1000, {"work": 900})
+    # 100 ns of makespan the crit path does not tile.
+    comps = bench_compare.ledger_components(run)
+    assert comps[bench_compare.UNTRACKED] == 100
+    assert sum(comps.values()) == 1000
+
+
+def test_gate_failure_prints_attribution(bench_compare, tmp_path, capsys):
+    base_dir = tmp_path / "baselines"
+    fresh_dir = tmp_path / "fresh"
+    (base_dir / "ledgers").mkdir(parents=True)
+    fresh_dir.mkdir()
+
+    def summary(path, elapsed):
+        path.write_text(
+            json.dumps(
+                {
+                    "bench": "t",
+                    "samples": [
+                        {"name": "job_elapsed_ns", "mean": elapsed, "stddev": 0.0, "n": 1}
+                    ],
+                }
+            )
+        )
+
+    summary(base_dir / "BENCH_t.json", 1e9)
+    summary(fresh_dir / "BENCH_t.json", 1.4e9)
+    bench_compare.write_ledger_doc(
+        str(base_dir / "ledgers" / "LEDGER_t.json"),
+        "t",
+        [bench_compare.synthetic_run("job", 10**9, {"work": 9 * 10**8, "barrier": 10**8})],
+    )
+    bench_compare.write_ledger_doc(
+        str(fresh_dir / "LEDGER_t.json"),
+        "t",
+        [bench_compare.synthetic_run("job", 14 * 10**8, {"work": 9 * 10**8, "barrier": 5 * 10**8})],
+    )
+    code = bench_compare.main(
+        [
+            "--fresh-dir",
+            str(fresh_dir),
+            "--baseline-dir",
+            str(base_dir),
+            "--ledger-dir",
+            str(fresh_dir),
+        ]
+    )
+    assert code == 1
+    out = capsys.readouterr().out
+    assert "top regressing cause: barrier" in out
+    assert "residual 0 ns" in out
+
+
+def test_gate_failure_without_baseline_ledger_is_a_bootstrap_note(
+    bench_compare, tmp_path, capsys
+):
+    base_dir = tmp_path / "baselines"
+    fresh_dir = tmp_path / "fresh"
+    base_dir.mkdir()
+    fresh_dir.mkdir()
+    for directory, elapsed in ((base_dir, 1e9), (fresh_dir, 1.4e9)):
+        (directory / "BENCH_t.json").write_text(
+            json.dumps(
+                {
+                    "bench": "t",
+                    "samples": [
+                        {"name": "job_elapsed_ns", "mean": elapsed, "stddev": 0.0, "n": 1}
+                    ],
+                }
+            )
+        )
+    bench_compare.write_ledger_doc(
+        str(fresh_dir / "LEDGER_t.json"),
+        "t",
+        [bench_compare.synthetic_run("job", 10**9, {"work": 10**9})],
+    )
+    code = bench_compare.main(
+        [
+            "--fresh-dir",
+            str(fresh_dir),
+            "--baseline-dir",
+            str(base_dir),
+            "--ledger-dir",
+            str(fresh_dir),
+        ]
+    )
+    assert code == 1
+    assert "bootstrap" in capsys.readouterr().out
+
+
+def test_self_check_covers_the_ledger_leg(bench_compare, capsys):
+    assert bench_compare.main(["--self-check"]) == 0
+    assert "top-ranked" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Real-artifact validation (CI wires the fig8 smoke bench's exports in).
+
+
+@pytest.mark.skipif("MR1S_LEDGER_JSON" not in os.environ, reason="no ledger artifact")
+def test_real_ledger_artifact_is_schema_valid():
+    with open(os.environ["MR1S_LEDGER_JSON"], "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    validate_ledger(doc)
+    # The fig8 ledger covers both backends x both routes.
+    keys = {(r["backend"], r["route"]) for r in doc["runs"]}
+    assert len(keys) >= 4, f"expected a backend x route sweep, got {keys}"
+
+
+@pytest.mark.skipif("MR1S_LEDGER_JSON" not in os.environ, reason="no ledger artifact")
+def test_real_ledger_self_diffs_to_zero(bench_compare):
+    doc = bench_compare.load_ledger(os.environ["MR1S_LEDGER_JSON"])
+    assert doc is not None
+    pairs = bench_compare.diff_ledgers(doc, doc)
+    assert pairs, "self-diff must align every run"
+    for p in pairs:
+        assert p["residual"] == 0
+        assert all(d == 0 for _, _, d in p["components"].values())
+
+
+@pytest.mark.skipif("MR1S_DIFF_HTML" not in os.environ, reason="no diff html artifact")
+def test_real_diff_html_is_self_contained():
+    with open(os.environ["MR1S_DIFF_HTML"], "r", encoding="utf-8") as f:
+        html = f.read()
+    assert html.startswith("<!DOCTYPE html>")
+    assert html.rstrip().endswith("</html>")
+    assert "<svg" not in html or "</svg>" in html
+    assert "http://" not in html and "https://" not in html, "no external assets"
+    for tag in ("<table", "<body", "<head"):
+        closing = tag.replace("<", "</") + ">"
+        assert html.count(closing) >= 1, f"unbalanced {tag}"

@@ -16,13 +16,21 @@
 //! so the degraded run pays checkpoint-read bandwidth, not map compute.
 //!
 //! `cargo bench --bench fig10_recovery` runs the smoke profile;
-//! `-- --full` the larger one.  Emits `BENCH_fig10_recovery.json`.
+//! `-- --full` the larger one.  Emits `BENCH_fig10_recovery.json` (the
+//! recovery cost columns ride the shared `job_samples` funnel as
+//! `<tag>_recovery_*`) and the run ledger `LEDGER_fig10_recovery.json`,
+//! whose kill-run records carry the full recovery attribution
+//! (DESIGN.md §12; `-- --ledger-out PATH` overrides).  `-- --trace-out
+//! PATH` / `-- --metrics-out PATH` export the checkpointed MR-1S
+//! mid-map kill's Chrome trace and telemetry.
 
 use std::sync::Arc;
 
-use mr1s::bench::{job_samples, record, section, write_json, Sample};
+use mr1s::bench::{job_samples, record, section, write_json, write_ledger, Sample};
+use mr1s::cli::ArtifactOpts;
 use mr1s::harness::Scenario;
 use mr1s::mapreduce::{BackendKind, Job, JobConfig};
+use mr1s::metrics::RunRecord;
 use mr1s::sim::CostModel;
 use mr1s::usecases::WordCount;
 
@@ -31,6 +39,7 @@ const VICTIM: usize = 2;
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
+    let artifacts = ArtifactOpts::from_env_args();
     let scenario = if full { Scenario::default() } else { Scenario::smoke() };
     let bytes: u64 = if full { 16 << 20 } else { 2 << 20 };
     let input = scenario.corpus(bytes).expect("corpus generates");
@@ -43,6 +52,7 @@ fn main() {
     std::fs::create_dir_all(&workdir).expect("workdir");
 
     let mut samples: Vec<Sample> = Vec::new();
+    let mut runs: Vec<RunRecord> = Vec::new();
     for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
         for checkpoints in [true, false] {
             let base = JobConfig {
@@ -56,6 +66,12 @@ fn main() {
                 .expect("baseline runs");
             let ck = if checkpoints { "ckpt" } else { "nockpt" };
             section(&format!("{} {ck}", baseline.report.backend));
+            runs.push(RunRecord::from_report(
+                &format!("{}_{ck}_faultfree", baseline.report.backend.to_lowercase()),
+                "word-count",
+                "modulo",
+                &baseline.report,
+            ));
 
             for phase in ["map", "reduce"] {
                 let cfg = JobConfig {
@@ -108,35 +124,40 @@ fn main() {
                         &[slowdown],
                     ),
                 );
-                record(
-                    &mut samples,
-                    Sample::from_measurements(
-                        format!("{tag}_recovery_total_ns"),
-                        &[rec.total_ns() as f64],
-                    ),
-                );
-                record(
-                    &mut samples,
-                    Sample::from_measurements(
-                        format!("{tag}_replayed_tasks"),
-                        &[rec.replayed_tasks as f64],
-                    ),
-                );
-                record(
-                    &mut samples,
-                    Sample::from_measurements(
-                        format!("{tag}_replayed_bytes"),
-                        &[rec.replayed_bytes as f64],
-                    ),
-                );
-                // Same job-report funnel as fig8: mem-hwm, per-cause
-                // wait decomposition, critical path, health events.
+                // The shared funnel covers the recovery decomposition
+                // (`<tag>_recovery_*`) alongside mem-hwm, per-cause
+                // wait attribution, critical path, and health events.
                 for sample in job_samples(&tag, report) {
                     record(&mut samples, sample);
+                }
+                runs.push(RunRecord::from_report(&tag, "word-count", "modulo", report));
+                // The checkpointed MR-1S mid-map kill is the
+                // representative trace/telemetry export.
+                if backend == BackendKind::OneSided && checkpoints && phase == "map" {
+                    artifacts.write_trace(&report.timelines, &report.spans).expect("trace writes");
+                    artifacts
+                        .write_metrics(
+                            &format!("fig10_recovery {tag} ranks={NRANKS}"),
+                            JobConfig::default().sample_every,
+                            &report.telemetry,
+                            &report.health,
+                        )
+                        .expect("metrics write");
                 }
             }
         }
     }
     std::fs::remove_dir_all(&workdir).ok();
+    let config = format!(
+        "profile={} ranks={NRANKS} usecase=word-count kill_rank={VICTIM} phases=map,reduce",
+        if full { "full" } else { "smoke" }
+    );
     write_json("fig10_recovery", &samples).expect("json summary");
+    write_ledger(
+        "fig10_recovery",
+        &config,
+        runs,
+        artifacts.ledger_out.as_ref().map(std::path::Path::new),
+    )
+    .expect("ledger writes");
 }

@@ -7,34 +7,28 @@
 //! per-rank reduce-load imbalance the shuffle planner removes.
 //!
 //! `cargo bench --bench fig8_skew` runs the smoke profile; `-- --full`
-//! the paper-scaled one.  Emits `BENCH_fig8_skew.json`, with
-//! `-- --trace-out PATH` also a Chrome-trace JSON of the most skewed
-//! MR-1S planned run (load in Perfetto; DESIGN.md §9), and with
+//! the paper-scaled one.  Emits `BENCH_fig8_skew.json` and the run
+//! ledger `LEDGER_fig8_skew.json` (every tagged run's full time/byte
+//! attribution; DESIGN.md §12, override with `-- --ledger-out PATH`).
+//! With `-- --trace-out PATH` also a Chrome-trace JSON of the most
+//! skewed MR-1S planned run (load in Perfetto; DESIGN.md §9), and with
 //! `-- --metrics-out PATH` that run's live-telemetry export (JSON +
 //! Prometheus + HTML; DESIGN.md §11).
 
 use std::sync::Arc;
 
-use mr1s::bench::{job_samples, record, section, write_json_with_config, Sample};
+use mr1s::bench::{job_samples, record, section, write_json_with_config, write_ledger, Sample};
+use mr1s::cli::ArtifactOpts;
 use mr1s::harness::Scenario;
 use mr1s::mapreduce::{BackendKind, Job, JobConfig, RouteConfig};
-use mr1s::metrics::{tracer, write_metrics};
+use mr1s::metrics::RunRecord;
 use mr1s::sim::CostModel;
 use mr1s::usecases::InvertedIndex;
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let full = args.iter().any(|a| a == "--full");
-    let trace_out = args
-        .iter()
-        .position(|a| a == "--trace-out")
-        .and_then(|i| args.get(i + 1))
-        .cloned();
-    let metrics_out = args
-        .iter()
-        .position(|a| a == "--metrics-out")
-        .and_then(|i| args.get(i + 1))
-        .cloned();
+    let artifacts = ArtifactOpts::from_args(&args);
     let base = if full { Scenario::default() } else { Scenario::smoke() };
     let nranks = *base.ranks.last().expect("scenario has rank counts");
     println!("fig8 skew bench ({} profile, {nranks} ranks)", if full { "full" } else { "smoke" });
@@ -44,12 +38,14 @@ fn main() {
         ("planned", RouteConfig::Planned { split: RouteConfig::DEFAULT_SPLIT }),
     ];
     let mut samples: Vec<Sample> = Vec::new();
+    let mut runs: Vec<RunRecord> = Vec::new();
     for s in [0.8f64, 1.1, 1.4] {
         let scenario = Scenario { zipf_s: s, ..base.clone() };
         let input = scenario.corpus(scenario.strong_bytes).expect("corpus generates");
         section(&format!("zipf s={s}"));
         for backend in [BackendKind::TwoSided, BackendKind::OneSided] {
             for (route_name, route) in routes {
+                let route_label = route.label();
                 let cfg = JobConfig { route, ..scenario.config(input.clone(), false) };
                 let out = Job::new(Arc::new(InvertedIndex), cfg)
                     .expect("config valid")
@@ -72,26 +68,21 @@ fn main() {
                 for sample in job_samples(&tag, &out.report) {
                     record(&mut samples, sample);
                 }
+                runs.push(RunRecord::from_report(&tag, "inverted-index", &route_label, &out.report));
                 // Export the most skewed MR-1S planned run as the
                 // representative trace + telemetry artifacts.
                 if s == 1.4 && backend == BackendKind::OneSided && route_name == "planned" {
-                    if let Some(path) = &trace_out {
-                        let json =
-                            tracer::chrome_trace_json(&out.report.timelines, &out.report.spans);
-                        std::fs::write(path, json).expect("trace writes");
-                        println!("trace: wrote {path} ({tag})");
-                    }
-                    if let Some(path) = &metrics_out {
-                        write_metrics(
-                            std::path::Path::new(path),
+                    artifacts
+                        .write_trace(&out.report.timelines, &out.report.spans)
+                        .expect("trace writes");
+                    artifacts
+                        .write_metrics(
                             &format!("fig8_skew {tag} ranks={nranks}"),
                             JobConfig::default().sample_every,
                             &out.report.telemetry,
                             &out.report.health,
                         )
                         .expect("metrics write");
-                        println!("metrics: wrote {path} ({tag})");
-                    }
                 }
             }
         }
@@ -101,4 +92,6 @@ fn main() {
         if full { "full" } else { "smoke" }
     );
     write_json_with_config("fig8_skew", &config, &samples).expect("json summary");
+    write_ledger("fig8_skew", &config, runs, artifacts.ledger_out.as_ref().map(std::path::Path::new))
+        .expect("ledger writes");
 }

@@ -14,13 +14,19 @@
 //! multicast buys at the price of `r×` redundant map work.
 //!
 //! `cargo bench --bench fig9_coded` runs the smoke profile; `-- --full`
-//! the paper-scaled one.  Emits `BENCH_fig9_coded.json`.
+//! the paper-scaled one.  Emits `BENCH_fig9_coded.json` and the run
+//! ledger `LEDGER_fig9_coded.json` (DESIGN.md §12; `-- --ledger-out
+//! PATH` overrides).  `-- --trace-out PATH` / `-- --metrics-out PATH`
+//! export the largest-corpus MR-1S `coded:r=2` run's Chrome trace and
+//! telemetry, same contract as fig8.
 
 use std::sync::Arc;
 
-use mr1s::bench::{record, section, write_json, Sample};
+use mr1s::bench::{job_samples, record, section, write_json, write_ledger, Sample};
+use mr1s::cli::ArtifactOpts;
 use mr1s::harness::Scenario;
 use mr1s::mapreduce::{BackendKind, Job, JobConfig, RouteConfig};
+use mr1s::metrics::RunRecord;
 use mr1s::sim::CostModel;
 use mr1s::usecases::WordCount;
 
@@ -38,6 +44,7 @@ fn shuffle_bound_cost() -> CostModel {
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
+    let artifacts = ArtifactOpts::from_env_args();
     let base = if full { Scenario::default() } else { Scenario::smoke() };
     // Zipf 1.2 gives the sketch real heavy hitters to route as coded
     // segments; task_size keeps the task count well above C(8,4) = 70 so
@@ -50,6 +57,7 @@ fn main() {
     );
 
     let mut samples: Vec<Sample> = Vec::new();
+    let mut runs: Vec<RunRecord> = Vec::new();
     for &bytes in sizes {
         let input = scenario.corpus(bytes).expect("corpus generates");
         let mib = bytes >> 20;
@@ -89,6 +97,15 @@ fn main() {
                     &[planned.report.shuffle_wire_bytes() as f64],
                 ),
             );
+            for sample in job_samples(&base_tag, &planned.report) {
+                record(&mut samples, sample);
+            }
+            runs.push(RunRecord::from_report(
+                &base_tag,
+                "word-count",
+                &RouteConfig::Planned { split: RouteConfig::DEFAULT_SPLIT }.label(),
+                &planned.report,
+            ));
 
             for r in 1..=4usize {
                 let out = run(RouteConfig::Coded { r });
@@ -142,8 +159,36 @@ fn main() {
                         &[speedup],
                     ),
                 );
+                for sample in job_samples(&tag, report) {
+                    record(&mut samples, sample);
+                }
+                runs.push(RunRecord::from_report(
+                    &tag,
+                    "word-count",
+                    &RouteConfig::Coded { r }.label(),
+                    report,
+                ));
+                // The largest-corpus MR-1S r=2 run is the representative
+                // trace/telemetry export.
+                if bytes == *sizes.last().unwrap() && backend == BackendKind::OneSided && r == 2 {
+                    artifacts.write_trace(&report.timelines, &report.spans).expect("trace writes");
+                    artifacts
+                        .write_metrics(
+                            &format!("fig9_coded {tag} ranks={NRANKS}"),
+                            JobConfig::default().sample_every,
+                            &report.telemetry,
+                            &report.health,
+                        )
+                        .expect("metrics write");
+                }
             }
         }
     }
+    let config = format!(
+        "profile={} ranks={NRANKS} usecase=word-count routes=planned,coded r=1..4",
+        if full { "full" } else { "smoke" }
+    );
     write_json("fig9_coded", &samples).expect("json summary");
+    write_ledger("fig9_coded", &config, runs, artifacts.ledger_out.as_ref().map(std::path::Path::new))
+        .expect("ledger writes");
 }

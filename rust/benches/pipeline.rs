@@ -3,18 +3,27 @@
 //! stage-boundary prefetch overlap MR-1S buys (DESIGN.md §6).
 //!
 //! `cargo bench --bench pipeline` runs the smoke profile;
-//! `-- --full` runs the paper-scaled scenario.
+//! `-- --full` runs the paper-scaled scenario.  Emits
+//! `BENCH_pipeline.json` and the run ledger `LEDGER_pipeline.json` with
+//! one record per stage of every configuration (DESIGN.md §12;
+//! `-- --ledger-out PATH` overrides).  `-- --trace-out PATH` /
+//! `-- --metrics-out PATH` export the widest MR-1S TF-IDF run's merged
+//! Chrome trace and telemetry.
 
-use mr1s::bench::{imbalance_samples, section, write_json, Sample};
+use mr1s::bench::{job_samples, section, write_json, write_ledger, Sample};
+use mr1s::cli::ArtifactOpts;
 use mr1s::harness::Scenario;
-use mr1s::mapreduce::BackendKind;
+use mr1s::mapreduce::{BackendKind, JobConfig};
+use mr1s::metrics::RunRecord;
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
+    let artifacts = ArtifactOpts::from_env_args();
     let scenario = if full { Scenario::default() } else { Scenario::smoke() };
     println!("pipeline bench ({} profile)", if full { "full" } else { "smoke" });
 
     let mut samples: Vec<Sample> = Vec::new();
+    let mut runs: Vec<RunRecord> = Vec::new();
     for plan in ["tfidf", "join"] {
         for backend in [BackendKind::TwoSided, BackendKind::OneSided] {
             section(&format!("{plan} on {}", backend.name()));
@@ -43,10 +52,42 @@ fn main() {
                     &[overlap_ns as f64],
                 ));
                 if let Some(last) = out.stages.last() {
-                    samples.extend(imbalance_samples(&tag, &last.report));
+                    samples.extend(job_samples(&tag, &last.report));
+                }
+                for (i, stage) in out.stages.iter().enumerate() {
+                    runs.push(RunRecord::from_report(
+                        &format!("{tag}_stage{i}_{}", stage.name),
+                        plan,
+                        "modulo",
+                        &stage.report,
+                    ));
+                }
+                // The widest MR-1S TF-IDF run is the representative
+                // trace/telemetry export (merged across stages).
+                if plan == "tfidf"
+                    && backend == BackendKind::OneSided
+                    && nranks == *scenario.ranks.last().expect("scenario has ranks")
+                {
+                    artifacts
+                        .write_trace(&out.merged_timelines(), &out.merged_spans())
+                        .expect("trace writes");
+                    artifacts
+                        .write_metrics(
+                            &format!("pipeline {tag}"),
+                            JobConfig::default().sample_every,
+                            &out.merged_telemetry(),
+                            &out.merged_health(),
+                        )
+                        .expect("metrics write");
                 }
             }
         }
     }
+    let config = format!(
+        "profile={} plans=tfidf,join route=modulo",
+        if full { "full" } else { "smoke" }
+    );
     write_json("pipeline", &samples).expect("json summary");
+    write_ledger("pipeline", &config, runs, artifacts.ledger_out.as_ref().map(std::path::Path::new))
+        .expect("ledger writes");
 }

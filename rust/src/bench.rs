@@ -148,9 +148,10 @@ pub fn trace_samples(tag: &str, report: &crate::metrics::JobReport) -> Vec<Sampl
 /// The one job-report → bench-sample funnel: every whole-job bench
 /// records the same series for a tagged run — the reduce-imbalance set,
 /// the trace set (wait-by-cause + critical path), the memory high-water
-/// mark (bytes and when it peaked), and the health-event count — so
-/// every job bench's JSON carries like-for-like columns regardless of
-/// which figure it drives.
+/// mark (bytes and when it peaked), the health-event count, and (when
+/// the run survived a fault) the recovery cost decomposition — so every
+/// job bench's JSON carries like-for-like columns regardless of which
+/// figure it drives.
 pub fn job_samples(tag: &str, report: &crate::metrics::JobReport) -> Vec<Sample> {
     let mut out = imbalance_samples(tag, report);
     out.extend(trace_samples(tag, report));
@@ -166,6 +167,19 @@ pub fn job_samples(tag: &str, report: &crate::metrics::JobReport) -> Vec<Sample>
         format!("{tag}_health_events"),
         &[report.health.len() as f64],
     ));
+    if let Some(rec) = &report.recovery {
+        for (name, v) in [
+            ("recovery_detect_ns", rec.detect_ns),
+            ("recovery_replay_ns", rec.replay_ns),
+            ("recovery_replan_ns", rec.replan_ns),
+            ("recovery_total_ns", rec.total_ns()),
+            ("recovery_replayed_tasks", rec.replayed_tasks),
+            ("recovery_recomputed_tasks", rec.recomputed_tasks),
+            ("recovery_replayed_bytes", rec.replayed_bytes),
+        ] {
+            out.push(Sample::from_measurements(format!("{tag}_{name}"), &[v as f64]));
+        }
+    }
     out
 }
 
@@ -279,6 +293,32 @@ pub fn write_json_to_with_config(
     out.push_str("]}\n");
     let mut f = std::fs::File::create(&path)?;
     f.write_all(out.as_bytes())?;
+    println!("wrote {}", path.display());
+    Ok(path)
+}
+
+/// The run-ledger counterpart of [`write_json`]: write
+/// `LEDGER_<bench>.json` beside the bench summary (same `$MR1S_BENCH_DIR`
+/// resolution), or to `path_override` when the bench was invoked with
+/// `--ledger-out`.  Every whole-job bench funnels its tagged runs here
+/// so regressions caught by the BENCH gate come with attribution
+/// (DESIGN.md §12).  Returns the written path.
+pub fn write_ledger(
+    bench: &str,
+    config: &str,
+    runs: Vec<crate::metrics::RunRecord>,
+    path_override: Option<&std::path::Path>,
+) -> std::io::Result<std::path::PathBuf> {
+    let mut ledger = crate::metrics::RunLedger::new(bench, config);
+    ledger.runs = runs;
+    let path = match path_override {
+        Some(p) => p.to_path_buf(),
+        None => std::env::var_os("MR1S_BENCH_DIR")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("."))
+            .join(format!("LEDGER_{bench}.json")),
+    };
+    ledger.write_to(&path)?;
     println!("wrote {}", path.display());
     Ok(path)
 }

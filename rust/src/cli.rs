@@ -9,6 +9,7 @@
 //!          [--unbalanced] [--checkpoints] [--flush-epochs] [--no-kernel]
 //!          [--top 20]
 //! mr1s compare --input corpus.txt [--ranks 8] [--unbalanced]
+//! mr1s diff A.json B.json [--html report.html] [--top 10]
 //! mr1s figures --fig 4a|4b|4c|4d|5a|5b|6a|6b|7a|7b|all [--smoke]
 //! ```
 
@@ -65,6 +66,97 @@ impl Flags {
     }
 }
 
+/// The shared observability-artifact flags — `--trace-out`,
+/// `--metrics-out`, `--ledger-out` — plumbed uniformly through `run`,
+/// `pipeline`, and every bench binary (which parse raw argv and cannot
+/// see the private [`Flags`]).  Each writer is a no-op when its flag is
+/// unset, so call sites emit unconditionally.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactOpts {
+    /// Chrome-trace-event JSON destination (DESIGN.md §9).
+    pub trace_out: Option<String>,
+    /// Telemetry export destination: JSON + `.prom` + `.html`
+    /// (DESIGN.md §11).
+    pub metrics_out: Option<String>,
+    /// Run-ledger JSON destination (DESIGN.md §12).
+    pub ledger_out: Option<String>,
+}
+
+impl ArtifactOpts {
+    fn from_flags(flags: &Flags) -> ArtifactOpts {
+        ArtifactOpts {
+            trace_out: flags.get("trace-out").map(String::from),
+            metrics_out: flags.get("metrics-out").map(String::from),
+            ledger_out: flags.get("ledger-out").map(String::from),
+        }
+    }
+
+    /// Scan raw argv for the three flags (bench binaries hand-parse
+    /// their arguments).
+    pub fn from_args(args: &[String]) -> ArtifactOpts {
+        let grab = |key: &str| {
+            args.iter()
+                .position(|a| a == key)
+                .and_then(|i| args.get(i + 1))
+                .filter(|v| !v.starts_with("--"))
+                .cloned()
+        };
+        ArtifactOpts {
+            trace_out: grab("--trace-out"),
+            metrics_out: grab("--metrics-out"),
+            ledger_out: grab("--ledger-out"),
+        }
+    }
+
+    /// Scan the process's own argv.
+    pub fn from_env_args() -> ArtifactOpts {
+        Self::from_args(&std::env::args().collect::<Vec<_>>())
+    }
+
+    /// Write the Chrome trace if `--trace-out` was given.
+    pub fn write_trace(
+        &self,
+        timelines: &[Vec<crate::metrics::Event>],
+        spans: &[Vec<crate::metrics::Span>],
+    ) -> Result<()> {
+        if let Some(path) = &self.trace_out {
+            std::fs::write(path, tracer::chrome_trace_json(timelines, spans))?;
+            println!("trace: wrote {path}");
+        }
+        Ok(())
+    }
+
+    /// Write the telemetry exports if `--metrics-out` was given.
+    pub fn write_metrics(
+        &self,
+        cfg_line: &str,
+        sample_every: u64,
+        series: &[Vec<crate::metrics::TelemetrySample>],
+        health: &[crate::metrics::HealthEvent],
+    ) -> Result<()> {
+        if let Some(path) = &self.metrics_out {
+            crate::metrics::write_metrics(
+                std::path::Path::new(path),
+                cfg_line,
+                sample_every,
+                series,
+                health,
+            )?;
+            println!("metrics: wrote {path} (+ .prom, .html)");
+        }
+        Ok(())
+    }
+
+    /// Write the run ledger if `--ledger-out` was given.
+    pub fn write_ledger(&self, ledger: &crate::metrics::RunLedger) -> Result<()> {
+        if let Some(path) = &self.ledger_out {
+            ledger.write_to(std::path::Path::new(path))?;
+            println!("ledger: wrote {path}");
+        }
+        Ok(())
+    }
+}
+
 /// Parse sizes like `64K`, `32M`, `1G`, `12345`.
 pub fn parse_size(s: &str) -> Result<usize> {
     let s = s.trim();
@@ -88,13 +180,15 @@ USAGE:
            [--route modulo|planned[:split=K]|coded[:r=R]]
            [--checkpoints] [--flush-epochs] [--stealing] [--no-kernel]
            [--faults kill:rank=R@phase=map|reduce[,slow:rank=R@factor=F][,torn:rank=R]]
-           [--top N] [--trace-out PATH] [--metrics-out PATH] [--sample-every NS]
+           [--top N] [--trace-out PATH] [--metrics-out PATH] [--ledger-out PATH]
+           [--sample-every NS]
   mr1s pipeline --input <PATH> [--usecase tfidf|join] [--backend 1s|2s]
            [--ranks N] [--task-size S] [--win-size S] [--chunk-size S]
            [--route modulo|planned[:split=K]|coded[:r=R]] [--stealing]
            [--no-kernel] [--timeline] [--top N] [--trace-out PATH]
-           [--metrics-out PATH] [--sample-every NS]
+           [--metrics-out PATH] [--ledger-out PATH] [--sample-every NS]
   mr1s compare --input <PATH> [--ranks N] [--unbalanced]
+  mr1s diff <A.json> <B.json> [--html PATH] [--top N]
   mr1s figures --fig <ID|all> [--smoke]
   mr1s help
 
@@ -122,6 +216,14 @@ job stealing victim choice (DESIGN.md section 11).
 series at PATH, Prometheus exposition text at PATH.prom, and a
 self-contained HTML report (SVG sparklines, CoV-over-time, health
 markers) at PATH.html.
+--ledger-out PATH writes the run ledger: a schema-versioned JSON record
+of the full time decomposition (per rank x stage, with per-cause waits
+and recovery costs), the byte ledger, the route-plan fingerprint,
+imbalance stats, and critical-path segments.  `mr1s diff A.json B.json`
+aligns two ledgers and decomposes the makespan delta of every matched
+run into attributed causes — the components sum to the delta exactly —
+ranking the top regressing causes as text and, with --html, as a
+self-contained side-by-side report (DESIGN.md section 12).
 --faults injects a deterministic fault plan: kill a rank mid-map or
 pre-combine, slow a rank's map compute by a factor, or tear its last
 checkpoint frame.  A killed rank is detected by the survivors, its
@@ -149,6 +251,10 @@ fn usecase_listing() -> String {
 /// CLI entrypoint; returns the process exit code.
 pub fn main(args: &[String]) -> Result<i32> {
     let cmd = args.get(1).map(String::as_str).unwrap_or("help");
+    if cmd == "diff" {
+        // Positional operands — bypass the `--flag` parser.
+        return cmd_diff(&args[2..]);
+    }
     let flags = Flags::parse(&args[2..])?;
     match cmd {
         "gen" => cmd_gen(&flags),
@@ -249,28 +355,27 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
     })?;
 
     let sample_every = cfg.sample_every;
+    let route_label = cfg.route.label();
     let cfg_line = format!(
         "run backend={} ranks={nranks} usecase={} input={}",
         backend.name(),
         usecase.name(),
         cfg.input.display()
     );
+    let artifacts = ArtifactOpts::from_flags(flags);
     let out = Job::new(usecase.clone(), cfg)?.run(backend, nranks, CostModel::default())?;
     println!("{}", out.report.summary());
-    if let Some(path) = flags.get("trace-out") {
-        let json = tracer::chrome_trace_json(&out.report.timelines, &out.report.spans);
-        std::fs::write(path, json)?;
-        println!("trace: wrote {path}");
-    }
-    if let Some(path) = flags.get("metrics-out") {
-        crate::metrics::write_metrics(
-            std::path::Path::new(path),
-            &cfg_line,
-            sample_every,
-            &out.report.telemetry,
-            &out.report.health,
-        )?;
-        println!("metrics: wrote {path} (+ .prom, .html)");
+    artifacts.write_trace(&out.report.timelines, &out.report.spans)?;
+    artifacts.write_metrics(&cfg_line, sample_every, &out.report.telemetry, &out.report.health)?;
+    {
+        let mut ledger = crate::metrics::RunLedger::new("run", &cfg_line);
+        ledger.push(crate::metrics::RunRecord::from_report(
+            "run",
+            usecase.name(),
+            &route_label,
+            &out.report,
+        ));
+        artifacts.write_ledger(&ledger)?;
     }
     if std::env::var_os("MR1S_DEBUG_PHASES").is_some() {
         for (r, b) in out.report.breakdowns.iter().enumerate() {
@@ -393,6 +498,7 @@ fn cmd_pipeline(flags: &Flags) -> Result<i32> {
             .map_err(|_| Error::Config("bad --sample-every (virtual ns; 0 disables)".into()))?;
     }
     let sample_every = base.sample_every;
+    let route_label = base.route.label();
     let plan = plans::by_name(which, input.into(), backend).expect("canonical name resolves");
     let pipe = Pipeline::new(plan, nranks, CostModel::default(), base)?;
     let out = pipe.run()?;
@@ -417,22 +523,22 @@ fn cmd_pipeline(flags: &Flags) -> Result<i32> {
     if flags.has("timeline") {
         println!("{}", timeline::render_ascii(&out.merged_timelines(), 100));
     }
-    if let Some(path) = flags.get("trace-out") {
-        let json = tracer::chrome_trace_json(&out.merged_timelines(), &out.merged_spans());
-        std::fs::write(path, json)?;
-        println!("trace: wrote {path}");
-    }
-    if let Some(path) = flags.get("metrics-out") {
-        let cfg_line =
-            format!("pipeline {which} backend={} ranks={nranks} input={input}", backend.name());
-        crate::metrics::write_metrics(
-            std::path::Path::new(path),
-            &cfg_line,
-            sample_every,
-            &out.merged_telemetry(),
-            &out.merged_health(),
-        )?;
-        println!("metrics: wrote {path} (+ .prom, .html)");
+    let cfg_line =
+        format!("pipeline {which} backend={} ranks={nranks} input={input}", backend.name());
+    let artifacts = ArtifactOpts::from_flags(flags);
+    artifacts.write_trace(&out.merged_timelines(), &out.merged_spans())?;
+    artifacts.write_metrics(&cfg_line, sample_every, &out.merged_telemetry(), &out.merged_health())?;
+    {
+        let mut ledger = crate::metrics::RunLedger::new("pipeline", &cfg_line);
+        for (i, stage) in out.stages.iter().enumerate() {
+            ledger.push(crate::metrics::RunRecord::from_report(
+                &format!("stage{i}_{}", stage.name),
+                which,
+                &route_label,
+                &stage.report,
+            ));
+        }
+        artifacts.write_ledger(&ledger)?;
     }
 
     // Intermediate spills are only needed while stages run.
@@ -464,6 +570,64 @@ fn cmd_compare(flags: &Flags) -> Result<i32> {
         * 100.0;
     println!("MR-1S improvement over MR-2S: {imp:.1}%");
     assert_eq!(r1.report.unique_keys, r2.report.unique_keys, "backends disagree");
+    Ok(0)
+}
+
+/// `mr1s diff A.json B.json [--html PATH] [--top N]` — align two run
+/// ledgers and attribute the makespan delta of every matched pair
+/// (DESIGN.md §12).  Exit code 0: the diff is a report, not a gate (the
+/// CI gate lives in `bench_compare.py`).
+fn cmd_diff(args: &[String]) -> Result<i32> {
+    let mut paths: Vec<&String> = Vec::new();
+    let mut html_out: Option<&String> = None;
+    let mut top = 10usize;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--html" => {
+                html_out =
+                    Some(args.get(i + 1).ok_or_else(|| Error::Config("--html needs PATH".into()))?);
+                i += 2;
+            }
+            "--top" => {
+                top = args
+                    .get(i + 1)
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| Error::Config("bad --top".into()))?;
+                i += 2;
+            }
+            a if a.starts_with("--") => {
+                return Err(Error::Config(format!("unknown diff flag '{a}'")));
+            }
+            _ => {
+                paths.push(&args[i]);
+                i += 1;
+            }
+        }
+    }
+    if paths.len() != 2 {
+        return Err(Error::Config("usage: mr1s diff A.json B.json [--html PATH] [--top N]".into()));
+    }
+    let (a_path, b_path) = (paths[0], paths[1]);
+    let a = crate::metrics::RunLedger::load(std::path::Path::new(a_path))?;
+    let b = crate::metrics::RunLedger::load(std::path::Path::new(b_path))?;
+    let d = crate::metrics::diff_ledgers(&a, &b);
+    print!("{}", d.render_text(top));
+    for p in &d.pairs {
+        // The exactness invariant is structural; a violation means a
+        // malformed ledger and the report cannot be trusted.
+        if p.residual_ns() != 0 {
+            return Err(Error::Config(format!(
+                "diff residual {}ns on {} — malformed ledger",
+                p.residual_ns(),
+                p.key.render()
+            )));
+        }
+    }
+    if let Some(path) = html_out {
+        std::fs::write(path, d.render_html())?;
+        println!("html: wrote {path}");
+    }
     Ok(0)
 }
 
@@ -516,6 +680,53 @@ mod tests {
     fn help_succeeds() {
         let args: Vec<String> = ["mr1s", "help"].iter().map(|s| s.to_string()).collect();
         assert_eq!(main(&args).unwrap(), 0);
+    }
+
+    #[test]
+    fn diff_requires_two_ledger_paths() {
+        let args: Vec<String> = ["mr1s", "diff"].iter().map(|s| s.to_string()).collect();
+        assert!(main(&args).is_err());
+        let args: Vec<String> =
+            ["mr1s", "diff", "a.json", "b.json", "--bogus"].iter().map(|s| s.to_string()).collect();
+        assert!(main(&args).is_err());
+    }
+
+    #[test]
+    fn diff_self_diff_end_to_end() {
+        use crate::metrics::{RunLedger, RunRecord};
+        let dir = std::env::temp_dir().join(format!("mr1s_diff_cli_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut ledger = RunLedger::new("cli-test", "");
+        let mut rec = RunRecord::default();
+        rec.key.tag = "t".into();
+        rec.key.usecase = "word-count".into();
+        rec.key.backend = "mr-1s".into();
+        rec.key.route = "modulo".into();
+        rec.key.nranks = 1;
+        rec.elapsed_ns = 100;
+        rec.crit.total_ns = 100;
+        rec.crit.labels.insert("work".into(), 100);
+        ledger.push(rec);
+        let path = dir.join("a.json");
+        ledger.write_to(&path).unwrap();
+        let html = dir.join("d.html");
+        let args: Vec<String> = [
+            "mr1s",
+            "diff",
+            path.to_str().unwrap(),
+            path.to_str().unwrap(),
+            "--html",
+            html.to_str().unwrap(),
+            "--top",
+            "5",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(main(&args).unwrap(), 0);
+        let report = std::fs::read_to_string(&html).unwrap();
+        assert!(report.starts_with("<!DOCTYPE html>"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! * `run`      — execute a MapReduce job on a corpus;
 //! * `gen`      — generate a synthetic PUMA-like corpus;
 //! * `figures`  — regenerate a paper figure's data series;
-//! * `compare`  — MR-1S vs MR-2S head-to-head on one workload.
+//! * `compare`  — MR-1S vs MR-2S head-to-head on one workload;
+//! * `diff`     — attribute the makespan delta between two run ledgers.
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();

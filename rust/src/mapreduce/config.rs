@@ -69,6 +69,17 @@ impl RouteConfig {
     /// map compute dwarfs any multicast saving, and `C(nranks, r)`
     /// batch counts explode (see `shuffle::placement::MAX_BATCHES`).
     pub const MAX_CODED_R: usize = 16;
+
+    /// Canonical flag spelling (`modulo` / `planned:split=K` /
+    /// `coded:r=R`) — parses back to `self` and keys run-ledger
+    /// alignment (`metrics::ledger`).
+    pub fn label(&self) -> String {
+        match self {
+            RouteConfig::Modulo => "modulo".into(),
+            RouteConfig::Planned { split } => format!("planned:split={split}"),
+            RouteConfig::Coded { r } => format!("coded:r={r}"),
+        }
+    }
 }
 
 impl std::str::FromStr for RouteConfig {

@@ -224,6 +224,10 @@ pub struct RankOutcome {
     /// multicast packets, and replica-held records absorbed locally
     /// without touching the network.
     pub shuffle_logical_bytes: u64,
+    /// Fingerprint of the route this rank shuffled by (every rank derives
+    /// the same route, so the driver records the first; see
+    /// `shuffle::RouteFingerprint` and the run ledger, DESIGN.md §12).
+    pub route_fingerprint: crate::shuffle::RouteFingerprint,
 }
 
 /// A MapReduce backend (the paper's *Back-end class*).
@@ -775,8 +779,10 @@ impl Job {
         let mut spans_per_rank = Vec::with_capacity(nranks_eff);
         let mut input_bytes = 0u64;
         let mut result_run = None;
+        let mut route_fingerprint = None;
         for outcome in outcomes {
             let (o, spans) = outcome?;
+            route_fingerprint.get_or_insert(o.route_fingerprint);
             spans_per_rank.push(spans);
             rank_elapsed.push(o.elapsed_ns);
             breakdowns.push(PhaseBreakdown::from_events(&o.events));
@@ -856,6 +862,7 @@ impl Job {
             planned_reduce_bytes_per_rank,
             shuffle_wire_bytes_per_rank,
             shuffle_logical_bytes_per_rank,
+            route_fingerprint,
             spill_bytes_saved: 0,
             peak_memory_bytes: mem_tracker.peak(),
             mem_hwm_vt_ns: mem_tracker.peak_sample().0,

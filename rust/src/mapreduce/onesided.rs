@@ -1056,6 +1056,7 @@ impl Backend for Mr1s {
             planned_reduce_bytes: route.planned_load(me),
             shuffle_wire_bytes,
             shuffle_logical_bytes,
+            route_fingerprint: route.fingerprint(),
         })
     }
 }

@@ -480,6 +480,7 @@ impl Backend for Mr2s {
             planned_reduce_bytes: route.planned_load(me),
             shuffle_wire_bytes,
             shuffle_logical_bytes,
+            route_fingerprint: route.fingerprint(),
         })
     }
 }

@@ -1,0 +1,615 @@
+//! Differential performance attribution: explain *why* run B got
+//! slower (or faster) than run A, not just that it did (DESIGN.md §12).
+//!
+//! Two [`RunLedger`]s are aligned by [`RunKey`] and each aligned pair is
+//! decomposed along the critical path: one signed component per crit
+//! label (union of both sides) plus an `untracked` component covering
+//! makespan ns the path does not tile.  Because the crit segments of a
+//! driver-built ledger tile `[0, makespan]` and `untracked` is defined
+//! as `elapsed − crit_total`, the components telescope:
+//!
+//! ```text
+//!   Σ Δcomponent = Δcrit_total + Δ(elapsed − crit_total) = Δelapsed
+//! ```
+//!
+//! This is the **exactness invariant** — it holds in exact integer ns
+//! for *any* pair of well-formed ledgers, by construction, and
+//! [`RunDiff::residual_ns`] is therefore always 0.  The proptest suite
+//! enforces it across every use-case × backend × route.
+//!
+//! Everything that is not additive along the makespan — per-cause wait
+//! shifts, rank-summed compute, the byte ledger, route-plan divergence,
+//! imbalance — is reported as *supplementary* context, clearly separate
+//! from the additive decomposition.
+
+use std::collections::BTreeSet;
+
+use crate::metrics::ledger::{RunKey, RunLedger, RunRecord};
+
+/// Component label for makespan ns the critical path does not tile.
+pub const UNTRACKED: &str = "untracked";
+
+/// One signed component of the additive decomposition (or of a
+/// supplementary table — same shape, different algebra).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Component {
+    pub label: String,
+    /// Baseline-side ns (signed so `untracked` can expose crit slack
+    /// in foreign ledgers).
+    pub a_ns: i64,
+    /// Candidate-side ns.
+    pub b_ns: i64,
+}
+
+impl Component {
+    /// Signed contribution to Δelapsed.
+    pub fn delta_ns(&self) -> i64 {
+        self.b_ns - self.a_ns
+    }
+}
+
+/// How the two sides' route plans relate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteDivergence {
+    /// One or both ledgers carry no fingerprint.
+    Unknown,
+    /// Identical fingerprints — any delta is *not* the router's doing.
+    Same(String),
+    /// The plans differ — a prime suspect for shuffle-side deltas.
+    Replanned { a: String, b: String },
+}
+
+impl RouteDivergence {
+    /// One-line rendering for the diff tables.
+    pub fn render(&self) -> String {
+        match self {
+            RouteDivergence::Unknown => "route: unknown (fingerprint missing)".to_string(),
+            RouteDivergence::Same(fp) => format!("route: same plan ({fp})"),
+            RouteDivergence::Replanned { a, b } => format!("route: REPLANNED {a} -> {b}"),
+        }
+    }
+}
+
+/// The attribution for one aligned run pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunDiff {
+    pub key: RunKey,
+    pub elapsed_a_ns: u64,
+    pub elapsed_b_ns: u64,
+    /// The additive decomposition: crit-label union + [`UNTRACKED`].
+    /// Sums exactly to [`RunDiff::delta_elapsed_ns`].
+    pub components: Vec<Component>,
+    /// Supplementary: per-cause wait ns summed over ranks.
+    pub wait_components: Vec<Component>,
+    /// Supplementary: rank-summed compute ns (io+map+local_reduce+
+    /// reduce+combine+checkpoint).
+    pub compute: Component,
+    /// Supplementary: the byte ledger, field by field.
+    pub byte_components: Vec<Component>,
+    pub route: RouteDivergence,
+    pub imbalance_a: f64,
+    pub imbalance_b: f64,
+    /// Recovery-attributed ns per side (0 when fault-free).
+    pub recovery_a_ns: u64,
+    pub recovery_b_ns: u64,
+}
+
+impl RunDiff {
+    /// Decompose one aligned pair.
+    pub fn diff(a: &RunRecord, b: &RunRecord) -> RunDiff {
+        let labels: BTreeSet<&String> = a.crit.labels.keys().chain(b.crit.labels.keys()).collect();
+        let mut components: Vec<Component> = labels
+            .into_iter()
+            .map(|label| Component {
+                label: label.clone(),
+                a_ns: a.crit.labels.get(label).copied().unwrap_or(0) as i64,
+                b_ns: b.crit.labels.get(label).copied().unwrap_or(0) as i64,
+            })
+            .collect();
+        components.push(Component {
+            label: UNTRACKED.to_string(),
+            a_ns: a.untracked_ns(),
+            b_ns: b.untracked_ns(),
+        });
+
+        let causes: BTreeSet<&String> = a
+            .ranks
+            .iter()
+            .chain(b.ranks.iter())
+            .flat_map(|r| r.wait_ns.keys())
+            .collect();
+        let wait_sum = |rec: &RunRecord, cause: &str| -> i64 {
+            rec.ranks.iter().map(|r| r.wait_ns.get(cause).copied().unwrap_or(0)).sum::<u64>() as i64
+        };
+        let wait_components = causes
+            .into_iter()
+            .map(|cause| Component {
+                label: cause.clone(),
+                a_ns: wait_sum(a, cause),
+                b_ns: wait_sum(b, cause),
+            })
+            .collect();
+
+        let compute_sum = |rec: &RunRecord| -> i64 {
+            rec.ranks
+                .iter()
+                .map(|r| {
+                    r.io_ns
+                        + r.map_ns
+                        + r.local_reduce_ns
+                        + r.reduce_ns
+                        + r.combine_ns
+                        + r.checkpoint_ns
+                })
+                .sum::<u64>() as i64
+        };
+
+        let byte_components = vec![
+            byte_component("input", a.bytes.input, b.bytes.input),
+            byte_component("shuffle_wire", a.bytes.shuffle_wire, b.bytes.shuffle_wire),
+            byte_component("shuffle_logical", a.bytes.shuffle_logical, b.bytes.shuffle_logical),
+            byte_component("reduce", a.bytes.reduce, b.bytes.reduce),
+            byte_component("spill_saved", a.bytes.spill_saved, b.bytes.spill_saved),
+        ];
+
+        let route = match (&a.route_fingerprint, &b.route_fingerprint) {
+            (Some(fa), Some(fb)) if fa == fb => RouteDivergence::Same(fa.render()),
+            (Some(fa), Some(fb)) => {
+                RouteDivergence::Replanned { a: fa.render(), b: fb.render() }
+            }
+            _ => RouteDivergence::Unknown,
+        };
+
+        RunDiff {
+            key: a.key.clone(),
+            elapsed_a_ns: a.elapsed_ns,
+            elapsed_b_ns: b.elapsed_ns,
+            components,
+            wait_components,
+            compute: Component {
+                label: "compute".to_string(),
+                a_ns: compute_sum(a),
+                b_ns: compute_sum(b),
+            },
+            byte_components,
+            route,
+            imbalance_a: a.imbalance.reduce_max_over_mean,
+            imbalance_b: b.imbalance.reduce_max_over_mean,
+            recovery_a_ns: a.recovery.as_ref().map_or(0, |r| r.total_ns()),
+            recovery_b_ns: b.recovery.as_ref().map_or(0, |r| r.total_ns()),
+        }
+    }
+
+    /// `B − A` makespan delta.
+    pub fn delta_elapsed_ns(&self) -> i64 {
+        self.elapsed_b_ns as i64 - self.elapsed_a_ns as i64
+    }
+
+    /// Sum of the additive components.
+    pub fn components_delta_ns(&self) -> i64 {
+        self.components.iter().map(Component::delta_ns).sum()
+    }
+
+    /// `Δelapsed − Σ components` — zero by construction; anything else
+    /// means a malformed ledger (and the tests treat it as a bug).
+    pub fn residual_ns(&self) -> i64 {
+        self.delta_elapsed_ns() - self.components_delta_ns()
+    }
+
+    /// Components sorted most-regressing first (ties by label).
+    pub fn ranked_components(&self) -> Vec<&Component> {
+        let mut out: Vec<&Component> = self.components.iter().collect();
+        out.sort_by(|x, y| y.delta_ns().cmp(&x.delta_ns()).then(x.label.cmp(&y.label)));
+        out
+    }
+}
+
+fn byte_component(label: &str, a: u64, b: u64) -> Component {
+    Component { label: label.to_string(), a_ns: a as i64, b_ns: b as i64 }
+}
+
+/// The full A→B comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LedgerDiff {
+    pub a_name: String,
+    pub b_name: String,
+    pub pairs: Vec<RunDiff>,
+    /// Keys present only in A (rendered) — dropped runs.
+    pub only_in_a: Vec<String>,
+    /// Keys present only in B (rendered) — new runs.
+    pub only_in_b: Vec<String>,
+}
+
+/// Align two ledgers by [`RunKey`] and diff every aligned pair, in A's
+/// run order.
+pub fn diff_ledgers(a: &RunLedger, b: &RunLedger) -> LedgerDiff {
+    let mut pairs = Vec::new();
+    let mut only_in_a = Vec::new();
+    for ra in &a.runs {
+        match b.find(&ra.key) {
+            Some(rb) => pairs.push(RunDiff::diff(ra, rb)),
+            None => only_in_a.push(ra.key.render()),
+        }
+    }
+    let only_in_b = b
+        .runs
+        .iter()
+        .filter(|rb| a.find(&rb.key).is_none())
+        .map(|rb| rb.key.render())
+        .collect();
+    LedgerDiff { a_name: a.name.clone(), b_name: b.name.clone(), pairs, only_in_a, only_in_b }
+}
+
+impl LedgerDiff {
+    /// The globally ranked causes: `(key, label, Δns)` across every
+    /// aligned pair, most-regressing first.
+    pub fn top_causes(&self, k: usize) -> Vec<(String, String, i64)> {
+        let mut all: Vec<(String, String, i64)> = self
+            .pairs
+            .iter()
+            .flat_map(|p| {
+                p.components
+                    .iter()
+                    .map(|c| (p.key.render(), c.label.clone(), c.delta_ns()))
+            })
+            .filter(|(_, _, d)| *d != 0)
+            .collect();
+        all.sort_by(|x, y| y.2.cmp(&x.2).then(x.1.cmp(&y.1)).then(x.0.cmp(&y.0)));
+        all.truncate(k);
+        all
+    }
+
+    /// Plain-text report: per-pair summary, the ranked cause table, and
+    /// the supplementary sections for every pair that moved.
+    pub fn render_text(&self, top: usize) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("ledger diff: {} -> {}\n", self.a_name, self.b_name));
+        out.push_str(&format!(
+            "aligned {} run(s); {} only in A, {} only in B\n",
+            self.pairs.len(),
+            self.only_in_a.len(),
+            self.only_in_b.len()
+        ));
+        for key in &self.only_in_a {
+            out.push_str(&format!("  only in A: {key}\n"));
+        }
+        for key in &self.only_in_b {
+            out.push_str(&format!("  only in B: {key}\n"));
+        }
+
+        for p in &self.pairs {
+            let delta = p.delta_elapsed_ns();
+            let pct = if p.elapsed_a_ns > 0 {
+                100.0 * delta as f64 / p.elapsed_a_ns as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "\n{}\n  elapsed {} -> {} ({}{:.2}%)  residual {}\n  {}\n",
+                p.key.render(),
+                fmt_ns(p.elapsed_a_ns as i64),
+                fmt_ns(p.elapsed_b_ns as i64),
+                if delta >= 0 { "+" } else { "" },
+                pct,
+                fmt_ns(p.residual_ns()),
+                p.route.render(),
+            ));
+            if p.recovery_a_ns != 0 || p.recovery_b_ns != 0 {
+                out.push_str(&format!(
+                    "  recovery: {} -> {}\n",
+                    fmt_ns(p.recovery_a_ns as i64),
+                    fmt_ns(p.recovery_b_ns as i64)
+                ));
+            }
+            out.push_str(&format!(
+                "  imbalance max/mean: {:.3} -> {:.3}\n",
+                p.imbalance_a, p.imbalance_b
+            ));
+            for c in p.ranked_components() {
+                if c.delta_ns() == 0 && c.a_ns == 0 && c.b_ns == 0 {
+                    continue;
+                }
+                out.push_str(&format!(
+                    "    {:<18} {:>14} -> {:>14}  {:>+14}\n",
+                    c.label,
+                    fmt_ns(c.a_ns),
+                    fmt_ns(c.b_ns),
+                    c.delta_ns()
+                ));
+            }
+            let moved: Vec<&Component> =
+                p.wait_components.iter().filter(|c| c.delta_ns() != 0).collect();
+            if !moved.is_empty() {
+                out.push_str("  wait by cause (rank-summed, supplementary):\n");
+                for c in moved {
+                    out.push_str(&format!(
+                        "    {:<18} {:>14} -> {:>14}  {:>+14}\n",
+                        c.label,
+                        fmt_ns(c.a_ns),
+                        fmt_ns(c.b_ns),
+                        c.delta_ns()
+                    ));
+                }
+            }
+            if p.compute.delta_ns() != 0 {
+                out.push_str(&format!(
+                    "  compute (rank-summed): {} -> {}  ({:+})\n",
+                    fmt_ns(p.compute.a_ns),
+                    fmt_ns(p.compute.b_ns),
+                    p.compute.delta_ns()
+                ));
+            }
+            let bytes_moved: Vec<&Component> =
+                p.byte_components.iter().filter(|c| c.delta_ns() != 0).collect();
+            if !bytes_moved.is_empty() {
+                out.push_str("  bytes:\n");
+                for c in bytes_moved {
+                    out.push_str(&format!(
+                        "    {:<18} {:>14} -> {:>14}  {:>+14}\n",
+                        c.label, c.a_ns, c.b_ns, c.delta_ns()
+                    ));
+                }
+            }
+        }
+
+        let causes = self.top_causes(top);
+        out.push_str(&format!("\ntop regressing causes (top {top}):\n"));
+        if causes.is_empty() {
+            out.push_str("  (none — no component moved)\n");
+        }
+        for (i, (key, label, delta)) in causes.iter().enumerate() {
+            out.push_str(&format!(
+                "  {:>2}. {:<18} {:>+14}  {}\n",
+                i + 1,
+                label,
+                delta,
+                key
+            ));
+        }
+        out
+    }
+
+    /// Self-contained HTML report: side-by-side component bars per
+    /// aligned pair.  No external assets.
+    pub fn render_html(&self) -> String {
+        const W: u64 = 480;
+        const BAR_H: u64 = 14;
+        let mut out = String::with_capacity(16 * 1024);
+        out.push_str("<!DOCTYPE html>\n<html><head><meta charset=\"utf-8\">\n");
+        out.push_str(&format!(
+            "<title>mr1s ledger diff: {} vs {}</title>\n",
+            html_escape(&self.a_name),
+            html_escape(&self.b_name)
+        ));
+        out.push_str(
+            "<style>\
+             body{font:14px/1.4 system-ui,sans-serif;margin:24px;max-width:980px}\
+             svg{background:#f6f8fa;border:1px solid #d0d7de;border-radius:6px}\
+             .meta{color:#57606a;font-size:12px}\
+             table{border-collapse:collapse;margin:8px 0}\
+             td,th{border:1px solid #d0d7de;padding:3px 8px;font-size:12px;text-align:right}\
+             th{background:#f6f8fa}td.l,th.l{text-align:left}\
+             .reg{color:#cf222e;font-weight:600}.imp{color:#1a7f37}\
+             h2{margin-top:28px}</style></head><body>\n",
+        );
+        out.push_str(&format!(
+            "<h1>ledger diff</h1>\n<p class=\"meta\">A = {} &middot; B = {} &middot; \
+             aligned {} run(s), {} only in A, {} only in B</p>\n",
+            html_escape(&self.a_name),
+            html_escape(&self.b_name),
+            self.pairs.len(),
+            self.only_in_a.len(),
+            self.only_in_b.len()
+        ));
+
+        for p in &self.pairs {
+            let delta = p.delta_elapsed_ns();
+            out.push_str(&format!(
+                "<h2>{}</h2>\n<p class=\"meta\">elapsed {} &rarr; {} \
+                 (<span class=\"{}\">{:+} ns</span>) &middot; residual {} ns &middot; {}</p>\n",
+                html_escape(&p.key.render()),
+                fmt_ns(p.elapsed_a_ns as i64),
+                fmt_ns(p.elapsed_b_ns as i64),
+                if delta > 0 { "reg" } else { "imp" },
+                delta,
+                p.residual_ns(),
+                html_escape(&p.route.render()),
+            ));
+            let max = p
+                .components
+                .iter()
+                .flat_map(|c| [c.a_ns.unsigned_abs(), c.b_ns.unsigned_abs()])
+                .max()
+                .unwrap_or(1)
+                .max(1);
+            out.push_str(
+                "<table><tr><th class=\"l\">component</th><th>A ns</th><th>B ns</th>\
+                 <th>&Delta; ns</th><th class=\"l\">A <span style=\"color:#0969da\">&#9632;</span> \
+                 vs B <span style=\"color:#8250df\">&#9632;</span></th></tr>\n",
+            );
+            for c in p.ranked_components() {
+                if c.a_ns == 0 && c.b_ns == 0 {
+                    continue;
+                }
+                let wa = (c.a_ns.unsigned_abs() * W) / max;
+                let wb = (c.b_ns.unsigned_abs() * W) / max;
+                let cls = if c.delta_ns() > 0 { "reg" } else { "imp" };
+                out.push_str(&format!(
+                    "<tr><td class=\"l\">{}</td><td>{}</td><td>{}</td>\
+                     <td class=\"{}\">{:+}</td><td class=\"l\">\
+                     <svg width=\"{W}\" height=\"{}\">\
+                     <rect x=\"0\" y=\"1\" width=\"{wa}\" height=\"{BAR_H}\" fill=\"#0969da\"/>\
+                     <rect x=\"0\" y=\"{}\" width=\"{wb}\" height=\"{BAR_H}\" fill=\"#8250df\"/>\
+                     </svg></td></tr>\n",
+                    html_escape(&c.label),
+                    c.a_ns,
+                    c.b_ns,
+                    cls,
+                    c.delta_ns(),
+                    2 * BAR_H + 4,
+                    BAR_H + 3,
+                ));
+            }
+            out.push_str("</table>\n");
+        }
+
+        out.push_str("<h2>top regressing causes</h2>\n<table><tr><th>#</th>\
+                      <th class=\"l\">cause</th><th>&Delta; ns</th><th class=\"l\">run</th></tr>\n");
+        for (i, (key, label, delta)) in self.top_causes(10).iter().enumerate() {
+            out.push_str(&format!(
+                "<tr><td>{}</td><td class=\"l\">{}</td><td class=\"{}\">{:+}</td><td class=\"l\">{}</td></tr>\n",
+                i + 1,
+                html_escape(label),
+                if *delta > 0 { "reg" } else { "imp" },
+                delta,
+                html_escape(key)
+            ));
+        }
+        out.push_str("</table>\n</body></html>\n");
+        out
+    }
+}
+
+/// Human ns rendering with unit scaling (signed).
+fn fmt_ns(ns: i64) -> String {
+    let a = ns.unsigned_abs();
+    let sign = if ns < 0 { "-" } else { "" };
+    if a >= 1_000_000_000 {
+        format!("{sign}{:.3}s", a as f64 / 1e9)
+    } else if a >= 1_000_000 {
+        format!("{sign}{:.3}ms", a as f64 / 1e6)
+    } else if a >= 1_000 {
+        format!("{sign}{:.3}us", a as f64 / 1e3)
+    } else {
+        format!("{sign}{a}ns")
+    }
+}
+
+fn html_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::ledger::{CritLedger, RankLedger, RunKey, RunRecord};
+    use std::collections::BTreeMap;
+
+    fn record(tag: &str, elapsed: u64, labels: &[(&str, u64)]) -> RunRecord {
+        let label_map: BTreeMap<String, u64> =
+            labels.iter().map(|(l, ns)| (l.to_string(), *ns)).collect();
+        let crit_total: u64 = label_map.values().sum();
+        RunRecord {
+            key: RunKey {
+                tag: tag.to_string(),
+                usecase: "word-count".to_string(),
+                backend: "mr-1s".to_string(),
+                route: "modulo".to_string(),
+                nranks: 1,
+            },
+            elapsed_ns: elapsed,
+            ranks: vec![RankLedger {
+                elapsed_ns: elapsed,
+                other_ns: elapsed,
+                ..Default::default()
+            }],
+            crit: CritLedger { total_ns: crit_total, edges: 0, labels: label_map, segments: vec![] },
+            ..Default::default()
+        }
+    }
+
+    fn ledger(name: &str, runs: Vec<RunRecord>) -> RunLedger {
+        let mut l = RunLedger::new(name, "");
+        for r in runs {
+            l.push(r);
+        }
+        l
+    }
+
+    #[test]
+    fn self_diff_is_all_zeros() {
+        let a = ledger("a", vec![record("t", 1_000, &[("work", 900), ("barrier", 100)])]);
+        let d = diff_ledgers(&a, &a);
+        assert_eq!(d.pairs.len(), 1);
+        let p = &d.pairs[0];
+        assert_eq!(p.delta_elapsed_ns(), 0);
+        assert_eq!(p.residual_ns(), 0);
+        assert!(p.components.iter().all(|c| c.delta_ns() == 0));
+        assert!(d.top_causes(10).is_empty());
+    }
+
+    #[test]
+    fn components_sum_exactly_even_with_untracked_slack() {
+        // A's crit tiles the makespan; B has 50ns of slack and a label
+        // A never saw.  The decomposition must still be exact.
+        let a = ledger("a", vec![record("t", 1_000, &[("work", 900), ("barrier", 100)])]);
+        let b = ledger("b", vec![record("t", 1_450, &[("work", 900), ("steal-gate", 500)])]);
+        let d = diff_ledgers(&a, &b);
+        let p = &d.pairs[0];
+        assert_eq!(p.delta_elapsed_ns(), 450);
+        assert_eq!(p.components_delta_ns(), 450);
+        assert_eq!(p.residual_ns(), 0);
+        let untracked = p.components.iter().find(|c| c.label == UNTRACKED).unwrap();
+        assert_eq!(untracked.a_ns, 0);
+        assert_eq!(untracked.b_ns, 50);
+        // barrier vanished (-100), steal-gate appeared (+500).
+        let top = d.top_causes(10);
+        assert_eq!(top[0].1, "steal-gate");
+        assert_eq!(top[0].2, 500);
+        assert!(top.iter().any(|(_, l, d)| l == "barrier" && *d == -100));
+    }
+
+    #[test]
+    fn single_cause_regression_is_top_ranked() {
+        let a = ledger("a", vec![record("t", 1_000, &[("work", 900), ("barrier", 100)])]);
+        let b = ledger("b", vec![record("t", 1_400, &[("work", 900), ("barrier", 500)])]);
+        let d = diff_ledgers(&a, &b);
+        let top = d.top_causes(5);
+        assert_eq!(top[0].1, "barrier");
+        assert_eq!(top[0].2, 400);
+        assert_eq!(d.pairs[0].residual_ns(), 0);
+        let text = d.render_text(5);
+        assert!(text.contains("barrier"), "text report must name the cause:\n{text}");
+        assert!(text.contains("top regressing causes"));
+    }
+
+    #[test]
+    fn unaligned_runs_are_reported_not_diffed() {
+        let a = ledger("a", vec![record("only-a", 10, &[("work", 10)])]);
+        let b = ledger("b", vec![record("only-b", 10, &[("work", 10)])]);
+        let d = diff_ledgers(&a, &b);
+        assert!(d.pairs.is_empty());
+        assert_eq!(d.only_in_a.len(), 1);
+        assert_eq!(d.only_in_b.len(), 1);
+        assert!(d.only_in_a[0].contains("only-a"));
+    }
+
+    #[test]
+    fn html_report_is_self_contained() {
+        let a = ledger("a", vec![record("t", 1_000, &[("work", 1_000)])]);
+        let b = ledger("b", vec![record("t", 1_200, &[("work", 1_200)])]);
+        let html = diff_ledgers(&a, &b).render_html();
+        assert!(html.starts_with("<!DOCTYPE html>"));
+        assert!(html.contains("</html>"));
+        assert!(html.contains("<svg"));
+        assert!(!html.contains("http://") && !html.contains("https://"), "no external assets");
+    }
+
+    #[test]
+    fn fmt_ns_scales_units() {
+        assert_eq!(fmt_ns(12), "12ns");
+        assert_eq!(fmt_ns(-1_500), "-1.500us");
+        assert_eq!(fmt_ns(2_500_000), "2.500ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.000s");
+    }
+}

@@ -1,0 +1,1120 @@
+//! Run ledger: the durable, diffable record of *why* a run took the
+//! time it took (DESIGN.md §12).
+//!
+//! A [`RunLedger`] is a schema-versioned JSON artifact emitted by `mr1s
+//! run`/`pipeline` (`--ledger-out PATH`) and by every bench (beside its
+//! `BENCH_*.json`).  Each [`RunRecord`] inside carries the full additive
+//! time decomposition of one job — per rank the phase times, the
+//! per-cause wait breakdown from the tracer, and an explicit `other_ns`
+//! remainder so the components sum to the rank's elapsed time *exactly*
+//! — plus the byte ledger, route-plan fingerprint, imbalance stats,
+//! critical-path segments, health events, and recovery costs.
+//!
+//! Two invariants make ledgers diffable with zero residual (see
+//! [`crate::metrics::diff`]):
+//!
+//! 1. **Rank additivity** — for every rank, `io + map + local_reduce +
+//!    reduce + combine + checkpoint + wait + other == elapsed` in exact
+//!    integer ns (`other_ns` is defined as the remainder).
+//! 2. **Crit-path tiling** — the critical-path segments tile
+//!    `[0, makespan]`, so `crit.total_ns == elapsed_ns` for every
+//!    driver-built record; foreign records may carry slack, which the
+//!    differ surfaces as an explicit `untracked` component.
+//!
+//! The JSON writer stores 64-bit hashes as decimal *strings* — a JSON
+//! number is an f64 to most readers and silently loses precision above
+//! 2^53, which would corrupt route-fingerprint comparisons.  Durations
+//! stay plain integers (virtual-time ns are far below 2^53).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::metrics::report::JobReport;
+use crate::metrics::tracer::{wait_by_cause_ns, WaitCause};
+use crate::shuffle::RouteFingerprint;
+
+/// Bump when the ledger JSON layout changes incompatibly.
+pub const LEDGER_SCHEMA_VERSION: u64 = 1;
+
+/// Alignment key: two runs from different ledgers are compared iff
+/// every field matches.  Tag first — it is the bench-local name and the
+/// most selective component.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RunKey {
+    /// Bench-local sample tag (e.g. `s1.4_mr-1s_planned`).
+    pub tag: String,
+    /// Use-case registry name (e.g. `inverted-index`).
+    pub usecase: String,
+    /// Backend label (`mr-1s` / `mr-2s`).
+    pub backend: String,
+    /// Route config label (`modulo` / `planned:split=K` / `coded:r=R`).
+    pub route: String,
+    /// World size the job *completed* on (post-recovery runs report the
+    /// degraded world).
+    pub nranks: usize,
+}
+
+impl RunKey {
+    /// One-line rendering for diff tables and error messages.
+    pub fn render(&self) -> String {
+        format!("{} [{} {} {} {}r]", self.tag, self.usecase, self.backend, self.route, self.nranks)
+    }
+}
+
+/// Additive per-rank time decomposition.  All components plus
+/// [`RankLedger::other_ns`] sum to `elapsed_ns` exactly (invariant 1).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RankLedger {
+    /// This rank's end-to-end virtual time.
+    pub elapsed_ns: u64,
+    pub io_ns: u64,
+    pub map_ns: u64,
+    pub local_reduce_ns: u64,
+    pub reduce_ns: u64,
+    pub combine_ns: u64,
+    pub checkpoint_ns: u64,
+    /// Per-cause attributed wait, zero-filled over the full
+    /// [`WaitCause::ALL`] taxonomy (label → ns).
+    pub wait_ns: BTreeMap<String, u64>,
+    /// Remainder (`elapsed − everything above`): phase-sync offsets in
+    /// pipeline stages and any untimed slack.  Defined by subtraction
+    /// so the decomposition is exact by construction.
+    pub other_ns: u64,
+}
+
+impl RankLedger {
+    /// Sum of the attributed wait causes.
+    pub fn wait_total_ns(&self) -> u64 {
+        self.wait_ns.values().sum()
+    }
+
+    /// Sum of every component including `other_ns`.  Equals
+    /// `elapsed_ns` for well-formed records.
+    pub fn components_total_ns(&self) -> u64 {
+        self.io_ns
+            + self.map_ns
+            + self.local_reduce_ns
+            + self.reduce_ns
+            + self.combine_ns
+            + self.checkpoint_ns
+            + self.wait_total_ns()
+            + self.other_ns
+    }
+}
+
+/// Byte ledger: what moved, what it stood for, and what coding saved.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ByteLedger {
+    pub input: u64,
+    /// Bytes actually put on the simulated wire during shuffle.
+    pub shuffle_wire: u64,
+    /// Logical shuffle bytes (what an uncoded route would have moved).
+    pub shuffle_logical: u64,
+    /// Bytes landing in reduce partitions.
+    pub reduce: u64,
+    /// Spill bytes the storage window absorbed without re-transmission.
+    pub spill_saved: u64,
+}
+
+/// Reduce-side imbalance stats (the paper's skew story in three
+/// numbers).  Non-additive — supplementary context in diffs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ImbalanceStats {
+    pub reduce_max_over_mean: f64,
+    pub reduce_cov: f64,
+    /// Planner's predicted max/mean (planned/coded routes only).
+    pub planned_reduce_max_over_mean: Option<f64>,
+}
+
+/// Owned, parse-friendly mirror of [`RouteFingerprint`] (labels are
+/// `String` so records round-trip through JSON).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RouteFp {
+    pub kind: String,
+    pub nranks: usize,
+    /// FNV-1a of the encoded route table; 0 for modulo.
+    pub table_hash: u64,
+    /// Heavy-hitter split set: (key hash, split ways), sorted by hash.
+    pub splits: Vec<(u64, usize)>,
+    pub coded_r: usize,
+    pub heavy_buckets: usize,
+    pub clique_count: u64,
+}
+
+impl RouteFp {
+    /// Compact one-line rendering (mirrors `RouteFingerprint::render`).
+    pub fn render(&self) -> String {
+        let mut out = format!("{}/{}r", self.kind, self.nranks);
+        if self.table_hash != 0 {
+            out.push_str(&format!("#{:016x}", self.table_hash));
+        }
+        if !self.splits.is_empty() {
+            out.push_str(&format!(" splits={}", self.splits.len()));
+        }
+        if self.coded_r != 0 {
+            out.push_str(&format!(
+                " r={} heavy={} cliques={}",
+                self.coded_r, self.heavy_buckets, self.clique_count
+            ));
+        }
+        out
+    }
+}
+
+impl From<&RouteFingerprint> for RouteFp {
+    fn from(fp: &RouteFingerprint) -> Self {
+        RouteFp {
+            kind: fp.kind.to_string(),
+            nranks: fp.nranks,
+            table_hash: fp.table_hash,
+            splits: fp.splits.clone(),
+            coded_r: fp.coded_r,
+            heavy_buckets: fp.heavy_buckets,
+            clique_count: fp.clique_count,
+        }
+    }
+}
+
+/// Critical-path summary: per-label totals plus the raw segments (the
+/// additive spine the differ decomposes over).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CritLedger {
+    /// Sum of all segment durations; equals the makespan for
+    /// driver-built records (invariant 2).
+    pub total_ns: u64,
+    /// Rank-hop count along the path.
+    pub edges: usize,
+    /// Label → summed ns, descending by contribution when rendered.
+    pub labels: BTreeMap<String, u64>,
+    /// `(rank, t0, t1, label)` in path order.
+    pub segments: Vec<(usize, u64, u64, String)>,
+}
+
+/// One telemetry health event (owned mirror of
+/// [`crate::metrics::HealthEvent`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HealthRecord {
+    pub vt: u64,
+    pub rank: usize,
+    pub kind: String,
+}
+
+/// Recovery cost record (owned mirror of
+/// [`crate::metrics::RecoveryReport`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RecoveryRecord {
+    pub dead_rank: usize,
+    pub phase: String,
+    pub orig_nranks: usize,
+    pub detect_ns: u64,
+    pub replay_ns: u64,
+    pub replan_ns: u64,
+    pub replayed_tasks: u64,
+    pub recomputed_tasks: u64,
+    pub replayed_bytes: u64,
+}
+
+impl RecoveryRecord {
+    /// Summed recovery-attributed ns.
+    pub fn total_ns(&self) -> u64 {
+        self.detect_ns + self.replay_ns + self.replan_ns
+    }
+}
+
+/// One job's full accounting.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunRecord {
+    pub key: RunKey,
+    /// Makespan (max rank elapsed).
+    pub elapsed_ns: u64,
+    pub ranks: Vec<RankLedger>,
+    pub bytes: ByteLedger,
+    pub imbalance: ImbalanceStats,
+    pub route_fingerprint: Option<RouteFp>,
+    pub crit: CritLedger,
+    pub health: Vec<HealthRecord>,
+    pub recovery: Option<RecoveryRecord>,
+}
+
+impl Default for RunKey {
+    fn default() -> Self {
+        RunKey {
+            tag: String::new(),
+            usecase: String::new(),
+            backend: String::new(),
+            route: String::new(),
+            nranks: 0,
+        }
+    }
+}
+
+impl RunRecord {
+    /// Build a record from a finished job's report.  `tag`, `usecase`
+    /// and `route` come from the caller (the report does not know its
+    /// bench-local name or the route config label).
+    pub fn from_report(tag: &str, usecase: &str, route: &str, report: &JobReport) -> RunRecord {
+        let mut ranks = Vec::with_capacity(report.nranks);
+        for r in 0..report.nranks {
+            let b = &report.breakdowns[r];
+            let elapsed = report.rank_elapsed_ns[r];
+            let mut wait_ns: BTreeMap<String, u64> =
+                WaitCause::ALL.iter().map(|c| (c.label().to_string(), 0)).collect();
+            for (label, ns) in wait_by_cause_ns(&report.spans[r]) {
+                *wait_ns.entry(label.to_string()).or_insert(0) += ns;
+            }
+            let tracked = b.io_ns
+                + b.map_ns
+                + b.local_reduce_ns
+                + b.reduce_ns
+                + b.combine_ns
+                + b.checkpoint_ns
+                + wait_ns.values().sum::<u64>();
+            ranks.push(RankLedger {
+                elapsed_ns: elapsed,
+                io_ns: b.io_ns,
+                map_ns: b.map_ns,
+                local_reduce_ns: b.local_reduce_ns,
+                reduce_ns: b.reduce_ns,
+                combine_ns: b.combine_ns,
+                checkpoint_ns: b.checkpoint_ns,
+                wait_ns,
+                other_ns: elapsed.saturating_sub(tracked),
+            });
+        }
+        let path = report.crit_path();
+        let mut labels: BTreeMap<String, u64> = BTreeMap::new();
+        for seg in &path.segments {
+            *labels.entry(seg.label.to_string()).or_insert(0) += seg.dur_ns();
+        }
+        RunRecord {
+            key: RunKey {
+                tag: tag.to_string(),
+                usecase: usecase.to_string(),
+                backend: report.backend.to_string(),
+                route: route.to_string(),
+                nranks: report.nranks,
+            },
+            elapsed_ns: report.elapsed_ns,
+            ranks,
+            bytes: ByteLedger {
+                input: report.input_bytes,
+                shuffle_wire: report.shuffle_wire_bytes(),
+                shuffle_logical: report.shuffle_logical_bytes(),
+                reduce: report.reduce_bytes_per_rank.iter().sum(),
+                spill_saved: report.spill_bytes_saved,
+            },
+            imbalance: ImbalanceStats {
+                reduce_max_over_mean: report.reduce_max_over_mean(),
+                reduce_cov: report.reduce_cov(),
+                planned_reduce_max_over_mean: report.planned_reduce_max_over_mean(),
+            },
+            route_fingerprint: report.route_fingerprint.as_ref().map(RouteFp::from),
+            crit: CritLedger {
+                total_ns: path.total_ns(),
+                edges: path.edge_count(),
+                labels,
+                segments: path
+                    .segments
+                    .iter()
+                    .map(|s| (s.rank, s.t0, s.t1, s.label.to_string()))
+                    .collect(),
+            },
+            health: report
+                .health
+                .iter()
+                .map(|h| HealthRecord { vt: h.vt, rank: h.rank, kind: h.kind.label().to_string() })
+                .collect(),
+            recovery: report.recovery.as_ref().map(|rec| RecoveryRecord {
+                dead_rank: rec.dead_rank,
+                phase: rec.phase.to_string(),
+                orig_nranks: rec.orig_nranks,
+                detect_ns: rec.detect_ns,
+                replay_ns: rec.replay_ns,
+                replan_ns: rec.replan_ns,
+                replayed_tasks: rec.replayed_tasks,
+                recomputed_tasks: rec.recomputed_tasks,
+                replayed_bytes: rec.replayed_bytes,
+            }),
+        }
+    }
+
+    /// Makespan ns the crit path does not tile (0 for driver-built
+    /// records; the differ's `untracked` component).
+    pub fn untracked_ns(&self) -> i64 {
+        self.elapsed_ns as i64 - self.crit.total_ns as i64
+    }
+}
+
+/// The top-level artifact: a named set of runs plus provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunLedger {
+    /// Emitting bench / subcommand name (e.g. `fig8_skew`, `run`).
+    pub name: String,
+    pub schema: u64,
+    pub git_sha: String,
+    /// Free-form config line (mirrors BENCH JSON's `config`).
+    pub config: String,
+    pub runs: Vec<RunRecord>,
+}
+
+impl RunLedger {
+    /// Fresh ledger stamped with the current git sha.
+    pub fn new(name: &str, config: &str) -> RunLedger {
+        RunLedger {
+            name: name.to_string(),
+            schema: LEDGER_SCHEMA_VERSION,
+            git_sha: crate::bench::git_sha(),
+            config: config.to_string(),
+            runs: Vec::new(),
+        }
+    }
+
+    /// Append one run record.
+    pub fn push(&mut self, record: RunRecord) {
+        self.runs.push(record);
+    }
+
+    /// Look up a run by alignment key.
+    pub fn find(&self, key: &RunKey) -> Option<&RunRecord> {
+        self.runs.iter().find(|r| &r.key == key)
+    }
+
+    /// Serialize to the schema-v1 JSON layout.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str(&format!(
+            "{{\n  \"ledger\": \"{}\",\n  \"schema\": {},\n  \"git_sha\": \"{}\",\n  \"config\": \"{}\",\n  \"runs\": [",
+            json_escape(&self.name),
+            self.schema,
+            json_escape(&self.git_sha),
+            json_escape(&self.config),
+        ));
+        for (i, run) in self.runs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    ");
+            write_run(&mut out, run);
+        }
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON artifact to `path`.
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+
+    /// Parse a schema-v1 ledger from JSON text.
+    pub fn parse(text: &str) -> Result<RunLedger> {
+        let v = json::parse(text).map_err(|e| Error::Config(format!("ledger parse: {e}")))?;
+        let schema = get_u64(&v, "schema")?;
+        if schema != LEDGER_SCHEMA_VERSION {
+            return Err(Error::Config(format!(
+                "ledger schema {schema} != supported {LEDGER_SCHEMA_VERSION}"
+            )));
+        }
+        let mut ledger = RunLedger {
+            name: get_str(&v, "ledger")?,
+            schema,
+            git_sha: get_str(&v, "git_sha")?,
+            config: get_str(&v, "config")?,
+            runs: Vec::new(),
+        };
+        for rv in get_arr(&v, "runs")? {
+            ledger.runs.push(parse_run(rv)?);
+        }
+        Ok(ledger)
+    }
+
+    /// Load and parse a ledger file.
+    pub fn load(path: &Path) -> Result<RunLedger> {
+        let text = std::fs::read_to_string(path)?;
+        RunLedger::parse(&text).map_err(|e| match e {
+            Error::Config(msg) => Error::Config(format!("{}: {msg}", path.display())),
+            other => other,
+        })
+    }
+}
+
+// ---------------------------------------------------------------- writer
+
+fn write_run(out: &mut String, run: &RunRecord) {
+    out.push_str(&format!(
+        "{{\"tag\": \"{}\", \"usecase\": \"{}\", \"backend\": \"{}\", \"route\": \"{}\", \"nranks\": {}, \"elapsed_ns\": {},",
+        json_escape(&run.key.tag),
+        json_escape(&run.key.usecase),
+        json_escape(&run.key.backend),
+        json_escape(&run.key.route),
+        run.key.nranks,
+        run.elapsed_ns,
+    ));
+    out.push_str("\n     \"ranks\": [");
+    for (i, r) in run.ranks.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n               ");
+        }
+        out.push_str(&format!(
+            "{{\"elapsed_ns\": {}, \"io_ns\": {}, \"map_ns\": {}, \"local_reduce_ns\": {}, \"reduce_ns\": {}, \"combine_ns\": {}, \"checkpoint_ns\": {}, \"other_ns\": {}, \"wait_ns\": {{",
+            r.elapsed_ns, r.io_ns, r.map_ns, r.local_reduce_ns, r.reduce_ns, r.combine_ns,
+            r.checkpoint_ns, r.other_ns,
+        ));
+        for (j, (label, ns)) in r.wait_ns.iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\": {}", json_escape(label), ns));
+        }
+        out.push_str("}}");
+    }
+    out.push_str("],");
+    out.push_str(&format!(
+        "\n     \"bytes\": {{\"input\": {}, \"shuffle_wire\": {}, \"shuffle_logical\": {}, \"reduce\": {}, \"spill_saved\": {}}},",
+        run.bytes.input,
+        run.bytes.shuffle_wire,
+        run.bytes.shuffle_logical,
+        run.bytes.reduce,
+        run.bytes.spill_saved,
+    ));
+    out.push_str(&format!(
+        "\n     \"imbalance\": {{\"reduce_max_over_mean\": {}, \"reduce_cov\": {}, \"planned_reduce_max_over_mean\": {}}},",
+        fmt_f64(run.imbalance.reduce_max_over_mean),
+        fmt_f64(run.imbalance.reduce_cov),
+        match run.imbalance.planned_reduce_max_over_mean {
+            Some(v) => fmt_f64(v),
+            None => "null".to_string(),
+        },
+    ));
+    match &run.route_fingerprint {
+        None => out.push_str("\n     \"route_fingerprint\": null,"),
+        Some(fp) => {
+            out.push_str(&format!(
+                "\n     \"route_fingerprint\": {{\"kind\": \"{}\", \"nranks\": {}, \"table_hash\": \"{}\", \"splits\": [",
+                json_escape(&fp.kind),
+                fp.nranks,
+                fp.table_hash,
+            ));
+            for (j, (hash, ways)) in fp.splits.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("[\"{hash}\", {ways}]"));
+            }
+            out.push_str(&format!(
+                "], \"coded_r\": {}, \"heavy_buckets\": {}, \"clique_count\": {}}},",
+                fp.coded_r, fp.heavy_buckets, fp.clique_count,
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "\n     \"crit\": {{\"total_ns\": {}, \"edges\": {}, \"labels\": {{",
+        run.crit.total_ns, run.crit.edges,
+    ));
+    for (j, (label, ns)) in run.crit.labels.iter().enumerate() {
+        if j > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("\"{}\": {}", json_escape(label), ns));
+    }
+    out.push_str("}, \"segments\": [");
+    for (j, (rank, t0, t1, label)) in run.crit.segments.iter().enumerate() {
+        if j > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("[{rank}, {t0}, {t1}, \"{}\"]", json_escape(label)));
+    }
+    out.push_str("]},");
+    out.push_str("\n     \"health\": [");
+    for (j, h) in run.health.iter().enumerate() {
+        if j > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!(
+            "{{\"vt\": {}, \"rank\": {}, \"kind\": \"{}\"}}",
+            h.vt,
+            h.rank,
+            json_escape(&h.kind)
+        ));
+    }
+    out.push_str("],");
+    match &run.recovery {
+        None => out.push_str("\n     \"recovery\": null}"),
+        Some(rec) => out.push_str(&format!(
+            "\n     \"recovery\": {{\"dead_rank\": {}, \"phase\": \"{}\", \"orig_nranks\": {}, \"detect_ns\": {}, \"replay_ns\": {}, \"replan_ns\": {}, \"replayed_tasks\": {}, \"recomputed_tasks\": {}, \"replayed_bytes\": {}}}}}",
+            rec.dead_rank,
+            json_escape(&rec.phase),
+            rec.orig_nranks,
+            rec.detect_ns,
+            rec.replay_ns,
+            rec.replan_ns,
+            rec.replayed_tasks,
+            rec.recomputed_tasks,
+            rec.replayed_bytes,
+        )),
+    }
+}
+
+/// Shortest round-trippable f64 rendering (`Display` never prints
+/// exponents and re-parses to the same bits).
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- parser
+
+/// Minimal recursive-descent JSON reader — enough for ledger files, no
+/// external crates.  Numbers land in f64 (exact for the < 2^53 integer
+/// durations the schema uses; the > 2^53 hashes travel as strings).
+mod json {
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Value {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Value>),
+        Obj(Vec<(String, Value)>),
+    }
+
+    impl Value {
+        pub fn get(&self, key: &str) -> Option<&Value> {
+            match self {
+                Value::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+                _ => None,
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> std::result::Result<Value, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        let v = value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing data at byte {pos}"));
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], pos: &mut usize) {
+        while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+            *pos += 1;
+        }
+    }
+
+    fn value(b: &[u8], pos: &mut usize) -> std::result::Result<Value, String> {
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            None => Err("unexpected end of input".to_string()),
+            Some(b'{') => obj(b, pos),
+            Some(b'[') => arr(b, pos),
+            Some(b'"') => Ok(Value::Str(string(b, pos)?)),
+            Some(b't') => lit(b, pos, "true", Value::Bool(true)),
+            Some(b'f') => lit(b, pos, "false", Value::Bool(false)),
+            Some(b'n') => lit(b, pos, "null", Value::Null),
+            Some(_) => num(b, pos),
+        }
+    }
+
+    fn lit(
+        b: &[u8],
+        pos: &mut usize,
+        word: &str,
+        v: Value,
+    ) -> std::result::Result<Value, String> {
+        if b[*pos..].starts_with(word.as_bytes()) {
+            *pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {pos}", pos = *pos))
+        }
+    }
+
+    fn num(b: &[u8], pos: &mut usize) -> std::result::Result<Value, String> {
+        let start = *pos;
+        while *pos < b.len()
+            && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            *pos += 1;
+        }
+        let s = std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?;
+        s.parse::<f64>().map(Value::Num).map_err(|_| format!("bad number {s:?} at byte {start}"))
+    }
+
+    fn string(b: &[u8], pos: &mut usize) -> std::result::Result<String, String> {
+        if b.get(*pos) != Some(&b'"') {
+            return Err(format!("expected string at byte {pos}", pos = *pos));
+        }
+        *pos += 1;
+        let mut out = Vec::new();
+        while *pos < b.len() {
+            match b[*pos] {
+                b'"' => {
+                    *pos += 1;
+                    return String::from_utf8(out).map_err(|e| e.to_string());
+                }
+                b'\\' => {
+                    *pos += 1;
+                    match b.get(*pos) {
+                        Some(b'"') => out.push(b'"'),
+                        Some(b'\\') => out.push(b'\\'),
+                        Some(b'/') => out.push(b'/'),
+                        Some(b'n') => out.push(b'\n'),
+                        Some(b'r') => out.push(b'\r'),
+                        Some(b't') => out.push(b'\t'),
+                        Some(b'u') => {
+                            let hex = b
+                                .get(*pos + 1..*pos + 5)
+                                .ok_or("truncated \\u escape")?;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).map_err(|e| e.to_string())?,
+                                16,
+                            )
+                            .map_err(|e| e.to_string())?;
+                            let c = char::from_u32(code).unwrap_or('\u{fffd}');
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                            *pos += 4;
+                        }
+                        _ => return Err("bad escape".to_string()),
+                    }
+                    *pos += 1;
+                }
+                c => {
+                    out.push(c);
+                    *pos += 1;
+                }
+            }
+        }
+        Err("unterminated string".to_string())
+    }
+
+    fn arr(b: &[u8], pos: &mut usize) -> std::result::Result<Value, String> {
+        *pos += 1; // '['
+        let mut items = Vec::new();
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b']') {
+            *pos += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            items.push(value(b, pos)?);
+            skip_ws(b, pos);
+            match b.get(*pos) {
+                Some(b',') => *pos += 1,
+                Some(b']') => {
+                    *pos += 1;
+                    return Ok(Value::Arr(items));
+                }
+                _ => return Err(format!("expected , or ] at byte {pos}", pos = *pos)),
+            }
+        }
+    }
+
+    fn obj(b: &[u8], pos: &mut usize) -> std::result::Result<Value, String> {
+        *pos += 1; // '{'
+        let mut pairs = Vec::new();
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b'}') {
+            *pos += 1;
+            return Ok(Value::Obj(pairs));
+        }
+        loop {
+            skip_ws(b, pos);
+            let key = string(b, pos)?;
+            skip_ws(b, pos);
+            if b.get(*pos) != Some(&b':') {
+                return Err(format!("expected : at byte {pos}", pos = *pos));
+            }
+            *pos += 1;
+            pairs.push((key, value(b, pos)?));
+            skip_ws(b, pos);
+            match b.get(*pos) {
+                Some(b',') => *pos += 1,
+                Some(b'}') => {
+                    *pos += 1;
+                    return Ok(Value::Obj(pairs));
+                }
+                _ => return Err(format!("expected , or }} at byte {pos}", pos = *pos)),
+            }
+        }
+    }
+}
+
+use json::Value;
+
+fn get<'a>(v: &'a Value, key: &str) -> Result<&'a Value> {
+    v.get(key).ok_or_else(|| Error::Config(format!("missing key {key:?}")))
+}
+
+fn get_str(v: &Value, key: &str) -> Result<String> {
+    match get(v, key)? {
+        Value::Str(s) => Ok(s.clone()),
+        _ => Err(Error::Config(format!("key {key:?} is not a string"))),
+    }
+}
+
+fn get_u64(v: &Value, key: &str) -> Result<u64> {
+    match get(v, key)? {
+        Value::Num(n) => Ok(*n as u64),
+        _ => Err(Error::Config(format!("key {key:?} is not a number"))),
+    }
+}
+
+fn get_usize(v: &Value, key: &str) -> Result<usize> {
+    get_u64(v, key).map(|n| n as usize)
+}
+
+fn get_f64(v: &Value, key: &str) -> Result<f64> {
+    match get(v, key)? {
+        Value::Num(n) => Ok(*n),
+        _ => Err(Error::Config(format!("key {key:?} is not a number"))),
+    }
+}
+
+fn get_arr<'a>(v: &'a Value, key: &str) -> Result<&'a [Value]> {
+    match get(v, key)? {
+        Value::Arr(items) => Ok(items),
+        _ => Err(Error::Config(format!("key {key:?} is not an array"))),
+    }
+}
+
+/// Decimal-string u64 (the hash encoding that survives JSON's f64).
+fn str_u64(v: &Value, key: &str) -> Result<u64> {
+    match get(v, key)? {
+        Value::Str(s) => s
+            .parse::<u64>()
+            .map_err(|_| Error::Config(format!("key {key:?}: bad u64 string {s:?}"))),
+        _ => Err(Error::Config(format!("key {key:?} is not a string"))),
+    }
+}
+
+fn num_as_u64(v: &Value) -> Result<u64> {
+    match v {
+        Value::Num(n) => Ok(*n as u64),
+        _ => Err(Error::Config("expected number".to_string())),
+    }
+}
+
+fn parse_run(v: &Value) -> Result<RunRecord> {
+    let mut ranks = Vec::new();
+    for rv in get_arr(v, "ranks")? {
+        let mut wait_ns = BTreeMap::new();
+        match get(rv, "wait_ns")? {
+            Value::Obj(pairs) => {
+                for (label, ns) in pairs {
+                    wait_ns.insert(label.clone(), num_as_u64(ns)?);
+                }
+            }
+            _ => return Err(Error::Config("wait_ns is not an object".to_string())),
+        }
+        ranks.push(RankLedger {
+            elapsed_ns: get_u64(rv, "elapsed_ns")?,
+            io_ns: get_u64(rv, "io_ns")?,
+            map_ns: get_u64(rv, "map_ns")?,
+            local_reduce_ns: get_u64(rv, "local_reduce_ns")?,
+            reduce_ns: get_u64(rv, "reduce_ns")?,
+            combine_ns: get_u64(rv, "combine_ns")?,
+            checkpoint_ns: get_u64(rv, "checkpoint_ns")?,
+            other_ns: get_u64(rv, "other_ns")?,
+            wait_ns,
+        });
+    }
+
+    let bv = get(v, "bytes")?;
+    let iv = get(v, "imbalance")?;
+    let cv = get(v, "crit")?;
+
+    let route_fingerprint = match get(v, "route_fingerprint")? {
+        Value::Null => None,
+        fv => {
+            let mut splits = Vec::new();
+            for sv in get_arr(fv, "splits")? {
+                match sv {
+                    Value::Arr(pair) if pair.len() == 2 => {
+                        let hash = match &pair[0] {
+                            Value::Str(s) => s.parse::<u64>().map_err(|_| {
+                                Error::Config(format!("bad split hash {s:?}"))
+                            })?,
+                            _ => return Err(Error::Config("split hash not a string".into())),
+                        };
+                        splits.push((hash, num_as_u64(&pair[1])? as usize));
+                    }
+                    _ => return Err(Error::Config("bad splits entry".to_string())),
+                }
+            }
+            Some(RouteFp {
+                kind: get_str(fv, "kind")?,
+                nranks: get_usize(fv, "nranks")?,
+                table_hash: str_u64(fv, "table_hash")?,
+                splits,
+                coded_r: get_usize(fv, "coded_r")?,
+                heavy_buckets: get_usize(fv, "heavy_buckets")?,
+                clique_count: get_u64(fv, "clique_count")?,
+            })
+        }
+    };
+
+    let mut labels = BTreeMap::new();
+    match get(cv, "labels")? {
+        Value::Obj(pairs) => {
+            for (label, ns) in pairs {
+                labels.insert(label.clone(), num_as_u64(ns)?);
+            }
+        }
+        _ => return Err(Error::Config("crit.labels is not an object".to_string())),
+    }
+    let mut segments = Vec::new();
+    for sv in get_arr(cv, "segments")? {
+        match sv {
+            Value::Arr(q) if q.len() == 4 => {
+                let label = match &q[3] {
+                    Value::Str(s) => s.clone(),
+                    _ => return Err(Error::Config("segment label not a string".into())),
+                };
+                segments.push((
+                    num_as_u64(&q[0])? as usize,
+                    num_as_u64(&q[1])?,
+                    num_as_u64(&q[2])?,
+                    label,
+                ));
+            }
+            _ => return Err(Error::Config("bad crit segment".to_string())),
+        }
+    }
+
+    let mut health = Vec::new();
+    for hv in get_arr(v, "health")? {
+        health.push(HealthRecord {
+            vt: get_u64(hv, "vt")?,
+            rank: get_usize(hv, "rank")?,
+            kind: get_str(hv, "kind")?,
+        });
+    }
+
+    let recovery = match get(v, "recovery")? {
+        Value::Null => None,
+        rv => Some(RecoveryRecord {
+            dead_rank: get_usize(rv, "dead_rank")?,
+            phase: get_str(rv, "phase")?,
+            orig_nranks: get_usize(rv, "orig_nranks")?,
+            detect_ns: get_u64(rv, "detect_ns")?,
+            replay_ns: get_u64(rv, "replay_ns")?,
+            replan_ns: get_u64(rv, "replan_ns")?,
+            replayed_tasks: get_u64(rv, "replayed_tasks")?,
+            recomputed_tasks: get_u64(rv, "recomputed_tasks")?,
+            replayed_bytes: get_u64(rv, "replayed_bytes")?,
+        }),
+    };
+
+    Ok(RunRecord {
+        key: RunKey {
+            tag: get_str(v, "tag")?,
+            usecase: get_str(v, "usecase")?,
+            backend: get_str(v, "backend")?,
+            route: get_str(v, "route")?,
+            nranks: get_usize(v, "nranks")?,
+        },
+        elapsed_ns: get_u64(v, "elapsed_ns")?,
+        ranks,
+        bytes: ByteLedger {
+            input: get_u64(bv, "input")?,
+            shuffle_wire: get_u64(bv, "shuffle_wire")?,
+            shuffle_logical: get_u64(bv, "shuffle_logical")?,
+            reduce: get_u64(bv, "reduce")?,
+            spill_saved: get_u64(bv, "spill_saved")?,
+        },
+        imbalance: ImbalanceStats {
+            reduce_max_over_mean: get_f64(iv, "reduce_max_over_mean")?,
+            reduce_cov: get_f64(iv, "reduce_cov")?,
+            planned_reduce_max_over_mean: match get(iv, "planned_reduce_max_over_mean")? {
+                Value::Null => None,
+                Value::Num(n) => Some(*n),
+                _ => return Err(Error::Config("bad planned_reduce_max_over_mean".into())),
+            },
+        },
+        route_fingerprint,
+        crit: CritLedger {
+            total_ns: get_u64(cv, "total_ns")?,
+            edges: get_usize(cv, "edges")?,
+            labels,
+            segments,
+        },
+        health,
+        recovery,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A hand-built record exercising every section, including >2^53
+    /// hashes that would not survive a JSON f64.
+    pub(crate) fn sample_record(tag: &str, elapsed: u64) -> RunRecord {
+        let mut wait_ns: BTreeMap<String, u64> =
+            WaitCause::ALL.iter().map(|c| (c.label().to_string(), 0)).collect();
+        wait_ns.insert("barrier".to_string(), 40);
+        let mut labels = BTreeMap::new();
+        labels.insert("work".to_string(), elapsed - 30);
+        labels.insert("barrier".to_string(), 30);
+        RunRecord {
+            key: RunKey {
+                tag: tag.to_string(),
+                usecase: "word-count".to_string(),
+                backend: "mr-1s".to_string(),
+                route: "planned:split=4".to_string(),
+                nranks: 2,
+            },
+            elapsed_ns: elapsed,
+            ranks: vec![
+                RankLedger {
+                    elapsed_ns: elapsed,
+                    io_ns: 100,
+                    map_ns: elapsed - 160,
+                    local_reduce_ns: 10,
+                    reduce_ns: 5,
+                    combine_ns: 3,
+                    checkpoint_ns: 2,
+                    wait_ns: wait_ns.clone(),
+                    other_ns: 0,
+                },
+                RankLedger { elapsed_ns: elapsed / 2, other_ns: elapsed / 2, ..Default::default() },
+            ],
+            bytes: ByteLedger {
+                input: 1 << 20,
+                shuffle_wire: 4096,
+                shuffle_logical: 8192,
+                reduce: 2048,
+                spill_saved: 128,
+            },
+            imbalance: ImbalanceStats {
+                reduce_max_over_mean: 1.25,
+                reduce_cov: 0.5,
+                planned_reduce_max_over_mean: Some(1.125),
+            },
+            route_fingerprint: Some(RouteFp {
+                kind: "planned".to_string(),
+                nranks: 2,
+                table_hash: 0xdead_beef_dead_beef,
+                splits: vec![(u64::MAX - 1, 4)],
+                coded_r: 0,
+                heavy_buckets: 0,
+                clique_count: 0,
+            }),
+            crit: CritLedger {
+                total_ns: elapsed,
+                edges: 1,
+                labels,
+                segments: vec![
+                    (0, 0, elapsed - 30, "work".to_string()),
+                    (1, elapsed - 30, elapsed, "barrier".to_string()),
+                ],
+            },
+            health: vec![HealthRecord {
+                vt: 17,
+                rank: 1,
+                kind: "slow-progress".to_string(),
+            }],
+            recovery: Some(RecoveryRecord {
+                dead_rank: 1,
+                phase: "map".to_string(),
+                orig_nranks: 3,
+                detect_ns: 7,
+                replay_ns: 8,
+                replan_ns: 9,
+                replayed_tasks: 2,
+                recomputed_tasks: 1,
+                replayed_bytes: 512,
+            }),
+        }
+    }
+
+    #[test]
+    fn ledger_json_round_trips_exactly() {
+        let mut ledger = RunLedger::new("unit", "profile=test");
+        ledger.push(sample_record("a", 1_000));
+        ledger.push(RunRecord {
+            route_fingerprint: None,
+            recovery: None,
+            health: Vec::new(),
+            ..sample_record("b", 2_000)
+        });
+        let text = ledger.to_json();
+        let back = RunLedger::parse(&text).expect("parse");
+        assert_eq!(ledger, back, "round trip must be lossless");
+    }
+
+    #[test]
+    fn hashes_survive_json_as_strings() {
+        let mut ledger = RunLedger::new("unit", "");
+        ledger.push(sample_record("a", 1_000));
+        let back = RunLedger::parse(&ledger.to_json()).unwrap();
+        let fp = back.runs[0].route_fingerprint.as_ref().unwrap();
+        assert_eq!(fp.table_hash, 0xdead_beef_dead_beef);
+        assert_eq!(fp.splits, vec![(u64::MAX - 1, 4)]);
+        // Sanity: the raw JSON must carry the hash as a string, not a
+        // number (a number would round through f64 and corrupt it).
+        assert!(ledger.to_json().contains(&format!("\"{}\"", 0xdead_beef_dead_beefu64)));
+    }
+
+    #[test]
+    fn rank_components_sum_exactly_to_elapsed() {
+        let rec = sample_record("a", 1_000);
+        for (i, rank) in rec.ranks.iter().enumerate() {
+            assert_eq!(
+                rank.components_total_ns(),
+                rank.elapsed_ns,
+                "rank {i} decomposition must be exact"
+            );
+        }
+        assert_eq!(rec.untracked_ns(), 0);
+    }
+
+    #[test]
+    fn parse_rejects_wrong_schema_and_garbage() {
+        let err = RunLedger::parse("{\"ledger\":\"x\",\"schema\":99}").unwrap_err();
+        assert!(format!("{err}").contains("schema"));
+        assert!(RunLedger::parse("not json").is_err());
+        assert!(RunLedger::parse("{\"a\":1} trailing").is_err());
+    }
+
+    #[test]
+    fn json_parser_handles_escapes_and_nesting() {
+        let v = json::parse(
+            "{\"s\": \"a\\\"b\\\\c\\u0041\", \"n\": [1, 2.5, -3], \"b\": true, \"z\": null}",
+        )
+        .unwrap();
+        match v.get("s") {
+            Some(json::Value::Str(s)) => assert_eq!(s, "a\"b\\cA"),
+            other => panic!("bad string: {other:?}"),
+        }
+        match v.get("n") {
+            Some(json::Value::Arr(items)) => assert_eq!(items.len(), 3),
+            other => panic!("bad array: {other:?}"),
+        }
+    }
+}

@@ -7,9 +7,14 @@
 //! of the coarse phase timelines, `tracer` records cause-tagged spans
 //! for every protocol-level operation (exported as Chrome-trace JSON)
 //! and `crit` extracts the cross-rank critical path (DESIGN.md §9).
+//! `ledger` persists a run's full accounting as a schema-versioned JSON
+//! artifact and `diff` decomposes the makespan delta between two
+//! ledgers into attributed causes with zero residual (DESIGN.md §12).
 
 pub mod crit;
+pub mod diff;
 pub mod export;
+pub mod ledger;
 pub mod memory;
 pub mod report;
 pub mod straggler;
@@ -18,7 +23,9 @@ pub mod timeline;
 pub mod tracer;
 
 pub use crit::{CritPath, CritSegment};
+pub use diff::{diff_ledgers, LedgerDiff, RunDiff, UNTRACKED};
 pub use export::{write_metrics, METRICS_SCHEMA_VERSION};
+pub use ledger::{RunKey, RunLedger, RunRecord, LEDGER_SCHEMA_VERSION};
 pub use memory::MemoryTracker;
 pub use report::{JobReport, PhaseBreakdown, RecoveryReport};
 pub use straggler::StragglerDetector;

@@ -124,6 +124,13 @@ pub struct JobReport {
     /// payloads, true pre-padding multicast segment parts, and
     /// replica-absorbed records that never touched the network).
     pub shuffle_logical_bytes_per_rank: Vec<u64>,
+    /// Fingerprint of the shuffle route the job ran under (identical on
+    /// every rank — the planner is deterministic — so the driver records
+    /// rank 0's).  `None` only for reports built outside the job driver
+    /// (e.g. test fixtures).  The run ledger carries it so `mr1s diff`
+    /// can separate "same plan, different cost" from "the planner chose
+    /// differently" (DESIGN.md §12).
+    pub route_fingerprint: Option<crate::shuffle::RouteFingerprint>,
     /// Spill bytes the `.idx` varint-delta sidecar and payload block
     /// codec saved versus the raw encoding (0 for non-pipeline jobs,
     /// which spill nothing; filled in by the pipeline driver).
@@ -367,6 +374,7 @@ mod tests {
             planned_reduce_bytes_per_rank: None,
             shuffle_wire_bytes_per_rank: vec![100, 100],
             shuffle_logical_bytes_per_rank: vec![250, 250],
+            route_fingerprint: None,
             spill_bytes_saved: 0,
             peak_memory_bytes: 0,
             mem_hwm_vt_ns: 0,

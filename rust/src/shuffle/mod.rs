@@ -51,6 +51,6 @@ pub use coding::{
 pub use placement::CodedPlacement;
 pub use plan::{
     plan_coded_route, plan_route, rehome, route_bucket_of, CodedRoute, PlannedRoute, Route,
-    ROUTE_BUCKETS,
+    RouteFingerprint, ROUTE_BUCKETS,
 };
 pub use sketch::{Sketch, SKETCH_CAPACITY};

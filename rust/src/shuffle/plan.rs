@@ -105,6 +105,85 @@ impl CodedRoute {
     }
 }
 
+/// A compact, comparable identity of a routing decision, recorded into
+/// the run ledger (`metrics::ledger`) so the differ can tell "same plan,
+/// different cost" apart from "the planner chose differently" — the
+/// route-divergence axis of `mr1s diff` (DESIGN.md §12).
+///
+/// Two fingerprints are equal iff the routes would shuffle every record
+/// identically: `table_hash` covers the full wire encoding (bucket
+/// table, planned loads, split target lists, coded bitmap), and the
+/// summary fields exist so a diff can *describe* the divergence without
+/// shipping the 4096-entry table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RouteFingerprint {
+    /// Route family: "modulo" / "planned" / "coded".
+    pub kind: &'static str,
+    /// World size the route maps onto.
+    pub nranks: usize,
+    /// FNV-1a hash of [`Route::encode`] (0 for modulo routes, which
+    /// encode nothing — kind + nranks identify them completely).
+    pub table_hash: u64,
+    /// Split heavy hitters as (key hash, split ways), sorted by hash.
+    pub splits: Vec<(u64, usize)>,
+    /// Coded replication factor (0 unless coded).
+    pub coded_r: usize,
+    /// Population count of the coded heavy-bucket bitmap (0 unless coded).
+    pub heavy_buckets: usize,
+    /// Multicast clique count `C(nranks, r + 1)` (0 unless coded): how
+    /// many (r+1)-rank groups exchange XOR packets.
+    pub clique_count: u64,
+}
+
+impl RouteFingerprint {
+    /// One-line rendering for summaries and diff tables, e.g.
+    /// `planned/8r#1a2b3c4d5e6f7081 splits=2` or `coded/8r r=2 cliques=56`.
+    pub fn render(&self) -> String {
+        let mut out = format!("{}/{}r", self.kind, self.nranks);
+        if self.table_hash != 0 {
+            out.push_str(&format!("#{:016x}", self.table_hash));
+        }
+        if !self.splits.is_empty() {
+            out.push_str(&format!(" splits={}", self.splits.len()));
+        }
+        if self.coded_r > 0 {
+            out.push_str(&format!(
+                " r={} heavy={} cliques={}",
+                self.coded_r, self.heavy_buckets, self.clique_count
+            ));
+        }
+        out
+    }
+}
+
+/// FNV-1a over a byte string (the route-encoding hash; no crypto needed,
+/// only a stable identity cheap enough to compute per rank per run).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// `C(n, k)` saturating at `u64::MAX` (clique counts stay tiny for every
+/// accepted `r`, but the arithmetic must not trap on adversarial input).
+fn binomial(n: u64, k: u64) -> u64 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc.saturating_mul((n - i) as u128) / (i + 1) as u128;
+        if acc > u64::MAX as u128 {
+            return u64::MAX;
+        }
+    }
+    acc as u64
+}
+
 /// The planner's output.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PlannedRoute {
@@ -203,6 +282,39 @@ impl Route {
             }
         }
         out
+    }
+
+    /// The route's ledger fingerprint (see [`RouteFingerprint`]).
+    pub fn fingerprint(&self) -> RouteFingerprint {
+        match self {
+            Route::Modulo { nranks } => RouteFingerprint {
+                kind: "modulo",
+                nranks: *nranks,
+                table_hash: 0,
+                splits: Vec::new(),
+                coded_r: 0,
+                heavy_buckets: 0,
+                clique_count: 0,
+            },
+            Route::Planned(p) => RouteFingerprint {
+                kind: "planned",
+                nranks: p.planned_loads.len(),
+                table_hash: fnv1a(&self.encode()),
+                splits: p.splits.iter().map(|(h, ts)| (*h, ts.len())).collect(),
+                coded_r: 0,
+                heavy_buckets: 0,
+                clique_count: 0,
+            },
+            Route::Coded(c) => RouteFingerprint {
+                kind: "coded",
+                nranks: c.base.planned_loads.len(),
+                table_hash: fnv1a(&self.encode()),
+                splits: Vec::new(),
+                coded_r: c.r,
+                heavy_buckets: c.heavy.iter().map(|w| w.count_ones() as usize).sum(),
+                clique_count: binomial(c.base.planned_loads.len() as u64, c.r as u64 + 1),
+            },
+        }
     }
 
     /// Decode a route published by [`Route::encode`].
@@ -627,6 +739,38 @@ mod tests {
     fn rehome_is_deterministic() {
         let route = plan_route(&skewed_sketch(7, 50_000), 6, 3);
         assert_eq!(rehome(route.clone(), 4), rehome(route, 4));
+    }
+
+    #[test]
+    fn fingerprint_identifies_the_route_family_and_plan() {
+        let modulo = Route::modulo(4).fingerprint();
+        assert_eq!((modulo.kind, modulo.nranks, modulo.table_hash), ("modulo", 4, 0));
+
+        let s = skewed_sketch(42, 100_000);
+        let planned = plan_route(&s, 4, 4);
+        let fp = planned.fingerprint();
+        assert_eq!(fp.kind, "planned");
+        assert_eq!(fp.nranks, 4);
+        assert_ne!(fp.table_hash, 0);
+        assert!(fp.splits.iter().any(|&(h, _)| h == 42), "split set names the heavy key");
+        // Deterministic planner => deterministic fingerprint; a different
+        // plan => a different table hash.
+        assert_eq!(fp, plan_route(&s, 4, 4).fingerprint());
+        assert_ne!(fp.table_hash, plan_route(&s, 4, 1).fingerprint().table_hash);
+
+        let coded = plan_coded_route(&s, 8, 2).fingerprint();
+        assert_eq!((coded.kind, coded.coded_r), ("coded", 2));
+        assert_eq!(coded.clique_count, 56, "C(8, 3) multicast cliques");
+        assert!(coded.heavy_buckets > 0);
+        assert!(coded.render().contains("cliques=56"));
+    }
+
+    #[test]
+    fn binomial_is_exact_and_saturating() {
+        assert_eq!(binomial(8, 3), 56);
+        assert_eq!(binomial(8, 0), 1);
+        assert_eq!(binomial(3, 8), 0);
+        assert_eq!(binomial(200, 100), u64::MAX, "saturates instead of trapping");
     }
 
     #[test]

@@ -1309,3 +1309,139 @@ fn kill_runs_surface_heartbeat_stale_for_the_dead_rank() {
     std::fs::remove_dir_all(&dir).ok();
     std::fs::remove_file(&p).ok();
 }
+
+// ---- run ledger + differential attribution (DESIGN.md §12) --------------
+
+#[test]
+fn ledger_round_trips_and_diff_is_exact_across_routes() {
+    // For every route × backend: build records from two runs whose
+    // configs differ (task size), persist A to disk, load it back
+    // losslessly, and check the differ's exactness invariant — the
+    // components sum to the elapsed delta to the nanosecond, and a
+    // self-diff attributes nothing.
+    use mr1s::metrics::diff::diff_ledgers;
+    use mr1s::metrics::ledger::{RunLedger, RunRecord};
+    let p = corpus("ledger-routes", 120_000, 51);
+    for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+        for route in all_routes() {
+            let run = |task_size: usize| {
+                let cfg = JobConfig { route, task_size, ..small_config(p.clone()) };
+                Job::new(Arc::new(WordCount), cfg)
+                    .unwrap()
+                    .run(backend, 4, CostModel::default())
+                    .unwrap()
+            };
+            let ctx = format!("{} {route:?}", backend.name());
+            let (out_a, out_b) = (run(16 << 10), run(32 << 10));
+            let route_label = route.label();
+            let mut a = RunLedger::new("it", "config=a");
+            a.push(RunRecord::from_report("job", "word-count", &route_label, &out_a.report));
+            let mut b = RunLedger::new("it", "config=b");
+            b.push(RunRecord::from_report("job", "word-count", &route_label, &out_b.report));
+
+            // Driver-built records tile the makespan (zero untracked)
+            // and decompose each rank exactly.
+            for rec in a.runs.iter().chain(&b.runs) {
+                assert_eq!(rec.untracked_ns(), 0, "{ctx}: crit path must tile the makespan");
+                for (i, rank) in rec.ranks.iter().enumerate() {
+                    assert_eq!(
+                        rank.components_total_ns(),
+                        rank.elapsed_ns,
+                        "{ctx}: rank {i} decomposition inexact"
+                    );
+                }
+                let fp = rec.route_fingerprint.as_ref().expect("fingerprint recorded");
+                assert_eq!(fp.nranks, 4, "{ctx}");
+            }
+
+            // Disk round trip is lossless.
+            let path = tmppath(&format!(
+                "ledger-{}-{}",
+                backend.name(),
+                route_label.replace([':', '='], "-")
+            ));
+            a.write_to(&path).unwrap();
+            let back = RunLedger::load(&path).unwrap();
+            assert_eq!(a, back, "{ctx}: ledger JSON round trip must be lossless");
+            std::fs::remove_file(&path).ok();
+
+            // Exactness invariant on the real pair, both directions.
+            for (x, y) in [(&a, &b), (&b, &a)] {
+                let d = diff_ledgers(x, y);
+                assert_eq!(d.pairs.len(), 1, "{ctx}: runs must align");
+                let pair = &d.pairs[0];
+                assert_eq!(pair.residual_ns(), 0, "{ctx}: nonzero residual");
+                assert_eq!(
+                    pair.components_delta_ns(),
+                    pair.delta_elapsed_ns(),
+                    "{ctx}: components must sum to the elapsed delta"
+                );
+            }
+
+            // Self-diff: zero everywhere, same fingerprint, no causes.
+            let d = diff_ledgers(&a, &a);
+            let pair = &d.pairs[0];
+            assert_eq!(pair.delta_elapsed_ns(), 0, "{ctx}");
+            assert!(pair.components.iter().all(|c| c.delta_ns() == 0), "{ctx}");
+            assert!(
+                matches!(pair.route, mr1s::metrics::diff::RouteDivergence::Same(_)),
+                "{ctx}: identical run must fingerprint as the same plan"
+            );
+            assert!(d.top_causes(10).is_empty(), "{ctx}");
+        }
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn kill_run_ledger_carries_recovery_attribution() {
+    // A recovered run's ledger record must carry the recovery section
+    // and route the detect/replay/replan costs through the per-cause
+    // wait decomposition, and the shared bench funnel must emit the
+    // `<tag>_recovery_*` samples fig10's JSON is built from.
+    use mr1s::metrics::ledger::RunRecord;
+    let p = corpus("ledger-kill", 60_000, 52);
+    let dir = tmppath("ledger-kill-ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = JobConfig {
+        checkpoints: true,
+        checkpoint_dir: dir.clone(),
+        faults: Some("kill:rank=1@phase=map".parse().unwrap()),
+        ..small_config(p.clone())
+    };
+    let out = Job::new(Arc::new(WordCount), cfg)
+        .unwrap()
+        .run(BackendKind::OneSided, 4, CostModel::default())
+        .unwrap();
+    let rec = RunRecord::from_report("kill", "word-count", "modulo", &out.report);
+
+    let ledger_rec = rec.recovery.as_ref().expect("recovery section present");
+    let report_rec = out.report.recovery.as_ref().unwrap();
+    assert_eq!(ledger_rec.phase, "map");
+    assert_eq!(ledger_rec.orig_nranks, 4);
+    assert_eq!(ledger_rec.total_ns(), report_rec.total_ns());
+    assert!(ledger_rec.total_ns() > 0, "recovery must cost something");
+    // The same costs appear as attributed waits in the rank ledgers.
+    let wait = |cause: &str| -> u64 {
+        rec.ranks.iter().map(|r| r.wait_ns.get(cause).copied().unwrap_or(0)).sum()
+    };
+    assert_eq!(wait("detect"), report_rec.detect_ns, "detect wait != recovery detect");
+    assert_eq!(wait("replay"), report_rec.replay_ns, "replay wait != recovery replay");
+    assert_eq!(wait("replan"), report_rec.replan_ns, "replan wait != recovery replan");
+    assert_eq!(rec.key.nranks, 3, "ledger keys the degraded world");
+
+    let samples = mr1s::bench::job_samples("kill", &out.report);
+    let find = |name: &str| {
+        samples
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("missing sample {name}"))
+            .mean
+    };
+    assert_eq!(find("kill_recovery_total_ns"), report_rec.total_ns() as f64);
+    assert_eq!(find("kill_recovery_replayed_tasks"), report_rec.replayed_tasks as f64);
+    assert_eq!(find("kill_recovery_replayed_bytes"), report_rec.replayed_bytes as f64);
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&p).ok();
+}

@@ -843,3 +843,93 @@ fn prop_timelines_monotonic_nonoverlapping_all_usecases_and_routes() {
     }
     std::fs::remove_file(&path).ok();
 }
+
+#[test]
+fn prop_ledger_diff_exact_all_usecases_backends_routes() {
+    // The differ's exactness invariant as an exhaustive sweep (DESIGN.md
+    // §12): for every registered use-case × both backends × every
+    // shuffle route, take two runs with different configs and check
+    // that (a) each rank ledger decomposes its elapsed time exactly,
+    // (b) the diff components sum to the elapsed delta with zero
+    // residual in both directions, (c) a self-diff is all-zeros with no
+    // causes, and (d) the record survives a JSON round trip losslessly.
+    use mr1s::mapreduce::RouteConfig;
+    use mr1s::metrics::diff::diff_ledgers;
+    use mr1s::metrics::ledger::{RunLedger, RunRecord};
+    use mr1s::usecases::REGISTRY;
+    use mr1s::workload::{generate_corpus, CorpusSpec};
+
+    let path = std::env::temp_dir().join(format!("mr1s-prop-ledger-{}", std::process::id()));
+    generate_corpus(&path, &CorpusSpec { bytes: 60_000, seed: 23, ..Default::default() })
+        .unwrap();
+    let routes = [
+        RouteConfig::Modulo,
+        RouteConfig::Planned { split: RouteConfig::DEFAULT_SPLIT },
+        RouteConfig::Coded { r: 2 },
+    ];
+    for entry in REGISTRY {
+        for route in routes {
+            for backend in [BackendKind::OneSided, BackendKind::TwoSided] {
+                let ctx = format!("{} {} {route:?}", entry.name, backend.name());
+                let run = |task_size: usize| {
+                    let cfg = JobConfig {
+                        input: path.clone(),
+                        task_size,
+                        win_size: 16 << 10,
+                        chunk_size: 4 << 10,
+                        route,
+                        ..Default::default()
+                    };
+                    Job::new((entry.make)(), cfg)
+                        .unwrap()
+                        .run(backend, 4, CostModel::default())
+                        .unwrap()
+                };
+                let route_label = route.label();
+                let record = |out: &mr1s::mapreduce::JobOutput| {
+                    RunRecord::from_report("job", entry.name, &route_label, &out.report)
+                };
+                let (out_a, out_b) = (run(16 << 10), run(8 << 10));
+                let (rec_a, rec_b) = (record(&out_a), record(&out_b));
+
+                for rec in [&rec_a, &rec_b] {
+                    assert_eq!(rec.untracked_ns(), 0, "{ctx}: crit path must tile makespan");
+                    for (i, rank) in rec.ranks.iter().enumerate() {
+                        assert_eq!(
+                            rank.components_total_ns(),
+                            rank.elapsed_ns,
+                            "{ctx}: rank {i} decomposition inexact"
+                        );
+                    }
+                }
+
+                let mut a = RunLedger::new("prop", "a");
+                a.push(rec_a);
+                let mut b = RunLedger::new("prop", "b");
+                b.push(rec_b);
+                for (x, y) in [(&a, &b), (&b, &a)] {
+                    let d = diff_ledgers(x, y);
+                    assert_eq!(d.pairs.len(), 1, "{ctx}: pair must align");
+                    let pair = &d.pairs[0];
+                    assert_eq!(pair.residual_ns(), 0, "{ctx}: nonzero residual");
+                    assert_eq!(
+                        pair.components_delta_ns(),
+                        pair.delta_elapsed_ns(),
+                        "{ctx}: components must sum to the elapsed delta"
+                    );
+                }
+                let d = diff_ledgers(&a, &a);
+                assert!(
+                    d.pairs[0].components.iter().all(|c| c.delta_ns() == 0),
+                    "{ctx}: self-diff must be all-zeros"
+                );
+                assert!(d.top_causes(usize::MAX).is_empty(), "{ctx}: self-diff causes");
+
+                let round = RunLedger::parse(&a.to_json())
+                    .unwrap_or_else(|e| panic!("{ctx}: reparse failed: {e:?}"));
+                assert_eq!(a, round, "{ctx}: JSON round trip must be lossless");
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}

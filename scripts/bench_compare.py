@@ -30,7 +30,18 @@ summaries over the baselines instead of comparing — the refresh path.
 ``--self-check`` ignores the directories, synthesizes a baseline and a
 regressed fresh summary in a temp dir, and exits 0 only if the gate
 catches the injected regression — CI runs it so the gate's failure mode
-is itself tested on every push.
+is itself tested on every push.  It also injects a synthetic
+single-cause ledger regression and asserts the differ ranks that cause
+first with zero residual.
+
+``--ledger-dir DIR`` points at the fresh ``LEDGER_<bench>.json`` run
+ledgers (written by the benches beside their summaries; see
+``rust/src/metrics/ledger.rs``).  When a bench FAILs the gate and both
+sides have a ledger (baselines live in ``<baseline-dir>/ledgers/``),
+the failure is annotated with differential attribution: the makespan
+delta of every regressed run decomposed into critical-path causes that
+sum to the delta exactly.  Missing baseline ledgers are reported as a
+bootstrap note, never an error.
 """
 
 import argparse
@@ -48,6 +59,14 @@ TIME_SUFFIXES = ("_elapsed_ns",)
 # Top-level run-metadata keys (schema v2): carried for provenance,
 # never compared.  Any other unknown top-level key is ignored outright.
 META_KEYS = ("schema", "git_sha", "config")
+
+# Run-ledger schema this differ understands (mirrors
+# LEDGER_SCHEMA_VERSION in rust/src/metrics/ledger.rs).
+LEDGER_SCHEMA = 1
+
+# Component label for makespan ns the critical path does not tile
+# (mirrors UNTRACKED in rust/src/metrics/diff.rs).
+UNTRACKED = "untracked"
 
 
 def load_summary(path):
@@ -104,7 +123,150 @@ def compare(baseline, fresh, threshold):
     return regressions, improvements, notes
 
 
-def run_compare(fresh_dir, baseline_dir, threshold, allow_missing):
+def load_ledger(path):
+    """Parse one LEDGER_*.json; returns the document or None on error.
+
+    Lenient by design: only the alignment keys, ``elapsed_ns`` and the
+    ``crit`` section are required per run — attribution must work on
+    hand-written fixtures and future schema extensions alike.
+    """
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"note  ledger {path}: unreadable ({e})", file=sys.stderr)
+        return None
+    if doc.get("schema") != LEDGER_SCHEMA:
+        print(
+            f"note  ledger {path}: schema {doc.get('schema')} != {LEDGER_SCHEMA}",
+            file=sys.stderr,
+        )
+        return None
+    return doc
+
+
+def ledger_run_key(run):
+    """The alignment key (mirrors RunKey in rust/src/metrics/ledger.rs)."""
+    return (
+        run.get("tag"),
+        run.get("usecase"),
+        run.get("backend"),
+        run.get("route"),
+        run.get("nranks"),
+    )
+
+
+def ledger_components(run):
+    """The additive decomposition of one run: crit labels + untracked.
+
+    All values are exact ints, so the diff algebra below telescopes to
+    the elapsed delta with zero residual — same invariant as the Rust
+    differ.
+    """
+    crit = run.get("crit", {})
+    comps = {label: int(ns) for label, ns in crit.get("labels", {}).items()}
+    comps[UNTRACKED] = int(run["elapsed_ns"]) - int(crit.get("total_ns", 0))
+    return comps
+
+
+def diff_ledgers(a_doc, b_doc):
+    """Align two ledger documents by run key and decompose each pair.
+
+    Returns a list of pair dicts: ``key`` (rendered), ``elapsed_a``/
+    ``elapsed_b``, ``components`` ({label: (a, b, delta)}), and
+    ``residual`` (always 0 for well-formed ledgers — asserted by the
+    self-check and the pytest suite, surfaced here for fixtures).
+    """
+    b_runs = {ledger_run_key(r): r for r in b_doc.get("runs", [])}
+    pairs = []
+    for ra in a_doc.get("runs", []):
+        rb = b_runs.get(ledger_run_key(ra))
+        if rb is None:
+            continue
+        ca, cb = ledger_components(ra), ledger_components(rb)
+        components = {
+            label: (ca.get(label, 0), cb.get(label, 0), cb.get(label, 0) - ca.get(label, 0))
+            for label in sorted(set(ca) | set(cb))
+        }
+        delta = int(rb["elapsed_ns"]) - int(ra["elapsed_ns"])
+        pairs.append(
+            {
+                "key": "{} [{} {} {} {}r]".format(*ledger_run_key(ra)),
+                "tag": ra.get("tag"),
+                "elapsed_a": int(ra["elapsed_ns"]),
+                "elapsed_b": int(rb["elapsed_ns"]),
+                "components": components,
+                "residual": delta - sum(d for _, _, d in components.values()),
+            }
+        )
+    return pairs
+
+
+def top_causes(pairs, k=5):
+    """Globally ranked ``(key, label, delta)``, most-regressing first."""
+    causes = [
+        (p["key"], label, delta)
+        for p in pairs
+        for label, (_, _, delta) in p["components"].items()
+        if delta != 0
+    ]
+    causes.sort(key=lambda c: (-c[2], c[1], c[0]))
+    return causes[:k]
+
+
+def print_attribution(bench, pairs, tags=None, top=5):
+    """Print the attribution block for a failed bench.
+
+    ``tags`` narrows to the regressed runs (None = all pairs).
+    """
+    shown = [p for p in pairs if tags is None or p["tag"] in tags] or pairs
+    for p in shown:
+        delta = p["elapsed_b"] - p["elapsed_a"]
+        print(
+            f"why   {bench}: {p['key']} elapsed "
+            f"{p['elapsed_a'] / 1e6:.3f} -> {p['elapsed_b'] / 1e6:.3f} ms "
+            f"({delta:+d} ns, residual {p['residual']} ns)"
+        )
+        ranked = sorted(
+            p["components"].items(), key=lambda kv: (-kv[1][2], kv[0])
+        )
+        for label, (a, b, d) in ranked:
+            if a == 0 and b == 0:
+                continue
+            print(f"why   {bench}:   {label:<18} {a:>14} -> {b:>14}  {d:>+14}")
+    ranked = top_causes(shown, top)
+    if ranked:
+        lead_key, lead_label, lead_delta = ranked[0]
+        print(
+            f"why   {bench}: top regressing cause: {lead_label} "
+            f"({lead_delta:+d} ns on {lead_key})"
+        )
+
+
+def attribute_failure(bench, fresh_path, ledger_dir, baseline_dir, regressed_names):
+    """On a gate FAIL, print ledger attribution if both sides have one."""
+    ledger_name = os.path.basename(fresh_path).replace("BENCH_", "LEDGER_", 1)
+    fresh_ledger_path = os.path.join(ledger_dir, ledger_name)
+    base_ledger_path = os.path.join(baseline_dir, "ledgers", ledger_name)
+    if not os.path.exists(fresh_ledger_path):
+        print(f"note  {bench}: no fresh ledger at {fresh_ledger_path}; cannot attribute")
+        return
+    if not os.path.exists(base_ledger_path):
+        print(
+            f"note  {bench}: no baseline ledger at {base_ledger_path} "
+            "(bootstrap: commit one from a trusted run to enable attribution)"
+        )
+        return
+    base_doc = load_ledger(base_ledger_path)
+    fresh_doc = load_ledger(fresh_ledger_path)
+    if base_doc is None or fresh_doc is None:
+        return
+    # Regressed sample names look like <tag>_elapsed_ns.
+    tags = {n[: -len("_elapsed_ns")] for n in regressed_names}
+    print_attribution(bench, diff_ledgers(base_doc, fresh_doc), tags)
+
+
+def run_compare(fresh_dir, baseline_dir, threshold, allow_missing, ledger_dir=None):
     """Compare every fresh summary against its baseline; return exit code."""
     fresh_paths = bench_files(fresh_dir)
     if not fresh_paths:
@@ -143,6 +305,14 @@ def run_compare(fresh_dir, baseline_dir, threshold, allow_missing):
             )
         if regressions:
             failed = True
+            if ledger_dir is not None:
+                attribute_failure(
+                    bench,
+                    fresh_path,
+                    ledger_dir,
+                    baseline_dir,
+                    [name for name, _, _, _ in regressions],
+                )
         else:
             gated = sum(1 for n in baseline if n.endswith(TIME_SUFFIXES))
             print(f"ok    {bench}: {gated} time samples within {threshold * 100:.0f}%")
@@ -175,6 +345,32 @@ def write_summary(path, bench, samples, meta=None):
         json.dump(doc, f)
 
 
+def write_ledger_doc(path, bench, runs):
+    """Write a minimal schema-valid run ledger (self-check / fixtures)."""
+    doc = {
+        "ledger": bench,
+        "schema": LEDGER_SCHEMA,
+        "git_sha": "selfcheck",
+        "config": "synthetic",
+        "runs": runs,
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f)
+
+
+def synthetic_run(tag, elapsed_ns, labels):
+    """A minimal ledger run record whose crit labels sum to elapsed."""
+    return {
+        "tag": tag,
+        "usecase": "word-count",
+        "backend": "mr-1s",
+        "route": "modulo",
+        "nranks": 4,
+        "elapsed_ns": elapsed_ns,
+        "crit": {"total_ns": sum(labels.values()), "labels": labels},
+    }
+
+
 def run_self_check(threshold):
     """Prove the gate trips on an injected regression (and only then)."""
     with tempfile.TemporaryDirectory(prefix="bench-compare-") as tmp:
@@ -201,7 +397,41 @@ def run_self_check(threshold):
         if run_compare(fresh_dir, base_dir, threshold, False) != 1:
             print("self-check: injected regression was NOT caught", file=sys.stderr)
             return 1
-    print("self-check: gate passes clean runs and catches injected regressions")
+
+        # Ledger leg: inject a single-cause regression (only "barrier"
+        # grows) and require the differ to (a) attribute it exactly —
+        # zero residual — and (b) rank that cause first.
+        os.makedirs(os.path.join(base_dir, "ledgers"))
+        base_run = synthetic_run("job", 1_000_000_000, {"work": 900_000_000, "barrier": 100_000_000})
+        bad_run = synthetic_run("job", 1_400_000_000, {"work": 900_000_000, "barrier": 500_000_000})
+        write_ledger_doc(
+            os.path.join(base_dir, "ledgers", "LEDGER_selfcheck.json"), "selfcheck", [base_run]
+        )
+        write_ledger_doc(
+            os.path.join(fresh_dir, "LEDGER_selfcheck.json"), "selfcheck", [bad_run]
+        )
+        pairs = diff_ledgers(
+            load_ledger(os.path.join(base_dir, "ledgers", "LEDGER_selfcheck.json")),
+            load_ledger(os.path.join(fresh_dir, "LEDGER_selfcheck.json")),
+        )
+        if len(pairs) != 1 or pairs[0]["residual"] != 0:
+            print("self-check: ledger diff residual is not zero", file=sys.stderr)
+            return 1
+        causes = top_causes(pairs)
+        if not causes or causes[0][1] != "barrier" or causes[0][2] != 400_000_000:
+            print(
+                f"self-check: differ misattributed the injected cause: {causes}",
+                file=sys.stderr,
+            )
+            return 1
+        # The gate itself must print the attribution on the FAIL path.
+        if run_compare(fresh_dir, base_dir, threshold, False, ledger_dir=fresh_dir) != 1:
+            print("self-check: ledger-annotated gate run did not fail", file=sys.stderr)
+            return 1
+    print(
+        "self-check: gate passes clean runs, catches injected regressions, "
+        "and attributes them (single-cause 'barrier' regression correctly top-ranked)"
+    )
     return 0
 
 
@@ -234,6 +464,13 @@ def main(argv=None):
         action="store_true",
         help="verify the gate catches a synthetic injected regression",
     )
+    parser.add_argument(
+        "--ledger-dir",
+        default=None,
+        help="directory with fresh LEDGER_*.json; annotate gate failures "
+        "with differential attribution (baseline ledgers under "
+        "<baseline-dir>/ledgers/)",
+    )
     args = parser.parse_args(argv)
     if args.threshold <= 0:
         parser.error("--threshold must be positive")
@@ -241,7 +478,13 @@ def main(argv=None):
         return run_self_check(args.threshold)
     if args.update:
         return run_update(args.fresh_dir, args.baseline_dir)
-    return run_compare(args.fresh_dir, args.baseline_dir, args.threshold, args.allow_missing)
+    return run_compare(
+        args.fresh_dir,
+        args.baseline_dir,
+        args.threshold,
+        args.allow_missing,
+        ledger_dir=args.ledger_dir,
+    )
 
 
 if __name__ == "__main__":
